@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `python/` importable so
+`pytest python/tests/` works from the repository root (the Makefile also
+supports `cd python && pytest tests/`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

@@ -1,0 +1,123 @@
+//! **End-to-end driver (experiment E15).** Exercises all three layers on a
+//! real workload: Rust coordinator (L3) serving batched requests through
+//! the Stamp-it-reclaimed lock-free cache, dispatching misses to the
+//! AOT-compiled JAX (L2) + Pallas (L1) computation via PJRT.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compute_cache -- \
+//!     --scheme stamp --clients 4 --requests 2000
+//! ```
+//!
+//! Reports throughput, latency percentiles (hit vs computed), cache hit
+//! rate, and the paper's reclamation-efficiency metric. Recorded in
+//! EXPERIMENTS.md §E15.
+
+use emr::coordinator::{CacheServer, ServerConfig};
+use emr::dispatch_scheme;
+use emr::reclaim::{Reclaimer, SchemeId};
+use emr::util::cli::Args;
+use emr::util::rng::Xoshiro256;
+use emr::util::stats::{fmt_ns, percentile_sorted};
+
+fn main() {
+    let args = Args::parse();
+    let scheme = SchemeId::parse(args.get_or("scheme", "stamp")).expect("unknown --scheme");
+    let clients = args.usize_or("clients", 4);
+    let requests = args.usize_or("requests", 2000);
+    let key_space = args.u64_or("keys", 30_000);
+    let capacity = args.usize_or("capacity", 10_000);
+    let zipf_hot = args.usize_or("hot-pct", 80); // % of requests on a hot set
+    dispatch_scheme!(scheme, run, clients, requests, key_space, capacity, zipf_hot);
+}
+
+fn run<R: Reclaimer>(
+    clients: usize,
+    requests: usize,
+    key_space: u64,
+    capacity: usize,
+    hot_pct: usize,
+) {
+    if !emr::runtime::artifacts_available() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let server = CacheServer::<R>::start(ServerConfig {
+        capacity,
+        workers: 2,
+        ..ServerConfig::default()
+    })
+    .expect("server start");
+
+    println!(
+        "E15 compute-cache: scheme={} clients={clients} requests/client={requests} \
+         keys={key_space} capacity={capacity} hot={hot_pct}%",
+        R::NAME
+    );
+    let alloc_before = emr::alloc::snapshot();
+    let t0 = emr::util::monotonic_ns();
+
+    // Client load: hot_pct% of requests hit a small hot set (cache-friendly,
+    // like reused partial results), the rest are uniform over the key space.
+    let per_client: Vec<(Vec<f64>, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let server = &server;
+                scope.spawn(move || {
+                    let mut rng = Xoshiro256::new(0xE15 ^ c as u64);
+                    let hot_set = (key_space / 100).max(16);
+                    let mut hit_lat = Vec::new();
+                    let mut miss_lat = Vec::new();
+                    for _ in 0..requests {
+                        let key = if rng.percent(hot_pct as u32) {
+                            rng.below(hot_set) as u32
+                        } else {
+                            rng.below(key_space) as u32
+                        };
+                        let resp = server.request(key).expect("request");
+                        assert!(resp.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+                        if resp.hit {
+                            hit_lat.push(resp.latency_ns as f64);
+                        } else {
+                            miss_lat.push(resp.latency_ns as f64);
+                        }
+                    }
+                    (hit_lat, miss_lat)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall_s = (emr::util::monotonic_ns() - t0) as f64 / 1e9;
+
+    let mut hits: Vec<f64> = per_client.iter().flat_map(|(h, _)| h.iter().copied()).collect();
+    let mut misses: Vec<f64> = per_client.iter().flat_map(|(_, m)| m.iter().copied()).collect();
+    hits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    misses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let total = (clients * requests) as f64;
+    println!("\nthroughput      : {:.0} req/s ({total:.0} requests in {wall_s:.2}s)", total / wall_s);
+    for (name, lat) in [("hit", &hits), ("computed", &misses)] {
+        if lat.is_empty() {
+            continue;
+        }
+        println!(
+            "latency {name:<8}: p50={} p95={} p99={}  (n={})",
+            fmt_ns(percentile_sorted(lat, 50.0)),
+            fmt_ns(percentile_sorted(lat, 95.0)),
+            fmt_ns(percentile_sorted(lat, 99.0)),
+            lat.len()
+        );
+    }
+    let m = server.metrics();
+    println!("server          : {m}");
+    println!("cache entries   : {}", server.cache_len());
+    server.shutdown();
+    R::flush();
+    let alloc_after = emr::alloc::snapshot();
+    println!(
+        "nodes           : allocated {} reclaimed {} (unreclaimed at exit: {})",
+        alloc_after.allocated - alloc_before.allocated,
+        alloc_after.reclaimed - alloc_before.reclaimed,
+        emr::alloc::unreclaimed()
+    );
+}

@@ -1,0 +1,27 @@
+//! Diagnostic: run one artifact directly and dump result metadata.
+//! (Kept as a debugging aid; not part of the documented example set.)
+
+use anyhow::{anyhow, Result};
+
+fn main() -> Result<()> {
+    let path = std::env::args().nth(1).unwrap_or_else(|| "artifacts/model_b1.hlo.txt".into());
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+    println!("platform={}", client.platform_name());
+    let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| anyhow!("{e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| anyhow!("{e:?}"))?;
+    let input = xla::Literal::vec1(&[1i32]);
+    println!("input ty={:?} count={}", input.ty(), input.element_count());
+    let result = exe.execute::<xla::Literal>(&[input]).map_err(|e| anyhow!("{e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("{e:?}"))?;
+    let shape = result.shape().map_err(|e| anyhow!("{e:?}"))?;
+    println!("shape={shape:?}");
+    let tup = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+    println!("elem ty={:?} count={}", tup.ty(), tup.element_count());
+    let v: Vec<f32> = tup.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+    println!("first8={:?}", &v[..8]);
+    let nz = v.iter().filter(|x| **x != 0.0).count();
+    println!("nonzero={nz}/{}", v.len());
+    Ok(())
+}

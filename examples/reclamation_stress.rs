@@ -1,0 +1,80 @@
+//! Reclamation-efficiency demo (paper §4.4 in miniature): churn a queue
+//! and the HashMap-benchmark cache under a chosen scheme while printing the
+//! unreclaimed-node counter — watch epochs lag, hazard-pointer thresholds
+//! plateau, and Stamp-it track the working set.
+//!
+//! ```bash
+//! cargo run --release --example reclamation_stress -- --scheme debra --secs 2
+//! cargo run --release --example reclamation_stress -- --scheme stamp --secs 2
+//! ```
+
+use emr::bench_fw::workload::{compute_payload, consume_payload};
+use emr::dispatch_scheme;
+use emr::ds::hashmap::FifoCache;
+use emr::ds::queue::Queue;
+use emr::reclaim::{Reclaimer, SchemeId};
+use emr::util::cli::Args;
+use emr::util::rng::Xoshiro256;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+fn main() {
+    let args = Args::parse();
+    let scheme = SchemeId::parse(args.get_or("scheme", "stamp")).expect("unknown --scheme");
+    let secs = args.f64_or("secs", 1.0);
+    let threads = args.usize_or("threads", 4);
+    dispatch_scheme!(scheme, run, secs, threads);
+}
+
+fn run<R: Reclaimer>(secs: f64, threads: usize) {
+    println!("reclamation stress under {} — {threads} threads, {secs}s", R::NAME);
+    let queue: Queue<u64, R> = Queue::new();
+    let cache: FifoCache<u64, [f32; 256], R> = FifoCache::new(256, 1000);
+    let stop = AtomicBool::new(false);
+    let start = emr::alloc::snapshot();
+
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let queue = &queue;
+            let cache = &cache;
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut rng = Xoshiro256::new(0x57E5 ^ t as u64);
+                let mut sink = 0.0f32;
+                while !stop.load(Ordering::Acquire) {
+                    // Queue churn: retire a steady stream of small nodes.
+                    queue.enqueue(rng.next_u64());
+                    queue.dequeue();
+                    // Cache churn: evictions retire 1 KiB nodes.
+                    let key = rng.below(5_000);
+                    match cache.get_with(&key, consume_payload) {
+                        Some(v) => sink += v,
+                        None => {
+                            cache.insert(key, compute_payload(key));
+                        }
+                    }
+                }
+                std::hint::black_box(sink);
+            });
+        }
+        // Sampler: print the counter ten times over the run.
+        let interval = std::time::Duration::from_secs_f64(secs / 10.0);
+        println!("{:>6} {:>12} {:>12} {:>12}", "t", "allocated", "reclaimed", "unreclaimed");
+        for i in 1..=10 {
+            std::thread::sleep(interval);
+            let s = emr::alloc::snapshot();
+            println!(
+                "{:>5.1}s {:>12} {:>12} {:>12}",
+                i as f64 * secs / 10.0,
+                s.allocated - start.allocated,
+                s.reclaimed - start.reclaimed,
+                emr::alloc::unreclaimed()
+            );
+        }
+        stop.store(true, Ordering::Release);
+    });
+
+    drop(queue);
+    drop(cache);
+    R::flush();
+    println!("after shutdown+flush: unreclaimed={}", emr::alloc::unreclaimed());
+}

@@ -1,0 +1,28 @@
+//! Quick scheme comparison — a pocket edition of the paper's Figure 4:
+//! run the List benchmark across all seven schemes and print the
+//! per-operation cost table.
+//!
+//! ```bash
+//! cargo run --release --example scheme_comparison -- --threads 1,2,4 --secs 0.5
+//! ```
+
+use emr::bench_fw::figures::{fig_throughput, Workload};
+use emr::bench_fw::BenchParams;
+use emr::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let mut p = BenchParams::from_args(&args);
+    if args.get("secs").is_none() {
+        p.secs = 0.25;
+    }
+    if args.get("trials").is_none() {
+        p.trials = 2;
+    }
+    emr::bench_fw::report::print_environment();
+    fig_throughput(&p, Workload::List);
+    println!(
+        "\n(LFRC's penalty is the per-hop refcount CAS pair; the epoch family\n\
+         and Stamp-it pay only region entry/exit — see the paper's Fig. 4.)"
+    );
+}

@@ -1,0 +1,70 @@
+"""AOT bridge: lower the Layer-2 model to HLO **text** artifacts.
+
+One artifact per compiled batch size (``model_b{B}.hlo.txt``): PJRT
+executables have static shapes, so the Rust batcher pads to the nearest
+compiled size.
+
+HLO *text* — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the pinned xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage (invoked by ``make artifacts``; the ONLY Python the system ever runs):
+
+    cd python && python -m compile.aot --out-dir ../artifacts --batches 1 8 32
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import partial_result
+
+#: Batch sizes compiled by default (mirrored in rust/src/runtime).
+DEFAULT_BATCHES = (1, 8, 32)
+
+
+def lower_to_hlo_text(batch: int) -> str:
+    """Lower ``partial_result`` for one batch size to HLO text."""
+    spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lowered = jax.jit(partial_result).lower(spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals as
+    # `constant({...})`, which the 0.5.1 text parser silently reads as zeros
+    # (the model weights would vanish).
+    text = comp.as_hlo_text(True)
+    # interpret=True means no Mosaic custom-calls may remain — anything
+    # else would be unloadable by the CPU PJRT client.
+    assert "custom-call" not in text, "kernel lowered to a custom-call (interpret=False?)"
+    return text
+
+
+def write_artifacts(out_dir: pathlib.Path, batches) -> list[pathlib.Path]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    paths = []
+    for b in batches:
+        text = lower_to_hlo_text(b)
+        path = out_dir / f"model_b{b}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        paths.append(path)
+    return paths
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--batches", type=int, nargs="+", default=list(DEFAULT_BATCHES))
+    args = parser.parse_args()
+    write_artifacts(pathlib.Path(args.out_dir), args.batches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the "partial result" computation.
+
+The paper's HashMap benchmark "mimics the calculation in a complex
+simulation where partial results are stored in a hash-map for later reuse"
+(§4.1). These kernels are that calculation: a seed-to-feature expansion and
+a fused dense step, lowered with ``interpret=True`` so the CPU PJRT client
+(the Rust runtime) can execute the resulting HLO.
+"""
+
+from .fused_step import feature_expand, fused_step
+
+__all__ = ["feature_expand", "fused_step"]

@@ -1,0 +1,108 @@
+"""Pallas kernels: seed → feature expansion and the fused dense step.
+
+TPU-idiomatic structure (DESIGN.md §Hardware-Adaptation):
+
+* ``fused_step`` is a blocked matmul with a fused bias + tanh epilogue.
+  The output is tiled ``(bm, bn)``; each program loads an ``(bm, K)``
+  activation stripe and a ``(K, bn)`` weight panel into VMEM and feeds the
+  MXU-shaped contraction, applying the epilogue before writing back — the
+  activation never round-trips to HBM between matmul and nonlinearity.
+* ``feature_expand`` is an elementwise VPU-style kernel: one program per
+  batch tile, computing ``sin``-mixed features from integer seeds.
+
+Both must run under ``interpret=True`` — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example
+README). Correctness is pinned against the pure-jnp oracles in ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Golden-ratio-ish mixing constant for the seed expansion (fits in f32
+# exactly enough to be deterministic across platforms).
+_MIX = 0.6180339887498949
+
+
+def _fused_step_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One output tile: ``o = tanh(x @ w + b)``.
+
+    ``x_ref``: (bm, K) activation stripe in VMEM.
+    ``w_ref``: (K, bn) weight panel in VMEM.
+    ``b_ref``: (bn,) bias slice.
+    ``o_ref``: (bm, bn) output tile.
+
+    The dot feeds the MXU (f32 here; bf16 inputs keep an f32 accumulator
+    via ``preferred_element_type``), bias+tanh fuse into the epilogue.
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = jnp.tanh(acc).astype(o_ref.dtype)
+
+
+def _pick_tile(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is ≤ target (tile size heuristic)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_step(x, w, b, *, interpret=True):
+    """``tanh(x @ w + b)`` as a blocked Pallas kernel.
+
+    x: (B, K), w: (K, N), b: (N,) → (B, N) in ``x.dtype``.
+    """
+    batch, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+    assert b.shape == (n,)
+    bm = _pick_tile(batch, 64)
+    bn = _pick_tile(n, 128)
+    grid = (batch // bm, n // bn)
+    return pl.pallas_call(
+        _fused_step_kernel,
+        grid=grid,
+        in_specs=[
+            # Activation stripe: full contraction dimension per tile.
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            # Weight panel.
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            # Bias slice.
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def _feature_expand_kernel(seed_ref, o_ref):
+    """One batch tile of the seed expansion.
+
+    ``o[i, j] = sin((seed_i * MIX + j + 1) * MIX * (j + 1))`` — a cheap,
+    deterministic, well-spread feature map (the "simulation input").
+    """
+    dim = o_ref.shape[1]
+    seeds = seed_ref[...].astype(jnp.float32)
+    j = jax.lax.broadcasted_iota(jnp.float32, (1, dim), 1) + 1.0
+    phase = seeds[:, None] * jnp.float32(_MIX) + j
+    o_ref[...] = jnp.sin(phase * j * jnp.float32(_MIX)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "interpret"))
+def feature_expand(seeds, dim: int = 256, *, interpret=True):
+    """Expand int32 seeds (B,) to f32 features (B, dim)."""
+    (batch,) = seeds.shape
+    bm = _pick_tile(batch, 64)
+    return pl.pallas_call(
+        _feature_expand_kernel,
+        grid=(batch // bm,),
+        in_specs=[pl.BlockSpec((bm,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bm, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, dim), jnp.float32),
+        interpret=interpret,
+    )(seeds)

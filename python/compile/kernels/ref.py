@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its oracle under
+``numpy.testing.assert_allclose`` across the shape/dtype sweep in
+``python/tests/test_kernel.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_MIX = 0.6180339887498949
+
+
+def fused_step_ref(x, w, b):
+    """Reference ``tanh(x @ w + b)`` with an f32 accumulator."""
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b.astype(jnp.float32)[None, :]
+    return jnp.tanh(acc).astype(x.dtype)
+
+
+def feature_expand_ref(seeds, dim: int = 256):
+    """Reference seed expansion (mirrors the kernel: same op order, same
+    f32 constants)."""
+    seeds = seeds.astype(jnp.float32)
+    j = jax.lax.broadcasted_iota(jnp.float32, (1, dim), 1) + 1.0
+    phase = seeds[:, None] * jnp.float32(_MIX) + j
+    return jnp.sin(phase * j * jnp.float32(_MIX)).astype(jnp.float32)

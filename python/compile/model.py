@@ -1,0 +1,62 @@
+"""Layer-2 JAX model: the "partial result" computation served by the
+coordinator.
+
+``partial_result(seeds)`` maps a batch of int32 seeds to 256-float
+(1024-byte — exactly the paper's HashMap-benchmark node payload, §4.1)
+results: a Pallas feature expansion followed by ``K_STEPS`` scanned
+applications of the fused dense step ``x ← tanh(x·W + b)`` with fixed,
+deterministically generated weights.
+
+This module is build-time only — it is lowered once by ``aot.py`` and never
+imported on the Rust request path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import feature_expand, fused_step
+
+#: Result dimension: 256 × f32 = 1024 bytes, the paper's payload size.
+DIM = 256
+#: Scanned dense steps per result ("complex simulation" depth).
+K_STEPS = 8
+#: Weight-generation seed (fixed: results must be reproducible across
+#: builds — the cache keys on the seed alone).
+WEIGHT_SEED = 42
+
+
+def make_weights(dim: int = DIM, seed: int = WEIGHT_SEED):
+    """Deterministic dense weights: W ~ U(-1,1)/sqrt(dim), b ~ U(-0.1,0.1)."""
+    rng = np.random.RandomState(seed)
+    w = (rng.uniform(-1.0, 1.0, size=(dim, dim)) / np.sqrt(dim)).astype(np.float32)
+    b = rng.uniform(-0.1, 0.1, size=(dim,)).astype(np.float32)
+    return jnp.asarray(w), jnp.asarray(b)
+
+
+_W, _B = make_weights()
+
+
+def partial_result(seeds, *, interpret=True):
+    """Batch of seeds (int32[B]) → partial results (f32[B, DIM]).
+
+    Returned as a 1-tuple: the AOT bridge lowers with ``return_tuple=True``
+    and the Rust side unwraps with ``to_tuple1`` (see aot.py).
+    """
+    x = feature_expand(seeds, DIM, interpret=interpret)
+
+    def step(carry, _):
+        return fused_step(carry, _W, _B, interpret=interpret), None
+
+    x, _ = jax.lax.scan(step, x, None, length=K_STEPS)
+    return (x,)
+
+
+def partial_result_ref(seeds):
+    """Oracle built from the kernel oracles (for model-level tests)."""
+    from .kernels import ref
+
+    x = ref.feature_expand_ref(seeds, DIM)
+    for _ in range(K_STEPS):
+        x = ref.fused_step_ref(x, _W, _B)
+    return x

@@ -1,0 +1,40 @@
+"""AOT artifact tests: the HLO-text bridge the Rust runtime consumes."""
+
+import pathlib
+
+import pytest
+
+from compile.aot import DEFAULT_BATCHES, lower_to_hlo_text, write_artifacts
+
+
+def test_hlo_text_structure():
+    text = lower_to_hlo_text(1)
+    assert "ENTRY" in text, "must be a complete HLO module"
+    assert "custom-call" not in text, "Mosaic custom-call would be unloadable on CPU PJRT"
+    # Regression: the printer must not elide the model weights — the 0.5.1
+    # text parser reads `constant({...})` placeholders as zeros.
+    assert "constant({...})" not in text, "large constants elided from HLO text"
+    # One int32 batch input, one tupled f32 output.
+    assert "s32[1]" in text
+    assert "f32[1,256]" in text
+
+
+@pytest.mark.parametrize("batch", DEFAULT_BATCHES)
+def test_hlo_text_per_batch_shapes(batch):
+    text = lower_to_hlo_text(batch)
+    assert f"s32[{batch}]" in text
+    assert f"f32[{batch},256]" in text
+
+
+def test_write_artifacts_layout(tmp_path: pathlib.Path):
+    paths = write_artifacts(tmp_path, [1, 8])
+    assert [p.name for p in paths] == ["model_b1.hlo.txt", "model_b8.hlo.txt"]
+    for p in paths:
+        assert p.exists()
+        content = p.read_text()
+        assert len(content) > 1000, "suspiciously small HLO module"
+        assert "ENTRY" in content
+
+
+def test_lowering_is_reproducible():
+    assert lower_to_hlo_text(8) == lower_to_hlo_text(8)

@@ -1,0 +1,140 @@
+"""Kernel vs oracle — the CORE correctness signal (hypothesis sweeps)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import feature_expand, fused_step
+from compile.kernels.ref import feature_expand_ref, fused_step_ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape).astype(dtype))
+
+
+# ---- fused_step -----------------------------------------------------------
+
+
+@hypothesis.given(
+    batch=st.sampled_from([1, 2, 3, 5, 8, 32, 64, 96]),
+    k=st.sampled_from([8, 64, 128, 256]),
+    n=st.sampled_from([8, 128, 256, 384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_step_matches_ref_f32(batch, k, n, seed):
+    x = _rand((batch, k), np.float32, seed)
+    w = _rand((k, n), np.float32, seed + 1)
+    b = _rand((n,), np.float32, seed + 2)
+    got = fused_step(x, w, b)
+    want = fused_step_ref(x, w, b)
+    assert got.shape == (batch, n)
+    assert got.dtype == x.dtype
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    batch=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_step_matches_ref_bf16(batch, seed):
+    # bf16 inputs with f32 accumulation: loose elementwise tolerance.
+    x = _rand((batch, 128), np.float32, seed).astype(jnp.bfloat16)
+    w = _rand((128, 128), np.float32, seed + 1).astype(jnp.bfloat16)
+    b = _rand((128,), np.float32, seed + 2).astype(jnp.bfloat16)
+    got = fused_step(x, w, b)
+    want = fused_step_ref(x, w, b)
+    assert got.dtype == jnp.bfloat16
+    assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(want, dtype=np.float32),
+        rtol=0.05,
+        atol=0.05,
+    )
+
+
+def test_fused_step_output_is_tanh_bounded():
+    x = _rand((8, 256), np.float32, 0) * 100.0
+    w = _rand((256, 256), np.float32, 1)
+    b = _rand((256,), np.float32, 2)
+    y = np.asarray(fused_step(x, w, b))
+    assert np.all(np.abs(y) <= 1.0)
+    assert np.all(np.isfinite(y))
+
+
+def test_fused_step_rejects_contraction_mismatch():
+    x = _rand((4, 64), np.float32, 0)
+    w = _rand((128, 128), np.float32, 1)
+    b = _rand((128,), np.float32, 2)
+    with pytest.raises(AssertionError):
+        fused_step(x, w, b)
+
+
+def test_fused_step_tiling_boundaries_agree():
+    # A shape whose batch is not a multiple of the 64 target forces the
+    # divisor-search tiling path; values must not depend on tiling.
+    x = _rand((96, 256), np.float32, 7)
+    w = _rand((256, 384), np.float32, 8)
+    b = _rand((384,), np.float32, 9)
+    got = np.asarray(fused_step(x, w, b))
+    want = np.asarray(fused_step_ref(x, w, b))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---- feature_expand -------------------------------------------------------
+
+
+@hypothesis.given(
+    batch=st.sampled_from([1, 2, 7, 8, 32, 96]),
+    dim=st.sampled_from([8, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_feature_expand_matches_ref(batch, dim, seed):
+    rng = np.random.RandomState(seed)
+    seeds = jnp.asarray(rng.randint(0, 30000, size=(batch,), dtype=np.int32))
+    got = feature_expand(seeds, dim)
+    want = feature_expand_ref(seeds, dim)
+    assert got.shape == (batch, dim)
+    assert got.dtype == jnp.float32
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_feature_expand_is_deterministic_and_seed_sensitive():
+    seeds = jnp.asarray(np.arange(16, dtype=np.int32))
+    a = np.asarray(feature_expand(seeds))
+    b = np.asarray(feature_expand(seeds))
+    np.testing.assert_array_equal(a, b)
+    other = np.asarray(feature_expand(seeds + 1))
+    assert not np.allclose(a, other), "different seeds must give different features"
+
+
+def test_feature_expand_values_bounded():
+    seeds = jnp.asarray(np.arange(64, dtype=np.int32) * 1000)
+    y = np.asarray(feature_expand(seeds))
+    assert np.all(np.abs(y) <= 1.0)
+
+
+# ---- pallas vs jit composition -------------------------------------------
+
+
+def test_kernels_compose_under_jit():
+    @jax.jit
+    def pipeline(seeds, w, b):
+        x = feature_expand(seeds, 256)
+        return fused_step(x, w, b)
+
+    seeds = jnp.asarray(np.arange(8, dtype=np.int32))
+    w = _rand((256, 256), np.float32, 3)
+    b = _rand((256,), np.float32, 4)
+    got = pipeline(seeds, w, b)
+    want = fused_step_ref(feature_expand_ref(seeds, 256), w, b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

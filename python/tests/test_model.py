@@ -1,0 +1,73 @@
+"""Layer-2 model tests: shapes, determinism, oracle agreement."""
+
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.model import DIM, K_STEPS, make_weights, partial_result, partial_result_ref
+
+
+def _seeds(batch, lo=0, hi=30000, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(lo, hi, size=(batch,), dtype=np.int32))
+
+
+def test_output_shape_and_payload_size():
+    for b in (1, 8, 32):
+        (out,) = partial_result(_seeds(b))
+        assert out.shape == (b, DIM)
+        assert out.dtype == jnp.float32
+        # The paper's HashMap payload: 1024 bytes per result.
+        assert out.shape[1] * 4 == 1024
+
+
+def test_model_matches_ref():
+    seeds = _seeds(8, seed=3)
+    (got,) = partial_result(seeds)
+    want = partial_result_ref(seeds)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_model_is_deterministic():
+    seeds = _seeds(8, seed=1)
+    (a,) = partial_result(seeds)
+    (b,) = partial_result(seeds)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_results_differ_per_seed():
+    (out,) = partial_result(jnp.asarray(np.array([1, 2, 3, 4], dtype=np.int32)))
+    out = np.asarray(out)
+    for i in range(len(out)):
+        for j in range(i + 1, len(out)):
+            assert not np.allclose(out[i], out[j]), f"rows {i},{j} identical"
+
+
+def test_batch_invariance():
+    # A seed's result must not depend on its batch neighbours (the batcher
+    # pads batches; padding must not perturb real results).
+    s = _seeds(4, seed=9)
+    (batched,) = partial_result(s)
+    for i in range(4):
+        (single,) = partial_result(s[i : i + 1])
+        assert_allclose(
+            np.asarray(single)[0], np.asarray(batched)[i], rtol=1e-5, atol=1e-6
+        )
+
+
+def test_values_bounded_and_finite():
+    (out,) = partial_result(_seeds(32, seed=4))
+    out = np.asarray(out)
+    assert np.all(np.isfinite(out))
+    assert np.all(np.abs(out) <= 1.0)  # tanh output
+    # And not degenerate (all-zero / collapsed).
+    assert np.std(out) > 1e-3
+
+
+def test_weights_are_reproducible():
+    w1, b1 = make_weights()
+    w2, b2 = make_weights()
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    assert w1.shape == (DIM, DIM)
+    assert K_STEPS >= 1

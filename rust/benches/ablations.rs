@@ -1,0 +1,13 @@
+//! A1-A3: design-choice ablations — Stamp-it's global-retire threshold
+//! (paper: 20), HPR's scan-threshold base (paper: 100), and the epoch
+//! advance / DEBRA check periods (paper: 100 / 20).
+use emr::bench_fw::figures::{abl_epoch_period, abl_hp_threshold, abl_threshold};
+use emr::bench_fw::BenchParams;
+use emr::util::cli::Args;
+
+fn main() {
+    let p = BenchParams::from_args(&Args::parse());
+    abl_threshold(&p);
+    abl_hp_threshold(&p);
+    abl_epoch_period(&p);
+}

@@ -1,0 +1,18 @@
+//! Figures 12-19 (Appendix A.3): the same benchmarks under the system
+//! (libc) allocator instead of the jemalloc-like pool. The paper's finding
+//! — "the impact of the memory manager is equally big/small for all
+//! schemes" — shows as both sweeps preserving the scheme ordering.
+use emr::alloc::Policy;
+use emr::bench_fw::figures::{fig_efficiency, fig_throughput, Workload};
+use emr::bench_fw::BenchParams;
+use emr::util::cli::Args;
+
+fn main() {
+    let mut p = BenchParams::from_args(&Args::parse());
+    for alloc in [Policy::Pool, Policy::System] {
+        p.alloc = alloc;
+        fig_throughput(&p, Workload::Queue);    // Fig 3 vs 12
+        fig_throughput(&p, Workload::List);     // Fig 4 vs 13
+        fig_efficiency(&p, Workload::Queue);    // Fig 8 vs 16
+    }
+}

@@ -1,0 +1,9 @@
+//! Figure 3 (and 12 with --alloc system): Queue benchmark, thread sweep.
+use emr::bench_fw::figures::{fig_throughput, Workload};
+use emr::bench_fw::BenchParams;
+use emr::util::cli::Args;
+
+fn main() {
+    let p = BenchParams::from_args(&Args::parse());
+    fig_throughput(&p, Workload::Queue);
+}

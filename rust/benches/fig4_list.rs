@@ -1,0 +1,16 @@
+//! Figure 4 (13): List benchmark, 10 elements, 20% updates, thread sweep.
+//! The paper omits LFRC here ("performs exceedingly poor"); pass
+//! --schemes all to include it anyway.
+use emr::bench_fw::figures::{fig_throughput, Workload};
+use emr::bench_fw::BenchParams;
+use emr::reclaim::SchemeId;
+use emr::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let mut p = BenchParams::from_args(&args);
+    if args.get("schemes").is_none() {
+        p.schemes.retain(|s| *s != SchemeId::Lfrc); // paper's Fig. 4 set
+    }
+    fig_throughput(&p, Workload::List);
+}

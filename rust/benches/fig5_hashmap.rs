@@ -1,0 +1,15 @@
+//! Figure 5 (14): HashMap benchmark, thread sweep. The paper excludes QSR
+//! from this plot ("scales very poorly"); pass --schemes all to include it.
+use emr::bench_fw::figures::{fig_throughput, Workload};
+use emr::bench_fw::BenchParams;
+use emr::reclaim::SchemeId;
+use emr::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let mut p = BenchParams::from_args(&args);
+    if args.get("schemes").is_none() {
+        p.schemes.retain(|s| *s != SchemeId::Qsr); // paper's Fig. 5 set
+    }
+    fig_throughput(&p, Workload::HashMap);
+}

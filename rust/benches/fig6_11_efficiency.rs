@@ -1,0 +1,16 @@
+//! Figures 6 and 8-11 (16-19): reclamation efficiency — unreclaimed nodes
+//! over time for Queue, List (20% and 80%) and HashMap.
+use emr::bench_fw::figures::{fig_efficiency, Workload};
+use emr::bench_fw::BenchParams;
+use emr::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let mut p = BenchParams::from_args(&args);
+    fig_efficiency(&p, Workload::Queue);        // Fig 8
+    p.workload_pct = 20;
+    fig_efficiency(&p, Workload::List);         // Fig 9
+    p.workload_pct = 80;
+    fig_efficiency(&p, Workload::List);         // Fig 10
+    fig_efficiency(&p, Workload::HashMap);      // Figs 6 & 11
+}

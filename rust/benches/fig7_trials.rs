@@ -1,0 +1,8 @@
+//! Figure 7 (15): development of HashMap runtime over trials (warm-up).
+use emr::bench_fw::figures::fig7_trials;
+use emr::bench_fw::BenchParams;
+use emr::util::cli::Args;
+
+fn main() {
+    fig7_trials(&BenchParams::from_args(&Args::parse()));
+}

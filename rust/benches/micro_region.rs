@@ -1,0 +1,9 @@
+//! E13: cost of a critical-region enter+exit cycle per scheme — the
+//! operations Propositions 2/3 claim are (amortized) constant-time.
+use emr::bench_fw::figures::micro_region;
+use emr::bench_fw::BenchParams;
+use emr::util::cli::Args;
+
+fn main() {
+    micro_region(&BenchParams::from_args(&Args::parse()));
+}

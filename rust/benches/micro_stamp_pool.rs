@@ -1,0 +1,9 @@
+//! E14: Stamp Pool push+remove cycle cost vs thread count (the paper's
+//! "expected average runtime of the operations is constant" claim).
+use emr::bench_fw::figures::micro_stamp_pool;
+use emr::bench_fw::BenchParams;
+use emr::util::cli::Args;
+
+fn main() {
+    micro_stamp_pool(&BenchParams::from_args(&Args::parse()));
+}

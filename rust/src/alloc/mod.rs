@@ -1,0 +1,157 @@
+//! Node allocation with global allocation/reclamation counters and a
+//! runtime-selectable policy, reproducing the paper's allocator axis
+//! (jemalloc vs libc, Appendix A.3) without rebuilding the binary:
+//!
+//! * [`Policy::Pool`] — a lock-free, size-classed, **type-stable** pool
+//!   ([`pool`]): memory is never returned to the OS, free slots are recycled
+//!   through tagged free-lists. This mimics jemalloc's thread-cached
+//!   behaviour and, crucially, provides the type-stable memory that LFRC
+//!   (Valois-style reference counting) *requires* — a stale reader may touch
+//!   the refcount word of a recycled slot, which is only sound if the slot
+//!   is never unmapped and every slot keeps a refcount-compatible first word.
+//! * [`Policy::System`] — plain `std::alloc` (libc malloc).
+//!
+//! LFRC ignores the policy and always uses the pool (the paper makes the
+//! same point: LFRC "is not a general reclamation scheme, since the
+//! reclaimed nodes cannot be returned to the memory manager, but are stored
+//! in a global free-list").
+//!
+//! The counters are the measurement substrate for the paper's *reclamation
+//! efficiency* analysis (§4.4): `unreclaimed() = allocated − reclaimed` is
+//! exactly the quantity plotted in Figures 6 and 8–11.
+
+pub mod pool;
+
+use crossbeam_utils::CachePadded;
+use std::alloc::Layout;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// Allocation policy for reclaimable nodes.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Size-classed, type-stable, lock-free pool (jemalloc-like; default).
+    Pool,
+    /// `std::alloc` (libc malloc) — the paper's Appendix A.3 configuration.
+    System,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "pool" | "jemalloc" => Some(Policy::Pool),
+            "system" | "libc" => Some(Policy::System),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Pool => "pool",
+            Policy::System => "system",
+        }
+    }
+}
+
+static POLICY: AtomicU8 = AtomicU8::new(0); // 0 = Pool, 1 = System
+
+/// Select the global allocation policy (benchmark harness, trial setup).
+pub fn set_policy(p: Policy) {
+    POLICY.store(p as u8, Ordering::Relaxed);
+}
+
+/// Current global allocation policy.
+pub fn policy() -> Policy {
+    if POLICY.load(Ordering::Relaxed) == 0 {
+        Policy::Pool
+    } else {
+        Policy::System
+    }
+}
+
+static ALLOCATED: CachePadded<AtomicU64> = CachePadded::new(AtomicU64::new(0));
+static RECLAIMED: CachePadded<AtomicU64> = CachePadded::new(AtomicU64::new(0));
+
+/// Total nodes ever allocated (monotonic).
+pub fn allocated() -> u64 {
+    ALLOCATED.load(Ordering::Relaxed)
+}
+
+/// Total nodes ever reclaimed (monotonic).
+pub fn reclaimed() -> u64 {
+    RECLAIMED.load(Ordering::Relaxed)
+}
+
+/// Currently unreclaimed nodes — the paper's reclamation-efficiency metric.
+pub fn unreclaimed() -> u64 {
+    allocated().saturating_sub(reclaimed())
+}
+
+/// Snapshot of the counters, for per-trial deltas.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct CounterSnapshot {
+    pub allocated: u64,
+    pub reclaimed: u64,
+}
+
+/// Take a counter snapshot.
+pub fn snapshot() -> CounterSnapshot {
+    CounterSnapshot { allocated: allocated(), reclaimed: reclaimed() }
+}
+
+/// Allocate one node of `layout` under the given policy. Never returns null.
+///
+/// `force_pool` is set by LFRC (type-stable memory requirement).
+pub fn alloc_raw(layout: Layout, force_pool: bool) -> *mut u8 {
+    ALLOCATED.fetch_add(1, Ordering::Relaxed);
+    if force_pool || policy() == Policy::Pool {
+        pool::alloc(layout)
+    } else {
+        // SAFETY: layout has non-zero size (nodes always carry a header).
+        let p = unsafe { std::alloc::alloc(layout) };
+        assert!(!p.is_null(), "system allocator returned null");
+        p
+    }
+}
+
+/// Return a node's memory.
+///
+/// # Safety
+/// `ptr` must come from [`alloc_raw`] with the same `layout` and
+/// `from_pool` flag, and must not be used afterwards.
+pub unsafe fn free_raw(ptr: *mut u8, layout: Layout, from_pool: bool) {
+    RECLAIMED.fetch_add(1, Ordering::Relaxed);
+    if from_pool {
+        pool::free(ptr, layout);
+    } else {
+        std::alloc::dealloc(ptr, layout);
+    }
+}
+
+/// Whether an allocation made *now* would come from the pool.
+pub fn currently_pooled(force_pool: bool) -> bool {
+    force_pool || policy() == Policy::Pool
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_move() {
+        let before = snapshot();
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        let p = alloc_raw(layout, false);
+        unsafe { free_raw(p, layout, currently_pooled(false)) };
+        let after = snapshot();
+        assert!(after.allocated >= before.allocated + 1);
+        assert!(after.reclaimed >= before.reclaimed + 1);
+    }
+
+    #[test]
+    fn policy_roundtrip() {
+        assert_eq!(Policy::parse("pool"), Some(Policy::Pool));
+        assert_eq!(Policy::parse("libc"), Some(Policy::System));
+        assert_eq!(Policy::parse("bogus"), None);
+        assert_eq!(Policy::Pool.name(), "pool");
+    }
+}

@@ -1,0 +1,317 @@
+//! Lock-free, size-classed, **type-stable** slot pool.
+//!
+//! Design:
+//!
+//! * Size classes are powers of two from 64 B to 64 KiB. Every class owns a
+//!   set of 2 MiB chunks, each aligned to 2 MiB so a slot pointer can be
+//!   masked back to its chunk header (no per-slot bookkeeping).
+//! * Free slots form a Treiber stack of **slot indices** with a 32-bit
+//!   version tag packed next to the index in one `AtomicU64` head —
+//!   the tag makes pop ABA-safe without double-word CAS (the same packing
+//!   discipline the paper applies to its Stamp Pool links).
+//! * The intrusive free-list link lives at byte offset 8 of a free slot.
+//!   **Offset 0 is never written by the pool**: LFRC keeps its refcount
+//!   word there, and Valois-style counting relies on that word staying
+//!   readable (and marked RETIRED) while the slot sits in the free-list.
+//! * Chunks are never unmapped — the type-stability guarantee.
+//!
+//! Fresh slots are handed out by a per-class bump cursor; the free-list is
+//! only populated by frees, so the fast path after warm-up is pop/push.
+
+use std::alloc::Layout;
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const CHUNK_BYTES: usize = 1 << 21; // 2 MiB, alignment == size
+const SLOT_ALIGN: usize = 64;
+const MIN_CLASS: usize = 64;
+const MAX_CLASS: usize = 64 * 1024;
+const NUM_CLASSES: usize = 11; // 64,128,...,65536
+const MAX_CHUNKS: usize = 4096; // per class => 8 GiB per class, ample
+const NIL: u32 = u32::MAX;
+
+/// Per-chunk header, stored at the start of each aligned chunk.
+#[repr(C)]
+struct ChunkHeader {
+    /// Global slot index of this chunk's first slot.
+    start_index: u32,
+    /// Slot size of the owning class (for debug assertions).
+    slot_size: u32,
+}
+
+/// Header space reserved at the chunk start (keeps slots 64-aligned).
+const HEADER_BYTES: usize = SLOT_ALIGN;
+
+struct SizeClass {
+    slot_size: usize,
+    slots_per_chunk: usize,
+    /// Packed Treiber head: `(tag << 32) | index`, `NIL` index = empty.
+    head: AtomicU64,
+    /// Next never-used global slot index.
+    bump: AtomicU64,
+    /// Number of published chunks; `capacity = count * slots_per_chunk`.
+    count: AtomicU32,
+    bases: Box<[AtomicPtr<u8>]>,
+    grow: Mutex<()>,
+}
+
+impl SizeClass {
+    fn new(slot_size: usize) -> Self {
+        let slots_per_chunk = (CHUNK_BYTES - HEADER_BYTES) / slot_size;
+        let bases = (0..MAX_CHUNKS).map(|_| AtomicPtr::new(ptr::null_mut())).collect();
+        Self {
+            slot_size,
+            slots_per_chunk,
+            head: AtomicU64::new(NIL as u64),
+            bump: AtomicU64::new(0),
+            count: AtomicU32::new(0),
+            bases,
+            grow: Mutex::new(()),
+        }
+    }
+
+    #[inline]
+    fn slot_ptr(&self, index: u32) -> *mut u8 {
+        let chunk = index as usize / self.slots_per_chunk;
+        let slot = index as usize % self.slots_per_chunk;
+        let base = self.bases[chunk].load(Ordering::Acquire);
+        debug_assert!(!base.is_null(), "slot index {index} in unpublished chunk");
+        // SAFETY: base points at a live CHUNK_BYTES chunk and slot is in range.
+        unsafe { base.add(HEADER_BYTES + slot * self.slot_size) }
+    }
+
+    /// The free-list link of a free slot (byte offset 8 — offset 0 is
+    /// reserved for scheme headers, see module docs).
+    #[inline]
+    fn link(&self, slot: *mut u8) -> *mut u32 {
+        // SAFETY: every slot is at least 64 bytes.
+        unsafe { slot.add(8) as *mut u32 }
+    }
+
+    fn alloc(&self) -> *mut u8 {
+        loop {
+            // Fast path: pop from the tagged free-list.
+            let head = self.head.load(Ordering::Acquire);
+            let index = head as u32;
+            if index != NIL {
+                let slot = self.slot_ptr(index);
+                // The link read may be stale if another thread popped and
+                // reused the slot concurrently — the tagged CAS below
+                // detects that and we retry.
+                // SAFETY: slot memory is never unmapped (type-stable).
+                let next = unsafe { self.link(slot).read_volatile() };
+                let new = ((head >> 32).wrapping_add(1) << 32) | next as u64;
+                if self
+                    .head
+                    .compare_exchange_weak(head, new, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    return slot;
+                }
+                continue;
+            }
+            // Slow path: bump-allocate a fresh slot, growing if needed.
+            let i = self.bump.fetch_add(1, Ordering::Relaxed);
+            assert!(i < (MAX_CHUNKS * self.slots_per_chunk) as u64, "pool class exhausted");
+            let i = i as u32;
+            while (self.count.load(Ordering::Acquire) as u64 * self.slots_per_chunk as u64)
+                <= i as u64
+            {
+                self.grow_to(i);
+            }
+            return self.slot_ptr(i);
+        }
+    }
+
+    #[cold]
+    fn grow_to(&self, index: u32) {
+        let _g = self.grow.lock().unwrap();
+        while (self.count.load(Ordering::Acquire) as u64 * self.slots_per_chunk as u64)
+            <= index as u64
+        {
+            let chunk_idx = self.count.load(Ordering::Acquire) as usize;
+            assert!(chunk_idx < MAX_CHUNKS, "pool class exhausted");
+            let layout = Layout::from_size_align(CHUNK_BYTES, CHUNK_BYTES).unwrap();
+            // SAFETY: non-zero, power-of-two layout.
+            let base = unsafe { std::alloc::alloc_zeroed(layout) };
+            assert!(!base.is_null(), "chunk allocation failed");
+            // SAFETY: fresh chunk, header fits in HEADER_BYTES.
+            unsafe {
+                (base as *mut ChunkHeader).write(ChunkHeader {
+                    start_index: (chunk_idx * self.slots_per_chunk) as u32,
+                    slot_size: self.slot_size as u32,
+                });
+            }
+            self.bases[chunk_idx].store(base, Ordering::Release);
+            self.count.store(chunk_idx as u32 + 1, Ordering::Release);
+        }
+    }
+
+    fn free(&self, slot: *mut u8) {
+        let index = self.index_of(slot);
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            // SAFETY: slot belongs to this class (checked by index_of).
+            unsafe { self.link(slot).write_volatile(head as u32) };
+            let new = ((head >> 32).wrapping_add(1) << 32) | index as u64;
+            if self
+                .head
+                .compare_exchange_weak(head, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    fn index_of(&self, slot: *mut u8) -> u32 {
+        let base = (slot as usize & !(CHUNK_BYTES - 1)) as *mut u8;
+        // SAFETY: slot came from this pool, so the masked base is a chunk
+        // header that is never unmapped.
+        let header = unsafe { &*(base as *const ChunkHeader) };
+        debug_assert_eq!(header.slot_size as usize, self.slot_size);
+        let offset = slot as usize - base as usize - HEADER_BYTES;
+        debug_assert_eq!(offset % self.slot_size, 0);
+        header.start_index + (offset / self.slot_size) as u32
+    }
+}
+
+fn classes() -> &'static [SizeClass; NUM_CLASSES] {
+    use once_cell::sync::OnceCell;
+    static CLASSES: OnceCell<Box<[SizeClass; NUM_CLASSES]>> = OnceCell::new();
+    CLASSES.get_or_init(|| {
+        let v: Vec<SizeClass> =
+            (0..NUM_CLASSES).map(|i| SizeClass::new(MIN_CLASS << i)).collect();
+        let boxed: Box<[SizeClass; NUM_CLASSES]> =
+            v.into_boxed_slice().try_into().map_err(|_| ()).unwrap();
+        boxed
+    })
+}
+
+fn class_index(size: usize) -> usize {
+    let size = size.max(MIN_CLASS);
+    assert!(size <= MAX_CLASS, "pool allocation of {size} B exceeds the {MAX_CLASS} B max class");
+    (usize::BITS - (size - 1).leading_zeros()) as usize - MIN_CLASS.trailing_zeros() as usize
+}
+
+/// Allocate a slot large enough for `layout`. Aborts on OOM.
+pub fn alloc(layout: Layout) -> *mut u8 {
+    assert!(layout.align() <= SLOT_ALIGN, "pool supports alignment up to {SLOT_ALIGN}");
+    classes()[class_index(layout.size())].alloc()
+}
+
+/// Return a slot to its size class.
+///
+/// # Safety
+/// `ptr` must come from [`alloc`] with a layout of the same size class and
+/// must not be used afterwards. Byte offset 0 of the slot is preserved
+/// (LFRC's refcount word); offsets 8..12 are overwritten by the free-list
+/// link.
+pub unsafe fn free(ptr: *mut u8, layout: Layout) {
+    classes()[class_index(layout.size())].free(ptr);
+}
+
+/// Number of bytes currently held by the pool (for diagnostics).
+pub fn footprint_bytes() -> usize {
+    classes().iter().map(|c| c.count.load(Ordering::Relaxed) as usize * CHUNK_BYTES).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn class_index_boundaries() {
+        assert_eq!(class_index(1), 0);
+        assert_eq!(class_index(64), 0);
+        assert_eq!(class_index(65), 1);
+        assert_eq!(class_index(128), 1);
+        assert_eq!(class_index(129), 2);
+        assert_eq!(class_index(MAX_CLASS), NUM_CLASSES - 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn oversized_allocation_panics() {
+        class_index(MAX_CLASS + 1);
+    }
+
+    #[test]
+    fn alloc_free_recycles_slots() {
+        // Size class chosen to be unused by other (parallel) tests so the
+        // LIFO assertion is not raced.
+        let layout = Layout::from_size_align(3000, 8).unwrap();
+        let a = alloc(layout);
+        unsafe { free(a, layout) };
+        let b = alloc(layout);
+        // LIFO free-list: the same slot comes back.
+        assert_eq!(a, b);
+        unsafe { free(b, layout) };
+    }
+
+    #[test]
+    fn distinct_live_allocations_do_not_alias() {
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        let ptrs: Vec<_> = (0..1000).map(|_| alloc(layout)).collect();
+        let set: HashSet<_> = ptrs.iter().collect();
+        assert_eq!(set.len(), ptrs.len());
+        for p in ptrs {
+            unsafe { free(p, layout) };
+        }
+    }
+
+    #[test]
+    fn word0_is_preserved_across_free() {
+        // Class 32768 — unused elsewhere, keeps the LIFO assertion race-free.
+        let layout = Layout::from_size_align(20_000, 8).unwrap();
+        let p = alloc(layout);
+        unsafe {
+            (p as *mut u64).write(0xDEAD_BEEF_CAFE_F00D);
+            free(p, layout);
+            // Slot is free but word 0 must be intact (LFRC contract).
+            assert_eq!((p as *mut u64).read(), 0xDEAD_BEEF_CAFE_F00D);
+        }
+        let q = alloc(layout);
+        assert_eq!(p, q);
+        unsafe { free(q, layout) };
+    }
+
+    #[test]
+    fn concurrent_alloc_free_stress() {
+        let layout = Layout::from_size_align(96, 8).unwrap();
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut held = Vec::new();
+                    for i in 0..2000 {
+                        held.push(alloc(layout));
+                        if i % 3 == 0 {
+                            if let Some(p) = held.pop() {
+                                unsafe { free(p, layout) };
+                            }
+                        }
+                        if i % 64 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                    // Write to every held slot to catch aliasing between
+                    // concurrently-live allocations.
+                    for (i, &p) in held.iter().enumerate() {
+                        unsafe { (p as *mut u64).write(i as u64) };
+                    }
+                    for (i, &p) in held.iter().enumerate() {
+                        unsafe { assert_eq!((p as *mut u64).read(), i as u64) };
+                    }
+                    for p in held {
+                        unsafe { free(p, layout) };
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,435 @@
+//! One entry point per paper figure / experiment (DESIGN.md §3).
+//!
+//! Each function prints the same rows/series the paper reports and
+//! optionally writes a CSV. Shared by the `repro` CLI and the
+//! `cargo bench` targets (`rust/benches/*.rs`).
+
+use super::report::{maybe_write_csv, SeriesTable, SweepTable};
+use super::runner::{run_trial, ConfigResult};
+use super::sampler::sample_during;
+use super::workload::*;
+use super::BenchParams;
+use crate::dispatch_scheme;
+use crate::reclaim::{Reclaimer, SchemeId};
+use crate::util::stats::fmt_ns;
+
+/// Which benchmark workload a figure runs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Workload {
+    Queue,
+    List,
+    HashMap,
+}
+
+impl Workload {
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Queue => "Queue",
+            Workload::List => "List",
+            Workload::HashMap => "HashMap",
+        }
+    }
+}
+
+/// Run one scheme's thread sweep for `workload`; returns mean ns/op per
+/// thread count.
+fn sweep_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<f64> {
+    crate::alloc::set_policy(p.alloc);
+    p.threads
+        .iter()
+        .map(|&threads| {
+            let mut cfg = ConfigResult::default();
+            match workload {
+                Workload::Queue => {
+                    let q = prefill_queue::<R>(p);
+                    for trial in 0..p.trials {
+                        cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
+                            queue_worker(&q, p, tid, trial, stop)
+                        }));
+                    }
+                }
+                Workload::List => {
+                    let list = prefill_list::<R>(p);
+                    for trial in 0..p.trials {
+                        cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
+                            list_worker(&list, p, tid, trial, stop)
+                        }));
+                    }
+                }
+                Workload::HashMap => {
+                    // Retained across trials within a configuration — the
+                    // paper's deliberate same-process warm-up behaviour.
+                    let cache = make_cache::<R>(p);
+                    for trial in 0..p.trials {
+                        cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
+                            hashmap_worker(&cache, p, tid, trial, stop)
+                        }));
+                    }
+                }
+            }
+            R::flush();
+            cfg.mean_ns_per_op()
+        })
+        .collect()
+}
+
+/// Figures 3/4/5 (and 12/13/14 with `--alloc system`): throughput sweeps.
+pub fn fig_throughput(p: &BenchParams, workload: Workload) {
+    let extra = match workload {
+        Workload::List => format!(
+            " ({} elements, {}% updates)",
+            p.list_size, p.workload_pct
+        ),
+        Workload::HashMap => format!(
+            " ({} buckets, cap {}, {} keys)",
+            p.map_buckets, p.map_capacity, p.key_space
+        ),
+        Workload::Queue => String::new(),
+    };
+    let mut table = SweepTable {
+        title: format!(
+            "{} benchmark{extra} — avg runtime per operation [alloc={}]",
+            workload.name(),
+            p.alloc.name()
+        ),
+        threads: p.threads.clone(),
+        rows: Vec::new(),
+    };
+    for &scheme in &p.schemes {
+        // The paper omits LFRC from the List plot (Fig. 4: "performs
+        // exceedingly poor") but we still run it when asked explicitly.
+        let row = dispatch_scheme!(scheme, sweep_one, p, workload);
+        table.rows.push((scheme.name().to_string(), row));
+    }
+    table.print();
+    maybe_write_csv(&p.csv, &table.to_csv());
+}
+
+/// One scheme's efficiency run: `p.trials` trials at the max thread count,
+/// 50 samples each, structure retained across trials. Returns the series
+/// of (sample index, unreclaimed-above-baseline).
+fn efficiency_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<(usize, f64)> {
+    crate::alloc::set_policy(p.alloc);
+    // Settle previous schemes' garbage, then baseline the global counter.
+    R::flush();
+    let baseline = crate::alloc::unreclaimed();
+    let threads = *p.threads.iter().max().unwrap_or(&2);
+    let mut series = Vec::with_capacity(p.trials * p.samples);
+
+    match workload {
+        Workload::Queue => {
+            let q = prefill_queue::<R>(p);
+            for trial in 0..p.trials {
+                let offset = trial * p.samples;
+                let (samples, _) = sample_during(p.samples, p.duration(), offset, |stop| {
+                    std::thread::scope(|scope| {
+                        for tid in 0..threads {
+                            let q = &q;
+                            scope.spawn(move || queue_worker(q, p, tid, trial, stop));
+                        }
+                    })
+                });
+                for s in samples {
+                    series.push((s.index, s.unreclaimed.saturating_sub(baseline) as f64));
+                }
+            }
+        }
+        Workload::List => {
+            let list = prefill_list::<R>(p);
+            for trial in 0..p.trials {
+                let offset = trial * p.samples;
+                let (samples, _) = sample_during(p.samples, p.duration(), offset, |stop| {
+                    std::thread::scope(|scope| {
+                        for tid in 0..threads {
+                            let list = &list;
+                            scope.spawn(move || list_worker(list, p, tid, trial, stop));
+                        }
+                    })
+                });
+                for s in samples {
+                    series.push((s.index, s.unreclaimed.saturating_sub(baseline) as f64));
+                }
+            }
+        }
+        Workload::HashMap => {
+            let cache = make_cache::<R>(p);
+            for trial in 0..p.trials {
+                let offset = trial * p.samples;
+                let (samples, _) = sample_during(p.samples, p.duration(), offset, |stop| {
+                    std::thread::scope(|scope| {
+                        for tid in 0..threads {
+                            let cache = &cache;
+                            scope.spawn(move || hashmap_worker(cache, p, tid, trial, stop));
+                        }
+                    })
+                });
+                for s in samples {
+                    series.push((s.index, s.unreclaimed.saturating_sub(baseline) as f64));
+                }
+            }
+        }
+    }
+    R::flush();
+    series
+}
+
+/// Figures 6 and 8–11 (16–19 with `--alloc system`): unreclaimed nodes over
+/// time.
+pub fn fig_efficiency(p: &BenchParams, workload: Workload) {
+    let threads = *p.threads.iter().max().unwrap_or(&2);
+    let mut table = SeriesTable {
+        title: format!(
+            "{} reclamation efficiency — unreclaimed nodes over {} trials × {} samples, p={} [alloc={}]",
+            workload.name(),
+            p.trials,
+            p.samples,
+            threads,
+            p.alloc.name()
+        ),
+        rows: Vec::new(),
+    };
+    for &scheme in &p.schemes {
+        let series = dispatch_scheme!(scheme, efficiency_one, p, workload);
+        table.rows.push((scheme.name().to_string(), series));
+    }
+    table.print();
+    maybe_write_csv(&p.csv, &table.to_csv());
+}
+
+/// One scheme's warm-up run (Fig. 7/15): runtime per op per trial, cache
+/// retained across trials.
+fn trials_one<R: Reclaimer>(p: &BenchParams) -> Vec<f64> {
+    crate::alloc::set_policy(p.alloc);
+    let threads = *p.threads.iter().max().unwrap_or(&2);
+    let cache = make_cache::<R>(p);
+    let mut per_trial = Vec::with_capacity(p.trials);
+    for trial in 0..p.trials {
+        let r = run_trial(threads, p.duration(), |tid, stop| {
+            hashmap_worker(&cache, p, tid, trial, stop)
+        });
+        per_trial.push(r.avg_ns_per_op);
+    }
+    R::flush();
+    per_trial
+}
+
+/// Figure 7 (15): development of HashMap runtime over trials.
+pub fn fig7_trials(p: &BenchParams) {
+    let threads = *p.threads.iter().max().unwrap_or(&2);
+    let mut table = SweepTable {
+        title: format!(
+            "HashMap runtime over trials (warm-up; p={threads}) — avg ns/op per trial [alloc={}]",
+            p.alloc.name()
+        ),
+        threads: (1..=p.trials).collect(),
+        rows: Vec::new(),
+    };
+    for &scheme in &p.schemes {
+        let row = dispatch_scheme!(scheme, trials_one, p);
+        table.rows.push((scheme.name().to_string(), row));
+    }
+    // Rename header semantics: columns are trial indices here.
+    println!("\n(columns are trial numbers, not thread counts)");
+    table.print();
+    maybe_write_csv(&p.csv, &table.to_csv());
+}
+
+/// E13: cost of a region enter/exit cycle per scheme vs thread count.
+fn region_cycle_one<R: Reclaimer>(p: &BenchParams) -> Vec<f64> {
+    p.threads
+        .iter()
+        .map(|&threads| {
+            let mut cfg = ConfigResult::default();
+            for _ in 0..p.trials {
+                cfg.push(&run_trial(threads, p.duration(), |_tid, stop| {
+                    let mut ops = 0u64;
+                    while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                        let region = crate::reclaim::Region::<R>::enter();
+                        std::hint::black_box(&region);
+                        drop(region);
+                        ops += 1;
+                    }
+                    ops
+                }));
+            }
+            R::flush();
+            cfg.mean_ns_per_op()
+        })
+        .collect()
+}
+
+/// E13 (Propositions 2/3): region enter+exit microbenchmark.
+pub fn micro_region(p: &BenchParams) {
+    let mut table = SweepTable {
+        title: "region enter+exit cycle cost".into(),
+        threads: p.threads.clone(),
+        rows: Vec::new(),
+    };
+    for &scheme in &p.schemes {
+        let row = dispatch_scheme!(scheme, region_cycle_one, p);
+        table.rows.push((scheme.name().to_string(), row));
+    }
+    table.print();
+    maybe_write_csv(&p.csv, &table.to_csv());
+}
+
+/// E14: Stamp Pool push/remove cycle cost vs thread count.
+pub fn micro_stamp_pool(p: &BenchParams) {
+    use crate::reclaim::stamp::pool::StampPool;
+    let mut table = SweepTable {
+        title: "Stamp Pool push+remove cycle cost".into(),
+        threads: p.threads.clone(),
+        rows: Vec::new(),
+    };
+    let row: Vec<f64> = p
+        .threads
+        .iter()
+        .map(|&threads| {
+            let pool = StampPool::new(threads + 2);
+            let mut cfg = ConfigResult::default();
+            for _ in 0..p.trials {
+                cfg.push(&run_trial(threads, p.duration(), |_tid, stop| {
+                    let b = pool.alloc_block();
+                    let mut ops = 0u64;
+                    while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                        pool.push(b);
+                        pool.remove(b);
+                        ops += 1;
+                    }
+                    pool.free_block(b);
+                    ops
+                }));
+            }
+            cfg.mean_ns_per_op()
+        })
+        .collect();
+    table.rows.push(("StampPool".into(), row));
+    table.print();
+    maybe_write_csv(&p.csv, &table.to_csv());
+    println!(
+        "(expected: roughly flat in p — the paper's 'expected average runtime … is constant')"
+    );
+}
+
+/// A1: Stamp-it global-retire threshold ablation (paper picks 20).
+pub fn abl_threshold(p: &BenchParams) {
+    use crate::reclaim::stamp::{set_threshold, StampIt};
+    let thresholds = [0usize, 1, 5, 20, 100, 100_000];
+    let threads = *p.threads.iter().max().unwrap_or(&2);
+    println!("\n== Stamp-it threshold ablation (HashMap workload, p={threads}) ==");
+    println!("{:<12}{:>14}{:>18}", "threshold", "ns/op", "end unreclaimed");
+    for &t in &thresholds {
+        set_threshold(t);
+        StampIt::flush();
+        let baseline = crate::alloc::unreclaimed();
+        let cache = make_cache::<StampIt>(p);
+        let mut cfg = ConfigResult::default();
+        for trial in 0..p.trials {
+            cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
+                hashmap_worker(&cache, p, tid, trial, stop)
+            }));
+        }
+        let unreclaimed = crate::alloc::unreclaimed().saturating_sub(baseline);
+        println!("{t:<12}{:>14}{:>18}", fmt_ns(cfg.mean_ns_per_op()), unreclaimed);
+        drop(cache);
+        StampIt::flush();
+    }
+    set_threshold(20); // restore the paper's value
+}
+
+/// A2: HPR scan-threshold-base ablation (paper: 100 + 2ΣK).
+pub fn abl_hp_threshold(p: &BenchParams) {
+    use crate::reclaim::hp::{set_threshold_base, Hp};
+    let bases = [0usize, 10, 100, 1000];
+    let threads = *p.threads.iter().max().unwrap_or(&2);
+    println!("\n== HPR threshold-base ablation (Queue workload, p={threads}) ==");
+    println!("{:<12}{:>14}{:>18}", "base", "ns/op", "end unreclaimed");
+    for &base in &bases {
+        set_threshold_base(base);
+        Hp::flush();
+        let baseline = crate::alloc::unreclaimed();
+        let q = prefill_queue::<Hp>(p);
+        let mut cfg = ConfigResult::default();
+        for trial in 0..p.trials {
+            cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
+                queue_worker(&q, p, tid, trial, stop)
+            }));
+        }
+        let unreclaimed = crate::alloc::unreclaimed().saturating_sub(baseline);
+        println!("{base:<12}{:>14}{:>18}", fmt_ns(cfg.mean_ns_per_op()), unreclaimed);
+        drop(q);
+        Hp::flush();
+    }
+    set_threshold_base(100);
+}
+
+/// A3: epoch-advance / DEBRA-check period ablation (paper: 100 / 20).
+pub fn abl_epoch_period(p: &BenchParams) {
+    let periods = [1u32, 10, 20, 100, 1000];
+    let threads = *p.threads.iter().max().unwrap_or(&2);
+    println!("\n== Epoch advance/check period ablation (List workload, p={threads}) ==");
+    println!("{:<10}{:<10}{:>14}{:>18}", "scheme", "period", "ns/op", "end unreclaimed");
+    for &period in &periods {
+        for (name, domain, id) in [
+            ("ER", crate::reclaim::ebr::domain(), SchemeId::Ebr),
+            ("DEBRA", crate::reclaim::debra::domain(), SchemeId::Debra),
+        ] {
+            domain.set_period(period);
+            fn one<R: Reclaimer>(p: &BenchParams, threads: usize) -> (f64, u64) {
+                R::flush();
+                let baseline = crate::alloc::unreclaimed();
+                let list = prefill_list::<R>(p);
+                let mut cfg = ConfigResult::default();
+                for trial in 0..p.trials {
+                    cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
+                        list_worker(&list, p, tid, trial, stop)
+                    }));
+                }
+                let end = crate::alloc::unreclaimed().saturating_sub(baseline);
+                drop(list);
+                R::flush();
+                (cfg.mean_ns_per_op(), end)
+            }
+            let (ns, unreclaimed) = dispatch_scheme!(id, one, p, threads);
+            println!("{name:<10}{period:<10}{:>14}{unreclaimed:>18}", fmt_ns(ns));
+        }
+    }
+    crate::reclaim::ebr::domain().set_period(100);
+    crate::reclaim::debra::domain().set_period(20);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BenchParams {
+        BenchParams {
+            threads: vec![1, 2],
+            trials: 1,
+            secs: 0.03,
+            samples: 5,
+            schemes: vec![SchemeId::Ebr, SchemeId::Stamp],
+            ..BenchParams::default()
+        }
+    }
+
+    #[test]
+    fn throughput_figures_run() {
+        let p = tiny();
+        fig_throughput(&p, Workload::Queue);
+        fig_throughput(&p, Workload::List);
+    }
+
+    #[test]
+    fn efficiency_figure_runs() {
+        let p = tiny();
+        fig_efficiency(&p, Workload::Queue);
+    }
+
+    #[test]
+    fn micro_figures_run() {
+        let p = tiny();
+        micro_region(&p);
+        micro_stamp_pool(&p);
+    }
+}

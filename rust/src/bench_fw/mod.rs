@@ -1,0 +1,157 @@
+//! Benchmark framework: regenerates every table/figure of the paper's
+//! evaluation (§4, Appendix A).
+//!
+//! * [`runner`] — timed throughput trials with the paper's metric: each
+//!   thread's active runtime ÷ its operation count, averaged over threads.
+//! * [`workload`] — the three benchmark workloads (Queue, List, HashMap)
+//!   with the paper's parameters.
+//! * [`sampler`] — unreclaimed-node time series (50 samples per trial),
+//!   the §4.4 reclamation-efficiency measurement.
+//! * [`report`] — aligned tables, CSV output, and the Table-1-style
+//!   environment dump.
+//! * [`figures`] — one entry point per paper figure; shared by the `repro`
+//!   CLI and the `cargo bench` targets.
+
+pub mod figures;
+pub mod report;
+pub mod runner;
+pub mod sampler;
+pub mod workload;
+
+use crate::alloc::Policy;
+use crate::reclaim::SchemeId;
+use crate::util::cli::Args;
+use std::time::Duration;
+
+/// Parameters shared by all benchmarks. Defaults are CI-scale; `--paper`
+/// switches to the paper's trial counts and durations (§4.1: 30 trials of
+/// 8 s; efficiency plots: 5 trials).
+#[derive(Clone, Debug)]
+pub struct BenchParams {
+    /// Thread counts to sweep.
+    pub threads: Vec<usize>,
+    /// Trials per configuration (all within one process, like the paper).
+    pub trials: usize,
+    /// Seconds per trial.
+    pub secs: f64,
+    /// Schemes to compare.
+    pub schemes: Vec<SchemeId>,
+    /// Node allocator (pool = jemalloc-like, system = libc; App. A.3).
+    pub alloc: Policy,
+    /// Operations spanned by one region_guard (paper: 100).
+    pub region_ops: usize,
+    /// List benchmark: initial size (paper: 10; key range = 2×size).
+    pub list_size: u64,
+    /// List benchmark: update fraction in percent (paper: 20 / 80).
+    pub workload_pct: u32,
+    /// HashMap benchmark: bucket count (paper: 2048).
+    pub map_buckets: usize,
+    /// HashMap benchmark: max entries (paper: 10000).
+    pub map_capacity: usize,
+    /// HashMap benchmark: possible partial results (paper: 30000).
+    pub key_space: u64,
+    /// Samples per trial in efficiency plots (paper: 50).
+    pub samples: usize,
+    /// Write a CSV next to the human-readable table.
+    pub csv: Option<String>,
+}
+
+impl Default for BenchParams {
+    fn default() -> Self {
+        Self {
+            threads: vec![1, 2, 4],
+            trials: 3,
+            secs: 0.4,
+            schemes: SchemeId::PAPER_SET.to_vec(),
+            alloc: Policy::Pool,
+            region_ops: 100,
+            list_size: 10,
+            workload_pct: 20,
+            map_buckets: 2048,
+            map_capacity: 10_000,
+            key_space: 30_000,
+            samples: 50,
+            csv: None,
+        }
+    }
+}
+
+impl BenchParams {
+    /// Parse CLI arguments (shared by `repro` and the bench targets).
+    pub fn from_args(args: &Args) -> Self {
+        let mut p = BenchParams::default();
+        if args.flag("paper") {
+            // Paper scale (§4.1): 30 × 8 s throughput trials; the
+            // efficiency analysis uses 5 × 8 s.
+            p.trials = 30;
+            p.secs = 8.0;
+            p.threads = vec![1, 2, 4, 8, 16, 32, 48];
+        }
+        p.threads = args.list_or("threads", &p.threads);
+        p.trials = args.usize_or("trials", p.trials);
+        p.secs = args.f64_or("secs", p.secs);
+        if let Some(s) = args.get("schemes") {
+            p.schemes = SchemeId::parse_list(s).unwrap_or_else(|| {
+                eprintln!("unknown scheme in --schemes {s}");
+                std::process::exit(2);
+            });
+        }
+        if let Some(a) = args.get("alloc") {
+            p.alloc = Policy::parse(a).unwrap_or_else(|| {
+                eprintln!("unknown allocator {a} (pool|system)");
+                std::process::exit(2);
+            });
+        }
+        p.region_ops = args.usize_or("region-ops", p.region_ops);
+        p.list_size = args.u64_or("list-size", p.list_size);
+        p.workload_pct = args.usize_or("workload", p.workload_pct as usize) as u32;
+        p.map_buckets = args.usize_or("buckets", p.map_buckets);
+        p.map_capacity = args.usize_or("capacity", p.map_capacity);
+        p.key_space = args.u64_or("keys", p.key_space);
+        p.samples = args.usize_or("samples", p.samples);
+        p.csv = args.get("csv").map(String::from);
+        p
+    }
+
+    /// Trial duration.
+    pub fn duration(&self) -> Duration {
+        Duration::from_secs_f64(self.secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_ci_scale() {
+        let p = BenchParams::default();
+        assert!(p.secs < 1.0);
+        assert_eq!(p.map_buckets, 2048);
+        assert_eq!(p.map_capacity, 10_000);
+        assert_eq!(p.key_space, 30_000);
+        assert_eq!(p.region_ops, 100);
+    }
+
+    #[test]
+    fn paper_flag_scales_up() {
+        let args = Args::parse_from(["--paper".to_string()]);
+        let p = BenchParams::from_args(&args);
+        assert_eq!(p.trials, 30);
+        assert_eq!(p.secs, 8.0);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse_from(
+            "--threads 2,8 --secs 0.1 --schemes ebr,stamp --alloc system --workload 80"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let p = BenchParams::from_args(&args);
+        assert_eq!(p.threads, vec![2, 8]);
+        assert_eq!(p.schemes, vec![SchemeId::Ebr, SchemeId::Stamp]);
+        assert_eq!(p.alloc, Policy::System);
+        assert_eq!(p.workload_pct, 80);
+    }
+}

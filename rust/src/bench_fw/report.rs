@@ -1,0 +1,162 @@
+//! Output: aligned tables (the paper's rows/series), CSV files for
+//! re-plotting, and the Table-1-style testbed description.
+
+use crate::util::stats::fmt_ns;
+use std::io::Write;
+
+/// A throughput-sweep table: scheme × thread-count → mean ns/op.
+pub struct SweepTable {
+    pub title: String,
+    pub threads: Vec<usize>,
+    /// (scheme name, per-thread-count mean ns/op).
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl SweepTable {
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        print!("{:<10}", "scheme");
+        for t in &self.threads {
+            print!("{:>12}", format!("p={t}"));
+        }
+        println!();
+        for (name, values) in &self.rows {
+            print!("{name:<10}");
+            for v in values {
+                print!("{:>12}", fmt_ns(*v));
+            }
+            println!();
+        }
+    }
+
+    /// CSV: `scheme,threads,ns_per_op`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("scheme,threads,ns_per_op\n");
+        for (name, values) in &self.rows {
+            for (t, v) in self.threads.iter().zip(values) {
+                out.push_str(&format!("{name},{t},{v:.3}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// A time-series table: scheme → (sample index, unreclaimed nodes).
+pub struct SeriesTable {
+    pub title: String,
+    /// (scheme name, series of (index, value)).
+    pub rows: Vec<(String, Vec<(usize, f64)>)>,
+}
+
+impl SeriesTable {
+    /// Print a compact summary: start / mid / end / peak of each series
+    /// (full resolution goes to the CSV).
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        println!(
+            "{:<10}{:>14}{:>14}{:>14}{:>14}",
+            "scheme", "start", "mid", "end", "peak"
+        );
+        for (name, series) in &self.rows {
+            if series.is_empty() {
+                println!("{name:<10}{:>14}", "-");
+                continue;
+            }
+            let vals: Vec<f64> = series.iter().map(|(_, v)| *v).collect();
+            let peak = vals.iter().cloned().fold(f64::MIN, f64::max);
+            println!(
+                "{name:<10}{:>14.0}{:>14.0}{:>14.0}{:>14.0}",
+                vals[0],
+                vals[vals.len() / 2],
+                vals[vals.len() - 1],
+                peak
+            );
+        }
+    }
+
+    /// CSV: `scheme,sample,value`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("scheme,sample,value\n");
+        for (name, series) in &self.rows {
+            for (i, v) in series {
+                out.push_str(&format!("{name},{i},{v:.1}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Write CSV content if a path was requested.
+pub fn maybe_write_csv(path: &Option<String>, content: &str) {
+    if let Some(path) = path {
+        match std::fs::File::create(path).and_then(|mut f| f.write_all(content.as_bytes())) {
+            Ok(()) => println!("(csv written to {path})"),
+            Err(e) => eprintln!("csv write failed ({path}): {e}"),
+        }
+    }
+}
+
+/// Table-1 analogue: describe this testbed.
+pub fn print_environment() {
+    println!("== Environment (Table 1 analogue) ==");
+    println!("{:<18}{}", "Hardware threads", crate::util::num_cpus());
+    for (label, path) in
+        [("CPU model", "/proc/cpuinfo"), ("MemTotal", "/proc/meminfo"), ("OS", "/proc/version")]
+    {
+        let value = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|s| match label {
+                "CPU model" => s
+                    .lines()
+                    .find(|l| l.starts_with("model name"))
+                    .map(|l| l.split(':').nth(1).unwrap_or("?").trim().to_string()),
+                "MemTotal" => s
+                    .lines()
+                    .find(|l| l.starts_with("MemTotal"))
+                    .map(|l| l.split(':').nth(1).unwrap_or("?").trim().to_string()),
+                _ => s.lines().next().map(|l| l.trim().to_string()),
+            })
+            .unwrap_or_else(|| "unknown".into());
+        println!("{label:<18}{value}");
+    }
+    println!("{:<18}rustc 1.95 (release, thin-LTO)", "Compiler");
+    println!(
+        "{:<18}{} (pool = jemalloc-like type-stable slabs)",
+        "Allocator",
+        crate::alloc::policy().name()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_table_csv_shape() {
+        let t = SweepTable {
+            title: "test".into(),
+            threads: vec![1, 2],
+            rows: vec![("A".into(), vec![10.0, 20.0]), ("B".into(), vec![30.0, 40.0])],
+        };
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.contains("A,2,20.000"));
+        t.print(); // must not panic
+    }
+
+    #[test]
+    fn series_table_csv_shape() {
+        let t = SeriesTable {
+            title: "eff".into(),
+            rows: vec![("A".into(), vec![(0, 5.0), (1, 6.0)])],
+        };
+        let csv = t.to_csv();
+        assert!(csv.contains("A,1,6.0"));
+        t.print();
+    }
+
+    #[test]
+    fn environment_prints() {
+        print_environment();
+    }
+}

@@ -1,0 +1,163 @@
+//! Trial runner: spawn `p` threads against a shared structure, run until
+//! the timer expires, and compute the paper's metric (§4.1):
+//!
+//! > "Each thread calculates its average operation runtime by dividing its
+//! > active, overall runtime by the total number of operations it
+//! > performed. The total average runtime per operation is then calculated
+//! > as the average of these per-thread runtime values."
+
+use crate::util::monotonic_ns;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Barrier;
+use std::time::Duration;
+
+/// Outcome of one timed trial.
+#[derive(Clone, Debug, Default)]
+pub struct TrialResult {
+    /// Total operations across all threads.
+    pub total_ops: u64,
+    /// Per-thread average ns/op.
+    pub per_thread_ns: Vec<f64>,
+    /// The paper's metric: mean of the per-thread averages.
+    pub avg_ns_per_op: f64,
+    /// Wall-clock length of the trial.
+    pub wall_ns: u64,
+}
+
+impl TrialResult {
+    /// Throughput in operations per second (wall-clock based).
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.total_ops as f64 * 1e9 / self.wall_ns as f64
+        }
+    }
+}
+
+/// Run one trial: each thread executes `body(thread_id, &stop)` which must
+/// loop until `stop` is set and return its operation count. Threads start
+/// together on a barrier; the timer spans the working phase only.
+pub fn run_trial<F>(threads: usize, duration: Duration, body: F) -> TrialResult
+where
+    F: Fn(usize, &AtomicBool) -> u64 + Sync,
+{
+    let stop = AtomicBool::new(false);
+    let barrier = Barrier::new(threads + 1);
+    let body = &body;
+    let stop_ref = &stop;
+    let barrier_ref = &barrier;
+
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|tid| {
+                scope.spawn(move || {
+                    barrier_ref.wait();
+                    let t0 = monotonic_ns();
+                    let ops = body(tid, stop_ref);
+                    let active_ns = monotonic_ns() - t0;
+                    (ops, active_ns)
+                })
+            })
+            .collect();
+
+        barrier_ref.wait();
+        let wall_start = monotonic_ns();
+        std::thread::sleep(duration);
+        stop.store(true, Ordering::Release);
+
+        let mut per_thread_ns = Vec::with_capacity(threads);
+        let mut total_ops = 0;
+        for h in handles {
+            let (ops, active_ns) = h.join().unwrap();
+            total_ops += ops;
+            if ops > 0 {
+                per_thread_ns.push(active_ns as f64 / ops as f64);
+            }
+        }
+        let wall_ns = monotonic_ns() - wall_start;
+        let avg = if per_thread_ns.is_empty() {
+            0.0
+        } else {
+            per_thread_ns.iter().sum::<f64>() / per_thread_ns.len() as f64
+        };
+        TrialResult { total_ops, per_thread_ns, avg_ns_per_op: avg, wall_ns }
+    })
+}
+
+/// Aggregate over the trial sequence of one configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigResult {
+    /// Per-trial avg ns/op (the paper plots their distribution).
+    pub trial_ns_per_op: Vec<f64>,
+    /// Per-trial throughput.
+    pub trial_ops_per_sec: Vec<f64>,
+}
+
+impl ConfigResult {
+    pub fn push(&mut self, t: &TrialResult) {
+        self.trial_ns_per_op.push(t.avg_ns_per_op);
+        self.trial_ops_per_sec.push(t.ops_per_sec());
+    }
+
+    /// Mean over trials of the paper metric.
+    pub fn mean_ns_per_op(&self) -> f64 {
+        if self.trial_ns_per_op.is_empty() {
+            0.0
+        } else {
+            self.trial_ns_per_op.iter().sum::<f64>() / self.trial_ns_per_op.len() as f64
+        }
+    }
+
+    pub fn mean_ops_per_sec(&self) -> f64 {
+        if self.trial_ops_per_sec.is_empty() {
+            0.0
+        } else {
+            self.trial_ops_per_sec.iter().sum::<f64>() / self.trial_ops_per_sec.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn trial_counts_ops_and_stops() {
+        let counter = AtomicU64::new(0);
+        let r = run_trial(3, Duration::from_millis(50), |_tid, stop| {
+            let mut ops = 0;
+            while !stop.load(Ordering::Acquire) {
+                counter.fetch_add(1, Ordering::Relaxed);
+                ops += 1;
+            }
+            ops
+        });
+        assert_eq!(r.total_ops, counter.load(Ordering::Relaxed));
+        assert!(r.total_ops > 0);
+        assert_eq!(r.per_thread_ns.len(), 3);
+        assert!(r.avg_ns_per_op > 0.0);
+        assert!(r.ops_per_sec() > 0.0);
+        // Wall clock ≈ requested duration (generous bound for CI noise).
+        assert!(r.wall_ns >= 50_000_000);
+    }
+
+    #[test]
+    fn config_result_aggregates() {
+        let mut c = ConfigResult::default();
+        c.push(&TrialResult {
+            total_ops: 100,
+            per_thread_ns: vec![10.0],
+            avg_ns_per_op: 10.0,
+            wall_ns: 1_000,
+        });
+        c.push(&TrialResult {
+            total_ops: 100,
+            per_thread_ns: vec![20.0],
+            avg_ns_per_op: 20.0,
+            wall_ns: 1_000,
+        });
+        assert!((c.mean_ns_per_op() - 15.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,216 @@
+//! The paper's three benchmark workloads (§4.1), generic over the scheme.
+//!
+//! * **Queue** — Michael–Scott queue, equal enqueue/dequeue probability
+//!   ("keeping the size of the ... queue ... roughly unchanged").
+//! * **List** — Harris–Michael set of initial size `s`, key range `2s`,
+//!   `workload`% updates (half insert, half remove), rest searches.
+//! * **HashMap** — calculate-or-reuse of 1024-byte partial results keyed
+//!   in `[0, 30000)`, bounded FIFO cache of 10000 entries over 2048
+//!   buckets.
+//!
+//! Queue and List operations run under a `region_guard` spanning
+//! `region_ops` (100) operations — the paper's setup for QSR, NER and
+//! Stamp-it. The HashMap workload guards per operation (its regions are
+//! long-lived anyway: one op touches the map several times).
+
+use super::BenchParams;
+use crate::ds::hashmap::FifoCache;
+use crate::ds::list::List;
+use crate::ds::queue::Queue;
+use crate::reclaim::{Reclaimer, Region};
+use crate::runtime::DIM;
+use crate::util::rng::{mix64, Xoshiro256};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// 1024-byte partial result (the paper's HashMap payload).
+pub type SimPayload = [f32; DIM];
+
+/// Deterministically "calculate" a partial result (the stand-in for the
+/// simulation compute in throughput benchmarks; the coordinator runs the
+/// real PJRT computation instead).
+pub fn compute_payload(key: u64) -> SimPayload {
+    let mut out = [0.0f32; DIM];
+    let mut h = mix64(key ^ 0x5151_5151);
+    for (i, v) in out.iter_mut().enumerate() {
+        h = mix64(h.wrapping_add(i as u64));
+        *v = ((h >> 40) as f32 / (1u64 << 24) as f32) - 0.5;
+    }
+    out
+}
+
+/// Consume a cached payload (the "reuse" path): cheap checksum read.
+#[inline]
+pub fn consume_payload(p: &SimPayload) -> f32 {
+    p.iter().step_by(16).sum()
+}
+
+/// One thread's Queue-benchmark loop; returns its op count.
+pub fn queue_worker<R: Reclaimer>(
+    q: &Queue<u64, R>,
+    params: &BenchParams,
+    tid: usize,
+    trial: usize,
+    stop: &AtomicBool,
+) -> u64 {
+    let mut rng = Xoshiro256::new(0x9E37 ^ (trial as u64) << 32 ^ tid as u64);
+    let mut ops = 0u64;
+    while !stop.load(Ordering::Acquire) {
+        let _region: Region<R> = Region::enter();
+        for _ in 0..params.region_ops {
+            if rng.percent(50) {
+                q.enqueue(rng.next_u64());
+            } else {
+                let _ = q.dequeue();
+            }
+            ops += 1;
+        }
+    }
+    ops
+}
+
+/// One thread's List-benchmark loop (workload% updates).
+pub fn list_worker<R: Reclaimer>(
+    list: &List<u64, (), R>,
+    params: &BenchParams,
+    tid: usize,
+    trial: usize,
+    stop: &AtomicBool,
+) -> u64 {
+    let key_range = params.list_size * 2; // paper: twice the initial size
+    let mut rng = Xoshiro256::new(0xA5A5 ^ (trial as u64) << 32 ^ tid as u64);
+    let mut ops = 0u64;
+    while !stop.load(Ordering::Acquire) {
+        let _region: Region<R> = Region::enter();
+        for _ in 0..params.region_ops {
+            let key = rng.below(key_range);
+            if rng.percent(params.workload_pct) {
+                // Update: insert and remove with equal probability.
+                if rng.percent(50) {
+                    list.insert(key, ());
+                } else {
+                    list.remove(&key);
+                }
+            } else {
+                list.contains(&key);
+            }
+            ops += 1;
+        }
+    }
+    ops
+}
+
+/// One thread's HashMap-benchmark loop: calculate-or-reuse partial results.
+pub fn hashmap_worker<R: Reclaimer>(
+    cache: &FifoCache<u64, SimPayload, R>,
+    params: &BenchParams,
+    tid: usize,
+    trial: usize,
+    stop: &AtomicBool,
+) -> u64 {
+    let mut rng = Xoshiro256::new(0xC0DE ^ (trial as u64) << 32 ^ tid as u64);
+    let mut ops = 0u64;
+    let mut sink = 0.0f32;
+    while !stop.load(Ordering::Acquire) {
+        let key = rng.below(params.key_space);
+        match cache.get_with(&key, consume_payload) {
+            Some(v) => sink += v,
+            None => {
+                let payload = compute_payload(key);
+                sink += consume_payload(&payload);
+                cache.insert(key, payload);
+            }
+        }
+        ops += 1;
+    }
+    std::hint::black_box(sink);
+    ops
+}
+
+/// Build + prefill a List for one configuration (paper: initial size s
+/// from key range 2s — insert every even key).
+pub fn prefill_list<R: Reclaimer>(params: &BenchParams) -> List<u64, (), R> {
+    let list = List::new();
+    for i in 0..params.list_size {
+        list.insert(i * 2, ());
+    }
+    list
+}
+
+/// Build + prefill a Queue (a handful of nodes so dequeues hit).
+pub fn prefill_queue<R: Reclaimer>(_params: &BenchParams) -> Queue<u64, R> {
+    let q = Queue::new();
+    for i in 0..64 {
+        q.enqueue(i);
+    }
+    q
+}
+
+/// Build the HashMap-benchmark cache.
+pub fn make_cache<R: Reclaimer>(params: &BenchParams) -> FifoCache<u64, SimPayload, R> {
+    FifoCache::new(params.map_buckets, params.map_capacity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::stamp::StampIt;
+
+    #[test]
+    fn payload_compute_is_deterministic_and_spread() {
+        let a = compute_payload(1);
+        let b = compute_payload(1);
+        assert_eq!(a, b);
+        let c = compute_payload(2);
+        assert_ne!(a, c);
+        assert!(consume_payload(&a).is_finite());
+        assert_eq!(std::mem::size_of::<SimPayload>(), 1024, "paper's payload size");
+    }
+
+    #[test]
+    fn workers_run_and_stop() {
+        let params = BenchParams { secs: 0.05, ..BenchParams::default() };
+        let q = prefill_queue::<StampIt>(&params);
+        let list = prefill_list::<StampIt>(&params);
+        let cache = make_cache::<StampIt>(&params);
+        let stop = AtomicBool::new(false);
+
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                stop.store(true, Ordering::Release);
+            });
+            let q_ops = queue_worker(&q, &params, 0, 0, &stop);
+            assert!(q_ops > 0);
+        });
+
+        stop.store(false, Ordering::Release);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                stop.store(true, Ordering::Release);
+            });
+            let l_ops = list_worker(&list, &params, 0, 0, &stop);
+            assert!(l_ops > 0);
+        });
+
+        stop.store(false, Ordering::Release);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                stop.store(true, Ordering::Release);
+            });
+            let m_ops = hashmap_worker(&cache, &params, 0, 0, &stop);
+            assert!(m_ops > 0);
+        });
+        assert!(cache.len() <= params.map_capacity + 8);
+    }
+
+    #[test]
+    fn prefilled_list_has_paper_shape() {
+        let params = BenchParams::default();
+        let list = prefill_list::<StampIt>(&params);
+        assert_eq!(list.len() as u64, params.list_size);
+        assert!(list.contains(&0));
+        assert!(!list.contains(&1)); // odd keys start absent
+    }
+}

@@ -1,0 +1,103 @@
+//! Coordinator metrics: request counters, batch shape, and the paper's
+//! reclamation-efficiency signal (unreclaimed nodes) sampled per snapshot.
+
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live counters (relaxed; exact at quiescence).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: CachePadded<AtomicU64>,
+    pub hits: CachePadded<AtomicU64>,
+    pub misses: CachePadded<AtomicU64>,
+    pub batches: CachePadded<AtomicU64>,
+    pub batched_keys: CachePadded<AtomicU64>,
+    pub evictions_observed: CachePadded<AtomicU64>,
+}
+
+/// Point-in-time view of the [`Metrics`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub batches: u64,
+    pub batched_keys: u64,
+    pub unreclaimed_nodes: u64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_keys: self.batched_keys.load(Ordering::Relaxed),
+            unreclaimed_nodes: crate::alloc::unreclaimed(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Cache hit rate in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests as f64
+        }
+    }
+
+    /// Mean executed batch size.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_keys as f64 / self.batches as f64
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} hits={} ({:.1}%) misses={} batches={} (mean size {:.1}) unreclaimed={}",
+            self.requests,
+            self.hits,
+            self.hit_rate() * 100.0,
+            self.misses,
+            self.batches,
+            self.mean_batch(),
+            self.unreclaimed_nodes,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_math() {
+        let m = Metrics::default();
+        m.requests.store(10, Ordering::Relaxed);
+        m.hits.store(7, Ordering::Relaxed);
+        m.misses.store(3, Ordering::Relaxed);
+        m.batches.store(2, Ordering::Relaxed);
+        m.batched_keys.store(6, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!((s.hit_rate() - 0.7).abs() < 1e-9);
+        assert!((s.mean_batch() - 3.0).abs() < 1e-9);
+        let text = s.to_string();
+        assert!(text.contains("requests=10"));
+    }
+
+    #[test]
+    fn empty_snapshot_is_safe() {
+        let s = MetricsSnapshot::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.mean_batch(), 0.0);
+    }
+}

@@ -1,0 +1,381 @@
+//! The compute-cache coordinator: the paper's HashMap benchmark made real.
+//!
+//! The paper motivates its HashMap workload as "the calculation in a
+//! complex simulation where partial results are stored in a hash-map for
+//! later reuse" (§4.1). This module *is* that system, in the vLLM-router
+//! shape: clients submit keyed compute requests; worker threads route them
+//! through a bounded, FIFO-evicting, lock-free cache; misses are gathered
+//! by a dynamic batcher and dispatched to the AOT-compiled JAX/Pallas
+//! computation on the PJRT engine thread; results are inserted (evicting
+//! old 1024-byte payload nodes through the reclamation scheme) and fanned
+//! back out to the waiting requests.
+//!
+//! Everything on the request path is Rust; the hot structures (request
+//! queue **and** cache) are this crate's own lock-free data structures,
+//! reclaimed by the scheme `R` — the coordinator dogfoods the library.
+
+pub mod metrics;
+
+use crate::ds::hashmap::FifoCache;
+use crate::ds::queue::Queue;
+use crate::reclaim::Reclaimer;
+use crate::runtime::{Engine, DIM};
+use crate::util::monotonic_ns;
+use anyhow::{Context, Result};
+use metrics::{Metrics, MetricsSnapshot};
+use std::collections::HashMap as StdHashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// A computed partial result: 256 f32 = 1024 bytes, the paper's payload.
+pub type Payload = [f32; DIM];
+
+/// Server configuration (defaults = the paper's HashMap parameters).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Hash buckets (paper: 2048).
+    pub buckets: usize,
+    /// Max cached entries (paper: 10000).
+    pub capacity: usize,
+    /// Worker threads serving the request queue.
+    pub workers: usize,
+    /// How long the batcher waits to fill a batch after the first miss.
+    pub batch_wait: Duration,
+    /// Artifact directory for the PJRT engine.
+    pub artifact_dir: PathBuf,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            buckets: 2048,
+            capacity: 10_000,
+            workers: 2,
+            batch_wait: Duration::from_micros(200),
+            artifact_dir: crate::runtime::default_artifact_dir(),
+        }
+    }
+}
+
+/// A response to one compute request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// The partial result.
+    pub data: Box<Payload>,
+    /// Served from cache?
+    pub hit: bool,
+    /// Submit-to-reply latency.
+    pub latency_ns: u64,
+}
+
+struct Request {
+    key: u32,
+    t0: u64,
+    reply: mpsc::Sender<Response>,
+}
+
+struct Shared<R: Reclaimer> {
+    cache: FifoCache<u32, Payload, R>,
+    queue: Queue<Request, R>,
+    queued: AtomicUsize,
+    shutdown: AtomicBool,
+    metrics: Metrics,
+}
+
+/// The compute-cache server (paper HashMap benchmark, serving shape).
+pub struct CacheServer<R: Reclaimer> {
+    shared: Arc<Shared<R>>,
+    miss_tx: Mutex<Option<mpsc::Sender<Request>>>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl<R: Reclaimer> CacheServer<R> {
+    /// Start workers + batcher + engine. Fails if artifacts are missing.
+    pub fn start(cfg: ServerConfig) -> Result<Arc<Self>> {
+        let shared = Arc::new(Shared {
+            cache: FifoCache::new(cfg.buckets, cfg.capacity),
+            queue: Queue::new(),
+            queued: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            metrics: Metrics::default(),
+        });
+        let (miss_tx, miss_rx) = mpsc::channel::<Request>();
+
+        let mut threads = Vec::new();
+        // Batcher thread owns the PJRT engine (PjRtClient is not Send, so
+        // it is created on this thread). Readiness is confirmed through a
+        // channel so start() fails fast on missing artifacts.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        {
+            let shared = shared.clone();
+            let dir = cfg.artifact_dir.clone();
+            let wait = cfg.batch_wait;
+            threads.push(
+                std::thread::Builder::new().name("emr-batcher".into()).spawn(move || {
+                    let engine = match Engine::load(&dir) {
+                        Ok(e) => {
+                            let _ = ready_tx.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    batcher_loop(&shared, &engine, miss_rx, wait);
+                })?,
+            );
+        }
+        ready_rx.recv().context("batcher thread died")??;
+
+        let server = Arc::new(Self {
+            shared: shared.clone(),
+            miss_tx: Mutex::new(Some(miss_tx)),
+            threads: Mutex::new(threads),
+        });
+        for w in 0..cfg.workers {
+            let shared = shared.clone();
+            let miss_tx = server.miss_tx.lock().unwrap().as_ref().unwrap().clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("emr-worker-{w}"))
+                .spawn(move || worker_loop(&shared, miss_tx))?;
+            server.threads.lock().unwrap().push(handle);
+        }
+        Ok(server)
+    }
+
+    /// Submit a request; the receiver yields the [`Response`].
+    pub fn submit(&self, key: u32) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.shared.queue.enqueue(Request { key, t0: monotonic_ns(), reply: tx });
+        self.shared.queued.fetch_add(1, Ordering::Release);
+        rx
+    }
+
+    /// Blocking convenience: submit + wait.
+    pub fn request(&self, key: u32) -> Result<Response> {
+        self.submit(key).recv().context("server dropped request")
+    }
+
+    /// Current metrics (+ global unreclaimed-node count).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Entries currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.shared.cache.len()
+    }
+
+    /// Stop all threads; pending requests are drained first.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Dropping the miss sender unblocks the batcher once workers exit.
+        let mut threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        // Workers exit on the flag; join them first so no more misses are
+        // produced, then close the miss channel for the batcher.
+        let batcher = if threads.is_empty() { None } else { Some(threads.remove(0)) };
+        for t in threads {
+            let _ = t.join();
+        }
+        *self.miss_tx.lock().unwrap() = None;
+        if let Some(b) = batcher {
+            let _ = b.join();
+        }
+    }
+}
+
+impl<R: Reclaimer> Drop for CacheServer<R> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop<R: Reclaimer>(shared: &Shared<R>, miss_tx: mpsc::Sender<Request>) {
+    let mut idle_spins = 0u32;
+    loop {
+        match shared.queue.dequeue() {
+            Some(req) => {
+                idle_spins = 0;
+                shared.queued.fetch_sub(1, Ordering::Release);
+                // Guarded cache read: the payload is copied out under the
+                // guard (the "reuse" path of the paper's simulation).
+                let hit = shared.cache.get_with(&req.key, |v| Box::new(*v));
+                match hit {
+                    Some(data) => {
+                        shared.metrics.hits.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.reply.send(Response {
+                            data,
+                            hit: true,
+                            latency_ns: monotonic_ns() - req.t0,
+                        });
+                    }
+                    None => {
+                        shared.metrics.misses.fetch_add(1, Ordering::Relaxed);
+                        if miss_tx.send(req).is_err() {
+                            return; // batcher gone: shutting down
+                        }
+                    }
+                }
+            }
+            None => {
+                if shared.shutdown.load(Ordering::Acquire)
+                    && shared.queued.load(Ordering::Acquire) == 0
+                {
+                    return;
+                }
+                // Lock-free queues cannot block; back off politely.
+                idle_spins += 1;
+                if idle_spins < 32 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            }
+        }
+    }
+}
+
+fn batcher_loop<R: Reclaimer>(
+    shared: &Shared<R>,
+    engine: &Engine,
+    miss_rx: mpsc::Receiver<Request>,
+    batch_wait: Duration,
+) {
+    let max_batch = engine.max_batch();
+    let mut waiting: StdHashMap<u32, Vec<Request>> = StdHashMap::new();
+    loop {
+        // Block for the first miss (with a timeout to notice shutdown).
+        match miss_rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(req) => {
+                waiting.entry(req.key).or_default().push(req);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if waiting.is_empty() {
+                    continue;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if waiting.is_empty() {
+                    return;
+                }
+            }
+        }
+        // Accumulate until the batch is full or the wait window closes.
+        let deadline = std::time::Instant::now() + batch_wait;
+        while waiting.len() < max_batch {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match miss_rx.recv_timeout(deadline - now) {
+                Ok(req) => {
+                    waiting.entry(req.key).or_default().push(req);
+                }
+                Err(_) => break,
+            }
+        }
+
+        // Dispatch one batch of distinct keys.
+        let keys: Vec<u32> = waiting.keys().copied().take(max_batch).collect();
+        let seeds: Vec<i32> = keys.iter().map(|&k| k as i32).collect();
+        match engine.execute(&seeds) {
+            Ok(results) => {
+                shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.batched_keys.fetch_add(keys.len() as u64, Ordering::Relaxed);
+                for (key, row) in keys.iter().zip(results) {
+                    let mut payload: Payload = [0.0; DIM];
+                    payload.copy_from_slice(&row);
+                    // Insert evicts FIFO-oldest beyond capacity — retiring
+                    // 1 KiB nodes through the reclamation scheme.
+                    if !shared.cache.insert(*key, payload) {
+                        shared.metrics.evictions_observed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    for req in waiting.remove(key).unwrap_or_default() {
+                        let _ = req.reply.send(Response {
+                            data: Box::new(payload),
+                            hit: false,
+                            latency_ns: monotonic_ns() - req.t0,
+                        });
+                    }
+                }
+            }
+            Err(e) => {
+                // Engine failure: drop the affected requests (receivers see
+                // a closed channel) and keep serving.
+                eprintln!("[batcher] execute failed: {e:#}");
+                for key in keys {
+                    waiting.remove(&key);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::stamp::StampIt;
+
+    #[test]
+    fn server_basic_roundtrip() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let server = CacheServer::<StampIt>::start(ServerConfig {
+            workers: 2,
+            capacity: 64,
+            buckets: 32,
+            ..ServerConfig::default()
+        })
+        .unwrap();
+
+        // First request: miss, computed.
+        let r1 = server.request(42).unwrap();
+        assert!(!r1.hit);
+        assert!(r1.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+
+        // Second request for the same key: hit, identical data.
+        let r2 = server.request(42).unwrap();
+        assert!(r2.hit, "second request must be served from cache");
+        assert_eq!(r1.data[..], r2.data[..]);
+
+        // Distinct key → distinct result.
+        let r3 = server.request(43).unwrap();
+        assert_ne!(r1.data[..], r3.data[..]);
+
+        let m = server.metrics();
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.hits, 1);
+        assert_eq!(m.misses, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn capacity_is_bounded_under_churn() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let server = CacheServer::<StampIt>::start(ServerConfig {
+            workers: 2,
+            capacity: 16,
+            buckets: 8,
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        for key in 0..64u32 {
+            let _ = server.request(key).unwrap();
+        }
+        assert!(
+            server.cache_len() <= 16 + 4,
+            "eviction must bound the cache: {}",
+            server.cache_len()
+        );
+        server.shutdown();
+    }
+}

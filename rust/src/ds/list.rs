@@ -1,0 +1,377 @@
+//! Harris–Michael lock-free ordered list-based set (paper §2 and §4.1:
+//! "the linked-list and hash-map [are based] on Michael's improved version
+//! [18] of Harris' list-based set [14]").
+//!
+//! `find` follows the paper's Listing 1: it walks with two guards (`cur`
+//! and `save`, the latter pinning the node that owns the `prev` link),
+//! helps unlink marked nodes it passes, and restarts on interference. The
+//! delete mark lives in bit 0 of each node's `next` pointer — the
+//! `marked_ptr` trick the interface exists for.
+
+use crate::reclaim::{alloc_node, ConcurrentPtr, GuardPtr, MarkedPtr, Reclaimer};
+use std::sync::atomic::Ordering;
+
+/// A list node: key plus optional value (the set uses `V = ()`; the
+/// hash-map stores payloads).
+pub struct LNode<K: Send + Sync + 'static, V: Send + Sync + 'static, R: Reclaimer> {
+    key: K,
+    value: V,
+    next: ConcurrentPtr<LNode<K, V, R>, R>,
+}
+
+impl<K: Send + Sync + 'static, V: Send + Sync + 'static, R: Reclaimer> LNode<K, V, R> {
+    pub fn key(&self) -> &K {
+        &self.key
+    }
+
+    pub fn value(&self) -> &V {
+        &self.value
+    }
+}
+
+/// Result of a `find`: the insertion point and (on hit) the guarded node.
+pub struct FindResult<K: Send + Sync + 'static, V: Send + Sync + 'static, R: Reclaimer> {
+    /// Pointer to the `next` field to CAS for insertion (head or a node
+    /// kept alive by `save`).
+    prev: *const ConcurrentPtr<LNode<K, V, R>, R>,
+    /// Snapshot of `*prev` (what an insertion CAS must expect).
+    next: MarkedPtr<LNode<K, V, R>, R>,
+    /// Guard on the node at `next` (the found node on a hit).
+    cur: GuardPtr<LNode<K, V, R>, R>,
+    /// Guard on the node owning `prev` (null when `prev` is the head).
+    _save: GuardPtr<LNode<K, V, R>, R>,
+    found: bool,
+}
+
+/// Sorted lock-free set/map list under reclamation scheme `R`.
+pub struct List<K, V, R>
+where
+    K: Ord + Send + Sync + 'static,
+    V: Send + Sync + 'static,
+    R: Reclaimer,
+{
+    head: ConcurrentPtr<LNode<K, V, R>, R>,
+}
+
+impl<K, V, R> Default for List<K, V, R>
+where
+    K: Ord + Send + Sync + 'static,
+    V: Send + Sync + 'static,
+    R: Reclaimer,
+{
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K, V, R> List<K, V, R>
+where
+    K: Ord + Send + Sync + 'static,
+    V: Send + Sync + 'static,
+    R: Reclaimer,
+{
+    /// An empty list.
+    pub const fn new() -> Self {
+        Self { head: ConcurrentPtr::null() }
+    }
+
+    /// Paper Listing 1: locate `key`, helping unlink marked nodes on the
+    /// way. On return, `prev`/`next` define the insertion point and `cur`
+    /// guards the first node with `node.key >= key` (if any).
+    fn find(&self, key: &K) -> FindResult<K, V, R> {
+        'retry: loop {
+            let mut prev: *const ConcurrentPtr<LNode<K, V, R>, R> = &self.head;
+            let mut save: GuardPtr<LNode<K, V, R>, R> = GuardPtr::new();
+            let mut cur: GuardPtr<LNode<K, V, R>, R> = GuardPtr::new();
+            // SAFETY: prev is the head (owned by self) here; below it is a
+            // field of the node pinned by `save`.
+            let mut next = unsafe { (*prev).load(Ordering::Acquire) };
+            loop {
+                // Acquire the snapshot; restart if prev moved under us.
+                // SAFETY: prev valid as above.
+                if !unsafe { cur.acquire_if_equal(&*prev, next.with_mark(0)) } {
+                    continue 'retry;
+                }
+                if cur.is_null() {
+                    return FindResult { prev, next: next.with_mark(0), cur, _save: save, found: false };
+                }
+                let cur_ptr = cur.get();
+                // SAFETY: cur is guarded.
+                let cur_node = unsafe { cur_ptr.deref_data() };
+                let succ = cur_node.next.load(Ordering::Acquire);
+                if succ.mark() != 0 {
+                    // cur is logically deleted: help splice it out.
+                    // SAFETY: prev valid (head or pinned by save).
+                    if unsafe {
+                        (*prev)
+                            .compare_exchange(
+                                cur_ptr.with_mark(0),
+                                succ.with_mark(0),
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            )
+                            .is_err()
+                    } {
+                        continue 'retry;
+                    }
+                    // SAFETY: we unlinked cur; the unlinking CAS winner
+                    // retires it (Michael's rule).
+                    unsafe { cur.reclaim() };
+                    next = succ.with_mark(0);
+                    continue;
+                }
+                // Validate prev still points at cur (paper line 15).
+                // SAFETY: prev valid as above.
+                if unsafe { (*prev).load(Ordering::Acquire) } != cur_ptr.with_mark(0) {
+                    continue 'retry;
+                }
+                if cur_node.key >= *key {
+                    let found = cur_node.key == *key;
+                    return FindResult { prev, next: cur_ptr.with_mark(0), cur, _save: save, found };
+                }
+                prev = &cur_node.next;
+                save = cur.take(); // `save = std::move(cur)` (Listing 1)
+                next = succ;
+            }
+        }
+    }
+
+    /// Does the set contain `key`?
+    pub fn contains(&self, key: &K) -> bool {
+        self.find(key).found
+    }
+
+    /// Read the value under `key` through `f` (guarded access — no clone).
+    pub fn get_with<U>(&self, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
+        let r = self.find(key);
+        if r.found {
+            // SAFETY: cur is guarded and non-null on a hit.
+            Some(f(unsafe { r.cur.get().deref_data().value() }))
+        } else {
+            None
+        }
+    }
+
+    /// Insert `key → value` if absent. Returns false (and drops `value`)
+    /// when the key already exists.
+    pub fn insert(&self, key: K, value: V) -> bool {
+        let node = alloc_node::<LNode<K, V, R>, R>(LNode {
+            key,
+            value,
+            next: ConcurrentPtr::null(),
+        });
+        let node_ptr = MarkedPtr::new(node, 0);
+        loop {
+            // SAFETY: node is still private.
+            let node_ref = unsafe { &*node };
+            let r = self.find(&node_ref.data().key);
+            if r.found {
+                // SAFETY: never published.
+                unsafe { crate::reclaim::free_node(node) };
+                return false;
+            }
+            node_ref.data().next.store(r.next, Ordering::Relaxed);
+            // Release publishes the node's contents.
+            // SAFETY: r.prev is the head or pinned by r._save.
+            if unsafe {
+                (*r.prev)
+                    .compare_exchange(r.next, node_ptr, Ordering::Release, Ordering::Relaxed)
+                    .is_ok()
+            } {
+                return true;
+            }
+        }
+    }
+
+    /// Remove `key`. Returns true if this call removed it.
+    pub fn remove(&self, key: &K) -> bool {
+        loop {
+            let mut r = self.find(key);
+            if !r.found {
+                return false;
+            }
+            let cur_ptr = r.cur.get();
+            // SAFETY: guarded.
+            let cur_node = unsafe { cur_ptr.deref_data() };
+            let succ = cur_node.next.load(Ordering::Acquire);
+            if succ.mark() != 0 {
+                continue; // someone else is deleting it; re-find (help)
+            }
+            // Logical delete: set the mark (the linearization point).
+            if cur_node
+                .next
+                .compare_exchange(succ, succ.with_mark(1), Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue;
+            }
+            // Physical unlink; on failure find() will clean up later.
+            // SAFETY: r.prev is the head or pinned by r._save.
+            if unsafe {
+                (*r.prev)
+                    .compare_exchange(
+                        cur_ptr.with_mark(0),
+                        succ.with_mark(0),
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+            } {
+                // SAFETY: we unlinked it and we won the marking CAS.
+                unsafe { r.cur.reclaim() };
+            } else {
+                let _ = self.find(key); // helper pass retires it
+            }
+            return true;
+        }
+    }
+
+    /// Number of (unmarked) nodes — O(n), diagnostics.
+    pub fn len(&self) -> usize {
+        let mut n = 0;
+        let mut g: GuardPtr<LNode<K, V, R>, R> = GuardPtr::new();
+        #[allow(unused_assignments)]
+        let mut _save: GuardPtr<LNode<K, V, R>, R> = GuardPtr::new();
+        let mut prev: *const ConcurrentPtr<LNode<K, V, R>, R> = &self.head;
+        loop {
+            // SAFETY: prev is the head or a field of the node pinned by
+            // `save`.
+            let cur = g.acquire(unsafe { &*prev });
+            if cur.is_null() {
+                return n;
+            }
+            // SAFETY: guarded.
+            let node = unsafe { cur.deref_data() };
+            if node.next.load(Ordering::Acquire).mark() == 0 {
+                n += 1;
+            }
+            prev = &node.next;
+            // Pin the node owning `prev`; the previous pin drops after the
+            // reassignment (prev no longer points into it).
+            _save = g.take();
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Acquire).is_null()
+    }
+}
+
+impl<K, V, R> Drop for List<K, V, R>
+where
+    K: Ord + Send + Sync + 'static,
+    V: Send + Sync + 'static,
+    R: Reclaimer,
+{
+    fn drop(&mut self) {
+        // Exclusive access: free all nodes directly.
+        let mut cur = self.head.load(Ordering::Relaxed);
+        while !cur.is_null() {
+            // SAFETY: exclusive during drop.
+            unsafe {
+                let next = cur.deref_data().next.load(Ordering::Relaxed);
+                crate::reclaim::free_node(cur.get());
+                cur = next.with_mark(0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::hp::Hp;
+    use crate::reclaim::leaky::Leaky;
+    use crate::reclaim::stamp::StampIt;
+
+    #[test]
+    fn set_semantics_single_thread() {
+        let l: List<u64, (), Leaky> = List::new();
+        assert!(!l.contains(&5));
+        assert!(l.insert(5, ()));
+        assert!(!l.insert(5, ()), "duplicate insert must fail");
+        assert!(l.insert(3, ()));
+        assert!(l.insert(7, ()));
+        assert_eq!(l.len(), 3);
+        assert!(l.contains(&3) && l.contains(&5) && l.contains(&7));
+        assert!(!l.contains(&4));
+        assert!(l.remove(&5));
+        assert!(!l.remove(&5), "double remove must fail");
+        assert!(!l.contains(&5));
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn values_accessible_through_get_with() {
+        let l: List<u32, String, Leaky> = List::new();
+        l.insert(1, "one".to_string());
+        l.insert(2, "two".to_string());
+        assert_eq!(l.get_with(&1, |v| v.clone()), Some("one".to_string()));
+        assert_eq!(l.get_with(&3, |v| v.clone()), None);
+    }
+
+    fn concurrent_set_exercise<R: Reclaimer>() {
+        use crate::util::rng::Xoshiro256;
+        use std::sync::Arc;
+        let l: Arc<List<u64, (), R>> = Arc::new(List::new());
+        let key_range = 20u64; // paper: key range = 2 × list size (10)
+        let threads = 4;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256::new(0xD5 + t as u64);
+                    for i in 0..3000 {
+                        let k = rng.below(key_range);
+                        match rng.below(10) {
+                            0..=3 => {
+                                l.insert(k, ());
+                            }
+                            4..=7 => {
+                                l.remove(&k);
+                            }
+                            _ => {
+                                l.contains(&k);
+                            }
+                        }
+                        if i % 128 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Structural sanity: strictly sorted, unique keys.
+        let mut prev_key = None;
+        let mut g: GuardPtr<LNode<u64, (), R>, R> = GuardPtr::new();
+        #[allow(unused_assignments)]
+        let mut _save: GuardPtr<LNode<u64, (), R>, R> = GuardPtr::new();
+        let mut prev: *const ConcurrentPtr<LNode<u64, (), R>, R> = &l.head;
+        loop {
+            let cur = g.acquire(unsafe { &*prev });
+            if cur.is_null() {
+                break;
+            }
+            let node = unsafe { cur.deref_data() };
+            if let Some(p) = prev_key {
+                assert!(node.key > p, "keys must be strictly sorted: {} !> {}", node.key, p);
+            }
+            prev_key = Some(node.key);
+            prev = &node.next;
+            _save = g.take(); // pin the node owning `prev`
+        }
+    }
+
+    #[test]
+    fn concurrent_set_under_hp() {
+        concurrent_set_exercise::<Hp>();
+    }
+
+    #[test]
+    fn concurrent_set_under_stamp_it() {
+        concurrent_set_exercise::<StampIt>();
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's benchmark data structures (§4.1), generic over the
+//! reclamation scheme:
+//!
+//! * [`queue::Queue`] — Michael & Scott's lock-free FIFO queue.
+//! * [`list::List`] — Michael's improved version of Harris' list-based set
+//!   (optionally carrying values).
+//! * [`hashmap::HashMap`] — the hash-map built from per-bucket lists, and
+//!   [`hashmap::FifoCache`] — the bounded FIFO-evicting variant the
+//!   HashMap benchmark uses.
+pub mod hashmap;
+pub mod list;
+pub mod queue;

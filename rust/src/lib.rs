@@ -1,0 +1,48 @@
+//! # emr — Efficient Memory Reclamation for lock-free data structures
+//!
+//! A from-scratch reproduction of *“Stamp-it: A more Thread-efficient,
+//! Concurrent Memory Reclamation Scheme in the C++ Memory Model”*
+//! (Pöter & Träff, 2018) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`reclaim`] — seven safe-memory-reclamation (SMR) schemes behind one
+//!   generic [`reclaim::Reclaimer`] interface (the Rust rendering of the
+//!   Robison N3712 proposal the paper builds on): Stamp-it (the paper's
+//!   contribution), LFRC, hazard pointers, quiescent-state, epoch, new-epoch
+//!   and DEBRA, plus a leaky baseline.
+//! * [`ds`] — the paper's benchmark data structures, generic over the
+//!   reclaimer: Michael–Scott queue, Harris–Michael list-based set, and a
+//!   Michael-style hash-map with bounded FIFO eviction.
+//! * [`alloc`] — a pluggable node allocator (system vs pooled) with
+//!   allocation/reclamation counters, reproducing the paper's
+//!   jemalloc-vs-libc axis.
+//! * [`bench_fw`] — the benchmark harness regenerating every figure of the
+//!   paper's evaluation (throughput sweeps, reclamation-efficiency time
+//!   series, warm-up trials).
+//! * [`coordinator`] + [`runtime`] — a compute-cache server that makes the
+//!   paper's HashMap workload real: worker threads serve batched compute
+//!   requests through the reclaimed hash-map, dispatching misses to an
+//!   AOT-compiled JAX/Pallas computation via PJRT.
+//!
+//! ## Quickstart
+//!
+//! (`no_run`: doctest executables don't inherit the xla_extension rpath;
+//! `examples/quickstart.rs` runs the same code for real.)
+//!
+//! ```no_run
+//! use emr::reclaim::stamp::StampIt;
+//! use emr::ds::queue::Queue;
+//!
+//! let q: Queue<u64, StampIt> = Queue::new();
+//! q.enqueue(1);
+//! assert_eq!(q.dequeue(), Some(1));
+//! ```
+
+pub mod alloc;
+pub mod bench_fw;
+pub mod coordinator;
+pub mod ds;
+pub mod reclaim;
+pub mod runtime;
+pub mod util;

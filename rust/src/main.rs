@@ -1,0 +1,147 @@
+//! `repro` — the leader binary: runs the paper's benchmarks and the
+//! compute-cache coordinator from one CLI.
+//!
+//! ```text
+//! repro env                                   # Table 1 analogue
+//! repro bench queue|list|hashmap [opts]       # Figures 3/4/5 (12/13/14)
+//! repro efficiency queue|list|hashmap [opts]  # Figures 6, 8-11 (16-19)
+//! repro trials [opts]                         # Figure 7 (15)
+//! repro micro region|stamp-pool [opts]        # E13/E14
+//! repro ablation threshold|hp|epoch [opts]    # A1/A2/A3
+//! repro serve [--scheme stamp] [--requests N] # coordinator (E15)
+//!
+//! common options:
+//!   --threads 1,2,4   --trials N   --secs S   --schemes all|ebr,stamp,...
+//!   --alloc pool|system   --workload PCT   --csv out.csv   --paper
+//! ```
+
+use emr::bench_fw::figures::{self, Workload};
+use emr::bench_fw::{report, BenchParams};
+use emr::coordinator::{CacheServer, ServerConfig};
+use emr::dispatch_scheme;
+use emr::reclaim::{Reclaimer, SchemeId};
+use emr::util::cli::Args;
+use emr::util::rng::Xoshiro256;
+use emr::util::stats::{percentile_sorted, Summary};
+
+fn main() {
+    let args = Args::parse();
+    let params = BenchParams::from_args(&args);
+    let mut positional = args.positional.iter().map(String::as_str);
+    match positional.next() {
+        Some("env") => report::print_environment(),
+        Some("bench") => match positional.next() {
+            Some("queue") => figures::fig_throughput(&params, Workload::Queue),
+            Some("list") => figures::fig_throughput(&params, Workload::List),
+            Some("hashmap") => figures::fig_throughput(&params, Workload::HashMap),
+            other => usage(&format!("bench {:?}", other)),
+        },
+        Some("efficiency") => match positional.next() {
+            Some("queue") => figures::fig_efficiency(&params, Workload::Queue),
+            Some("list") => figures::fig_efficiency(&params, Workload::List),
+            Some("hashmap") => figures::fig_efficiency(&params, Workload::HashMap),
+            other => usage(&format!("efficiency {:?}", other)),
+        },
+        Some("trials") => figures::fig7_trials(&params),
+        Some("micro") => match positional.next() {
+            Some("region") => figures::micro_region(&params),
+            Some("stamp-pool") => figures::micro_stamp_pool(&params),
+            other => usage(&format!("micro {:?}", other)),
+        },
+        Some("ablation") => match positional.next() {
+            Some("threshold") => figures::abl_threshold(&params),
+            Some("hp") => figures::abl_hp_threshold(&params),
+            Some("epoch") => figures::abl_epoch_period(&params),
+            other => usage(&format!("ablation {:?}", other)),
+        },
+        Some("serve") => serve(&args),
+        _ => usage(""),
+    }
+}
+
+/// E15: run the coordinator on a synthetic client load and report
+/// latency/throughput (the end-to-end driver; also see
+/// `examples/compute_cache.rs`).
+fn serve(args: &Args) {
+    let scheme = SchemeId::parse(args.get_or("scheme", "stamp")).unwrap_or_else(|| {
+        eprintln!("unknown --scheme");
+        std::process::exit(2);
+    });
+    let clients = args.usize_or("clients", 4);
+    let requests = args.usize_or("requests", 2000);
+    let key_space = args.u64_or("keys", 30_000);
+    let capacity = args.usize_or("capacity", 10_000);
+
+    fn run<R: Reclaimer>(clients: usize, requests: usize, key_space: u64, capacity: usize) {
+        let server = CacheServer::<R>::start(ServerConfig {
+            capacity,
+            workers: 2,
+            ..ServerConfig::default()
+        })
+        .unwrap_or_else(|e| {
+            eprintln!("server start failed: {e:#}");
+            std::process::exit(1);
+        });
+        println!("serving with scheme {} …", R::NAME);
+        let t0 = emr::util::monotonic_ns();
+        let latencies: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let server = &server;
+                    scope.spawn(move || {
+                        let mut rng = Xoshiro256::new(0xE2E ^ c as u64);
+                        let mut lat = Vec::with_capacity(requests);
+                        for _ in 0..requests {
+                            let key = rng.below(key_space) as u32;
+                            let resp = server.request(key).expect("request failed");
+                            lat.push(resp.latency_ns as f64);
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall_s = (emr::util::monotonic_ns() - t0) as f64 / 1e9;
+        let mut all: Vec<f64> = latencies.into_iter().flatten().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = Summary::of(&all);
+        let m = server.metrics();
+        println!("\n== compute-cache serve ({}) ==", R::NAME);
+        println!("clients={clients} requests/client={requests} wall={wall_s:.2}s");
+        println!(
+            "throughput: {:.0} req/s   latency p50={} p95={} p99={} max={}",
+            (clients * requests) as f64 / wall_s,
+            emr::util::stats::fmt_ns(percentile_sorted(&all, 50.0)),
+            emr::util::stats::fmt_ns(percentile_sorted(&all, 95.0)),
+            emr::util::stats::fmt_ns(percentile_sorted(&all, 99.0)),
+            emr::util::stats::fmt_ns(s.max),
+        );
+        println!("{m}");
+        println!("cache entries at end: {}", server.cache_len());
+        server.shutdown();
+    }
+    dispatch_scheme!(scheme, run, clients, requests, key_space, capacity);
+}
+
+fn usage(context: &str) -> ! {
+    if !context.is_empty() {
+        eprintln!("unknown command: {context}\n");
+    }
+    eprintln!(
+        "usage: repro <command>\n\
+         \n\
+         commands:\n\
+         \x20 env                                  testbed description (Table 1)\n\
+         \x20 bench queue|list|hashmap             throughput sweeps (Figs 3-5, 12-14)\n\
+         \x20 efficiency queue|list|hashmap        unreclaimed-node series (Figs 6, 8-11, 16-19)\n\
+         \x20 trials                               warm-up over trials (Figs 7, 15)\n\
+         \x20 micro region|stamp-pool              microbenchmarks (E13/E14)\n\
+         \x20 ablation threshold|hp|epoch          design-choice ablations (A1-A3)\n\
+         \x20 serve                                compute-cache coordinator (E15)\n\
+         \n\
+         common options: --threads 1,2,4 --trials N --secs S --schemes all\n\
+         \x20               --alloc pool|system --workload PCT --csv FILE --paper"
+    );
+    std::process::exit(2)
+}

@@ -1,0 +1,138 @@
+//! `concurrent_ptr` (paper §2): an atomic [`MarkedPtr`] — the "weak" shared
+//! pointer living inside lock-free data structures. Only a [`GuardPtr`]
+//! acquired *from* a `ConcurrentPtr` protects the target from deletion.
+//!
+//! [`GuardPtr`]: super::GuardPtr
+
+use super::marked_ptr::MarkedPtr;
+use super::Reclaimer;
+use std::fmt;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Atomic marked pointer to a `Node<T, R>`.
+pub struct ConcurrentPtr<T, R: Reclaimer> {
+    raw: AtomicUsize,
+    _phantom: PhantomData<MarkedPtr<T, R>>,
+}
+
+impl<T, R: Reclaimer> ConcurrentPtr<T, R> {
+    /// A null pointer.
+    pub const fn null() -> Self {
+        Self { raw: AtomicUsize::new(0), _phantom: PhantomData }
+    }
+
+    /// Initialize with a value (typically while the node is still private).
+    pub fn new(value: MarkedPtr<T, R>) -> Self {
+        Self { raw: AtomicUsize::new(value.into_raw()), _phantom: PhantomData }
+    }
+
+    #[inline]
+    pub fn load(&self, order: Ordering) -> MarkedPtr<T, R> {
+        MarkedPtr::from_raw(self.raw.load(order))
+    }
+
+    #[inline]
+    pub fn store(&self, value: MarkedPtr<T, R>, order: Ordering) {
+        self.raw.store(value.into_raw(), order)
+    }
+
+    /// Single-word CAS; returns the witness value on failure.
+    #[inline]
+    pub fn compare_exchange(
+        &self,
+        expected: MarkedPtr<T, R>,
+        desired: MarkedPtr<T, R>,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<(), MarkedPtr<T, R>> {
+        self.raw
+            .compare_exchange(expected.into_raw(), desired.into_raw(), success, failure)
+            .map(|_| ())
+            .map_err(MarkedPtr::from_raw)
+    }
+
+    /// Weak CAS variant for retry loops.
+    #[inline]
+    pub fn compare_exchange_weak(
+        &self,
+        expected: MarkedPtr<T, R>,
+        desired: MarkedPtr<T, R>,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<(), MarkedPtr<T, R>> {
+        self.raw
+            .compare_exchange_weak(expected.into_raw(), desired.into_raw(), success, failure)
+            .map(|_| ())
+            .map_err(MarkedPtr::from_raw)
+    }
+
+    /// Atomically set mark bits (fetch_or on the low bits), returning the
+    /// previous value. Used to set Harris delete marks.
+    #[inline]
+    pub fn fetch_mark(&self, mark: usize, order: Ordering) -> MarkedPtr<T, R> {
+        MarkedPtr::from_raw(self.raw.fetch_or(mark, order))
+    }
+}
+
+impl<T, R: Reclaimer> Default for ConcurrentPtr<T, R> {
+    fn default() -> Self {
+        Self::null()
+    }
+}
+
+impl<T, R: Reclaimer> fmt::Debug for ConcurrentPtr<T, R> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ConcurrentPtr({:?})", self.load(Ordering::Relaxed))
+    }
+}
+
+// SAFETY: a ConcurrentPtr is just an atomic word; the pointees' thread
+// safety is governed by the reclamation protocol (T: Send + Sync is
+// enforced where nodes are created and dereferenced).
+unsafe impl<T: Send + Sync, R: Reclaimer> Send for ConcurrentPtr<T, R> {}
+unsafe impl<T: Send + Sync, R: Reclaimer> Sync for ConcurrentPtr<T, R> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::leaky::Leaky;
+    use crate::reclaim::{alloc_node, free_node};
+
+    #[test]
+    fn load_store_cas() {
+        let n1 = alloc_node::<u64, Leaky>(1);
+        let n2 = alloc_node::<u64, Leaky>(2);
+        let c: ConcurrentPtr<u64, Leaky> = ConcurrentPtr::null();
+        assert!(c.load(Ordering::Relaxed).is_null());
+
+        let p1 = MarkedPtr::new(n1, 0);
+        let p2 = MarkedPtr::new(n2, 0);
+        c.store(p1, Ordering::Release);
+        assert_eq!(c.load(Ordering::Acquire), p1);
+
+        assert_eq!(
+            c.compare_exchange(p2, p1, Ordering::AcqRel, Ordering::Acquire),
+            Err(p1),
+            "CAS with wrong expected must fail and return the witness"
+        );
+        assert!(c.compare_exchange(p1, p2, Ordering::AcqRel, Ordering::Acquire).is_ok());
+        assert_eq!(c.load(Ordering::Acquire), p2);
+
+        unsafe {
+            free_node(n1);
+            free_node(n2);
+        }
+    }
+
+    #[test]
+    fn fetch_mark_sets_delete_bit() {
+        let n = alloc_node::<u64, Leaky>(5);
+        let c = ConcurrentPtr::new(MarkedPtr::new(n, 0));
+        let prev = c.fetch_mark(1, Ordering::AcqRel);
+        assert_eq!(prev.mark(), 0);
+        assert_eq!(c.load(Ordering::Relaxed).mark(), 1);
+        assert_eq!(c.load(Ordering::Relaxed).get(), n);
+        unsafe { free_node(n) };
+    }
+}

@@ -1,0 +1,49 @@
+//! DEBRA — distributed epoch-based reclamation (Brown 2015).
+//!
+//! Epoch protocol as in ER, but the advance cost is *distributed*: instead
+//! of scanning all p threads at once, each thread checks a single other
+//! thread per check opportunity ("DEBRA checks the next thread every 20
+//! critical region entries", paper §4.2), advancing the epoch when a full
+//! pass over the registry succeeds. This bounds the per-operation overhead
+//! but — as the paper's efficiency analysis shows (App. A.2) — "with a
+//! large number of threads this significantly delays the update of the
+//! global epoch, resulting in poor reclamation efficiency".
+
+use super::epoch_core::{epoch_reclaimer_impl, EpochConfig, EpochDomain};
+
+/// DEBRA (Brown 2015).
+pub struct Debra;
+
+static DOMAIN: EpochDomain = EpochDomain::new(EpochConfig {
+    advance_every: u32::MAX, // unused under DEBRA policy
+    debra_check_every: Some(20), // paper §4.2
+    quiescent_at_exit: false,
+});
+
+/// The scheme's epoch domain (benchmark diagnostics).
+pub fn domain() -> &'static EpochDomain {
+    &DOMAIN
+}
+
+epoch_reclaimer_impl!(Debra, "DEBRA", DOMAIN, DEBRA_LOCAL, DebraRegion);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::tests_common::*;
+
+    #[test]
+    fn nodes_reclaimed_after_epoch_advances() {
+        exercise_basic_reclamation::<Debra>();
+    }
+
+    #[test]
+    fn guard_blocks_reclamation() {
+        exercise_guard_blocks_reclamation::<Debra>();
+    }
+
+    #[test]
+    fn concurrent_smoke() {
+        exercise_concurrent_smoke::<Debra>(4, 500);
+    }
+}

@@ -1,0 +1,47 @@
+//! ER — epoch-based reclamation (Fraser 2004), as configured in the paper's
+//! comparison (§4.2): critical regions are *per guard* (every operation
+//! pays region entry/exit — no application-level amortization), and an
+//! epoch-advance attempt runs every 100 region entries.
+//!
+//! The `Region` type still exists (the interface requires it) but entering
+//! one deliberately amortizes nothing beyond nesting — that behaviour is
+//! NER's distinguishing feature, see [`super::nebr`].
+
+use super::epoch_core::{epoch_reclaimer_impl, EpochConfig, EpochDomain};
+
+/// Epoch-based reclamation (Fraser).
+pub struct Ebr;
+
+static DOMAIN: EpochDomain = EpochDomain::new(EpochConfig {
+    advance_every: 100, // paper §4.2: "ER/NER try to advance the epoch every 100 critical region entries"
+    debra_check_every: None,
+    quiescent_at_exit: false,
+});
+
+/// The scheme's epoch domain (benchmark diagnostics).
+pub fn domain() -> &'static EpochDomain {
+    &DOMAIN
+}
+
+epoch_reclaimer_impl!(Ebr, "ER", DOMAIN, EBR_LOCAL, EbrRegion);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::tests_common::*;
+
+    #[test]
+    fn nodes_reclaimed_after_epoch_advances() {
+        exercise_basic_reclamation::<Ebr>();
+    }
+
+    #[test]
+    fn guard_blocks_reclamation() {
+        exercise_guard_blocks_reclamation::<Ebr>();
+    }
+
+    #[test]
+    fn concurrent_smoke() {
+        exercise_concurrent_smoke::<Ebr>(4, 500);
+    }
+}

@@ -1,0 +1,527 @@
+//! Shared machinery for the epoch-family schemes: ER (Fraser), NER (Hart),
+//! QSR (McKenney) and DEBRA (Brown) are four policies over the same core —
+//! a global epoch counter, per-thread epoch announcements, stamped
+//! per-thread retire lists and an orphan hand-off list.
+//!
+//! ## Reclamation rule
+//!
+//! A node is stamped with the **global** epoch value read *after* it was
+//! unlinked, and reclaimed once `global >= stamp + 2`. Correctness (the
+//! classic two-advance argument, in C++-memory-model terms):
+//!
+//! * Any thread that could still hold a reference was inside a critical
+//!   region when the node was unlinked, so its announced epoch is at most
+//!   `stamp` and is **not updated** while it stays in the region
+//!   (ER/NER/DEBRA) or until its next quiescent point (QSR).
+//! * Advancing `stamp → stamp+1` requires every announced epoch to equal
+//!   `stamp`; advancing to `stamp+2` requires them to equal `stamp+1`.
+//!   A pre-unlink region would still announce ≤ `stamp` and block the second
+//!   advance. Hence `global = stamp+2` implies every such region has ended;
+//!   the announcement stores are ordered against the scans by the SeqCst
+//!   fences at entry and scan.
+//!
+//! ## Policy knobs (paper §4.2)
+//!
+//! * ER/NER try to advance the epoch every **100** critical-region entries.
+//! * DEBRA checks **one** other thread every **20** entries, advancing when
+//!   a full pass over the registry succeeds.
+//! * QSR announces at region *exit* (the fuzzy barrier) and its threads
+//!   count as epoch-blocking from registration until thread exit.
+//!
+//! ## Reentrancy discipline
+//!
+//! Reclaiming runs user `Drop` code, which may itself create guards or
+//! retire nodes through the same scheme. All entry points therefore release
+//! the thread-local `RefCell` borrow *before* reclaiming; nested retires
+//! land in the (temporarily emptied) local list and are merged back after.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::registry::{ThreadEntry, ThreadList};
+use super::retire::{prepare_retire, GlobalRetireList, RetireList};
+use super::{Node, Reclaimer};
+use crossbeam_utils::CachePadded;
+
+/// Scheme-policy parameters.
+#[derive(Copy, Clone, Debug)]
+pub struct EpochConfig {
+    /// Attempt a (full-scan) epoch advance every N outermost region entries
+    /// (ER/NER) or N quiescent passes (QSR). Ignored under DEBRA.
+    pub advance_every: u32,
+    /// DEBRA-style incremental advance: check one thread every N entries.
+    pub debra_check_every: Option<u32>,
+    /// QSR: announce epochs at region *exit* only; registered threads block
+    /// advancement even outside regions.
+    pub quiescent_at_exit: bool,
+}
+
+/// Shared per-thread slot read by epoch scanners.
+/// `state = (epoch << 1) | blocking` — one word, so a scan reads an
+/// (epoch, blocking) pair atomically.
+#[derive(Default)]
+pub struct EpochSlot {
+    state: AtomicU64,
+}
+
+impl EpochSlot {
+    #[inline]
+    fn announce(&self, epoch: u64, blocking: bool, order: Ordering) {
+        self.state.store((epoch << 1) | blocking as u64, order);
+    }
+}
+
+/// One epoch domain (global state); each scheme owns a static one.
+pub struct EpochDomain {
+    pub cfg: EpochConfig,
+    /// Runtime-tunable copy of `cfg.advance_every` / the DEBRA check
+    /// stride (ablation bench A3).
+    period: std::sync::atomic::AtomicU32,
+    global: CachePadded<AtomicU64>,
+    threads: ThreadList<EpochSlot>,
+    orphans: GlobalRetireList,
+}
+
+impl EpochDomain {
+    pub const fn new(cfg: EpochConfig) -> Self {
+        let period = match cfg.debra_check_every {
+            Some(n) => n,
+            None => cfg.advance_every,
+        };
+        Self {
+            cfg,
+            period: std::sync::atomic::AtomicU32::new(period),
+            global: CachePadded::new(AtomicU64::new(0)),
+            threads: ThreadList::new(),
+            orphans: GlobalRetireList::new(),
+        }
+    }
+
+    /// Current advance/check period (paper §4.2: 100 for ER/NER, 20 for
+    /// DEBRA's per-thread checks).
+    pub fn period(&self) -> u32 {
+        self.period.load(Ordering::Relaxed)
+    }
+
+    /// Tune the advance/check period (ablation bench A3).
+    pub fn set_period(&self, n: u32) {
+        self.period.store(n.max(1), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn global_epoch(&self) -> u64 {
+        self.global.load(Ordering::Acquire)
+    }
+
+    /// Full-scan advance attempt. Returns true if the epoch moved.
+    pub fn try_advance(&self) -> bool {
+        // Order this scan after our own announcement store; pairs with the
+        // region-entry fences of other threads.
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let e = self.global.load(Ordering::Relaxed);
+        for entry in self.threads.iter() {
+            if !entry.is_active() {
+                continue;
+            }
+            let s = entry.data().state.load(Ordering::Acquire);
+            if s & 1 == 1 && (s >> 1) != e {
+                return false; // someone still announces an older epoch
+            }
+        }
+        // CAS, not store: concurrent scanners may race; at most one advance
+        // per observed epoch value.
+        self.global.compare_exchange(e, e + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok()
+    }
+
+    /// Can a node with this retire stamp be reclaimed now?
+    #[inline]
+    fn reclaimable(&self, stamp: u64) -> bool {
+        stamp + 2 <= self.global.load(Ordering::Acquire)
+    }
+
+    /// Reclaim eligible orphans (runs user drops — never call while holding
+    /// a thread-local borrow).
+    fn drain_orphans(&self) -> usize {
+        if self.orphans.is_empty() {
+            return 0;
+        }
+        // SAFETY: the two-advance rule (module docs).
+        unsafe { self.orphans.reclaim_where(|s| self.reclaimable(s)) }
+    }
+
+    /// Nodes currently parked on the orphan list (diagnostics).
+    pub fn orphan_count(&self) -> usize {
+        self.orphans.count()
+    }
+}
+
+/// Thread-local epoch state (one per scheme per thread).
+pub struct LocalEpoch {
+    domain: &'static EpochDomain,
+    entry: &'static ThreadEntry<EpochSlot>,
+    retired: RetireList,
+    nesting: u32,
+    /// Outermost entries since the last advance attempt / DEBRA check.
+    entries: u32,
+    /// DEBRA: registry-walk position and the epoch the pass started at.
+    scan_pos: usize,
+    scan_epoch: u64,
+}
+
+/// Action decided under the borrow, executed after releasing it.
+enum Deferred {
+    None,
+    TryAdvance,
+    DebraCheck,
+}
+
+impl LocalEpoch {
+    pub fn new(domain: &'static EpochDomain) -> Self {
+        let entry = domain.threads.acquire(EpochSlot::default, |slot| {
+            slot.announce(0, false, Ordering::Release);
+        });
+        if domain.cfg.quiescent_at_exit {
+            // QSR: the thread blocks epoch advancement from registration on.
+            let e = domain.global.load(Ordering::Relaxed);
+            entry.data().announce(e, true, Ordering::Release);
+            std::sync::atomic::fence(Ordering::SeqCst);
+        }
+        Self {
+            domain,
+            entry,
+            retired: RetireList::new(),
+            nesting: 0,
+            entries: 0,
+            scan_pos: 0,
+            scan_epoch: 0,
+        }
+    }
+
+    fn enter_inner(&mut self) -> Deferred {
+        self.nesting += 1;
+        if self.nesting > 1 {
+            return Deferred::None;
+        }
+        let cfg = self.domain.cfg;
+        if !cfg.quiescent_at_exit {
+            // Announce (epoch, blocking): Release store + SeqCst fence
+            // orders the announcement before all subsequent shared-data
+            // loads (pairs with the scan fence in try_advance).
+            let e = self.domain.global.load(Ordering::Relaxed);
+            self.entry.data().announce(e, true, Ordering::Release);
+            std::sync::atomic::fence(Ordering::SeqCst);
+        }
+        self.entries += 1;
+        let period = self.domain.period();
+        if cfg.debra_check_every.is_some() {
+            if self.entries >= period {
+                self.entries = 0;
+                return Deferred::DebraCheck;
+            }
+        } else if !cfg.quiescent_at_exit && self.entries >= period {
+            self.entries = 0;
+            return Deferred::TryAdvance;
+        }
+        Deferred::None
+    }
+
+    fn exit_inner(&mut self) -> Deferred {
+        debug_assert!(self.nesting > 0, "unbalanced region exit");
+        self.nesting -= 1;
+        if self.nesting > 0 {
+            return Deferred::None;
+        }
+        let cfg = self.domain.cfg;
+        if cfg.quiescent_at_exit {
+            // QSR's fuzzy barrier: announce passage through a quiescent
+            // state by adopting the current global epoch.
+            let e = self.domain.global.load(Ordering::Relaxed);
+            self.entry.data().announce(e, true, Ordering::Release);
+            std::sync::atomic::fence(Ordering::SeqCst);
+            self.entries += 1;
+            if self.entries >= self.domain.period() {
+                self.entries = 0;
+                return Deferred::TryAdvance;
+            }
+        } else {
+            // Stop blocking advancement; Release pairs with scanners.
+            let s = self.entry.data().state.load(Ordering::Relaxed);
+            self.entry.data().announce(s >> 1, false, Ordering::Release);
+        }
+        Deferred::None
+    }
+
+    #[inline]
+    pub fn in_region(&self) -> bool {
+        self.nesting > 0
+    }
+
+    /// Append nodes from `other` (all stamped at ≥ our max stamp) keeping
+    /// the order invariant.
+    fn append_merge(&mut self, mut other: RetireList) {
+        let (chain, _) = other.take_chain();
+        let mut cur = chain;
+        while !cur.is_null() {
+            // SAFETY: we own the detached chain.
+            let next = unsafe { (*cur).next_in_chain() };
+            self.retired.push_back(cur);
+            cur = next;
+        }
+    }
+}
+
+impl Drop for LocalEpoch {
+    fn drop(&mut self) {
+        // Thread exit: hand unreclaimed nodes to the orphan list (the paper:
+        // "when a thread terminates, all schemes add the remaining nodes to
+        // a global list") and release the registry entry for reuse.
+        let (chain, _) = self.retired.take_chain();
+        self.domain.orphans.push_sublist(chain);
+        self.entry.data().announce(0, false, Ordering::Release);
+        self.domain.threads.release(self.entry);
+    }
+}
+
+// ---- Borrow-safe entry points (see "Reentrancy discipline" above) ----
+
+/// Enter a critical region for the scheme owning `cell`.
+pub fn enter(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
+    let deferred = cell.borrow_mut().enter_inner();
+    run_deferred(domain, cell, deferred);
+}
+
+/// Leave a critical region; reclaims the eligible local prefix.
+pub fn exit(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
+    let deferred = cell.borrow_mut().exit_inner();
+    run_deferred(domain, cell, deferred);
+    reclaim_local(domain, cell);
+}
+
+fn run_deferred(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>, deferred: Deferred) {
+    match deferred {
+        Deferred::None => {}
+        Deferred::TryAdvance => {
+            if domain.try_advance() {
+                domain.drain_orphans();
+            }
+        }
+        Deferred::DebraCheck => debra_check_one(domain, cell),
+    }
+}
+
+/// Retire a node: stamp with the global epoch (read after unlink — Acquire
+/// pairs with the unlink CAS) and append to the ordered local retire list.
+///
+/// # Safety
+/// See [`Reclaimer::retire`].
+pub unsafe fn retire<T: Send + Sync + 'static, R: Reclaimer>(
+    domain: &'static EpochDomain,
+    cell: &RefCell<LocalEpoch>,
+    node: *mut Node<T, R>,
+) {
+    let stamp = domain.global.load(Ordering::Acquire);
+    let r = prepare_retire::<T, R>(node, stamp);
+    cell.borrow_mut().retired.push_back(r);
+}
+
+/// Orphan-path retire for when the thread-local state is unavailable
+/// (thread teardown).
+///
+/// # Safety
+/// See [`Reclaimer::retire`].
+pub unsafe fn retire_to_orphans<T: Send + Sync + 'static, R: Reclaimer>(
+    domain: &'static EpochDomain,
+    node: *mut Node<T, R>,
+) {
+    let stamp = domain.global.load(Ordering::Acquire);
+    let r = prepare_retire::<T, R>(node, stamp);
+    domain.orphans.push_sublist(r);
+}
+
+/// Reclaim the eligible prefix of the local retire list. The list is
+/// detached while user drops run; nested retires are merged back after.
+pub fn reclaim_local(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) -> usize {
+    if cell.borrow().retired.is_empty() {
+        return 0;
+    }
+    let mut mine = std::mem::take(&mut cell.borrow_mut().retired);
+    // SAFETY: reclaimable() implements the two-advance rule (module docs).
+    let freed = unsafe { mine.reclaim_prefix(|s| domain.reclaimable(s)) };
+    let mut l = cell.borrow_mut();
+    let nested = std::mem::replace(&mut l.retired, mine);
+    l.append_merge(nested);
+    freed
+}
+
+/// DEBRA: check a single registry entry; advance the epoch when a full pass
+/// over the registry observed everyone at the current epoch.
+fn debra_check_one(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
+    std::sync::atomic::fence(Ordering::SeqCst);
+    let e = domain.global.load(Ordering::Relaxed);
+    let pos = {
+        let mut l = cell.borrow_mut();
+        if e != l.scan_epoch {
+            // Epoch moved since the pass started: restart.
+            l.scan_epoch = e;
+            l.scan_pos = 0;
+        }
+        l.scan_pos
+    };
+    match domain.threads.iter().nth(pos) {
+        None => {
+            // Full pass done at epoch e: advance.
+            let advanced =
+                domain.global.compare_exchange(e, e + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok();
+            {
+                let mut l = cell.borrow_mut();
+                l.scan_pos = 0;
+                l.scan_epoch = e + 1;
+            }
+            if advanced {
+                domain.drain_orphans();
+            }
+        }
+        Some(entry) => {
+            let s = entry.data().state.load(Ordering::Acquire);
+            let blocking = entry.is_active() && s & 1 == 1;
+            if !blocking || (s >> 1) == e {
+                cell.borrow_mut().scan_pos += 1;
+            }
+            // else: stay on this entry; re-check on the next opportunity.
+        }
+    }
+}
+
+/// Bench/test hook: repeatedly advance + reclaim until quiescent.
+pub fn flush(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
+    for _ in 0..4 {
+        // Cycle a region so *our own* announcement stops blocking the
+        // advance: the exit updates QSR's quiescent state and clears the
+        // blocking bit for the in-region schemes. A nested cycle (flush
+        // under a live guard) deliberately changes nothing — the guard
+        // must keep blocking.
+        enter(domain, cell);
+        exit(domain, cell);
+        domain.try_advance();
+        reclaim_local(domain, cell);
+        domain.drain_orphans();
+    }
+}
+
+/// Node header for epoch-family schemes: just the retire metadata.
+#[derive(Default)]
+#[repr(C)]
+pub struct EpochHeader {
+    retire: super::retire::RetireHeader,
+}
+
+impl super::retire::AsRetireHeader for EpochHeader {
+    fn retire_header(&self) -> &super::retire::RetireHeader {
+        &self.retire
+    }
+}
+
+/// Guard token: whether this guard entered a region it must exit on drop.
+#[derive(Default)]
+pub struct EpochGuardToken {
+    pub(crate) entered: bool,
+}
+
+/// Implements [`Reclaimer`] for an epoch-family scheme over its `DOMAIN`
+/// static and `LOCAL` thread-local.
+///
+/// Protection argument: `protect` is a plain Acquire load — being inside a
+/// critical region (entered by the guard token or an enclosing
+/// [`crate::reclaim::Region`]) is what protects the target (paper §2/§3).
+macro_rules! epoch_reclaimer_impl {
+    ($scheme:ty, $name:literal, $domain:ident, $local:ident, $region:ident) => {
+        /// RAII region token for this scheme.
+        pub struct $region {
+            _not_send: std::marker::PhantomData<*const ()>,
+        }
+
+        impl Drop for $region {
+            fn drop(&mut self) {
+                let _ = $local.try_with(|l| $crate::reclaim::epoch_core::exit(&$domain, l));
+            }
+        }
+
+        thread_local! {
+            static $local: std::cell::RefCell<$crate::reclaim::epoch_core::LocalEpoch> =
+                std::cell::RefCell::new($crate::reclaim::epoch_core::LocalEpoch::new(&$domain));
+        }
+
+        // SAFETY: the epoch protocol (see epoch_core module docs) reclaims a
+        // retired node only after every region that could reference it has
+        // exited.
+        unsafe impl $crate::reclaim::Reclaimer for $scheme {
+            const NAME: &'static str = $name;
+            type Header = $crate::reclaim::epoch_core::EpochHeader;
+            type GuardState = $crate::reclaim::epoch_core::EpochGuardToken;
+            type Region = $region;
+
+            fn enter_region() -> Self::Region {
+                $local.with(|l| $crate::reclaim::epoch_core::enter(&$domain, l));
+                $region { _not_send: std::marker::PhantomData }
+            }
+
+            #[inline]
+            fn protect<T: Send + Sync + 'static>(
+                state: &mut Self::GuardState,
+                src: &$crate::reclaim::ConcurrentPtr<T, Self>,
+            ) -> $crate::reclaim::MarkedPtr<T, Self> {
+                if !state.entered {
+                    state.entered = true;
+                    $local.with(|l| $crate::reclaim::epoch_core::enter(&$domain, l));
+                }
+                // Acquire pairs with the Release publication of the node.
+                src.load(std::sync::atomic::Ordering::Acquire)
+            }
+
+            #[inline]
+            fn protect_if_equal<T: Send + Sync + 'static>(
+                state: &mut Self::GuardState,
+                src: &$crate::reclaim::ConcurrentPtr<T, Self>,
+                expected: $crate::reclaim::MarkedPtr<T, Self>,
+            ) -> bool {
+                if !state.entered {
+                    state.entered = true;
+                    $local.with(|l| $crate::reclaim::epoch_core::enter(&$domain, l));
+                }
+                src.load(std::sync::atomic::Ordering::Acquire) == expected
+            }
+
+            #[inline]
+            fn release<T: Send + Sync + 'static>(
+                _state: &mut Self::GuardState,
+                _ptr: $crate::reclaim::MarkedPtr<T, Self>,
+            ) {
+                // Protection is region-scoped; the region is left when the
+                // guard is dropped (drop_guard_state).
+            }
+
+            fn drop_guard_state(state: &mut Self::GuardState) {
+                if state.entered {
+                    state.entered = false;
+                    let _ = $local.try_with(|l| $crate::reclaim::epoch_core::exit(&$domain, l));
+                }
+            }
+
+            unsafe fn retire<T: Send + Sync + 'static>(
+                node: *mut $crate::reclaim::Node<T, Self>,
+            ) {
+                $local
+                    .try_with(|l| $crate::reclaim::epoch_core::retire::<T, Self>(&$domain, l, node))
+                    .unwrap_or_else(|_| {
+                        // Thread teardown: hand straight to the orphan list.
+                        $crate::reclaim::epoch_core::retire_to_orphans::<T, Self>(&$domain, node)
+                    });
+            }
+
+            fn flush() {
+                $local.with(|l| $crate::reclaim::epoch_core::flush(&$domain, l));
+            }
+        }
+    };
+}
+pub(crate) use epoch_reclaimer_impl;

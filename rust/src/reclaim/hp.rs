@@ -1,0 +1,437 @@
+//! HPR — hazard pointers (Michael 2004), with the *dynamic* extension the
+//! paper needs for its HashMap benchmark ("we have to use the extended
+//! hazard pointer scheme that supports a dynamic number of hazard pointers
+//! as explained by Michael").
+//!
+//! * Each thread owns a registry entry with `K_STATIC` inline hazard slots
+//!   plus a chain of overflow chunks, allocated on demand and never freed
+//!   (immortal, like the registry entries themselves).
+//! * `protect` publishes the candidate pointer in a slot and re-validates
+//!   the source — the publish/validate handshake is ordered by a SeqCst
+//!   fence that pairs with the SeqCst fence in `scan`.
+//! * Retired nodes go to a thread-local list; when it exceeds the paper's
+//!   threshold `100 + 2·ΣKᵢ` (§4.2; `ΣKᵢ` = total hazard slots across all
+//!   threads) the thread scans: it snapshots all published hazards, frees
+//!   every retired node not found, and keeps the rest.
+//!
+//! The per-thread unreclaimed population is therefore Θ(total slots) — the
+//! quadratic-in-threads behaviour the paper measures in App. A.2.
+
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+
+use super::registry::{ThreadEntry, ThreadList};
+use super::retire::{prepare_retire, AsRetireHeader, GlobalRetireList, Retired, RetireHeader, RetireList};
+use super::{ConcurrentPtr, MarkedPtr, Node, Reclaimer};
+use std::cell::RefCell;
+
+/// Inline hazard slots per thread (covers the queue/list benchmarks; the
+/// hash-map benchmark grows beyond them dynamically).
+const K_STATIC: usize = 8;
+/// Slots per dynamically added chunk.
+const CHUNK_SLOTS: usize = 16;
+/// Base term of the scan threshold (paper §4.2); runtime-tunable for
+/// ablation bench A2.
+static THRESHOLD_BASE: AtomicU64 = AtomicU64::new(100);
+
+/// Tune the scan-threshold base (paper value: 100).
+pub fn set_threshold_base(n: usize) {
+    THRESHOLD_BASE.store(n as u64, Ordering::Relaxed);
+}
+
+/// Hazard pointers (Michael).
+pub struct Hp;
+
+/// Node header: retire metadata only.
+#[derive(Default)]
+#[repr(C)]
+pub struct HpHeader {
+    retire: RetireHeader,
+}
+
+impl AsRetireHeader for HpHeader {
+    fn retire_header(&self) -> &RetireHeader {
+        &self.retire
+    }
+}
+
+/// Dynamically added block of hazard slots (immortal once published).
+struct SlotChunk {
+    slots: [AtomicUsize; CHUNK_SLOTS],
+    next: AtomicPtr<SlotChunk>,
+}
+
+/// Per-thread shared state: the hazard slots other threads scan.
+pub struct HpSlots {
+    inline: [AtomicUsize; K_STATIC],
+    extra: AtomicPtr<SlotChunk>,
+}
+
+impl Default for HpSlots {
+    fn default() -> Self {
+        Self {
+            inline: [const { AtomicUsize::new(0) }; K_STATIC],
+            extra: AtomicPtr::new(ptr::null_mut()),
+        }
+    }
+}
+
+static THREADS: ThreadList<HpSlots> = ThreadList::new();
+/// ΣKᵢ — total hazard slots ever allocated (inline + chunks), for the
+/// paper's scan threshold.
+static TOTAL_SLOTS: AtomicU64 = AtomicU64::new(0);
+static ORPHANS: GlobalRetireList = GlobalRetireList::new();
+
+/// Thread-local hazard-pointer state.
+struct HpLocal {
+    entry: &'static ThreadEntry<HpSlots>,
+    /// Currently unpublished slots available to guards.
+    free_slots: Vec<&'static AtomicUsize>,
+    retired: RetireList,
+}
+
+impl HpLocal {
+    fn new() -> Self {
+        let mut fresh_entry = false;
+        let entry = THREADS.acquire(
+            || {
+                fresh_entry = true;
+                HpSlots::default()
+            },
+            |_| {},
+        );
+        if fresh_entry {
+            TOTAL_SLOTS.fetch_add(K_STATIC as u64, Ordering::Relaxed);
+        }
+        // Collect every slot of the entry (inline + previously grown
+        // chunks) — all must be unpublished (previous owner's guards are
+        // dropped before thread exit).
+        let mut free_slots: Vec<&'static AtomicUsize> = Vec::with_capacity(K_STATIC);
+        for s in &entry.data().inline {
+            debug_assert_eq!(s.load(Ordering::Relaxed), 0);
+            // SAFETY: registry entries are immortal.
+            free_slots.push(unsafe { &*(s as *const AtomicUsize) });
+        }
+        let mut chunk = entry.data().extra.load(Ordering::Acquire);
+        while !chunk.is_null() {
+            // SAFETY: chunks are immortal.
+            let c = unsafe { &*chunk };
+            for s in &c.slots {
+                debug_assert_eq!(s.load(Ordering::Relaxed), 0);
+                free_slots.push(unsafe { &*(s as *const AtomicUsize) });
+            }
+            chunk = c.next.load(Ordering::Acquire);
+        }
+        Self { entry, free_slots, retired: RetireList::new() }
+    }
+
+    /// Take a free slot, growing the dynamic chunk chain if needed
+    /// (Michael's extended scheme).
+    fn acquire_slot(&mut self) -> &'static AtomicUsize {
+        if let Some(s) = self.free_slots.pop() {
+            return s;
+        }
+        let chunk = Box::leak(Box::new(SlotChunk {
+            slots: [const { AtomicUsize::new(0) }; CHUNK_SLOTS],
+            next: AtomicPtr::new(ptr::null_mut()),
+        }));
+        TOTAL_SLOTS.fetch_add(CHUNK_SLOTS as u64, Ordering::Relaxed);
+        // Prepend to the entry's chunk chain (publish with Release so
+        // scanners see initialized slots).
+        let extra = &self.entry.data().extra;
+        let mut head = extra.load(Ordering::Relaxed);
+        loop {
+            chunk.next.store(head, Ordering::Relaxed);
+            match extra.compare_exchange_weak(
+                head,
+                chunk as *mut _,
+                Ordering::Release,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(h) => head = h,
+            }
+        }
+        for s in chunk.slots.iter().skip(1) {
+            self.free_slots.push(unsafe { &*(s as *const AtomicUsize) });
+        }
+        unsafe { &*(&chunk.slots[0] as *const AtomicUsize) }
+    }
+
+    fn threshold() -> usize {
+        THRESHOLD_BASE.load(Ordering::Relaxed) as usize
+            + 2 * TOTAL_SLOTS.load(Ordering::Relaxed) as usize
+    }
+}
+
+impl Drop for HpLocal {
+    fn drop(&mut self) {
+        // Final scan, then orphan the remainder (it will be picked up by
+        // other threads' scans).
+        scan_with(&mut self.retired);
+        let (chain, _) = self.retired.take_chain();
+        ORPHANS.push_sublist(chain);
+        THREADS.release(self.entry);
+    }
+}
+
+thread_local! {
+    static HP_LOCAL: RefCell<HpLocal> = RefCell::new(HpLocal::new());
+}
+
+/// Snapshot all published hazards and reclaim every node in `retired` that
+/// none of them protects. Also adopts orphaned retire lists.
+fn scan_with(retired: &mut RetireList) {
+    // Adopt orphans (stamps are unused by HP — push_back order is fine
+    // because all stamps are 0).
+    let mut orphan = ORPHANS.steal_all();
+    while !orphan.is_null() {
+        // SAFETY: stolen chains are exclusively ours.
+        let next_list = unsafe { (*orphan).next_list() };
+        let mut cur: Retired = orphan;
+        while !cur.is_null() {
+            let next = unsafe { (*cur).next_in_chain() };
+            retired.push_back(cur);
+            cur = next;
+        }
+        orphan = next_list;
+    }
+
+    // Pairs with the publication fences in protect().
+    std::sync::atomic::fence(Ordering::SeqCst);
+    let mut hazards: Vec<usize> = Vec::with_capacity(64);
+    for entry in THREADS.iter() {
+        // Scan *all* entries (even inactive ones — a leaked guard keeps its
+        // slot published and must still block reclamation).
+        for s in &entry.data().inline {
+            let v = s.load(Ordering::Acquire);
+            if v != 0 {
+                hazards.push(v);
+            }
+        }
+        let mut chunk = entry.data().extra.load(Ordering::Acquire);
+        while !chunk.is_null() {
+            let c = unsafe { &*chunk };
+            for s in &c.slots {
+                let v = s.load(Ordering::Acquire);
+                if v != 0 {
+                    hazards.push(v);
+                }
+            }
+            chunk = c.next.load(Ordering::Acquire);
+        }
+    }
+    hazards.sort_unstable();
+    hazards.dedup();
+
+    // Partition: free unprotected nodes, keep protected ones.
+    let (chain, _) = retired.take_chain();
+    let mut cur = chain;
+    while !cur.is_null() {
+        // SAFETY: we own the detached chain.
+        unsafe {
+            let next = (*cur).next_in_chain();
+            let node_addr = (*cur).node_addr();
+            if hazards.binary_search(&node_addr).is_ok() {
+                retired.push_back(cur);
+            } else {
+                super::retire::reclaim_one(cur);
+            }
+            cur = next;
+        }
+    }
+}
+
+/// Guard state: the hazard slot this guard owns (lazily acquired, returned
+/// on guard drop).
+#[derive(Default)]
+pub struct HpGuardState {
+    slot: Option<&'static AtomicUsize>,
+}
+
+impl HpGuardState {
+    fn slot(&mut self) -> &'static AtomicUsize {
+        if let Some(s) = self.slot {
+            return s;
+        }
+        let s = HP_LOCAL.with(|l| l.borrow_mut().acquire_slot());
+        self.slot = Some(s);
+        s
+    }
+}
+
+// SAFETY: protect publishes the pointer in a hazard slot and re-validates
+// the source; scan() snapshots all slots after a SeqCst fence and never
+// frees a published node — Michael's classic argument. A node is retired
+// only after being unlinked, so post-scan publications can no longer
+// validate successfully against any source.
+unsafe impl Reclaimer for Hp {
+    const NAME: &'static str = "HPR";
+    type Header = HpHeader;
+    type GuardState = HpGuardState;
+    type Region = ();
+
+    fn enter_region() -> Self::Region {}
+
+    fn protect<T: Send + Sync + 'static>(
+        state: &mut Self::GuardState,
+        src: &ConcurrentPtr<T, Self>,
+    ) -> MarkedPtr<T, Self> {
+        let slot = state.slot();
+        loop {
+            let p = src.load(Ordering::Acquire);
+            if p.is_null() {
+                slot.store(0, Ordering::Release);
+                return p;
+            }
+            // Publish, fence, re-validate: the SeqCst fence pairs with the
+            // one in scan(), so either the scanner sees our hazard or we see
+            // the unlink (and retry).
+            slot.store(p.get() as usize, Ordering::Release);
+            std::sync::atomic::fence(Ordering::SeqCst);
+            if src.load(Ordering::Acquire) == p {
+                return p;
+            }
+        }
+    }
+
+    fn protect_if_equal<T: Send + Sync + 'static>(
+        state: &mut Self::GuardState,
+        src: &ConcurrentPtr<T, Self>,
+        expected: MarkedPtr<T, Self>,
+    ) -> bool {
+        if expected.is_null() {
+            return src.load(Ordering::Acquire) == expected;
+        }
+        let slot = state.slot();
+        slot.store(expected.get() as usize, Ordering::Release);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        if src.load(Ordering::Acquire) == expected {
+            true
+        } else {
+            slot.store(0, Ordering::Release);
+            false
+        }
+    }
+
+    fn release<T: Send + Sync + 'static>(
+        state: &mut Self::GuardState,
+        _ptr: MarkedPtr<T, Self>,
+    ) {
+        if let Some(slot) = state.slot {
+            slot.store(0, Ordering::Release);
+        }
+    }
+
+    fn drop_guard_state(state: &mut Self::GuardState) {
+        if let Some(slot) = state.slot.take() {
+            slot.store(0, Ordering::Release);
+            // Return the slot for reuse; during thread teardown just leave
+            // it unpublished (slot stays owned by the immortal entry).
+            let _ = HP_LOCAL.try_with(|l| l.borrow_mut().free_slots.push(slot));
+        }
+    }
+
+    unsafe fn retire<T: Send + Sync + 'static>(node: *mut Node<T, Self>) {
+        let r = prepare_retire::<T, Self>(node, 0);
+        let over_threshold = HP_LOCAL
+            .try_with(|l| {
+                let mut l = l.borrow_mut();
+                l.retired.push_back(r);
+                l.retired.len() >= HpLocal::threshold()
+            })
+            .unwrap_or_else(|_| {
+                // Thread teardown: orphan immediately.
+                ORPHANS.push_sublist(r);
+                false
+            });
+        if over_threshold {
+            Self::flush();
+        }
+    }
+
+    fn flush() {
+        // Detach the retire list before scanning: reclaim runs user drops,
+        // which may re-enter (see epoch_core's reentrancy discipline).
+        let mut mine = match HP_LOCAL.try_with(|l| std::mem::take(&mut l.borrow_mut().retired)) {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        scan_with(&mut mine);
+        let _ = HP_LOCAL.try_with(|l| {
+            let mut l = l.borrow_mut();
+            let nested = std::mem::replace(&mut l.retired, mine);
+            let (chain, _) = {
+                let mut n = nested;
+                n.take_chain()
+            };
+            let mut cur = chain;
+            while !cur.is_null() {
+                // SAFETY: we own the detached nested chain.
+                let next = unsafe { (*cur).next_in_chain() };
+                l.retired.push_back(cur);
+                cur = next;
+            }
+        });
+    }
+}
+
+/// Current scan threshold (diagnostics / ablation benches).
+pub fn current_threshold() -> usize {
+    HpLocal::threshold()
+}
+
+/// Total hazard slots across all threads (ΣKᵢ).
+pub fn total_slots() -> u64 {
+    TOTAL_SLOTS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::tests_common::*;
+
+    #[test]
+    fn basic_reclamation() {
+        exercise_basic_reclamation::<Hp>();
+    }
+
+    #[test]
+    fn guard_blocks_reclamation() {
+        exercise_guard_blocks_reclamation::<Hp>();
+    }
+
+    #[test]
+    fn concurrent_smoke() {
+        exercise_concurrent_smoke::<Hp>(4, 500);
+    }
+
+    #[test]
+    fn dynamic_slots_grow_on_demand() {
+        use crate::reclaim::{alloc_node, GuardPtr};
+        // Hold more guards than K_STATIC simultaneously: slots must grow.
+        let drops = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let nodes: Vec<_> =
+            (0..K_STATIC * 2).map(|i| alloc_node::<Payload, Hp>(Payload::new(i as u64, &drops))).collect();
+        let cells: Vec<ConcurrentPtr<Payload, Hp>> =
+            nodes.iter().map(|&n| ConcurrentPtr::new(MarkedPtr::new(n, 0))).collect();
+        let mut guards: Vec<GuardPtr<Payload, Hp>> = Vec::new();
+        for c in &cells {
+            let mut g = GuardPtr::new();
+            g.acquire(c);
+            assert!(!g.is_null());
+            guards.push(g);
+        }
+        assert!(total_slots() >= (K_STATIC * 2) as u64);
+        // All still guarded: retiring must not drop any.
+        for (c, &n) in cells.iter().zip(&nodes) {
+            c.store(MarkedPtr::null(), Ordering::Release);
+            unsafe { Hp::retire(n) };
+        }
+        Hp::flush();
+        assert_eq!(drops.load(Ordering::Relaxed), 0);
+        drop(guards);
+        Hp::flush();
+        assert_eq!(drops.load(Ordering::Relaxed), K_STATIC * 2);
+    }
+}

@@ -1,0 +1,116 @@
+//! Leaky baseline: never reclaims anything.
+//!
+//! Protection is trivially satisfied (nodes are immortal), making this the
+//! zero-overhead upper bound for per-operation cost and the scaffold for
+//! testing data-structure logic in isolation from reclamation. Excluded
+//! from the paper-figure scheme set (the paper has no such baseline), but
+//! available to benchmarks via `--schemes leaky,...`.
+
+use super::retire::{AsRetireHeader, RetireHeader};
+use super::{ConcurrentPtr, MarkedPtr, Node, Reclaimer};
+use std::sync::atomic::Ordering;
+
+/// The leaky (no-op) reclamation scheme.
+pub struct Leaky;
+
+/// Leaky node header: just the retire header slot (unused apart from the
+/// pool flag).
+#[derive(Default)]
+#[repr(C)]
+pub struct LeakyHeader {
+    retire: RetireHeader,
+}
+
+impl AsRetireHeader for LeakyHeader {
+    fn retire_header(&self) -> &RetireHeader {
+        &self.retire
+    }
+}
+
+// SAFETY: nodes are never reclaimed, so every protection contract holds
+// vacuously.
+unsafe impl Reclaimer for Leaky {
+    const NAME: &'static str = "Leaky";
+    type Header = LeakyHeader;
+    type GuardState = ();
+    type Region = ();
+
+    #[inline]
+    fn enter_region() -> Self::Region {}
+
+    #[inline]
+    fn protect<T: Send + Sync + 'static>(
+        _state: &mut Self::GuardState,
+        src: &ConcurrentPtr<T, Self>,
+    ) -> MarkedPtr<T, Self> {
+        // Acquire: the load synchronizes with the Release publication of the
+        // node so its payload is visible.
+        src.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    fn protect_if_equal<T: Send + Sync + 'static>(
+        _state: &mut Self::GuardState,
+        src: &ConcurrentPtr<T, Self>,
+        expected: MarkedPtr<T, Self>,
+    ) -> bool {
+        src.load(Ordering::Acquire) == expected
+    }
+
+    #[inline]
+    fn release<T: Send + Sync + 'static>(
+        _state: &mut Self::GuardState,
+        _ptr: MarkedPtr<T, Self>,
+    ) {
+    }
+
+    #[inline]
+    unsafe fn retire<T: Send + Sync + 'static>(_node: *mut Node<T, Self>) {
+        // Intentionally leaked. The allocation counters keep counting, so
+        // the efficiency benchmark honestly reports an ever-growing
+        // unreclaimed population for this baseline.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::{alloc_node, GuardPtr};
+
+    #[test]
+    fn guard_roundtrip() {
+        let node = alloc_node::<u64, Leaky>(42);
+        let c = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+        let mut g: GuardPtr<u64, Leaky> = GuardPtr::new();
+        let p = g.acquire(&c);
+        assert_eq!(p.get(), node);
+        assert_eq!(g.as_ref(), Some(&42));
+        g.reset();
+        assert!(g.is_null());
+        assert_eq!(g.as_ref(), None);
+        unsafe { crate::reclaim::free_node(node) };
+    }
+
+    #[test]
+    fn acquire_if_equal_checks_value() {
+        let node = alloc_node::<u64, Leaky>(1);
+        let c = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+        let mut g: GuardPtr<u64, Leaky> = GuardPtr::new();
+        assert!(g.acquire_if_equal(&c, MarkedPtr::new(node, 0)));
+        assert!(!g.acquire_if_equal(&c, MarkedPtr::null()));
+        assert!(g.is_null(), "failed acquire leaves the guard empty");
+        unsafe { crate::reclaim::free_node(node) };
+    }
+
+    #[test]
+    fn take_moves_ownership() {
+        let node = alloc_node::<u64, Leaky>(9);
+        let c = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+        let mut g: GuardPtr<u64, Leaky> = GuardPtr::new();
+        g.acquire(&c);
+        let h = g.take();
+        assert!(g.is_null());
+        assert_eq!(h.as_ref(), Some(&9));
+        unsafe { crate::reclaim::free_node(node) };
+    }
+}

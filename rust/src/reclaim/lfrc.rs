@@ -1,0 +1,285 @@
+//! LFRC — lock-free reference counting (Valois 1995), the paper's
+//! reclamation-efficiency "gold standard": a node is reclaimed the instant
+//! its last reference is dropped ("there is no delay", §4.4).
+//!
+//! As the paper stresses, LFRC "is not a general reclamation scheme, since
+//! the reclaimed nodes cannot be returned to the memory manager, but are
+//! stored in a global free-list": a stale reader may CAS-increment the
+//! refcount word of an already-recycled slot, which is only sound with
+//! **type-stable memory**. Hence [`Reclaimer::FORCE_POOL`]: LFRC node
+//! memory always comes from [`crate::alloc::pool`], whose slots are never
+//! unmapped and whose free-lists never touch the first slot word (where the
+//! refcount lives).
+//!
+//! ## Protocol
+//!
+//! The node's first word packs `{RETIRED:1 | count:63}`:
+//!
+//! * `protect`: read the source, CAS-increment the count (failing fast if
+//!   `RETIRED` is set), then *re-validate the source* — a successful
+//!   re-read proves the address still names the node we meant; a failed
+//!   one means we may have incremented a recycled slot, so we decrement
+//!   and retry. Transient "ghost" increments on an unrelated node are
+//!   benign: they bracket to ±0, and the erased destructor recorded at
+//!   allocation time keeps any freeing they trigger type-correct.
+//! * `retire`: `fetch_or(RETIRED)`; if the count was already zero, free.
+//! * `release`: `fetch_sub(1)`; whoever transitions the word to exactly
+//!   `RETIRED|0` frees — the single atomic word serializes retire/release
+//!   races so exactly one party frees.
+//!
+//! Freeing drops the payload but leaves the slot word at `RETIRED|0` while
+//! it sits in the pool free-list, so stale increments keep failing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::retire::{prepare_retire, reclaim_one, AsRetireHeader, RetireHeader};
+use super::{ConcurrentPtr, MarkedPtr, Node, Reclaimer};
+
+const RETIRED: u64 = 1 << 63;
+
+/// Lock-free reference counting (Valois).
+pub struct Lfrc;
+
+/// LFRC node header. `refs` **must** be the node's first word — the pool
+/// preserves word 0 across free/reuse (see [`crate::alloc::pool`]).
+#[repr(C)]
+pub struct LfrcHeader {
+    refs: AtomicU64,
+    retire: RetireHeader,
+}
+
+impl Default for LfrcHeader {
+    fn default() -> Self {
+        // Born RETIRED: the word only becomes live (0) via the atomic store
+        // in `on_alloc`, after the erased destructor is in place. This also
+        // means the non-atomic header initialization writes the same bit
+        // pattern a recycled slot already holds, keeping the (theoretical)
+        // init race on reused slots value-identical.
+        Self { refs: AtomicU64::new(RETIRED), retire: RetireHeader::default() }
+    }
+}
+
+impl AsRetireHeader for LfrcHeader {
+    fn retire_header(&self) -> &RetireHeader {
+        &self.retire
+    }
+}
+
+/// The refcount word of a (possibly recycled) node address.
+///
+/// # Safety
+/// `addr` must point into pool memory that once held an LFRC node — the
+/// pool's type-stability guarantees the first word is always a valid
+/// `AtomicU64` refcount.
+#[inline]
+unsafe fn refs_of<'a, T: Send + Sync + 'static>(node: *mut Node<T, Lfrc>) -> &'a AtomicU64 {
+    &(*(node as *mut LfrcHeader)).refs
+}
+
+/// Free a node whose refcount word just transitioned to `RETIRED|0`.
+///
+/// # Safety
+/// Exactly one caller may observe that transition.
+unsafe fn destroy<T: Send + Sync + 'static>(node: *mut Node<T, Lfrc>) {
+    // Use the erased destructor recorded at allocation: the node reachable
+    // through this address may not be of the caller's `T` (ghost release on
+    // a recycled slot) — the recorded fn is always type-correct.
+    reclaim_one((*node).header().retire_header() as *const RetireHeader as *mut RetireHeader);
+}
+
+/// Decrement; free on the `RETIRED|0` transition.
+///
+/// # Safety
+/// The caller must hold one counted reference to the slot at `node`.
+unsafe fn release_ref<T: Send + Sync + 'static>(node: *mut Node<T, Lfrc>) {
+    // Release: all our reads of the payload happen-before the free.
+    let old = refs_of(node).fetch_sub(1, Ordering::Release);
+    debug_assert!(old & !RETIRED != 0, "refcount underflow");
+    if old == RETIRED | 1 {
+        // Acquire pairs with other releasers' decrements.
+        std::sync::atomic::fence(Ordering::Acquire);
+        destroy(node);
+    }
+}
+
+/// Try to take a counted reference. Fails if the slot is RETIRED.
+///
+/// # Safety
+/// `node` must be a pool address that held an LFRC node at some point.
+unsafe fn try_acquire_ref<T: Send + Sync + 'static>(node: *mut Node<T, Lfrc>) -> bool {
+    let refs = refs_of(node);
+    let mut cur = refs.load(Ordering::Relaxed);
+    loop {
+        if cur & RETIRED != 0 {
+            return false;
+        }
+        // Acquire on success: the payload writes published before the node
+        // became reachable are visible to us.
+        match refs.compare_exchange_weak(cur, cur + 1, Ordering::Acquire, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+// SAFETY: a node is freed only when its count is zero *and* it is retired;
+// protect holds a counted reference validated against the source, so no
+// guard can outlive its node (module docs give the full argument including
+// slot reuse).
+unsafe impl Reclaimer for Lfrc {
+    const NAME: &'static str = "LFRC";
+    const FORCE_POOL: bool = true;
+    type Header = LfrcHeader;
+    type GuardState = ();
+    type Region = ();
+
+    fn enter_region() -> Self::Region {}
+
+    unsafe fn on_alloc<T: Send + Sync + 'static>(node: *mut Node<T, Self>) {
+        // Record the type-erased destructor *before* arming the refcount:
+        // once refs leaves RETIRED, any thread may end up freeing the node.
+        prepare_retire::<T, Self>(node, 0);
+        refs_of(node).store(0, Ordering::Release);
+    }
+
+    fn protect<T: Send + Sync + 'static>(
+        _state: &mut Self::GuardState,
+        src: &ConcurrentPtr<T, Self>,
+    ) -> MarkedPtr<T, Self> {
+        loop {
+            let p = src.load(Ordering::Acquire);
+            if p.is_null() {
+                return p;
+            }
+            // SAFETY: p names pool memory (LFRC nodes are pool-forced);
+            // even if the node was recycled, the word is a valid refcount.
+            unsafe {
+                if !try_acquire_ref(p.get()) {
+                    // Slot is RETIRED: the source can no longer equal p
+                    // (nodes are unlinked before retire) — re-read will see
+                    // a new value.
+                    std::hint::spin_loop();
+                    continue;
+                }
+                // Re-validate: src still naming p proves p is the node we
+                // meant (and our count blocks its reclamation).
+                if src.load(Ordering::Acquire) == p {
+                    return p;
+                }
+                release_ref(p.get());
+            }
+        }
+    }
+
+    fn protect_if_equal<T: Send + Sync + 'static>(
+        _state: &mut Self::GuardState,
+        src: &ConcurrentPtr<T, Self>,
+        expected: MarkedPtr<T, Self>,
+    ) -> bool {
+        if expected.is_null() {
+            return src.load(Ordering::Acquire) == expected;
+        }
+        // SAFETY: as in protect.
+        unsafe {
+            if !try_acquire_ref(expected.get()) {
+                return false;
+            }
+            if src.load(Ordering::Acquire) == expected {
+                true
+            } else {
+                release_ref(expected.get());
+                false
+            }
+        }
+    }
+
+    fn release<T: Send + Sync + 'static>(
+        _state: &mut Self::GuardState,
+        ptr: MarkedPtr<T, Self>,
+    ) {
+        // SAFETY: the guard holds a counted reference from protect.
+        unsafe { release_ref(ptr.get()) };
+    }
+
+    unsafe fn retire<T: Send + Sync + 'static>(node: *mut Node<T, Self>) {
+        // AcqRel: the unlink happens-before the (possible) free, and we see
+        // all prior increments.
+        let old = refs_of(node).fetch_or(RETIRED, Ordering::AcqRel);
+        debug_assert_eq!(old & RETIRED, 0, "double retire");
+        if old == 0 {
+            destroy(node);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::tests_common::*;
+    use crate::reclaim::{alloc_node, GuardPtr};
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic_reclamation_is_immediate() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let node = alloc_node::<Payload, Lfrc>(Payload::new(1, &drops));
+        // No guards: retire frees immediately — the "no delay" property.
+        unsafe { Lfrc::retire(node) };
+        assert_eq!(drops.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn basic_reclamation() {
+        exercise_basic_reclamation::<Lfrc>();
+    }
+
+    #[test]
+    fn guard_blocks_reclamation() {
+        exercise_guard_blocks_reclamation::<Lfrc>();
+    }
+
+    #[test]
+    fn concurrent_smoke() {
+        exercise_concurrent_smoke::<Lfrc>(4, 500);
+    }
+
+    #[test]
+    fn acquire_fails_on_retired_slot() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let node = alloc_node::<Payload, Lfrc>(Payload::new(2, &drops));
+        let cell: ConcurrentPtr<Payload, Lfrc> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+        let stale = cell.load(Ordering::Acquire);
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        unsafe { Lfrc::retire(node) };
+        assert_eq!(drops.load(Ordering::Relaxed), 1);
+        // A stale acquire_if_equal against the retired slot must fail
+        // cleanly (the slot word is RETIRED in the pool free-list).
+        let mut g: GuardPtr<Payload, Lfrc> = GuardPtr::new();
+        assert!(!g.acquire_if_equal(&cell, stale));
+        assert!(g.is_null());
+    }
+
+    #[test]
+    fn many_guards_one_node() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let node = alloc_node::<Payload, Lfrc>(Payload::new(3, &drops));
+        let cell: ConcurrentPtr<Payload, Lfrc> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+        let mut guards: Vec<GuardPtr<Payload, Lfrc>> = (0..32)
+            .map(|_| {
+                let mut g = GuardPtr::new();
+                g.acquire(&cell);
+                g
+            })
+            .collect();
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        unsafe { Lfrc::retire(node) };
+        // Drop guards one by one; only the very last drop frees.
+        while guards.len() > 1 {
+            drop(guards.pop());
+            assert_eq!(drops.load(Ordering::Relaxed), 0);
+        }
+        drop(guards.pop());
+        assert_eq!(drops.load(Ordering::Relaxed), 1);
+    }
+}

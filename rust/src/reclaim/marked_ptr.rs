@@ -1,0 +1,163 @@
+//! `marked_ptr` (paper §2): a pointer to a reclaimable [`Node`] that borrows
+//! its low-order bits for marks — the "pointer mark tricks" lock-free
+//! algorithms rely on (Harris-style delete marks etc.).
+//!
+//! Two bits are available (nodes are ≥ 8-byte aligned); the data structures
+//! in this crate use bit 0 as the Harris delete mark.
+
+use super::{Node, Reclaimer};
+use std::fmt;
+use std::marker::PhantomData;
+
+/// Number of borrowable low-order bits.
+pub const MARK_BITS: u32 = 2;
+const MARK_MASK: usize = (1 << MARK_BITS) - 1;
+
+/// A (possibly marked) pointer to a `Node<T, R>`. Plain value type — copies
+/// freely, conveys no protection by itself (that is [`GuardPtr`]'s job).
+///
+/// [`GuardPtr`]: super::GuardPtr
+pub struct MarkedPtr<T, R: Reclaimer> {
+    raw: usize,
+    _phantom: PhantomData<*mut Node<T, R>>,
+}
+
+impl<T, R: Reclaimer> MarkedPtr<T, R> {
+    /// The null pointer (mark 0).
+    #[inline]
+    pub const fn null() -> Self {
+        Self { raw: 0, _phantom: PhantomData }
+    }
+
+    /// Construct from a node pointer and mark bits.
+    #[inline]
+    pub fn new(ptr: *mut Node<T, R>, mark: usize) -> Self {
+        debug_assert_eq!(ptr as usize & MARK_MASK, 0, "node pointer under-aligned");
+        debug_assert!(mark <= MARK_MASK);
+        Self { raw: ptr as usize | mark, _phantom: PhantomData }
+    }
+
+    /// Reconstruct from the raw word of a [`ConcurrentPtr`].
+    ///
+    /// [`ConcurrentPtr`]: super::ConcurrentPtr
+    #[inline]
+    pub(crate) const fn from_raw(raw: usize) -> Self {
+        Self { raw, _phantom: PhantomData }
+    }
+
+    #[inline]
+    pub(crate) const fn into_raw(self) -> usize {
+        self.raw
+    }
+
+    /// The raw pointer with mark bits stripped (paper: `get`).
+    #[inline]
+    pub fn get(self) -> *mut Node<T, R> {
+        (self.raw & !MARK_MASK) as *mut Node<T, R>
+    }
+
+    /// The mark bits (paper: `mark`).
+    #[inline]
+    pub fn mark(self) -> usize {
+        self.raw & MARK_MASK
+    }
+
+    /// Same pointer with different mark bits.
+    #[inline]
+    pub fn with_mark(self, mark: usize) -> Self {
+        debug_assert!(mark <= MARK_MASK);
+        Self::from_raw((self.raw & !MARK_MASK) | mark)
+    }
+
+    /// True when the stripped pointer is null (whatever the mark).
+    #[inline]
+    pub fn is_null(self) -> bool {
+        self.get().is_null()
+    }
+
+    /// Shared reference to the node.
+    ///
+    /// # Safety
+    /// The node must be live and protected (by a guard or by exclusive
+    /// access) for the lifetime of the reference, and non-null.
+    #[inline]
+    pub unsafe fn as_node<'a>(self) -> &'a Node<T, R> {
+        debug_assert!(!self.is_null());
+        &*self.get()
+    }
+
+    /// Shared reference to the node's payload.
+    ///
+    /// # Safety
+    /// Same contract as [`Self::as_node`].
+    #[inline]
+    pub unsafe fn deref_data<'a>(self) -> &'a T {
+        self.as_node().data()
+    }
+}
+
+// Manual impls: `derive` would add unwanted `T: Copy`-style bounds.
+impl<T, R: Reclaimer> Copy for MarkedPtr<T, R> {}
+impl<T, R: Reclaimer> Clone for MarkedPtr<T, R> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T, R: Reclaimer> PartialEq for MarkedPtr<T, R> {
+    fn eq(&self, other: &Self) -> bool {
+        self.raw == other.raw
+    }
+}
+impl<T, R: Reclaimer> Eq for MarkedPtr<T, R> {}
+impl<T, R: Reclaimer> Default for MarkedPtr<T, R> {
+    fn default() -> Self {
+        Self::null()
+    }
+}
+impl<T, R: Reclaimer> fmt::Debug for MarkedPtr<T, R> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MarkedPtr({:p}|{})", self.get(), self.mark())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::leaky::Leaky;
+
+    type P = MarkedPtr<u64, Leaky>;
+
+    #[test]
+    fn null_roundtrip() {
+        let p = P::null();
+        assert!(p.is_null());
+        assert_eq!(p.mark(), 0);
+        assert_eq!(p, P::default());
+    }
+
+    #[test]
+    fn mark_roundtrip() {
+        let node = crate::reclaim::alloc_node::<u64, Leaky>(7);
+        let p = P::new(node, 1);
+        assert_eq!(p.get(), node);
+        assert_eq!(p.mark(), 1);
+        assert_eq!(p.with_mark(0).mark(), 0);
+        assert_eq!(p.with_mark(3).mark(), 3);
+        assert_eq!(p.with_mark(3).get(), node);
+        assert!(!p.is_null());
+        unsafe {
+            assert_eq!(*p.deref_data(), 7);
+            crate::reclaim::free_node(node);
+        }
+    }
+
+    #[test]
+    fn equality_includes_mark() {
+        let node = crate::reclaim::alloc_node::<u64, Leaky>(1);
+        let a = P::new(node, 0);
+        let b = P::new(node, 1);
+        assert_ne!(a, b);
+        assert_eq!(a, b.with_mark(0));
+        unsafe { crate::reclaim::free_node(node) };
+    }
+}

@@ -1,0 +1,404 @@
+//! Safe memory reclamation (SMR) for lock-free data structures.
+//!
+//! This module is the Rust rendering of the C++ interface the paper builds
+//! on (Robison's N3712 proposal, paper §2): [`MarkedPtr`] (`marked_ptr`),
+//! [`ConcurrentPtr`] (`concurrent_ptr`), [`GuardPtr`] (`guard_ptr`) and
+//! [`Region`] (`region_guard`), generic over a [`Reclaimer`].
+//!
+//! Seven schemes implement [`Reclaimer`]:
+//!
+//! | scheme | module | origin |
+//! |--------|--------|--------|
+//! | Stamp-it (the paper's contribution) | [`stamp`] | Pöter & Träff 2018 |
+//! | Lock-free reference counting (LFRC) | [`lfrc`] | Valois 1995 |
+//! | Hazard pointers (HPR) | [`hp`] | Michael 2004 |
+//! | Epoch-based (ER) | [`ebr`] | Fraser 2004 |
+//! | New epoch-based (NER) | [`nebr`] | Hart et al. 2007 |
+//! | Quiescent-state-based (QSR) | [`qsr`] | McKenney & Slingwine 1998 |
+//! | DEBRA | [`debra`] | Brown 2015 |
+//! | Leaky baseline (never reclaims) | [`leaky`] | — |
+//!
+//! The memory-model discipline follows the paper: Rust shares the C++11
+//! memory model, and each atomic operation below carries the weakest
+//! ordering we can argue correct (documented at the call sites).
+
+pub mod concurrent_ptr;
+pub mod debra;
+pub mod ebr;
+pub mod epoch_core;
+pub mod hp;
+pub mod leaky;
+pub mod lfrc;
+pub mod marked_ptr;
+pub mod nebr;
+pub mod qsr;
+pub mod registry;
+pub mod retire;
+pub mod stamp;
+#[doc(hidden)]
+pub mod tests_common;
+
+pub use concurrent_ptr::ConcurrentPtr;
+pub use marked_ptr::MarkedPtr;
+pub use retire::AsRetireHeader;
+
+use std::alloc::Layout;
+use std::mem::ManuallyDrop;
+
+/// Shorthand for a reclaimer's node header type.
+pub type HeaderOf<R> = <R as Reclaimer>::Header;
+
+/// A reclaimable node: scheme header + user payload.
+///
+/// `repr(C)` with the header first: LFRC relies on its refcount word being
+/// the node's first word (see [`crate::alloc::pool`]), and the retire
+/// machinery recovers node pointers stored at retire time.
+#[repr(C)]
+pub struct Node<T, R: Reclaimer> {
+    header: R::Header,
+    data: ManuallyDrop<T>,
+}
+
+impl<T, R: Reclaimer> Node<T, R> {
+    /// The scheme header.
+    #[inline]
+    pub fn header(&self) -> &R::Header {
+        &self.header
+    }
+
+    /// The user payload.
+    #[inline]
+    pub fn data(&self) -> &T {
+        &self.data
+    }
+}
+
+/// Allocate a node (policy-routed, counted). The node starts unpublished —
+/// the caller links it into a structure via [`ConcurrentPtr`] CAS.
+pub fn alloc_node<T: Send + Sync + 'static, R: Reclaimer>(data: T) -> *mut Node<T, R> {
+    let layout = Layout::new::<Node<T, R>>();
+    let pooled = crate::alloc::currently_pooled(R::FORCE_POOL);
+    let raw = crate::alloc::alloc_raw(layout, R::FORCE_POOL) as *mut Node<T, R>;
+    // SAFETY: fresh allocation of the right layout.
+    unsafe {
+        raw.write(Node { header: R::Header::default(), data: ManuallyDrop::new(data) });
+        (*raw).header.retire_header().set_from_pool(pooled);
+        R::on_alloc(raw);
+    }
+    raw
+}
+
+/// Drop a node's payload and free its memory.
+///
+/// # Safety
+/// `node` must come from [`alloc_node`], be unreachable by all other
+/// threads, and not be used afterwards. Must be called at most once.
+pub unsafe fn free_node<T: Send + Sync + 'static, R: Reclaimer>(node: *mut Node<T, R>) {
+    let pooled = (*node).header.retire_header().is_from_pool();
+    free_node_parts::<T, R>(node, pooled, true)
+}
+
+/// Free a node with explicit control over payload dropping (LFRC drops the
+/// payload when the refcount hits zero but recycles the allocation).
+///
+/// # Safety
+/// Same as [`free_node`]; if `drop_payload` is false the payload must have
+/// been dropped already.
+pub unsafe fn free_node_parts<T: Send + Sync + 'static, R: Reclaimer>(
+    node: *mut Node<T, R>,
+    pooled: bool,
+    drop_payload: bool,
+) {
+    if drop_payload {
+        ManuallyDrop::drop(&mut (*node).data);
+    }
+    std::ptr::drop_in_place(&mut (*node).header);
+    crate::alloc::free_raw(node as *mut u8, Layout::new::<Node<T, R>>(), pooled);
+}
+
+/// A safe-memory-reclamation scheme.
+///
+/// # Safety
+/// Implementations must guarantee: a node passed to [`Reclaimer::retire`]
+/// is dropped/freed only after every [`GuardPtr`] that protected it *before*
+/// the retire has been reset — the paper's Proposition 1 ("a node is
+/// reclaimed only when it is referenced by no thread"). Protection
+/// established by `protect`/`protect_if_equal` must hold until the matching
+/// `release`.
+pub unsafe trait Reclaimer: Sized + Send + Sync + 'static {
+    /// Scheme name as used in benchmark output (paper plot legends).
+    const NAME: &'static str;
+
+    /// LFRC sets this: node memory must be type-stable (pool-backed).
+    const FORCE_POOL: bool = false;
+
+    /// Per-node header; must expose the embedded [`retire::RetireHeader`].
+    type Header: AsRetireHeader;
+
+    /// Per-guard scheme state (hazard slot, region token, ...).
+    type GuardState: Default;
+
+    /// RAII critical-region token (`region_guard` of §2). For schemes whose
+    /// regions are per-guard (ER, DEBRA, HPR, LFRC) this is a no-op type.
+    type Region;
+
+    /// Enter a critical region (reentrant; guards nest inside).
+    fn enter_region() -> Self::Region;
+
+    /// `guard_ptr::acquire`: snapshot `src` and protect the target until
+    /// `release`. Returns the protected (possibly null/marked) value.
+    fn protect<T: Send + Sync + 'static>(
+        state: &mut Self::GuardState,
+        src: &ConcurrentPtr<T, Self>,
+    ) -> MarkedPtr<T, Self>;
+
+    /// `guard_ptr::acquire_if_equal`: protect only if `src` still holds
+    /// `expected`; never loops unboundedly (wait-free for HPR — paper §2).
+    /// Returns true on success (protection established or expected null).
+    fn protect_if_equal<T: Send + Sync + 'static>(
+        state: &mut Self::GuardState,
+        src: &ConcurrentPtr<T, Self>,
+        expected: MarkedPtr<T, Self>,
+    ) -> bool;
+
+    /// Drop the protection for `ptr` (guard reset). `ptr` is the value the
+    /// matching `protect` returned (non-null).
+    fn release<T: Send + Sync + 'static>(state: &mut Self::GuardState, ptr: MarkedPtr<T, Self>);
+
+    /// Return guard resources (hazard slot, region nesting) on guard drop.
+    fn drop_guard_state(_state: &mut Self::GuardState) {}
+
+    /// Scheme hook running right after a node is allocated and initialized
+    /// (still private to the allocating thread). LFRC uses it to prepare the
+    /// type-erased destructor and atomically arm its refcount word.
+    ///
+    /// # Safety
+    /// `node` is a fresh, fully initialized, unpublished node.
+    unsafe fn on_alloc<T: Send + Sync + 'static>(_node: *mut Node<T, Self>) {}
+
+    /// Retire a node: reclaim it once no thread can hold a reference.
+    ///
+    /// # Safety
+    /// The node must be unlinked (unreachable for new references), retired
+    /// exactly once, and allocated by [`alloc_node`] for this scheme.
+    unsafe fn retire<T: Send + Sync + 'static>(node: *mut Node<T, Self>);
+
+    /// Best-effort: reclaim everything currently reclaimable (bench/test
+    /// hook; e.g. forces an epoch advance attempt or HP scan).
+    fn flush() {}
+}
+
+/// `guard_ptr` (paper §2): shared ownership of one node. While a non-null
+/// `GuardPtr` holds a node, the node will not be reclaimed.
+pub struct GuardPtr<T: Send + Sync + 'static, R: Reclaimer> {
+    ptr: MarkedPtr<T, R>,
+    state: R::GuardState,
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> Default for GuardPtr<T, R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
+    /// An empty guard.
+    pub fn new() -> Self {
+        Self { ptr: MarkedPtr::null(), state: R::GuardState::default() }
+    }
+
+    /// Atomically snapshot `src` and protect the target (paper: `acquire`).
+    /// Returns the protected value (also kept in the guard).
+    pub fn acquire(&mut self, src: &ConcurrentPtr<T, R>) -> MarkedPtr<T, R> {
+        self.reset();
+        self.ptr = R::protect(&mut self.state, src);
+        self.ptr
+    }
+
+    /// Protect only if `src` still equals `expected`; returns whether the
+    /// snapshot succeeded (paper: `acquire_if_equal`).
+    pub fn acquire_if_equal(&mut self, src: &ConcurrentPtr<T, R>, expected: MarkedPtr<T, R>) -> bool {
+        self.reset();
+        if R::protect_if_equal(&mut self.state, src, expected) {
+            self.ptr = expected;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The guarded value (null if empty). Mark bits are preserved from the
+    /// acquire-time snapshot.
+    #[inline]
+    pub fn get(&self) -> MarkedPtr<T, R> {
+        self.ptr
+    }
+
+    /// Is the guard empty?
+    #[inline]
+    pub fn is_null(&self) -> bool {
+        self.ptr.is_null()
+    }
+
+    /// Borrow the protected payload.
+    #[inline]
+    pub fn as_ref(&self) -> Option<&T> {
+        // SAFETY: the guard protects the node from reclamation, and a
+        // non-null guarded pointer always came from a successful protect.
+        (!self.ptr.is_null()).then(|| unsafe { self.ptr.deref_data() })
+    }
+
+    /// Release ownership; the guard becomes empty (paper: `reset`).
+    pub fn reset(&mut self) {
+        if !self.ptr.is_null() {
+            R::release(&mut self.state, self.ptr);
+            self.ptr = MarkedPtr::null();
+        }
+    }
+
+    /// Move the guarded pointer out of `self` into a fresh guard
+    /// (`save = std::move(cur)` in the paper's Listing 1).
+    pub fn take(&mut self) -> GuardPtr<T, R> {
+        std::mem::take(self)
+    }
+
+    /// Mark the guarded node for reclamation once safe, and reset the guard
+    /// (paper: `reclaim`).
+    ///
+    /// # Safety
+    /// The node must be unlinked from its data structure: no new references
+    /// can be created from any `ConcurrentPtr`, and `retire` is called at
+    /// most once for the node across all threads.
+    pub unsafe fn reclaim(&mut self) {
+        debug_assert!(!self.ptr.is_null());
+        let node = self.ptr.get();
+        self.reset();
+        R::retire(node);
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> Drop for GuardPtr<T, R> {
+    fn drop(&mut self) {
+        self.reset();
+        R::drop_guard_state(&mut self.state);
+    }
+}
+
+/// RAII `region_guard` (paper §2): amortizes critical-region entry across
+/// many guard acquisitions for region-based schemes (NER, QSR, Stamp-it).
+pub struct Region<R: Reclaimer> {
+    _token: R::Region,
+}
+
+impl<R: Reclaimer> Region<R> {
+    pub fn enter() -> Self {
+        Self { _token: R::enter_region() }
+    }
+}
+
+/// Identifiers for the implemented schemes (benchmark configuration).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeId {
+    Leaky,
+    Lfrc,
+    Hp,
+    Ebr,
+    Nebr,
+    Qsr,
+    Debra,
+    Stamp,
+}
+
+impl SchemeId {
+    /// All schemes the paper compares (Figures 3–19), in legend order.
+    pub const PAPER_SET: [SchemeId; 7] = [
+        SchemeId::Lfrc,
+        SchemeId::Hp,
+        SchemeId::Ebr,
+        SchemeId::Nebr,
+        SchemeId::Qsr,
+        SchemeId::Debra,
+        SchemeId::Stamp,
+    ];
+
+    pub fn parse(s: &str) -> Option<SchemeId> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "leaky" | "none" => SchemeId::Leaky,
+            "lfrc" => SchemeId::Lfrc,
+            "hp" | "hpr" => SchemeId::Hp,
+            "ebr" | "er" | "epoch" => SchemeId::Ebr,
+            "nebr" | "ner" => SchemeId::Nebr,
+            "qsr" | "qsbr" => SchemeId::Qsr,
+            "debra" => SchemeId::Debra,
+            "stamp" | "stampit" | "stamp-it" => SchemeId::Stamp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchemeId::Leaky => "Leaky",
+            SchemeId::Lfrc => "LFRC",
+            SchemeId::Hp => "HPR",
+            SchemeId::Ebr => "ER",
+            SchemeId::Nebr => "NER",
+            SchemeId::Qsr => "QSR",
+            SchemeId::Debra => "DEBRA",
+            SchemeId::Stamp => "Stamp-it",
+        }
+    }
+
+    /// Parse a comma-separated scheme list; `all`/`paper` expands to the
+    /// paper's comparison set.
+    pub fn parse_list(s: &str) -> Option<Vec<SchemeId>> {
+        if s == "all" || s == "paper" {
+            return Some(Self::PAPER_SET.to_vec());
+        }
+        s.split(',').map(|p| Self::parse(p.trim())).collect()
+    }
+}
+
+/// Monomorphize a generic function over a runtime [`SchemeId`]:
+/// `dispatch_scheme!(id, run_bench, arg1, arg2)` calls
+/// `run_bench::<SchemeType>(arg1, arg2)`.
+#[macro_export]
+macro_rules! dispatch_scheme {
+    ($id:expr, $f:ident $(, $args:expr)* $(,)?) => {{
+        use $crate::reclaim::SchemeId as __S;
+        match $id {
+            __S::Leaky => $f::<$crate::reclaim::leaky::Leaky>($($args),*),
+            __S::Lfrc => $f::<$crate::reclaim::lfrc::Lfrc>($($args),*),
+            __S::Hp => $f::<$crate::reclaim::hp::Hp>($($args),*),
+            __S::Ebr => $f::<$crate::reclaim::ebr::Ebr>($($args),*),
+            __S::Nebr => $f::<$crate::reclaim::nebr::Nebr>($($args),*),
+            __S::Qsr => $f::<$crate::reclaim::qsr::Qsr>($($args),*),
+            __S::Debra => $f::<$crate::reclaim::debra::Debra>($($args),*),
+            __S::Stamp => $f::<$crate::reclaim::stamp::StampIt>($($args),*),
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_id_parsing() {
+        assert_eq!(SchemeId::parse("stamp-it"), Some(SchemeId::Stamp));
+        assert_eq!(SchemeId::parse("HP"), Some(SchemeId::Hp));
+        assert_eq!(SchemeId::parse("bogus"), None);
+        assert_eq!(SchemeId::parse_list("all").unwrap().len(), 7);
+        assert_eq!(
+            SchemeId::parse_list("ebr, stamp").unwrap(),
+            vec![SchemeId::Ebr, SchemeId::Stamp]
+        );
+        assert!(SchemeId::parse_list("ebr,nope").is_none());
+    }
+
+    #[test]
+    fn scheme_names_match_paper_legends() {
+        assert_eq!(SchemeId::Stamp.name(), "Stamp-it");
+        assert_eq!(SchemeId::Hp.name(), "HPR");
+        assert_eq!(SchemeId::Ebr.name(), "ER");
+    }
+}

@@ -1,0 +1,53 @@
+//! NER — "new epoch-based reclamation" (Hart et al. 2007): identical epoch
+//! protocol to ER, but critical regions are *application-scoped* — the
+//! benchmark wraps 100 operations in one `region_guard` (paper §4.2), so
+//! the entry/exit cost and the epoch bookkeeping are amortized across the
+//! whole region instead of being paid per operation.
+//!
+//! In this crate the scheme mechanics are shared with [`super::ebr`]; the
+//! semantic difference materializes through a separate epoch domain and the
+//! benchmark drivers entering [`crate::reclaim::Region`]s.
+
+use super::epoch_core::{epoch_reclaimer_impl, EpochConfig, EpochDomain};
+
+/// New epoch-based reclamation (Hart et al.).
+pub struct Nebr;
+
+static DOMAIN: EpochDomain = EpochDomain::new(EpochConfig {
+    advance_every: 100, // paper §4.2
+    debra_check_every: None,
+    quiescent_at_exit: false,
+});
+
+/// The scheme's epoch domain (benchmark diagnostics).
+pub fn domain() -> &'static EpochDomain {
+    &DOMAIN
+}
+
+epoch_reclaimer_impl!(Nebr, "NER", DOMAIN, NEBR_LOCAL, NebrRegion);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::tests_common::*;
+
+    #[test]
+    fn nodes_reclaimed_after_epoch_advances() {
+        exercise_basic_reclamation::<Nebr>();
+    }
+
+    #[test]
+    fn guard_blocks_reclamation() {
+        exercise_guard_blocks_reclamation::<Nebr>();
+    }
+
+    #[test]
+    fn region_guard_amortizes_and_protects() {
+        exercise_region_guard::<Nebr>();
+    }
+
+    #[test]
+    fn concurrent_smoke() {
+        exercise_concurrent_smoke::<Nebr>(4, 500);
+    }
+}

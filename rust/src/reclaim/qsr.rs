@@ -1,0 +1,59 @@
+//! QSR — quiescent-state-based reclamation (McKenney & Slingwine 1998,
+//! RCU-style), as set up in the paper (§4.2): the thread "executes a fuzzy
+//! barrier when it exits the critical region" — i.e. region exit is the
+//! quiescent state at which the thread announces the current epoch.
+//!
+//! Characteristics reproduced from the paper:
+//!
+//! * region entry is nearly free (no announcement, no fence) — QSR has the
+//!   cheapest guards of all schemes;
+//! * a registered thread that stops passing quiescent states (idle, long
+//!   region, or busy elsewhere) blocks reclamation globally — the reason
+//!   QSR "basically fails completely to reliably reclaim nodes" in the
+//!   update-heavy HashMap benchmark (paper App. A.2).
+
+use super::epoch_core::{epoch_reclaimer_impl, EpochConfig, EpochDomain};
+
+/// Quiescent-state-based reclamation.
+pub struct Qsr;
+
+static DOMAIN: EpochDomain = EpochDomain::new(EpochConfig {
+    // With quiescent_at_exit, `advance_every` counts quiescent passes
+    // between advance attempts; the fuzzy barrier itself is every exit.
+    advance_every: 1,
+    debra_check_every: None,
+    quiescent_at_exit: true,
+});
+
+/// The scheme's epoch domain (benchmark diagnostics).
+pub fn domain() -> &'static EpochDomain {
+    &DOMAIN
+}
+
+epoch_reclaimer_impl!(Qsr, "QSR", DOMAIN, QSR_LOCAL, QsrRegion);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::tests_common::*;
+
+    #[test]
+    fn nodes_reclaimed_after_quiescent_states() {
+        exercise_basic_reclamation::<Qsr>();
+    }
+
+    #[test]
+    fn guard_blocks_reclamation() {
+        exercise_guard_blocks_reclamation::<Qsr>();
+    }
+
+    #[test]
+    fn region_guard_amortizes_and_protects() {
+        exercise_region_guard::<Qsr>();
+    }
+
+    #[test]
+    fn concurrent_smoke() {
+        exercise_concurrent_smoke::<Qsr>(4, 500);
+    }
+}

@@ -1,0 +1,199 @@
+//! Per-scheme thread registries.
+//!
+//! Every scheme keeps a global, lock-free list of per-thread entries
+//! (hazard-pointer records, epoch records, ...). Entries are never freed —
+//! they are marked inactive on thread exit and recycled by later threads, so
+//! the list length is bounded by the *peak* number of concurrent threads
+//! (the paper's schemes reuse their `thread_control_block`s the same way,
+//! and the implementation "works with arbitrary numbers of threads that can
+//! be started and stopped arbitrarily").
+//!
+//! Iteration is wait-free and never observes dangling entries (entries are
+//! immortal); schemes must tolerate entries flipping between active and
+//! inactive concurrently with a scan.
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, Ordering};
+
+/// One immortal per-thread entry carrying scheme state `E`.
+pub struct ThreadEntry<E> {
+    next: *const ThreadEntry<E>,
+    active: AtomicBool,
+    data: E,
+}
+
+impl<E> ThreadEntry<E> {
+    /// The scheme state. Shared: the owning thread mutates it through
+    /// atomics/cells inside `E`; scanners only read.
+    pub fn data(&self) -> &E {
+        &self.data
+    }
+
+    /// Whether a thread currently owns this entry.
+    pub fn is_active(&self) -> bool {
+        self.active.load(Ordering::Acquire)
+    }
+}
+
+/// Global lock-free list of [`ThreadEntry`]s with inactive-entry reuse.
+pub struct ThreadList<E: Send + Sync + 'static> {
+    head: AtomicPtr<ThreadEntry<E>>,
+}
+
+impl<E: Send + Sync + 'static> ThreadList<E> {
+    pub const fn new() -> Self {
+        Self { head: AtomicPtr::new(std::ptr::null_mut()) }
+    }
+
+    /// Acquire an entry for the calling thread: recycle an inactive one or
+    /// allocate and publish a new one. `fresh` builds the state for a brand
+    /// new entry; `recycle` resets the state of a reused entry.
+    pub fn acquire(
+        &self,
+        fresh: impl FnOnce() -> E,
+        recycle: impl FnOnce(&E),
+    ) -> &'static ThreadEntry<E> {
+        // Try to recycle an inactive entry.
+        let mut cur = self.head.load(Ordering::Acquire);
+        while !cur.is_null() {
+            // SAFETY: entries are immortal.
+            let entry = unsafe { &*cur };
+            if !entry.is_active()
+                && entry
+                    .active
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+            {
+                recycle(&entry.data);
+                // SAFETY: immortal entry — 'static is accurate.
+                return unsafe { &*(entry as *const ThreadEntry<E>) };
+            }
+            cur = entry.next as *mut ThreadEntry<E>;
+        }
+        // Allocate a new entry and push it (entries are immortal; the leak
+        // is intentional and bounded by the peak thread count).
+        let entry = Box::leak(Box::new(ThreadEntry {
+            next: std::ptr::null(),
+            active: AtomicBool::new(true),
+            data: fresh(),
+        }));
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            entry.next = head;
+            match self.head.compare_exchange_weak(
+                head,
+                entry as *mut _,
+                Ordering::Release,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(h) => head = h,
+            }
+        }
+        entry
+    }
+
+    /// Mark an entry reusable (thread exit). The caller must have flushed
+    /// any scheme state that would confuse the next owner.
+    pub fn release(&self, entry: &ThreadEntry<E>) {
+        entry.active.store(false, Ordering::Release);
+    }
+
+    /// Iterate over all entries ever registered (active and inactive).
+    pub fn iter(&self) -> ThreadIter<'_, E> {
+        ThreadIter { cur: self.head.load(Ordering::Acquire), _list: self }
+    }
+
+    /// Number of entries (active + recyclable). O(n), diagnostics.
+    pub fn len(&self) -> usize {
+        self.iter().count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Acquire).is_null()
+    }
+}
+
+/// Iterator over thread entries.
+pub struct ThreadIter<'a, E: Send + Sync + 'static> {
+    cur: *const ThreadEntry<E>,
+    _list: &'a ThreadList<E>,
+}
+
+impl<'a, E: Send + Sync + 'static> Iterator for ThreadIter<'a, E> {
+    type Item = &'a ThreadEntry<E>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.cur.is_null() {
+            return None;
+        }
+        // SAFETY: entries are immortal and published with Release.
+        let entry = unsafe { &*self.cur };
+        self.cur = entry.next;
+        Some(entry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::{Arc, Barrier};
+
+    #[test]
+    fn acquire_release_recycles() {
+        static LIST: ThreadList<AtomicUsize> = ThreadList::new();
+        let a = LIST.acquire(|| AtomicUsize::new(1), |_| {});
+        let a_ptr = a as *const _;
+        assert!(a.is_active());
+        LIST.release(a);
+        assert!(!a.is_active());
+        let recycled = Arc::new(AtomicUsize::new(0));
+        let r2 = recycled.clone();
+        let b = LIST.acquire(
+            || AtomicUsize::new(2),
+            move |_| {
+                r2.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(b as *const _, a_ptr, "inactive entry must be recycled");
+        assert_eq!(recycled.load(Ordering::Relaxed), 1);
+        LIST.release(b);
+    }
+
+    #[test]
+    fn concurrent_acquire_is_exclusive() {
+        static LIST: ThreadList<usize> = ThreadList::new();
+        let n = 8;
+        let barrier = Arc::new(Barrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let e = LIST.acquire(|| i, |_| {});
+                    let p = e as *const _ as usize;
+                    std::thread::yield_now();
+                    LIST.release(e);
+                    p
+                })
+            })
+            .collect();
+        let ptrs: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // All entries end inactive; the list never exceeds the peak
+        // concurrency level.
+        assert!(LIST.iter().all(|e| !e.is_active()));
+        assert!(LIST.len() <= n);
+        assert!(!ptrs.is_empty());
+    }
+
+    #[test]
+    fn iter_sees_published_entries() {
+        static LIST: ThreadList<u32> = ThreadList::new();
+        let e1 = LIST.acquire(|| 10, |_| {});
+        let e2 = LIST.acquire(|| 20, |_| {});
+        let values: Vec<u32> = LIST.iter().map(|e| *e.data()).collect();
+        assert!(values.contains(&10) && values.contains(&20));
+        LIST.release(e1);
+        LIST.release(e2);
+    }
+}

@@ -1,0 +1,480 @@
+//! Retire-list machinery shared by all schemes (paper §3).
+//!
+//! Every node carries a [`RetireHeader`] inside its scheme header. When a
+//! node is retired the header is filled with a type-erased destructor and a
+//! scheme-specific *stamp* (epoch number, stamp value, ...), and the node is
+//! linked into a thread-local [`RetireList`]. Because nodes are appended in
+//! stamp order, reclamation scans only the reclaimable prefix — the paper's
+//! "no time is wasted on nodes that cannot yet be reclaimed" property
+//! (Proposition 2).
+//!
+//! [`GlobalRetireList`] is the lock-free global list used for orphan
+//! hand-off (threads exiting with unreclaimed nodes) and for Stamp-it's
+//! "list of ordered sublists" (§3): sublists are chained through the head
+//! node's `next_list` link, so a scan touches each sublist only up to the
+//! first non-reclaimable node — the `O(n + m)` bound of §3.
+
+use std::ptr;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+use super::{Node, Reclaimer};
+
+/// Flag: the node's memory came from the type-stable pool.
+const FROM_POOL: u32 = 1;
+
+/// Per-node retire metadata. Embedded (via the scheme header) in every node;
+/// written once at allocation (`flags`) and once at retire time (the rest).
+/// After retire the node has a single logical owner (whoever holds the
+/// retire list), so `Relaxed` atomics suffice — they exist to make the type
+/// `Sync` and to make the orphan hand-off explicit.
+#[derive(Default)]
+#[repr(C)]
+pub struct RetireHeader {
+    /// Intrusive link in a retire list (`*mut RetireHeader`).
+    next: AtomicUsize,
+    /// Chains ordered *sublists* in a global retire list (only meaningful
+    /// on a sublist's head node).
+    next_list: AtomicUsize,
+    /// Scheme stamp at retire time (epoch / stamp value).
+    stamp: AtomicU64,
+    /// The full node pointer (`*mut Node<T, R>` erased to `*mut ()`).
+    node: AtomicUsize,
+    /// `unsafe fn(*mut ())` that drops the payload and frees the node.
+    drop_fn: AtomicUsize,
+    /// [`FROM_POOL`] etc.; written at allocation.
+    flags: AtomicU32,
+}
+
+/// Type-erased pointer to a retired node's header.
+pub type Retired = *mut RetireHeader;
+
+/// Access to the embedded [`RetireHeader`]; every scheme header implements
+/// this so generic machinery (orphan lists, node allocation) can reach it.
+pub trait AsRetireHeader: Default + Send + Sync + 'static {
+    fn retire_header(&self) -> &RetireHeader;
+}
+
+impl RetireHeader {
+    /// Record (at allocation) whether the node memory is pool-backed.
+    pub(crate) fn set_from_pool(&self, pooled: bool) {
+        self.flags.store(if pooled { FROM_POOL } else { 0 }, Ordering::Relaxed);
+    }
+
+    pub(crate) fn is_from_pool(&self) -> bool {
+        self.flags.load(Ordering::Relaxed) & FROM_POOL != 0
+    }
+
+    /// The scheme stamp assigned at retire time.
+    #[inline]
+    pub fn stamp(&self) -> u64 {
+        self.stamp.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn next(&self) -> Retired {
+        self.next.load(Ordering::Relaxed) as Retired
+    }
+
+    /// The next retired node in a detached chain (crate-internal; used when
+    /// re-linking chains taken via [`RetireList::take_chain`]).
+    #[inline]
+    pub(crate) fn next_in_chain(&self) -> Retired {
+        self.next()
+    }
+
+    /// Address of the retired node (what hazard slots publish).
+    #[inline]
+    pub(crate) fn node_addr(&self) -> usize {
+        self.node.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn set_next(&self, n: Retired) {
+        self.next.store(n as usize, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub(crate) fn next_list(&self) -> Retired {
+        self.next_list.load(Ordering::Relaxed) as Retired
+    }
+
+    #[inline]
+    pub(crate) fn set_next_list(&self, n: Retired) {
+        self.next_list.store(n as usize, Ordering::Relaxed);
+    }
+}
+
+/// Erased destructor for `Node<T, R>`: drop the payload, free the memory.
+///
+/// # Safety
+/// `node` must be a `*mut Node<T, R>` produced by [`super::alloc_node`],
+/// retired exactly once and no longer reachable by any thread.
+unsafe fn drop_node_erased<T: Send + Sync + 'static, R: Reclaimer>(node: *mut ()) {
+    super::free_node::<T, R>(node as *mut Node<T, R>);
+}
+
+/// Fill a node's retire header: stamp, self pointer, erased destructor.
+/// Called by schemes at the top of `retire`.
+///
+/// # Safety
+/// `node` must be valid and owned by the caller for retiring.
+pub unsafe fn prepare_retire<T: Send + Sync + 'static, R: Reclaimer>(
+    node: *mut Node<T, R>,
+    stamp: u64,
+) -> Retired {
+    let hdr = (*node).header().retire_header();
+    hdr.stamp.store(stamp, Ordering::Relaxed);
+    hdr.node.store(node as usize, Ordering::Relaxed);
+    hdr.drop_fn.store(drop_node_erased::<T, R> as *const () as usize, Ordering::Relaxed);
+    hdr.set_next(ptr::null_mut());
+    hdr.set_next_list(ptr::null_mut());
+    hdr as *const RetireHeader as Retired
+}
+
+/// Reclaim one retired node: run its erased destructor.
+///
+/// # Safety
+/// The node must be safe to reclaim (no live references) and reclaimed
+/// exactly once.
+pub unsafe fn reclaim_one(r: Retired) {
+    let hdr = &*r;
+    let node = hdr.node.load(Ordering::Relaxed) as *mut ();
+    let drop_fn: unsafe fn(*mut ()) =
+        std::mem::transmute(hdr.drop_fn.load(Ordering::Relaxed));
+    drop_fn(node);
+}
+
+/// Thread-private FIFO retire list, append-ordered by stamp (appending with
+/// monotonically non-decreasing stamps keeps it sorted — the invariant the
+/// reclaim-prefix scan relies on).
+pub struct RetireList {
+    head: Retired,
+    tail: Retired,
+    len: usize,
+}
+
+impl Default for RetireList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RetireList {
+    pub const fn new() -> Self {
+        Self { head: ptr::null_mut(), tail: ptr::null_mut(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head.is_null()
+    }
+
+    /// Stamp of the oldest (front) entry, if any.
+    pub fn front_stamp(&self) -> Option<u64> {
+        // SAFETY: head, when non-null, is a retired node we own.
+        (!self.head.is_null()).then(|| unsafe { (*self.head).stamp() })
+    }
+
+    /// Append one retired node (stamps must be non-decreasing; debug-checked).
+    pub fn push_back(&mut self, r: Retired) {
+        // SAFETY: r is a valid retired node owned by the caller.
+        unsafe {
+            debug_assert!(self.tail.is_null() || (*self.tail).stamp() <= (*r).stamp());
+            (*r).set_next(ptr::null_mut());
+        }
+        if self.tail.is_null() {
+            self.head = r;
+        } else {
+            // SAFETY: tail is valid while the list is non-empty.
+            unsafe { (*self.tail).set_next(r) };
+        }
+        self.tail = r;
+        self.len += 1;
+    }
+
+    /// Reclaim the longest prefix whose stamps satisfy `can_reclaim`.
+    /// Returns the number of nodes reclaimed.
+    ///
+    /// # Safety
+    /// `can_reclaim(stamp) == true` must imply no thread still references
+    /// nodes retired at `stamp` (the scheme's Proposition-1 argument).
+    pub unsafe fn reclaim_prefix(&mut self, mut can_reclaim: impl FnMut(u64) -> bool) -> usize {
+        let mut freed = 0;
+        while !self.head.is_null() {
+            let hdr = &*self.head;
+            if !can_reclaim(hdr.stamp()) {
+                break;
+            }
+            let next = hdr.next();
+            reclaim_one(self.head);
+            self.head = next;
+            freed += 1;
+        }
+        if self.head.is_null() {
+            self.tail = ptr::null_mut();
+        }
+        self.len -= freed;
+        freed
+    }
+
+    /// Reclaim everything (used on clean shutdown when safety is externally
+    /// guaranteed, e.g. all threads stopped).
+    ///
+    /// # Safety
+    /// No thread may reference any node in the list.
+    pub unsafe fn reclaim_all(&mut self) -> usize {
+        self.reclaim_prefix(|_| true)
+    }
+
+    /// Detach the whole chain (head pointer), leaving the list empty.
+    /// The chain stays linked via `next` and sorted by stamp.
+    pub fn take_chain(&mut self) -> (Retired, usize) {
+        let (h, n) = (self.head, self.len);
+        self.head = ptr::null_mut();
+        self.tail = ptr::null_mut();
+        self.len = 0;
+        (h, n)
+    }
+}
+
+impl Drop for RetireList {
+    fn drop(&mut self) {
+        // Retire lists must be drained or handed off before drop; leaking
+        // here would hide bugs, so be loud in debug builds.
+        debug_assert!(self.is_empty(), "RetireList dropped with {} entries", self.len);
+    }
+}
+
+/// Lock-free global list of retired-node *sublists*.
+///
+/// Each pushed chain is an ordered sublist; chains are linked through the
+/// head node's `next_list` pointer. Consumers either steal everything
+/// ([`Self::steal_all`], the epoch-family orphan protocol) or scan sublists
+/// up to the first non-reclaimable node (Stamp-it's global reclaim, §3).
+pub struct GlobalRetireList {
+    head: AtomicUsize, // Retired (sublist head) chained via next_list
+}
+
+impl Default for GlobalRetireList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GlobalRetireList {
+    pub const fn new() -> Self {
+        Self { head: AtomicUsize::new(0) }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Acquire) == 0
+    }
+
+    /// Push an ordered sublist (chain linked via `next`). O(1).
+    pub fn push_sublist(&self, chain: Retired) {
+        if chain.is_null() {
+            return;
+        }
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            // SAFETY: we own `chain` until the CAS succeeds.
+            unsafe { (*chain).set_next_list(head as Retired) };
+            match self.head.compare_exchange_weak(
+                head,
+                chain as usize,
+                Ordering::Release,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(h) => head = h,
+            }
+        }
+    }
+
+    /// Steal the entire list (all sublists). Returns the sublist chain head.
+    pub fn steal_all(&self) -> Retired {
+        self.head.swap(0, Ordering::AcqRel) as Retired
+    }
+
+    /// Reclaim every node (across all sublists) whose stamp satisfies
+    /// `can_reclaim`; unreclaimable suffixes are pushed back. Returns the
+    /// number reclaimed. This is the steal → reclaim → re-add protocol the
+    /// paper describes (§4.4) — prone to the end-of-run race it discusses,
+    /// which Stamp-it's last-thread rule avoids at its call site.
+    ///
+    /// # Safety
+    /// Same contract as [`RetireList::reclaim_prefix`].
+    pub unsafe fn reclaim_where(&self, mut can_reclaim: impl FnMut(u64) -> bool) -> usize {
+        let mut sublist = self.steal_all();
+        let mut freed = 0;
+        while !sublist.is_null() {
+            let next_list = (*sublist).next_list();
+            // Scan this ordered sublist's reclaimable prefix.
+            let mut cur = sublist;
+            while !cur.is_null() && can_reclaim((*cur).stamp()) {
+                let next = (*cur).next();
+                reclaim_one(cur);
+                freed += 1;
+                cur = next;
+            }
+            // Push back the unreclaimable remainder (still ordered).
+            self.push_sublist(cur);
+            sublist = next_list;
+        }
+        freed
+    }
+
+    /// Total nodes currently parked here (O(n); diagnostics only).
+    pub fn count(&self) -> usize {
+        let mut n = 0;
+        let mut sublist = self.head.load(Ordering::Acquire) as Retired;
+        while !sublist.is_null() {
+            // SAFETY: nodes on the global list are quiescent; traversal is
+            // racy with steal_all and only used in tests/diagnostics where
+            // no concurrent steal runs.
+            unsafe {
+                let mut cur = sublist;
+                while !cur.is_null() {
+                    n += 1;
+                    cur = (*cur).next();
+                }
+                sublist = (*sublist).next_list();
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::leaky::Leaky;
+    use crate::reclaim::{alloc_node, HeaderOf};
+    use std::sync::atomic::AtomicUsize as StdAtomicUsize;
+    use std::sync::Arc;
+
+    /// Payload that counts drops.
+    struct DropCounter(Arc<StdAtomicUsize>);
+    impl Drop for DropCounter {
+        fn drop(&mut self) {
+            self.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn retired(stamp: u64, drops: &Arc<StdAtomicUsize>) -> Retired {
+        let node = alloc_node::<DropCounter, Leaky>(DropCounter(drops.clone()));
+        unsafe { prepare_retire::<DropCounter, Leaky>(node, stamp) }
+    }
+
+    #[test]
+    fn header_is_reachable_through_scheme_header() {
+        let node = alloc_node::<u32, Leaky>(3);
+        let hdr: &HeaderOf<Leaky> = unsafe { (*node).header() };
+        assert!(!hdr.retire_header().is_from_pool() || hdr.retire_header().is_from_pool());
+        unsafe { crate::reclaim::free_node(node) };
+    }
+
+    #[test]
+    fn prefix_reclaim_respects_stamps() {
+        let drops = Arc::new(StdAtomicUsize::new(0));
+        let mut list = RetireList::new();
+        for s in [1, 2, 3, 5, 8] {
+            list.push_back(retired(s, &drops));
+        }
+        assert_eq!(list.len(), 5);
+        assert_eq!(list.front_stamp(), Some(1));
+        let freed = unsafe { list.reclaim_prefix(|s| s < 4) };
+        assert_eq!(freed, 3);
+        assert_eq!(drops.load(Ordering::Relaxed), 3);
+        assert_eq!(list.front_stamp(), Some(5));
+        let freed = unsafe { list.reclaim_all() };
+        assert_eq!(freed, 2);
+        assert_eq!(drops.load(Ordering::Relaxed), 5);
+        assert!(list.is_empty());
+    }
+
+    #[test]
+    fn take_chain_preserves_order() {
+        let drops = Arc::new(StdAtomicUsize::new(0));
+        let mut list = RetireList::new();
+        for s in [10, 20, 30] {
+            list.push_back(retired(s, &drops));
+        }
+        let (chain, n) = list.take_chain();
+        assert_eq!(n, 3);
+        assert!(list.is_empty());
+        unsafe {
+            assert_eq!((*chain).stamp(), 10);
+            assert_eq!((*(*chain).next()).stamp(), 20);
+        }
+        // Re-attach and drain to not leak.
+        let mut l2 = RetireList::new();
+        let mut cur = chain;
+        while !cur.is_null() {
+            let next = unsafe { (*cur).next() };
+            l2.push_back(cur);
+            cur = next;
+        }
+        unsafe { l2.reclaim_all() };
+        assert_eq!(drops.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn global_list_sublist_scan() {
+        let drops = Arc::new(StdAtomicUsize::new(0));
+        let global = GlobalRetireList::new();
+        assert!(global.is_empty());
+
+        // Two ordered sublists: [1,4,9] and [2,3,50].
+        for stamps in [[1, 4, 9], [2, 3, 50]] {
+            let mut l = RetireList::new();
+            for s in stamps {
+                l.push_back(retired(s, &drops));
+            }
+            let (chain, _) = l.take_chain();
+            global.push_sublist(chain);
+        }
+        assert_eq!(global.count(), 6);
+
+        // Reclaim stamps < 5: 1,4 from the first list, 2,3 from the second.
+        let freed = unsafe { global.reclaim_where(|s| s < 5) };
+        assert_eq!(freed, 4);
+        assert_eq!(drops.load(Ordering::Relaxed), 4);
+        assert_eq!(global.count(), 2);
+
+        let freed = unsafe { global.reclaim_where(|_| true) };
+        assert_eq!(freed, 2);
+        assert!(global.is_empty());
+    }
+
+    #[test]
+    fn global_list_concurrent_push_steal() {
+        let drops = Arc::new(StdAtomicUsize::new(0));
+        let global = Arc::new(GlobalRetireList::new());
+        let n_threads = 4;
+        let per_thread = 100;
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| {
+                let global = global.clone();
+                let drops = drops.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        global.push_sublist(retired(i as u64, &drops));
+                        if i % 10 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let freed = unsafe { global.reclaim_where(|_| true) };
+        assert_eq!(freed, n_threads * per_thread);
+        assert_eq!(drops.load(Ordering::Relaxed), n_threads * per_thread);
+    }
+}

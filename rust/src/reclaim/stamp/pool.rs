@@ -1,0 +1,792 @@
+//! The **Stamp Pool** (paper §3.1–§3.2): a lock-free doubly-linked list of
+//! thread control blocks built on Sundell & Tsigas' design with the paper's
+//! twist — the `prev` direction (head → tail) is kept *consistent* while
+//! `next` pointers are only hints, the reverse of the original.
+//!
+//! Supported operations (paper §3):
+//!  1. [`StampPool::push`] — add a block, assigning a strictly increasing
+//!     stamp (via FAA on `head.stamp`).
+//!  2. [`StampPool::remove`] — remove a specific block from any position;
+//!     returns `true` iff it held the lowest stamp (the "last thread").
+//!  3. [`StampPool::highest_stamp`] — last stamp assigned (read off `head`).
+//!  4. [`StampPool::lowest_stamp`] — lowest stamp of any pooled block
+//!     (read off `tail`, maintained by `update_tail_stamp`).
+//!
+//! ## Link-word representation (§Deviation in DESIGN.md)
+//!
+//! The paper borrows 17 version-tag bits + 1 delete-mark bit *inside* each
+//! 64-bit pointer. Portable Rust has no spare pointer bits to borrow, so
+//! blocks live in an arena and a link word packs
+//! `{ tag:31 | mark:1 | index:32 }` — same ABA discipline, wider tags
+//! (strictly fewer undetectable wrap-arounds than the paper's 2^17), and
+//! identical block-reuse semantics (blocks are recycled through a free-list
+//! exactly like the paper's reused `thread_control_block`s).
+//!
+//! ## Stamp-word layout (paper §3.1)
+//!
+//! Bit 0 = `PendingPush`, bit 1 = `NotInList`, stamps grow by
+//! `STAMP_INC = 4`. A pending block carries `final − STAMP_INC +
+//! PendingPush` until its push completes (Listing 4), so its stamp sorts
+//! *below* its final position while it is not yet reliably in the list.
+
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// `PendingPush` flag (paper §3.1).
+pub const PENDING_PUSH: u64 = 1;
+/// `NotInList` flag (paper §3.1).
+pub const NOT_IN_LIST: u64 = 2;
+/// Stamp increment: stamps live above the two flag bits.
+pub const STAMP_INC: u64 = 4;
+
+/// Arena index of the `head` dummy block.
+pub const HEAD: u32 = 0;
+/// Arena index of the `tail` dummy block.
+pub const TAIL: u32 = 1;
+
+const MARK_BIT: u64 = 1 << 32;
+const TAG_SHIFT: u32 = 33;
+const TAG_MASK: u64 = (1 << 31) - 1;
+
+/// Build a link word.
+#[inline]
+fn lw(idx: u32, mark: bool, tag: u64) -> u64 {
+    ((tag & TAG_MASK) << TAG_SHIFT) | ((mark as u64) * MARK_BIT) | idx as u64
+}
+
+/// Target block index of a link word.
+#[inline]
+pub fn lw_idx(w: u64) -> u32 {
+    w as u32
+}
+
+/// Delete mark of a link word.
+#[inline]
+pub fn lw_mark(w: u64) -> bool {
+    w & MARK_BIT != 0
+}
+
+/// Version tag of a link word.
+#[inline]
+fn lw_tag(w: u64) -> u64 {
+    w >> TAG_SHIFT
+}
+
+/// The word that replaces `expected` when retargeting a link: new index and
+/// mark, tag bumped — every modification increments the tag (ABA guard).
+#[inline]
+fn bump(expected: u64, idx: u32, mark: bool) -> u64 {
+    lw(idx, mark, lw_tag(expected).wrapping_add(1))
+}
+
+/// One thread control block (paper: `thread_control_block`).
+#[derive(Default)]
+pub struct Block {
+    /// Consistent direction head → tail (always a correct list).
+    prev: AtomicU64,
+    /// Hint direction tail → head (may lag behind).
+    next: AtomicU64,
+    /// Stamp + flag bits.
+    stamp: AtomicU64,
+}
+
+/// The Stamp Pool.
+pub struct StampPool {
+    blocks: Box<[CachePadded<Block>]>,
+    /// Treiber free-list of recycled block indices: `{tag:32 | idx+1:32}`,
+    /// 0 = empty. ABA-safe by tag (same discipline as the link words).
+    free_head: AtomicU64,
+    free_next: Box<[AtomicU32]>,
+    /// Next never-used block index.
+    next_fresh: AtomicU32,
+}
+
+// SAFETY: all state is atomics.
+unsafe impl Send for StampPool {}
+unsafe impl Sync for StampPool {}
+
+impl StampPool {
+    /// A pool with capacity for `capacity` simultaneously registered
+    /// threads (blocks are recycled; this bounds *peak* concurrency).
+    pub fn new(capacity: usize) -> Self {
+        let blocks: Box<[CachePadded<Block>]> =
+            (0..capacity + 2).map(|_| CachePadded::new(Block::default())).collect();
+        // head.prev -> tail: the empty list. tail.next -> head: hint.
+        blocks[HEAD as usize].prev.store(lw(TAIL, false, 0), Ordering::Relaxed);
+        blocks[HEAD as usize].next.store(lw(TAIL, false, 0), Ordering::Relaxed);
+        blocks[TAIL as usize].prev.store(lw(TAIL, false, 0), Ordering::Relaxed);
+        blocks[TAIL as usize].next.store(lw(HEAD, false, 0), Ordering::Relaxed);
+        // head.stamp = highest assigned so far (none yet). tail.stamp =
+        // lowest pooled; starts above head so an empty pool reclaims all.
+        blocks[HEAD as usize].stamp.store(0, Ordering::Relaxed);
+        blocks[TAIL as usize].stamp.store(STAMP_INC, Ordering::Relaxed);
+        let free_next = (0..capacity + 2).map(|_| AtomicU32::new(0)).collect();
+        Self { blocks, free_head: AtomicU64::new(0), free_next, next_fresh: AtomicU32::new(2) }
+    }
+
+    #[inline]
+    fn b(&self, idx: u32) -> &Block {
+        &self.blocks[idx as usize]
+    }
+
+    // ---- block lifecycle ----------------------------------------------
+
+    /// Claim a block for a thread (fresh or recycled). Tags and stamp of a
+    /// recycled block are *not* reset — continuity is what makes reuse
+    /// ABA-safe.
+    pub fn alloc_block(&self) -> u32 {
+        loop {
+            let head = self.free_head.load(Ordering::Acquire);
+            let idx_plus1 = head as u32;
+            if idx_plus1 != 0 {
+                let idx = idx_plus1 - 1;
+                let next = self.free_next[idx as usize].load(Ordering::Relaxed);
+                let new = ((head >> 32).wrapping_add(1) << 32) | next as u64;
+                if self
+                    .free_head
+                    .compare_exchange_weak(head, new, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    return idx;
+                }
+                continue;
+            }
+            let idx = self.next_fresh.fetch_add(1, Ordering::Relaxed);
+            assert!(
+                (idx as usize) < self.blocks.len(),
+                "stamp pool exhausted: more than {} concurrent threads",
+                self.blocks.len() - 2
+            );
+            // Fresh blocks start fully removed (NotInList), like recycled
+            // ones — uniform lifecycle for free_block.
+            self.b(idx).stamp.store(NOT_IN_LIST, Ordering::Relaxed);
+            return idx;
+        }
+    }
+
+    /// Return a block to the free-list (thread exit). The block must be
+    /// fully removed (`NotInList` set).
+    pub fn free_block(&self, idx: u32) {
+        debug_assert!(self.b(idx).stamp.load(Ordering::Relaxed) & NOT_IN_LIST != 0);
+        loop {
+            let head = self.free_head.load(Ordering::Acquire);
+            self.free_next[idx as usize].store(head as u32, Ordering::Relaxed);
+            let new = ((head >> 32).wrapping_add(1) << 32) | (idx + 1) as u64;
+            if self
+                .free_head
+                .compare_exchange_weak(head, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    // ---- stamp queries --------------------------------------------------
+
+    /// Highest stamp assigned so far (paper op 3; read off `head`).
+    #[inline]
+    pub fn highest_stamp(&self) -> u64 {
+        self.b(HEAD).stamp.load(Ordering::Acquire)
+    }
+
+    /// Lowest stamp of all pooled blocks (paper op 4; read off `tail`).
+    /// Everything retired with a stamp strictly below this is reclaimable.
+    #[inline]
+    pub fn lowest_stamp(&self) -> u64 {
+        self.b(TAIL).stamp.load(Ordering::Acquire)
+    }
+
+    // ---- push (paper Listing 4) ----------------------------------------
+
+    /// Insert `b_idx` right after `head`, assigning and returning its new
+    /// stamp. Lock-free: a failed CAS implies another push/remove made
+    /// progress.
+    pub fn push(&self, b_idx: u32) -> u64 {
+        let blk = self.b(b_idx);
+        // Reset next to head; this also clears next's delete mark. Plain
+        // bump-store: the block is private until the insertion CAS.
+        let old_next = blk.next.load(Ordering::Relaxed);
+        blk.next.store(bump(old_next, HEAD, false), Ordering::Relaxed);
+
+        let head = self.b(HEAD);
+        let mut head_prev = head.prev.load(Ordering::Acquire);
+        let stamp;
+        let my_prev;
+        loop {
+            let head_prev2 = head.prev.load(Ordering::Acquire);
+            if head_prev != head_prev2 {
+                head_prev = head_prev2;
+                continue;
+            }
+            // FAA on head.stamp: head always holds the highest stamp; ours
+            // is the new value (strictly increasing, not consecutive on
+            // retry). SeqCst: the stamp order is the paper's total order on
+            // region entries.
+            let s = head.stamp.fetch_add(STAMP_INC, Ordering::SeqCst) + STAMP_INC;
+            // Pending encoding (Listing 4): final − STAMP_INC + PendingPush.
+            blk.stamp.store(s - STAMP_INC + PENDING_PUSH, Ordering::SeqCst);
+            if head.prev.load(Ordering::Acquire) != head_prev {
+                head_prev = head.prev.load(Ordering::Acquire);
+                continue;
+            }
+            // b.prev := head's current successor (tag-bumped plain store —
+            // still private).
+            let old_prev = blk.prev.load(Ordering::Relaxed);
+            let new_prev = bump(old_prev, lw_idx(head_prev), false);
+            blk.prev.store(new_prev, Ordering::Relaxed);
+            // Publication CAS: AcqRel — releases the block's initialization
+            // to traversers.
+            if head
+                .prev
+                .compare_exchange(
+                    head_prev,
+                    bump(head_prev, b_idx, false),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                stamp = s;
+                my_prev = new_prev;
+                break;
+            }
+            head_prev = head.prev.load(Ordering::Acquire);
+        }
+        // In the prev list: clear PendingPush (helpers may have raced us
+        // with the same final value via move_next — identical store).
+        blk.stamp.store(stamp, Ordering::SeqCst);
+
+        // Final step: set our successor's next hint to us (CAS loop,
+        // Listing 4 lines 17-25). Give up if the successor got marked, its
+        // next already points at us, or our prev moved on.
+        let succ = self.b(lw_idx(my_prev));
+        loop {
+            let link = succ.next.load(Ordering::Acquire);
+            if lw_idx(link) == b_idx
+                || lw_mark(link)
+                || blk.prev.load(Ordering::Acquire) != my_prev
+            {
+                break;
+            }
+            if succ
+                .next
+                .compare_exchange(link, bump(link, b_idx, false), Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        stamp
+    }
+
+    // ---- remove (paper Listing 5) ---------------------------------------
+
+    /// Remove `b_idx` from the pool. Returns `true` iff this block was the
+    /// one with the lowest stamp ("last thread", who then owns global
+    /// reclamation).
+    pub fn remove(&self, b_idx: u32) -> bool {
+        let blk = self.b(b_idx);
+        // Mark both own pointers: signals removal and freezes them against
+        // CAS updates from threads that saw the mark.
+        let mut prev = self.set_mark(&blk.prev);
+        let mut next = self.set_mark(&blk.next);
+
+        let fully_removed = self.remove_from_prev_list(&mut prev, b_idx, &mut next);
+        if !fully_removed {
+            self.remove_from_next_list(prev, b_idx, next);
+        }
+
+        // Fully removed: set NotInList (stamp's low bits are flag space).
+        let stamp = blk.stamp.load(Ordering::Relaxed);
+        debug_assert_eq!(stamp & (PENDING_PUSH | NOT_IN_LIST), 0);
+        blk.stamp.store(stamp | NOT_IN_LIST, Ordering::SeqCst);
+
+        // Were we the last (lowest-stamp) block? Then tail's stamp must
+        // advance to the new minimum.
+        let was_last = lw_idx(blk.prev.load(Ordering::Acquire)) == TAIL;
+        if was_last {
+            self.update_tail_stamp(stamp + STAMP_INC);
+        }
+        was_last
+    }
+
+    /// Set the delete mark on a link (bumping the tag); returns the marked
+    /// word.
+    fn set_mark(&self, link: &AtomicU64) -> u64 {
+        let mut w = link.load(Ordering::Acquire);
+        loop {
+            if lw_mark(w) {
+                return w;
+            }
+            let marked = bump(w, lw_idx(w), true);
+            match link.compare_exchange_weak(w, marked, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return marked,
+                Err(cur) => w = cur,
+            }
+        }
+    }
+
+    /// Try to set the delete mark on `idx`'s next pointer while its stamp
+    /// still equals `stamp` (Listing 7). Returns false iff the stamp
+    /// changed — i.e. the block was removed (and possibly reused), which
+    /// lets callers conclude their own block is gone too.
+    fn mark_next(&self, idx: u32, stamp: u64) -> bool {
+        let blk = self.b(idx);
+        loop {
+            let link = blk.next.load(Ordering::Acquire);
+            if blk.stamp.load(Ordering::Acquire) != stamp {
+                return false;
+            }
+            if lw_mark(link) {
+                return true;
+            }
+            if blk
+                .next
+                .compare_exchange_weak(
+                    link,
+                    bump(link, lw_idx(link), true),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    /// Move `next` one step along the prev direction (Listing 3), helping a
+    /// lingering `PendingPush` block finish its push first (required for
+    /// lock-freedom — otherwise the very next iteration would bounce the
+    /// caller back in the next direction forever).
+    fn move_next(&self, next_prev: u64, next: &mut u64, last: &mut Option<u64>) {
+        let cand = self.b(lw_idx(next_prev));
+        let s = cand.stamp.load(Ordering::Acquire);
+        if s & PENDING_PUSH != 0 {
+            // The candidate is in the prev list (we reached it through a
+            // prev pointer) but its push is unfinished: help reset the flag
+            // (pending encoding → final value, Listing 4's final store).
+            let fin = s - PENDING_PUSH + STAMP_INC;
+            let _ = cand.stamp.compare_exchange(s, fin, Ordering::AcqRel, Ordering::Relaxed);
+        }
+        *last = Some(*next);
+        *next = next_prev;
+    }
+
+    /// If `next` is marked, remove it from the prev list (when `last`, its
+    /// supposed predecessor, is known) or step back along the next
+    /// direction (Listing 8). Returns true if it changed anything (caller
+    /// restarts its loop).
+    fn remove_or_skip_marked_block(
+        &self,
+        next: &mut u64,
+        last: &mut Option<u64>,
+        next_prev: u64,
+        next_stamp: u64,
+    ) -> bool {
+        if !lw_mark(next_prev) {
+            return false;
+        }
+        // `next` is marked for deletion.
+        if let Some(l) = last.take() {
+            // Help remove it: freeze its next, then splice it out of the
+            // prev list by retargeting last.prev from next to next's prev.
+            self.mark_next(lw_idx(*next), next_stamp);
+            let last_blk = self.b(lw_idx(l));
+            let last_prev = last_blk.prev.load(Ordering::Acquire);
+            if lw_idx(last_prev) == lw_idx(*next) && !lw_mark(last_prev) {
+                let _ = last_blk.prev.compare_exchange(
+                    last_prev,
+                    bump(last_prev, lw_idx(next_prev), false),
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                );
+            }
+            *next = l;
+        } else {
+            // No predecessor known: fall back along the next direction.
+            *next = self.b(lw_idx(*next)).next.load(Ordering::Acquire);
+        }
+        true
+    }
+
+    /// Remove `b_idx` from the (consistent) prev list — paper Listing 2.
+    /// Returns true iff the block turned out to be already fully removed
+    /// from *both* lists.
+    fn remove_from_prev_list(&self, prev: &mut u64, b_idx: u32, next: &mut u64) -> bool {
+        let my_stamp = self.b(b_idx).stamp.load(Ordering::Acquire);
+        let mut last: Option<u64> = None;
+        loop {
+            // (7) prev caught up with next: b is out of the prev list.
+            if lw_idx(*next) == lw_idx(*prev) {
+                *next = self.b(b_idx).next.load(Ordering::Acquire);
+                return false;
+            }
+            let prev_blk = self.b(lw_idx(*prev));
+            let prev_prev = prev_blk.prev.load(Ordering::Acquire);
+            let prev_stamp = prev_blk.stamp.load(Ordering::Acquire);
+            // (12) prev was removed (together with b): higher stamp means it
+            // was reinserted, NotInList means it is gone — either way every
+            // block between it and b (all marked) is out, including b.
+            if prev_stamp > my_stamp || prev_stamp & NOT_IN_LIST != 0 {
+                return true;
+            }
+            // (14) prev itself is marked: help freeze it, then step towards
+            // tail.
+            if lw_mark(prev_prev) {
+                if !self.mark_next(lw_idx(*prev), prev_stamp) {
+                    return true; // stamp changed → prev (and b) removed
+                }
+                *prev = prev_blk.prev.load(Ordering::Acquire);
+                continue;
+            }
+            // (18) consistent (prev, stamp) snapshot of next.
+            let next_blk = self.b(lw_idx(*next));
+            let next_prev = next_blk.prev.load(Ordering::Acquire);
+            let next_stamp = next_blk.stamp.load(Ordering::Acquire);
+            if next_prev != next_blk.prev.load(Ordering::Acquire) {
+                continue;
+            }
+            // (21) next sank below b in stamp order: b is out of the prev
+            // list.
+            if next_stamp < my_stamp {
+                *next = self.b(b_idx).next.load(Ordering::Acquire);
+                return false;
+            }
+            // (24) next is not reliably in the prev list: back off along
+            // the next direction (or to last).
+            if next_stamp & (NOT_IN_LIST | PENDING_PUSH) != 0 {
+                if let Some(l) = last.take() {
+                    *next = l;
+                } else {
+                    *next = next_blk.next.load(Ordering::Acquire);
+                }
+                continue;
+            }
+            // (30) next marked: remove or skip it.
+            if self.remove_or_skip_marked_block(next, &mut last, next_prev, next_stamp) {
+                continue;
+            }
+            // (33) next is not b's direct predecessor yet: advance.
+            if lw_idx(next_prev) != b_idx {
+                self.move_next(next_prev, next, &mut last);
+                continue;
+            }
+            // (37) found the predecessor: splice b out of the prev list.
+            if next_blk
+                .prev
+                .compare_exchange(
+                    next_prev,
+                    bump(next_prev, lw_idx(*prev), false),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                return false;
+            }
+        }
+    }
+
+    /// Remove `b_idx` from the (hint) next list — paper Listing 6. `prev`
+    /// and `next` continue from where `remove_from_prev_list` left off.
+    fn remove_from_next_list(&self, mut prev: u64, b_idx: u32, mut next: u64) {
+        let my_stamp = self.b(b_idx).stamp.load(Ordering::Acquire);
+        let mut last: Option<u64> = None;
+        loop {
+            // Consistent snapshot of next.
+            let next_blk = self.b(lw_idx(next));
+            let next_prev = next_blk.prev.load(Ordering::Acquire);
+            let next_stamp = next_blk.stamp.load(Ordering::Acquire);
+            if next_prev != next_blk.prev.load(Ordering::Acquire) {
+                continue;
+            }
+            // next is not reliably in the prev list: back off.
+            if next_stamp & (NOT_IN_LIST | PENDING_PUSH) != 0 {
+                if let Some(l) = last.take() {
+                    next = l;
+                } else {
+                    next = next_blk.next.load(Ordering::Acquire);
+                }
+                continue;
+            }
+            let prev_blk = self.b(lw_idx(prev));
+            let prev_next = prev_blk.next.load(Ordering::Acquire);
+            let prev_stamp = prev_blk.stamp.load(Ordering::Acquire);
+            // prev removed (and so are we, from the next list's view).
+            if prev_stamp > my_stamp || prev_stamp & NOT_IN_LIST != 0 {
+                return;
+            }
+            // prev's next is frozen: prev is being removed — step towards
+            // tail and help from there.
+            if lw_mark(prev_next) {
+                prev = prev_blk.prev.load(Ordering::Acquire);
+                continue;
+            }
+            if lw_idx(next) == lw_idx(prev) {
+                return;
+            }
+            if self.remove_or_skip_marked_block(&mut next, &mut last, next_prev, next_stamp) {
+                continue;
+            }
+            // next must sit directly above prev in the prev direction.
+            if lw_idx(next_prev) != lw_idx(prev) {
+                self.move_next(next_prev, &mut next, &mut last);
+                continue;
+            }
+            // b already invisible in the next list?
+            if next_stamp <= my_stamp || lw_idx(prev_next) == lw_idx(next) {
+                return;
+            }
+            // Retarget prev.next to skip b; re-validate next's membership
+            // and bail out only if next stayed unmarked (else keep helping).
+            if next_blk.prev.load(Ordering::Acquire) == next_prev
+                && prev_blk
+                    .next
+                    .compare_exchange(
+                        prev_next,
+                        bump(prev_next, lw_idx(next), false),
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                && !lw_mark(next_blk.next.load(Ordering::Acquire))
+            {
+                return;
+            }
+        }
+    }
+
+    /// After removing the last (lowest-stamp) block, advance `tail.stamp`
+    /// to the new minimum — paper Listing 9. `fallback` (= our stamp +
+    /// STAMP_INC) is the "next best guess": safe because stamps are
+    /// strictly increasing, so every remaining block's stamp is ≥ it.
+    fn update_tail_stamp(&self, fallback: u64) {
+        let tail = self.b(TAIL);
+        let mut new_stamp = fallback;
+        // Try to identify tail's actual predecessor through the next hint.
+        let hint = tail.next.load(Ordering::Acquire);
+        let cand_idx = lw_idx(hint);
+        if cand_idx != HEAD {
+            let cand = self.b(cand_idx);
+            let s = cand.stamp.load(Ordering::Acquire);
+            let cand_prev = cand.prev.load(Ordering::Acquire);
+            // Only trust the candidate if it is demonstrably the current
+            // last block: unflagged, unmarked, prev pointing at tail, and
+            // the hint did not move under us.
+            if s & (PENDING_PUSH | NOT_IN_LIST) == 0
+                && !lw_mark(cand_prev)
+                && lw_idx(cand_prev) == TAIL
+                && tail.next.load(Ordering::Acquire) == hint
+                && s > new_stamp
+            {
+                new_stamp = s;
+            }
+        }
+        // Monotonic max CAS loop (Listing 9 lines 21-25).
+        let mut cur = tail.stamp.load(Ordering::Acquire);
+        while cur < new_stamp {
+            match tail.stamp.compare_exchange_weak(
+                cur,
+                new_stamp,
+                Ordering::SeqCst,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    // ---- diagnostics -----------------------------------------------------
+
+    /// Number of blocks currently linked in the prev direction (O(n),
+    /// single-threaded diagnostics/tests only — concurrent mutation makes
+    /// the count approximate).
+    pub fn len_prev_list(&self) -> usize {
+        let mut n = 0;
+        let mut cur = lw_idx(self.b(HEAD).prev.load(Ordering::Acquire));
+        while cur != TAIL {
+            n += 1;
+            assert!(n <= self.blocks.len(), "prev list cycle");
+            cur = lw_idx(self.b(cur).prev.load(Ordering::Acquire));
+        }
+        n
+    }
+
+    /// Stamps along the prev direction, head → tail (diagnostics).
+    pub fn stamps_prev_list(&self) -> Vec<u64> {
+        let mut v = Vec::new();
+        let mut cur = lw_idx(self.b(HEAD).prev.load(Ordering::Acquire));
+        while cur != TAIL {
+            v.push(self.b(cur).stamp.load(Ordering::Acquire));
+            cur = lw_idx(self.b(cur).prev.load(Ordering::Acquire));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as A64;
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_push_remove_single() {
+        let pool = StampPool::new(8);
+        let b = pool.alloc_block();
+        let s = pool.push(b);
+        assert_eq!(s, STAMP_INC);
+        assert_eq!(pool.highest_stamp(), s);
+        assert_eq!(pool.len_prev_list(), 1);
+        // Only block ⇒ it is the "last thread".
+        assert!(pool.remove(b));
+        assert_eq!(pool.len_prev_list(), 0);
+        // Tail advanced past our stamp: everything retired before is free.
+        assert!(pool.lowest_stamp() > s);
+        pool.free_block(b);
+    }
+
+    #[test]
+    fn stamps_strictly_increase_and_order_prev_list() {
+        let pool = StampPool::new(8);
+        let blocks: Vec<u32> = (0..4).map(|_| pool.alloc_block()).collect();
+        let mut prev_stamp = 0;
+        for &b in &blocks {
+            let s = pool.push(b);
+            assert!(s > prev_stamp, "stamps must strictly increase");
+            prev_stamp = s;
+        }
+        // prev direction = decreasing stamps (head side is newest).
+        let stamps = pool.stamps_prev_list();
+        assert_eq!(stamps.len(), 4);
+        assert!(stamps.windows(2).all(|w| w[0] > w[1]), "{stamps:?}");
+        // FIFO removal: each oldest is "last".
+        for &b in &blocks {
+            assert!(pool.remove(b), "oldest block must be the last thread");
+            pool.free_block(b);
+        }
+        assert_eq!(pool.len_prev_list(), 0);
+    }
+
+    #[test]
+    fn remove_from_middle_is_not_last() {
+        let pool = StampPool::new(8);
+        let b1 = pool.alloc_block();
+        let b2 = pool.alloc_block();
+        let b3 = pool.alloc_block();
+        let s1 = pool.push(b1);
+        let _s2 = pool.push(b2);
+        let _s3 = pool.push(b3);
+        // Middle and newest are not last.
+        assert!(!pool.remove(b2));
+        assert!(!pool.remove(b3));
+        assert_eq!(pool.len_prev_list(), 1);
+        // Tail stamp must still protect b1's stamp.
+        assert!(pool.lowest_stamp() <= s1);
+        assert!(pool.remove(b1));
+        assert!(pool.lowest_stamp() > s1);
+        for b in [b1, b2, b3] {
+            pool.free_block(b);
+        }
+    }
+
+    #[test]
+    fn lowest_stamp_never_exceeds_live_minimum() {
+        // The core safety invariant: tail.stamp ≤ min(stamp of any pooled
+        // block), checked continuously under concurrency.
+        let pool = Arc::new(StampPool::new(64));
+        let min_live = Arc::new(A64::new(u64::MAX));
+        let threads = 4;
+        let iters = 300;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let pool = pool.clone();
+                let min_live = min_live.clone();
+                std::thread::spawn(move || {
+                    let b = pool.alloc_block();
+                    for i in 0..iters {
+                        let s = pool.push(b);
+                        // Track a conservative lower bound of live stamps.
+                        min_live.fetch_min(s, Ordering::SeqCst);
+                        let low = pool.lowest_stamp();
+                        assert!(
+                            low <= s,
+                            "tail stamp {low} overtook live stamp {s}"
+                        );
+                        if i % 8 == 0 {
+                            std::thread::yield_now();
+                        }
+                        pool.remove(b);
+                        min_live.store(u64::MAX, Ordering::SeqCst);
+                    }
+                    pool.free_block(b);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.len_prev_list(), 0);
+    }
+
+    #[test]
+    fn concurrent_churn_leaves_empty_pool() {
+        let pool = Arc::new(StampPool::new(64));
+        let handles: Vec<_> = (0..6)
+            .map(|t| {
+                let pool = pool.clone();
+                std::thread::spawn(move || {
+                    let b = pool.alloc_block();
+                    let mut lasts = 0usize;
+                    for i in 0..400 {
+                        let s = pool.push(b);
+                        assert_eq!(s & 3, 0, "stamps are multiples of STAMP_INC");
+                        if (i + t) % 4 == 0 {
+                            std::thread::yield_now();
+                        }
+                        if pool.remove(b) {
+                            lasts += 1;
+                        }
+                    }
+                    pool.free_block(b);
+                    lasts
+                })
+            })
+            .collect();
+        let total_lasts: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(pool.len_prev_list(), 0, "pool must drain completely");
+        assert!(total_lasts > 0, "someone must have been last at least once");
+        // tail.stamp may transiently lag after a concurrent drain (a
+        // remover whose frozen prev pointer missed TAIL skips the tail
+        // update — conservative, therefore safe). One idle cycle repairs
+        // it: the new block's prev points at TAIL, so its removal is
+        // "last" and publishes a stamp above everything assigned before.
+        let high_before = pool.highest_stamp();
+        let b = pool.alloc_block();
+        pool.push(b);
+        assert!(pool.remove(b), "sole block must be last");
+        pool.free_block(b);
+        assert!(
+            pool.lowest_stamp() > high_before,
+            "one cycle must advance tail past all prior stamps"
+        );
+    }
+
+    #[test]
+    fn block_reuse_after_free() {
+        let pool = StampPool::new(4);
+        let a = pool.alloc_block();
+        pool.push(a);
+        pool.remove(a);
+        pool.free_block(a);
+        let b = pool.alloc_block();
+        assert_eq!(a, b, "freed block must be recycled");
+        let s = pool.push(b);
+        assert!(s > 0);
+        assert!(pool.remove(b));
+        pool.free_block(b);
+    }
+}

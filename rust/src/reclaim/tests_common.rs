@@ -1,0 +1,198 @@
+//! Shared scheme-conformance exercises: every [`Reclaimer`] must pass the
+//! same battery. Used by the per-scheme unit tests and re-exported
+//! (`#[doc(hidden)]`) for the integration suites under `rust/tests/`.
+
+use super::{alloc_node, ConcurrentPtr, GuardPtr, MarkedPtr, Reclaimer, Region};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Crate-wide test lock: schemes with global shared state (one Stamp Pool,
+/// one epoch domain per scheme) use it to serialize tests whose assertions
+/// are sensitive to concurrent regions from sibling tests.
+pub fn serial_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Poll `done` with flushes until it returns true or ~2 s elapse.
+pub fn flush_until<R: Reclaimer>(mut done: impl FnMut() -> bool) -> bool {
+    for _ in 0..2000 {
+        if done() {
+            return true;
+        }
+        R::flush();
+        std::thread::yield_now();
+        std::thread::sleep(std::time::Duration::from_micros(500));
+    }
+    done()
+}
+
+/// Magic value a live payload must carry; `Drop` poisons it so a
+/// use-after-reclaim is loudly detectable.
+const MAGIC: u64 = 0xC0FF_EE00_DEAD_10CC;
+const POISON: u64 = 0xBAAD_F00D_BAAD_F00D;
+
+/// Drop-counting, self-poisoning payload.
+pub struct Payload {
+    magic: u64,
+    value: u64,
+    drops: Arc<AtomicUsize>,
+}
+
+impl Payload {
+    pub fn new(value: u64, drops: &Arc<AtomicUsize>) -> Self {
+        Self { magic: MAGIC, value, drops: drops.clone() }
+    }
+
+    /// Read the value, asserting the payload has not been reclaimed.
+    pub fn read(&self) -> u64 {
+        let m = self.magic;
+        assert_eq!(m, MAGIC, "use-after-reclaim: magic={m:#x}");
+        self.value
+    }
+}
+
+impl Drop for Payload {
+    fn drop(&mut self) {
+        assert_eq!(self.magic, MAGIC, "double reclamation detected");
+        self.magic = POISON;
+        self.drops.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Retire a batch of nodes with no guards around; after flushing, all of
+/// them must have been dropped exactly once.
+pub fn exercise_basic_reclamation<R: Reclaimer>() {
+    let drops = Arc::new(AtomicUsize::new(0));
+    const N: usize = 64;
+    for i in 0..N {
+        let node = alloc_node::<Payload, R>(Payload::new(i as u64, &drops));
+        // SAFETY: never published, so trivially unlinked; retired once.
+        unsafe { R::retire(node) };
+    }
+    // Flush until everything is reclaimed (epoch schemes need a few
+    // advances; guard-free, so progress is guaranteed).
+    flush_until::<R>(|| drops.load(Ordering::Relaxed) == N);
+    assert_eq!(drops.load(Ordering::Relaxed), N, "{} leaked retired nodes", R::NAME);
+}
+
+/// A guarded node must survive `retire` + aggressive flushing until the
+/// guard is dropped.
+pub fn exercise_guard_blocks_reclamation<R: Reclaimer>() {
+    let drops = Arc::new(AtomicUsize::new(0));
+    let node = alloc_node::<Payload, R>(Payload::new(7, &drops));
+    let cell: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+
+    let mut guard: GuardPtr<Payload, R> = GuardPtr::new();
+    let p = guard.acquire(&cell);
+    assert_eq!(p.get(), node);
+
+    // Unlink, then retire while still guarded.
+    cell.store(MarkedPtr::null(), Ordering::Release);
+    // SAFETY: unlinked above; retired exactly once.
+    unsafe { R::retire(node) };
+
+    // The reclaimer may try as hard as it wants — the guard must hold.
+    // (Retirer == guard holder, the strictest single-thread case.)
+    R::flush();
+    assert_eq!(drops.load(Ordering::Relaxed), 0, "{}: reclaimed under a live guard", R::NAME);
+    assert_eq!(guard.as_ref().unwrap().read(), 7);
+
+    drop(guard);
+    flush_until::<R>(|| drops.load(Ordering::Relaxed) == 1);
+    assert_eq!(drops.load(Ordering::Relaxed), 1, "{}: leak after guard drop", R::NAME);
+}
+
+/// Guards created inside an explicit region must be protected and cheap;
+/// the region must not leak protection after it ends.
+pub fn exercise_region_guard<R: Reclaimer>() {
+    let drops = Arc::new(AtomicUsize::new(0));
+    let node = alloc_node::<Payload, R>(Payload::new(3, &drops));
+    let cell: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+    {
+        let _region: Region<R> = Region::enter();
+        let mut g: GuardPtr<Payload, R> = GuardPtr::new();
+        for _ in 0..100 {
+            g.acquire(&cell);
+            assert_eq!(g.as_ref().unwrap().read(), 3);
+            g.reset();
+        }
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        // SAFETY: unlinked; retired once.
+        unsafe { R::retire(node) };
+    }
+    flush_until::<R>(|| drops.load(Ordering::Relaxed) == 1);
+    assert_eq!(drops.load(Ordering::Relaxed), 1, "{}: leak after region end", R::NAME);
+}
+
+/// Multi-threaded swap storm over one shared cell: all nodes funneled
+/// through `retire` must be dropped exactly once, and no reader may observe
+/// a poisoned payload.
+pub fn exercise_concurrent_smoke<R: Reclaimer>(threads: usize, iters: usize) {
+    let drops = Arc::new(AtomicUsize::new(0));
+    let allocated = Arc::new(AtomicUsize::new(0));
+    let cell: Arc<ConcurrentPtr<Payload, R>> = Arc::new(ConcurrentPtr::null());
+
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let drops = drops.clone();
+            let allocated = allocated.clone();
+            let cell = cell.clone();
+            std::thread::spawn(move || {
+                let mut g: GuardPtr<Payload, R> = GuardPtr::new();
+                for i in 0..iters {
+                    let value = (t * iters + i) as u64;
+                    let node = alloc_node::<Payload, R>(Payload::new(value, &drops));
+                    allocated.fetch_add(1, Ordering::Relaxed);
+                    loop {
+                        let old = g.acquire(&cell);
+                        if !old.is_null() {
+                            // Reading validates the guard: must not be
+                            // poisoned.
+                            unsafe { old.deref_data().read() };
+                        }
+                        if cell
+                            .compare_exchange(
+                                old,
+                                MarkedPtr::new(node, 0),
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            )
+                            .is_ok()
+                        {
+                            g.reset();
+                            if !old.is_null() {
+                                // SAFETY: we unlinked `old` with the CAS;
+                                // only the successful CASer retires it.
+                                unsafe { R::retire(old.get()) };
+                            }
+                            break;
+                        }
+                        if i % 16 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Retire the final occupant.
+    let last = cell.load(Ordering::Acquire);
+    if !last.is_null() {
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        // SAFETY: all writers joined; we own the last node.
+        unsafe { R::retire(last.get()) };
+    }
+
+    flush_until::<R>(|| drops.load(Ordering::Relaxed) == allocated.load(Ordering::Relaxed));
+    assert_eq!(
+        drops.load(Ordering::Relaxed),
+        allocated.load(Ordering::Relaxed),
+        "{}: drops != allocations after flush",
+        R::NAME
+    );
+}

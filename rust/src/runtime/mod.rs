@@ -1,0 +1,253 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas computation
+//! (`artifacts/model_b{B}.hlo.txt`, produced once by `make artifacts`) and
+//! execute it from Rust. Python never runs here.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the
+//! [`Engine`] lives on a single thread; [`EngineThread`] wraps it behind an
+//! mpsc channel for the coordinator (which is exactly one dispatch thread
+//! anyway — the batcher).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+/// Result dimension (f32 lanes) — matches `python/compile/model.py::DIM`;
+/// 256 × 4 B = the paper's 1024-byte payload.
+pub const DIM: usize = 256;
+
+/// A single-threaded PJRT engine holding one compiled executable per batch
+/// size.
+pub struct Engine {
+    _client: xla::PjRtClient,
+    execs: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load every `model_b*.hlo.txt` under `dir` and compile it on the CPU
+    /// PJRT client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut execs = BTreeMap::new();
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("artifact dir {dir:?} (run `make artifacts`)"))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            let Some(batch) = name
+                .strip_prefix("model_b")
+                .and_then(|r| r.strip_suffix(".hlo.txt"))
+                .and_then(|b| b.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+            execs.insert(batch, exe);
+        }
+        if execs.is_empty() {
+            bail!("no model_b*.hlo.txt artifacts in {dir:?} — run `make artifacts`");
+        }
+        Ok(Self { _client: client, execs })
+    }
+
+    /// Compiled batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.execs.keys().copied().collect()
+    }
+
+    /// The largest compiled batch size (the batcher's accumulation bound).
+    pub fn max_batch(&self) -> usize {
+        *self.execs.keys().next_back().unwrap()
+    }
+
+    /// The smallest compiled batch that fits `n` seeds (or the largest one
+    /// if nothing fits — callers then split).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        self.execs
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.max_batch())
+    }
+
+    /// Compute partial results for up to `max_batch()` seeds: pads to the
+    /// chosen executable's batch, executes, strips padding. Returns one
+    /// `DIM`-float vector per input seed.
+    pub fn execute(&self, seeds: &[i32]) -> Result<Vec<Vec<f32>>> {
+        if seeds.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::with_capacity(seeds.len());
+        for chunk in seeds.chunks(self.max_batch()) {
+            let batch = self.pick_batch(chunk.len());
+            let mut padded: Vec<i32> = chunk.to_vec();
+            padded.resize(batch, chunk[chunk.len() - 1]); // pad by repetition
+            let input = xla::Literal::vec1(&padded);
+            let exe = &self.execs[&batch];
+            let result = exe
+                .execute::<xla::Literal>(&[input])
+                .map_err(|e| anyhow!("execute b{batch}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            // Lowered with return_tuple=True → unwrap the 1-tuple.
+            let tuple = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let flat: Vec<f32> = tuple.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            if flat.len() != batch * DIM {
+                bail!("shape mismatch: got {} f32s, want {}", flat.len(), batch * DIM);
+            }
+            for row in flat.chunks(DIM).take(chunk.len()) {
+                out.push(row.to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// A job for the engine thread.
+struct Job {
+    seeds: Vec<i32>,
+    reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// `Send`-able handle to an [`Engine`] running on its own thread.
+pub struct EngineThread {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineThread {
+    /// Spawn the engine thread and wait until the artifacts are compiled.
+    pub fn spawn(dir: PathBuf) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<usize>>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(e.batch_sizes()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let _ = job.reply.send(engine.execute(&job.seeds));
+                }
+            })?;
+        let batches = ready_rx.recv().context("engine thread died during load")??;
+        eprintln!("[engine] compiled batch sizes: {batches:?}");
+        Ok(Self { tx: Some(tx), handle: Some(handle) })
+    }
+
+    /// Execute a batch synchronously (blocks the calling thread).
+    pub fn execute(&self, seeds: Vec<i32>) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .unwrap()
+            .send(Job { seeds, reply: reply_tx })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine thread dropped reply"))?
+    }
+}
+
+impl Drop for EngineThread {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; thread exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Locate the artifacts directory: `$EMR_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("EMR_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|| "artifacts".into())
+}
+
+/// True when AOT artifacts exist (tests skip gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    std::fs::read_dir(default_artifact_dir())
+        .map(|mut d| {
+            d.any(|e| {
+                e.map(|e| e.file_name().to_string_lossy().ends_with(".hlo.txt")).unwrap_or(false)
+            })
+        })
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        if !artifacts_available() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(Engine::load(&default_artifact_dir()).expect("engine load"))
+    }
+
+    #[test]
+    fn loads_all_batch_variants() {
+        let Some(e) = engine() else { return };
+        let sizes = e.batch_sizes();
+        assert!(sizes.contains(&1) && sizes.len() >= 2, "sizes={sizes:?}");
+        assert_eq!(e.pick_batch(1), 1);
+        assert_eq!(e.pick_batch(e.max_batch() + 1), e.max_batch());
+    }
+
+    #[test]
+    fn execute_shapes_and_values() {
+        let Some(e) = engine() else { return };
+        let out = e.execute(&[1, 2, 3]).unwrap();
+        assert_eq!(out.len(), 3);
+        for row in &out {
+            assert_eq!(row.len(), DIM);
+            assert!(row.iter().all(|v| v.is_finite() && v.abs() <= 1.0), "tanh-bounded");
+        }
+        // Distinct seeds → distinct results.
+        assert_ne!(out[0], out[1]);
+    }
+
+    #[test]
+    fn execute_is_deterministic_and_batch_invariant() {
+        let Some(e) = engine() else { return };
+        let a = e.execute(&[7]).unwrap();
+        let b = e.execute(&[7]).unwrap();
+        assert_eq!(a, b, "deterministic");
+        // The same seed through a larger (padded) batch must agree with
+        // the b1 executable — cross-validates the two compiled variants.
+        let big = e.execute(&[7, 8, 9, 10, 11]).unwrap();
+        for (x, y) in a[0].iter().zip(&big[0]) {
+            assert!((x - y).abs() < 1e-5, "batch-size variance: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn engine_thread_roundtrip() {
+        if !artifacts_available() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let et = EngineThread::spawn(default_artifact_dir()).unwrap();
+        let out = et.execute(vec![5, 6]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), DIM);
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let Some(e) = engine() else { return };
+        assert!(e.execute(&[]).unwrap().is_empty());
+    }
+}

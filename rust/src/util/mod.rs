@@ -1,0 +1,48 @@
+//! Small self-contained utilities.
+//!
+//! The build is fully offline (vendored crates only), so facilities that
+//! would normally come from `rand`, `clap`, `criterion` or `proptest` are
+//! implemented here: a counter-based PRNG ([`rng`]), summary statistics
+//! ([`stats`]), a tiny CLI parser ([`cli`]) and a seeded model-based
+//! property-testing harness ([`prop`]).
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Number of logical CPUs visible to this process.
+pub fn num_cpus() -> usize {
+    // SAFETY: plain libc query, no preconditions.
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n < 1 {
+        1
+    } else {
+        n as usize
+    }
+}
+
+/// Monotonic nanosecond clock (CLOCK_MONOTONIC); the benchmark timebase.
+pub fn monotonic_ns() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer.
+    unsafe { libc::clock_gettime(libc::CLOCK_MONOTONIC, &mut ts) };
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_cpus_is_positive() {
+        assert!(num_cpus() >= 1);
+    }
+
+    #[test]
+    fn monotonic_clock_advances() {
+        let a = monotonic_ns();
+        let b = monotonic_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,113 @@
+//! A small seeded property-testing harness (the vendored crate set has no
+//! `proptest`), used for model-based testing of the concurrent structures:
+//! generate a random operation sequence from a seed, run it against both the
+//! system under test and a sequential model, and on failure report the seed
+//! and a greedily shrunken prefix.
+
+use super::rng::Xoshiro256;
+
+/// Number of random cases per property (overridable via `EMR_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("EMR_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop(rng)` for `cases` different seeds derived from `seed`.
+/// `prop` returns `Err(msg)` to signal a failure.
+pub fn check<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed (seed={case_seed:#x}, case={case}): {msg}");
+        }
+    }
+}
+
+/// Generate a vector of `n` operations drawn by `gen`.
+pub fn ops<T>(rng: &mut Xoshiro256, n: usize, mut gen: impl FnMut(&mut Xoshiro256) -> T) -> Vec<T> {
+    (0..n).map(|_| gen(rng)).collect()
+}
+
+/// Run an op-sequence property with greedy prefix shrinking: on failure, find
+/// the shortest failing prefix and include it in the panic message via
+/// `describe`.
+pub fn check_ops<Op: Clone, F>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    max_ops: usize,
+    gen: impl Fn(&mut Xoshiro256) -> Op + Copy,
+    run: F,
+    describe: impl Fn(&[Op]) -> String,
+) where
+    F: Fn(&[Op]) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256::new(case_seed);
+        let n = 1 + rng.below_usize(max_ops);
+        let sequence = ops(&mut rng, n, gen);
+        if let Err(msg) = run(&sequence) {
+            // Greedy shrink: shortest failing prefix.
+            let mut lo = 1;
+            while lo < sequence.len() && run(&sequence[..lo]).is_ok() {
+                lo += 1;
+            }
+            let prefix = &sequence[..lo];
+            panic!(
+                "property `{name}` failed (seed={case_seed:#x}, case={case}, \
+                 shrunk {orig}→{short} ops): {msg}\nops: {}",
+                describe(prefix),
+                orig = sequence.len(),
+                short = prefix.len(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 1, 16, |rng| {
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `falsum` failed")]
+    fn failing_property_panics_with_seed() {
+        check("falsum", 1, 4, |_| Err("always".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn shrinking_reports_short_prefix() {
+        // Fails as soon as the sequence contains a 7; shrinker should trim.
+        check_ops(
+            "contains-seven",
+            3,
+            32,
+            64,
+            |rng| rng.below(10),
+            |ops| {
+                if ops.contains(&7) {
+                    Err("saw 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+            |ops| format!("{ops:?}"),
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! Summary statistics for benchmark reporting: mean, stddev, percentiles and
+//! trimmed means — the quantities the paper's plots are built from (the paper
+//! reports per-trial average runtime per operation and smoothed conditional
+//! means over repeated runs).
+
+/// Aggregate of a sample set (nanoseconds, counts, ...).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((pct / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Mean after dropping the lowest and highest `trim` fraction — the robust
+/// per-op estimate the bench harness reports (resilient to scheduler noise,
+/// important on oversubscribed cores).
+pub fn trimmed_mean(samples: &[f64], trim: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cut = ((sorted.len() as f64) * trim) as usize;
+    let kept = &sorted[cut..sorted.len() - cut.min(sorted.len() - cut - 1)];
+    kept.iter().sum::<f64>() / kept.len() as f64
+}
+
+/// Simple moving average used to mimic the paper's "smoothed conditional
+/// means" in the efficiency time-series plots.
+pub fn smooth(series: &[f64], window: usize) -> Vec<f64> {
+    if window <= 1 || series.len() <= 2 {
+        return series.to_vec();
+    }
+    let w = window.min(series.len());
+    let mut out = Vec::with_capacity(series.len());
+    for i in 0..series.len() {
+        let lo = i.saturating_sub(w / 2);
+        let hi = (i + w / 2 + 1).min(series.len());
+        out.push(series[lo..hi].iter().sum::<f64>() / (hi - lo) as f64);
+    }
+    out
+}
+
+/// Human-friendly nanosecond formatting ("12.3 ns", "4.5 µs", ...).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Format a count with thousands separators.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_samples() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-9);
+        assert!((s.p50 - 3.0).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_of_empty_is_zeroed() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_extremes() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&v, 100.0), 4.0);
+        assert_eq!(percentile_sorted(&v, 1.0), 1.0);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_outliers() {
+        let samples = [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1000.0, 0.0];
+        let tm = trimmed_mean(&samples, 0.1);
+        assert!(tm < 2.0, "tm={tm}");
+    }
+
+    #[test]
+    fn smooth_preserves_length_and_flattens() {
+        let noisy = [0.0, 10.0, 0.0, 10.0, 0.0, 10.0];
+        let s = smooth(&noisy, 3);
+        assert_eq!(s.len(), noisy.len());
+        let spread = |v: &[f64]| {
+            v.iter().cloned().fold(f64::MIN, f64::max) - v.iter().cloned().fold(f64::MAX, f64::min)
+        };
+        assert!(spread(&s) < spread(&noisy));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(12.34), "12.3 ns");
+        assert_eq!(fmt_ns(4_500.0), "4.50 µs");
+        assert_eq!(fmt_count(1_234_567), "1,234,567");
+    }
+}

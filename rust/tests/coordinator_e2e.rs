@@ -1,0 +1,146 @@
+//! End-to-end coordinator tests (skipped when `make artifacts` has not
+//! run): the three-layer stack must return numerically correct, cache-
+//! consistent results under concurrent load, for several schemes.
+
+use emr::coordinator::{CacheServer, ServerConfig};
+use emr::reclaim::Reclaimer;
+use emr::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+fn have_artifacts() -> bool {
+    if emr::runtime::artifacts_available() {
+        true
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        false
+    }
+}
+
+fn concurrent_consistency<R: Reclaimer>() {
+    let server = CacheServer::<R>::start(ServerConfig {
+        workers: 2,
+        capacity: 500,
+        buckets: 64,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let server = Arc::new(server);
+
+    // Every client remembers the first answer per key; later answers (hit,
+    // or recomputed after eviction) must agree to float tolerance. Not
+    // bit-exact: a key recomputed in a different batch-size executable
+    // (b1/b8/b32) takes a different reduction order, so low-order bits may
+    // differ — cache *hits* are bit-identical, recomputes are ~1e-7 off.
+    std::thread::scope(|s| {
+        for c in 0..4u64 {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = Xoshiro256::new(0xE2E2 + c);
+                let mut seen: std::collections::HashMap<u32, Box<[f32; 256]>> =
+                    std::collections::HashMap::new();
+                for _ in 0..300 {
+                    let key = rng.below(100) as u32;
+                    let resp = server.request(key).expect("request");
+                    assert!(resp.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+                    match seen.get(&key) {
+                        Some(prev) => {
+                            for (i, (a, b)) in prev.iter().zip(resp.data.iter()).enumerate() {
+                                assert!(
+                                    (a - b).abs() < 1e-5,
+                                    "{}: key {key} lane {i} changed: {a} vs {b}",
+                                    R::NAME
+                                );
+                            }
+                        }
+                        None => {
+                            seen.insert(key, resp.data);
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let m = server.metrics();
+    assert_eq!(m.requests, 4 * 300);
+    assert!(m.hits > 0, "some requests must hit");
+    assert!(m.misses > 0, "some requests must miss");
+    assert!(m.batches > 0);
+    server.shutdown();
+}
+
+#[test]
+fn stamp_it_serves_consistently() {
+    if !have_artifacts() {
+        return;
+    }
+    concurrent_consistency::<emr::reclaim::stamp::StampIt>();
+}
+
+#[test]
+fn ebr_serves_consistently() {
+    if !have_artifacts() {
+        return;
+    }
+    concurrent_consistency::<emr::reclaim::ebr::Ebr>();
+}
+
+#[test]
+fn hp_serves_consistently() {
+    if !have_artifacts() {
+        return;
+    }
+    concurrent_consistency::<emr::reclaim::hp::Hp>();
+}
+
+#[test]
+fn server_results_match_direct_engine() {
+    if !have_artifacts() {
+        return;
+    }
+    // The coordinator must be a pure cache over the engine: responses equal
+    // direct engine output for the same seed.
+    let engine =
+        emr::runtime::Engine::load(&emr::runtime::default_artifact_dir()).expect("engine");
+    let direct = engine.execute(&[123, 456]).unwrap();
+
+    let server = CacheServer::<emr::reclaim::stamp::StampIt>::start(ServerConfig {
+        workers: 1,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    for (seed, want) in [(123u32, &direct[0]), (456u32, &direct[1])] {
+        let resp = server.request(seed).unwrap();
+        for (a, b) in resp.data.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-6, "seed {seed}: {a} vs {b}");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn eviction_keeps_serving_correctly() {
+    if !have_artifacts() {
+        return;
+    }
+    // Tiny capacity forces constant eviction; answers must stay correct.
+    let server = CacheServer::<emr::reclaim::lfrc::Lfrc>::start(ServerConfig {
+        workers: 2,
+        capacity: 8,
+        buckets: 4,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let first = server.request(7).unwrap();
+    for key in 0..64u32 {
+        let _ = server.request(key).unwrap();
+    }
+    let again = server.request(7).unwrap();
+    for (a, b) in first.data.iter().zip(again.data.iter()) {
+        // Tolerance: recomputation may use a different batch executable
+        // (different reduction order) — see concurrent_consistency.
+        assert!((a - b).abs() < 1e-5, "recomputed result differs: {a} vs {b}");
+    }
+    assert!(server.cache_len() <= 12);
+    server.shutdown();
+}

@@ -1,0 +1,333 @@
+//! Model-based property tests (seeded, shrinking — see `util::prop`):
+//! random operation sequences run against both the lock-free structure and
+//! a sequential model must agree; structural invariants must hold at every
+//! step.
+
+use emr::reclaim::leaky::Leaky;
+use emr::reclaim::stamp::pool::{StampPool, NOT_IN_LIST, PENDING_PUSH, STAMP_INC};
+use emr::util::prop::{check, check_ops, default_cases};
+use emr::util::rng::Xoshiro256;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+// ---- queue vs VecDeque ----------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum QOp {
+    Enq(u64),
+    Deq,
+}
+
+#[test]
+fn prop_queue_matches_vecdeque_model() {
+    check_ops(
+        "queue-model",
+        0x51EE7,
+        default_cases(),
+        256,
+        |rng| if rng.percent(55) { QOp::Enq(rng.next_u64()) } else { QOp::Deq },
+        |ops| {
+            let q: emr::ds::queue::Queue<u64, Leaky> = emr::ds::queue::Queue::new();
+            let mut model = VecDeque::new();
+            for op in ops {
+                match op {
+                    QOp::Enq(v) => {
+                        q.enqueue(*v);
+                        model.push_back(*v);
+                    }
+                    QOp::Deq => {
+                        let got = q.dequeue();
+                        let want = model.pop_front();
+                        if got != want {
+                            return Err(format!("dequeue: got {got:?}, model {want:?}"));
+                        }
+                    }
+                }
+            }
+            if q.is_empty() != model.is_empty() {
+                return Err("emptiness disagrees".into());
+            }
+            Ok(())
+        },
+        |ops| format!("{ops:?}"),
+    );
+}
+
+// ---- list vs BTreeSet -------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum SOp {
+    Insert(u8),
+    Remove(u8),
+    Contains(u8),
+}
+
+#[test]
+fn prop_list_matches_btreeset_model() {
+    check_ops(
+        "list-model",
+        0x115,
+        default_cases(),
+        256,
+        |rng| {
+            let k = rng.below(32) as u8;
+            match rng.below(3) {
+                0 => SOp::Insert(k),
+                1 => SOp::Remove(k),
+                _ => SOp::Contains(k),
+            }
+        },
+        |ops| {
+            let l: emr::ds::list::List<u8, (), Leaky> = emr::ds::list::List::new();
+            let mut model = BTreeSet::new();
+            for op in ops {
+                let (got, want) = match op {
+                    SOp::Insert(k) => (l.insert(*k, ()), model.insert(*k)),
+                    SOp::Remove(k) => (l.remove(k), model.remove(k)),
+                    SOp::Contains(k) => (l.contains(k), model.contains(k)),
+                };
+                if got != want {
+                    return Err(format!("{op:?}: got {got}, model {want}"));
+                }
+            }
+            if l.len() != model.len() {
+                return Err(format!("len: {} vs model {}", l.len(), model.len()));
+            }
+            Ok(())
+        },
+        |ops| format!("{ops:?}"),
+    );
+}
+
+// ---- hashmap vs BTreeMap ----------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum MOp {
+    Insert(u16, u64),
+    Remove(u16),
+    Get(u16),
+}
+
+#[test]
+fn prop_hashmap_matches_btreemap_model() {
+    check_ops(
+        "hashmap-model",
+        0x4A54,
+        default_cases(),
+        256,
+        |rng| {
+            let k = rng.below(64) as u16;
+            match rng.below(3) {
+                0 => MOp::Insert(k, rng.next_u64()),
+                1 => MOp::Remove(k),
+                _ => MOp::Get(k),
+            }
+        },
+        |ops| {
+            let m: emr::ds::hashmap::HashMap<u16, u64, Leaky> =
+                emr::ds::hashmap::HashMap::new(8);
+            let mut model: BTreeMap<u16, u64> = BTreeMap::new();
+            for op in ops {
+                match op {
+                    MOp::Insert(k, v) => {
+                        let got = m.insert(*k, *v);
+                        let want = !model.contains_key(k);
+                        if want {
+                            model.insert(*k, *v);
+                        }
+                        if got != want {
+                            return Err(format!("insert {k}: got {got}, model {want}"));
+                        }
+                    }
+                    MOp::Remove(k) => {
+                        let got = m.remove(k);
+                        let want = model.remove(k).is_some();
+                        if got != want {
+                            return Err(format!("remove {k}: got {got}, model {want}"));
+                        }
+                    }
+                    MOp::Get(k) => {
+                        let got = m.get_with(k, |v| *v);
+                        let want = model.get(k).copied();
+                        if got != want {
+                            return Err(format!("get {k}: got {got:?}, model {want:?}"));
+                        }
+                    }
+                }
+            }
+            if m.len() != model.len() {
+                return Err(format!("len {} vs model {}", m.len(), model.len()));
+            }
+            Ok(())
+        },
+        |ops| format!("{ops:?}"),
+    );
+}
+
+// ---- FIFO cache eviction model ----------------------------------------------
+
+#[test]
+fn prop_fifo_cache_evicts_in_insertion_order() {
+    check("fifo-cache-model", 0xF1F0, default_cases(), |rng| {
+        let cap = 1 + rng.below_usize(12);
+        let cache: emr::ds::hashmap::FifoCache<u32, u32, Leaky> =
+            emr::ds::hashmap::FifoCache::new(4, cap);
+        let mut fifo: VecDeque<u32> = VecDeque::new();
+        let n = 1 + rng.below_usize(64);
+        for _ in 0..n {
+            let k = rng.below(48) as u32;
+            let inserted = cache.insert(k, k);
+            let model_inserted = !fifo.contains(&k);
+            if inserted != model_inserted {
+                return Err(format!("insert {k}: {inserted} vs model {model_inserted}"));
+            }
+            if model_inserted {
+                fifo.push_back(k);
+                while fifo.len() > cap {
+                    fifo.pop_front();
+                }
+            }
+        }
+        // Exact FIFO containment: single-threaded, so the model is exact.
+        for &k in &fifo {
+            if !cache.contains(&k) {
+                return Err(format!("cache lost live key {k} (cap {cap})"));
+            }
+        }
+        if cache.len() != fifo.len() {
+            return Err(format!("len {} vs model {}", cache.len(), fifo.len()));
+        }
+        Ok(())
+    });
+}
+
+// ---- stamp pool vs sequential model -----------------------------------------
+
+/// Sequential model: the pool is an ordered multiset of stamps.
+#[test]
+fn prop_stamp_pool_matches_ordered_model() {
+    check("stamp-pool-model", 0x57A4, default_cases(), |rng| {
+        let pool = StampPool::new(64);
+        // id -> (block idx, stamp); model: BTreeMap<stamp, id>
+        let mut live: Vec<(u32, u64)> = Vec::new();
+        let mut model: BTreeSet<u64> = BTreeSet::new();
+        let mut highest = 0u64;
+        let n = 1 + rng.below_usize(96);
+        for _ in 0..n {
+            if live.is_empty() || rng.percent(55) {
+                let b = pool.alloc_block();
+                let s = pool.push(b);
+                if s <= highest {
+                    return Err(format!("stamp {s} not strictly increasing (> {highest})"));
+                }
+                if s % STAMP_INC != 0 || s & (PENDING_PUSH | NOT_IN_LIST) != 0 {
+                    return Err(format!("stamp {s} carries flag bits"));
+                }
+                highest = s;
+                if pool.highest_stamp() != s {
+                    return Err(format!(
+                        "highest_stamp {} != last assigned {s}",
+                        pool.highest_stamp()
+                    ));
+                }
+                live.push((b, s));
+                model.insert(s);
+            } else {
+                let i = rng.below_usize(live.len());
+                let (b, s) = live.swap_remove(i);
+                let was_lowest = model.iter().next() == Some(&s);
+                let was_last = pool.remove(b);
+                pool.free_block(b);
+                model.remove(&s);
+                if was_last != was_lowest {
+                    return Err(format!(
+                        "remove stamp {s}: was_last={was_last}, model lowest={was_lowest}"
+                    ));
+                }
+            }
+            // Safety bound: tail stamp never exceeds the lowest live stamp.
+            if let Some(&lowest_live) = model.iter().next() {
+                let tail = pool.lowest_stamp();
+                if tail > lowest_live {
+                    return Err(format!(
+                        "tail stamp {tail} overtook live minimum {lowest_live}"
+                    ));
+                }
+            }
+        }
+        // Drain; every removal of the current minimum must report last.
+        while let Some(i) = (0..live.len()).min_by_key(|&i| live[i].1) {
+            let (b, s) = live.swap_remove(i);
+            let was_last = pool.remove(b);
+            pool.free_block(b);
+            model.remove(&s);
+            if !was_last {
+                return Err(format!("draining minimum {s} must be 'last'"));
+            }
+        }
+        if pool.len_prev_list() != 0 {
+            return Err("pool not empty after drain".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- marked pointer roundtrips -----------------------------------------------
+
+#[test]
+fn prop_marked_ptr_roundtrips() {
+    check("marked-ptr", 0x3A11, default_cases(), |rng| {
+        let node = emr::reclaim::alloc_node::<u64, Leaky>(rng.next_u64());
+        for mark in 0..4usize {
+            let p = emr::reclaim::MarkedPtr::<u64, Leaky>::new(node, mark);
+            if p.get() != node || p.mark() != mark {
+                return Err(format!("roundtrip failed for mark {mark}"));
+            }
+            let remark = rng.below_usize(4);
+            let q = p.with_mark(remark);
+            if q.get() != node || q.mark() != remark {
+                return Err("with_mark corrupted pointer".into());
+            }
+        }
+        unsafe { emr::reclaim::free_node(node) };
+        Ok(())
+    });
+}
+
+// ---- payload compute determinism ----------------------------------------------
+
+#[test]
+fn prop_payload_compute_deterministic() {
+    check("payload-compute", 0xBEEF, default_cases(), |rng| {
+        let key = rng.next_u64();
+        let a = emr::bench_fw::workload::compute_payload(key);
+        let b = emr::bench_fw::workload::compute_payload(key);
+        if a != b {
+            return Err(format!("nondeterministic payload for key {key}"));
+        }
+        let other = emr::bench_fw::workload::compute_payload(key.wrapping_add(1));
+        if a == other {
+            return Err("adjacent keys produced identical payloads".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- prng sanity ---------------------------------------------------------------
+
+#[test]
+fn prop_rng_streams_do_not_collide() {
+    check("rng-streams", 7, 16, |rng| {
+        let s1 = rng.next_u64();
+        let s2 = rng.next_u64();
+        if s1 == s2 {
+            return Ok(()); // astronomically unlikely; not an error per se
+        }
+        let mut a = Xoshiro256::new(s1);
+        let mut b = Xoshiro256::new(s2);
+        let collisions = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        if collisions > 0 {
+            return Err(format!("{collisions} collisions between distinct streams"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,142 @@
+//! Conformance matrix: every scheme × every shared exercise × every data
+//! structure. A new scheme only has to pass this file to be trusted by the
+//! benchmarks.
+
+use emr::ds::hashmap::FifoCache;
+use emr::ds::list::List;
+use emr::ds::queue::Queue;
+use emr::reclaim::tests_common::*;
+use emr::reclaim::{Reclaimer, Region};
+
+fn queue_roundtrip<R: Reclaimer>() {
+    let q: Queue<u64, R> = Queue::new();
+    for i in 0..1000 {
+        q.enqueue(i);
+    }
+    for i in 0..1000 {
+        assert_eq!(q.dequeue(), Some(i), "{}: FIFO order broken", R::NAME);
+    }
+    assert_eq!(q.dequeue(), None);
+}
+
+fn list_roundtrip<R: Reclaimer>() {
+    let l: List<u64, u64, R> = List::new();
+    for k in 0..200u64 {
+        assert!(l.insert(k, k * 3));
+    }
+    assert_eq!(l.len(), 200);
+    for k in 0..200u64 {
+        assert_eq!(l.get_with(&k, |v| *v), Some(k * 3), "{}", R::NAME);
+    }
+    for k in (0..200u64).step_by(2) {
+        assert!(l.remove(&k));
+    }
+    assert_eq!(l.len(), 100);
+    assert!(!l.contains(&0));
+    assert!(l.contains(&1));
+}
+
+fn cache_roundtrip<R: Reclaimer>() {
+    let c: FifoCache<u64, [u8; 128], R> = FifoCache::new(32, 50);
+    for k in 0..200u64 {
+        c.insert(k, [k as u8; 128]);
+    }
+    assert!(c.len() <= 50, "{}: capacity violated ({})", R::NAME, c.len());
+    assert!(c.contains(&199));
+    assert!(!c.contains(&0));
+}
+
+fn region_nesting<R: Reclaimer>() {
+    // Regions are reentrant; guards nest within regions.
+    let _outer = Region::<R>::enter();
+    {
+        let _inner = Region::<R>::enter();
+        let _third = Region::<R>::enter();
+    }
+    let _after = Region::<R>::enter();
+}
+
+macro_rules! matrix {
+    ($mod_name:ident, $scheme:ty) => {
+        mod $mod_name {
+            use super::*;
+
+            #[test]
+            fn basic_reclamation() {
+                exercise_basic_reclamation::<$scheme>();
+            }
+
+            #[test]
+            fn guard_blocks_reclamation() {
+                let _l = serial_lock();
+                exercise_guard_blocks_reclamation::<$scheme>();
+            }
+
+            #[test]
+            fn region_guard() {
+                let _l = serial_lock();
+                exercise_region_guard::<$scheme>();
+            }
+
+            #[test]
+            fn concurrent_swap_storm() {
+                exercise_concurrent_smoke::<$scheme>(4, 400);
+            }
+
+            #[test]
+            fn queue() {
+                queue_roundtrip::<$scheme>();
+            }
+
+            #[test]
+            fn list() {
+                list_roundtrip::<$scheme>();
+            }
+
+            #[test]
+            fn cache() {
+                cache_roundtrip::<$scheme>();
+            }
+
+            #[test]
+            fn regions_nest() {
+                region_nesting::<$scheme>();
+            }
+        }
+    };
+}
+
+// Leaky never reclaims by design — it only has to pass the structural
+// tests, not the reclamation exercises.
+mod leaky {
+    use super::*;
+    type Leaky = emr::reclaim::leaky::Leaky;
+
+    #[test]
+    fn queue() {
+        queue_roundtrip::<Leaky>();
+    }
+
+    #[test]
+    fn list() {
+        list_roundtrip::<Leaky>();
+    }
+
+    #[test]
+    fn cache() {
+        cache_roundtrip::<Leaky>();
+    }
+
+    #[test]
+    fn regions_nest() {
+        region_nesting::<Leaky>();
+    }
+}
+
+matrix!(lfrc, emr::reclaim::lfrc::Lfrc);
+matrix!(hp, emr::reclaim::hp::Hp);
+matrix!(ebr, emr::reclaim::ebr::Ebr);
+matrix!(nebr, emr::reclaim::nebr::Nebr);
+matrix!(qsr, emr::reclaim::qsr::Qsr);
+matrix!(debra, emr::reclaim::debra::Debra);
+matrix!(stamp, emr::reclaim::stamp::StampIt);
