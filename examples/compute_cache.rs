@@ -95,7 +95,10 @@ fn run<R: Reclaimer>(
     misses.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
     let total = (clients * requests) as f64;
-    println!("\nthroughput      : {:.0} req/s ({total:.0} requests in {wall_s:.2}s)", total / wall_s);
+    println!(
+        "\nthroughput      : {:.0} req/s ({total:.0} requests in {wall_s:.2}s)",
+        total / wall_s
+    );
     for (name, lat) in [("hit", &hits), ("computed", &misses)] {
         if lat.is_empty() {
             continue;
@@ -112,7 +115,10 @@ fn run<R: Reclaimer>(
     println!("server          : {m}");
     println!("cache entries   : {}", server.cache_len());
     server.shutdown();
-    R::flush();
+    // The server owns its reclamation domain; dropping the last reference
+    // drains every node still parked there (worker handles already released
+    // theirs at join), settling the counters for the report below.
+    drop(server);
     let alloc_after = emr::alloc::snapshot();
     println!(
         "nodes           : allocated {} reclaimed {} (unreclaimed at exit: {})",

@@ -1,8 +1,11 @@
 //! Diagnostic: run one artifact directly and dump result metadata.
-//! (Kept as a debugging aid; not part of the documented example set.)
+//! (Kept as a debugging aid; not part of the documented example set.
+//! Requires the `pjrt` feature — see `rust/src/runtime`.)
 
-use anyhow::{anyhow, Result};
+use emr::anyhow;
+use emr::util::error::Result;
 
+#[cfg(feature = "pjrt")]
 fn main() -> Result<()> {
     let path = std::env::args().nth(1).unwrap_or_else(|| "artifacts/model_b1.hlo.txt".into());
     let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
@@ -24,4 +27,9 @@ fn main() -> Result<()> {
     let nz = v.iter().filter(|x| **x != 0.0).count();
     println!("nonzero={nz}/{}", v.len());
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() -> Result<()> {
+    Err(anyhow!("debug_hlo needs the `pjrt` feature (and the xla crate) — see rust/src/runtime"))
 }

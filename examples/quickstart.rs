@@ -5,30 +5,37 @@
 //! ```
 //!
 //! Shows the three benchmark data structures under Stamp-it, plus how to
-//! pick a different scheme (one type parameter) and how to observe the
-//! allocation/reclamation counters the paper's efficiency analysis uses.
+//! pick a different scheme (one type parameter), how to isolate work in its
+//! own reclamation domain with a cached per-thread handle (the fast path),
+//! and how to observe the allocation/reclamation counters the paper's
+//! efficiency analysis uses.
 
 use emr::ds::hashmap::FifoCache;
 use emr::ds::list::List;
 use emr::ds::queue::Queue;
 use emr::reclaim::ebr::Ebr;
 use emr::reclaim::stamp::StampIt;
-use emr::reclaim::{Reclaimer, Region};
+use emr::reclaim::{DomainRef, Region};
 
 fn main() {
     // --- a Michael-Scott queue, reclaimed by Stamp-it ------------------
+    // `Queue::new()` uses the process-wide global domain: the one-liner
+    // API. Operations resolve the thread's cached handle automatically.
     let queue: Queue<u64, StampIt> = Queue::new();
     std::thread::scope(|s| {
         for t in 0..4u64 {
             let queue = &queue;
             s.spawn(move || {
+                // The fast path: register once, then every region, guard
+                // and retire goes through the handle — no TLS, no RefCell.
+                let handle = queue.domain().register();
                 // A region_guard amortizes the critical-region entry over
                 // many operations (paper §2).
-                let _region = Region::<StampIt>::enter();
+                let _region = Region::enter(&handle);
                 for i in 0..1000 {
-                    queue.enqueue(t * 1000 + i);
+                    queue.enqueue_with(&handle, t * 1000 + i);
                     if i % 2 == 0 {
-                        queue.dequeue();
+                        queue.dequeue_with(&handle);
                     }
                 }
             });
@@ -49,8 +56,13 @@ fn main() {
     set.remove(&4);
     println!("set: after remove, contains(4)={}", set.contains(&4));
 
-    // --- the paper's HashMap-benchmark cache ---------------------------
-    let cache: FifoCache<u64, [u8; 1024], StampIt> = FifoCache::new(64, 100);
+    // --- the paper's HashMap-benchmark cache, in its own domain --------
+    // `new_in` + an owned domain = an isolated reclamation universe: its
+    // retired nodes never mix with the global domain's, and once the last
+    // reference (cache + this thread's cached handle) goes away the domain
+    // drains everything it still holds.
+    let cache: FifoCache<u64, [u8; 1024], StampIt> =
+        FifoCache::new_in(DomainRef::new_owned(), 64, 100);
     for key in 0..300u64 {
         cache.insert(key, [key as u8; 1024]);
     }
@@ -60,8 +72,8 @@ fn main() {
     );
 
     // --- the efficiency metric -----------------------------------------
-    StampIt::flush();
-    Ebr::flush();
+    DomainRef::<StampIt>::global().with_handle(|h| h.flush());
+    DomainRef::<Ebr>::global().with_handle(|h| h.flush());
     println!(
         "counters: allocated={} reclaimed={} unreclaimed={}",
         emr::alloc::allocated(),

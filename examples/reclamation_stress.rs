@@ -3,6 +3,9 @@
 //! unreclaimed-node counter — watch epochs lag, hazard-pointer thresholds
 //! plateau, and Stamp-it track the working set.
 //!
+//! The whole run lives in one **owned reclamation domain**; worker threads
+//! use explicit per-thread handles (the TLS-free fast path).
+//!
 //! ```bash
 //! cargo run --release --example reclamation_stress -- --scheme debra --secs 2
 //! cargo run --release --example reclamation_stress -- --scheme stamp --secs 2
@@ -12,7 +15,7 @@ use emr::bench_fw::workload::{compute_payload, consume_payload};
 use emr::dispatch_scheme;
 use emr::ds::hashmap::FifoCache;
 use emr::ds::queue::Queue;
-use emr::reclaim::{Reclaimer, SchemeId};
+use emr::reclaim::{DomainRef, Reclaimer, SchemeId};
 use emr::util::cli::Args;
 use emr::util::rng::Xoshiro256;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -27,8 +30,9 @@ fn main() {
 
 fn run<R: Reclaimer>(secs: f64, threads: usize) {
     println!("reclamation stress under {} — {threads} threads, {secs}s", R::NAME);
-    let queue: Queue<u64, R> = Queue::new();
-    let cache: FifoCache<u64, [f32; 256], R> = FifoCache::new(256, 1000);
+    let domain = DomainRef::<R>::new_owned();
+    let queue: Queue<u64, R> = Queue::new_in(domain.clone());
+    let cache: FifoCache<u64, [f32; 256], R> = FifoCache::new_in(domain.clone(), 256, 1000);
     let stop = AtomicBool::new(false);
     let start = emr::alloc::snapshot();
 
@@ -38,18 +42,19 @@ fn run<R: Reclaimer>(secs: f64, threads: usize) {
             let cache = &cache;
             let stop = &stop;
             scope.spawn(move || {
+                let h = queue.domain().register();
                 let mut rng = Xoshiro256::new(0x57E5 ^ t as u64);
                 let mut sink = 0.0f32;
                 while !stop.load(Ordering::Acquire) {
                     // Queue churn: retire a steady stream of small nodes.
-                    queue.enqueue(rng.next_u64());
-                    queue.dequeue();
+                    queue.enqueue_with(&h, rng.next_u64());
+                    queue.dequeue_with(&h);
                     // Cache churn: evictions retire 1 KiB nodes.
                     let key = rng.below(5_000);
-                    match cache.get_with(&key, consume_payload) {
+                    match cache.get_with_handle(&h, &key, consume_payload) {
                         Some(v) => sink += v,
                         None => {
-                            cache.insert(key, compute_payload(key));
+                            cache.insert_with(&h, key, compute_payload(key));
                         }
                     }
                 }
@@ -75,6 +80,11 @@ fn run<R: Reclaimer>(secs: f64, threads: usize) {
 
     drop(queue);
     drop(cache);
-    R::flush();
+    // Final flush through a fresh handle, then drop the last domain
+    // reference (drains whatever remains).
+    let h = domain.register();
+    h.flush();
+    drop(h);
+    drop(domain);
     println!("after shutdown+flush: unreclaimed={}", emr::alloc::unreclaimed());
 }

@@ -22,7 +22,7 @@
 
 pub mod pool;
 
-use crossbeam_utils::CachePadded;
+use crate::util::cache_pad::CachePadded;
 use std::alloc::Layout;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 

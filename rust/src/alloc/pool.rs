@@ -178,8 +178,8 @@ impl SizeClass {
 }
 
 fn classes() -> &'static [SizeClass; NUM_CLASSES] {
-    use once_cell::sync::OnceCell;
-    static CLASSES: OnceCell<Box<[SizeClass; NUM_CLASSES]>> = OnceCell::new();
+    use std::sync::OnceLock;
+    static CLASSES: OnceLock<Box<[SizeClass; NUM_CLASSES]>> = OnceLock::new();
     CLASSES.get_or_init(|| {
         let v: Vec<SizeClass> =
             (0..NUM_CLASSES).map(|i| SizeClass::new(MIN_CLASS << i)).collect();

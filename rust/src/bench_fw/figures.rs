@@ -3,6 +3,12 @@
 //! Each function prints the same rows/series the paper reports and
 //! optionally writes a CSV. Shared by the `repro` CLI and the
 //! `cargo bench` targets (`rust/benches/*.rs`).
+//!
+//! Every configuration (scheme × thread count) builds its structures in a
+//! fresh reclamation domain, so no state leaks between configurations; a
+//! structure retained across trials *within* one configuration (the
+//! HashMap warm-up behaviour, Fig. 7) keeps its domain — the paper's
+//! deliberate same-process warm-up, now scoped to exactly one sweep cell.
 
 use super::report::{maybe_write_csv, SeriesTable, SweepTable};
 use super::runner::{run_trial, ConfigResult};
@@ -10,7 +16,7 @@ use super::sampler::sample_during;
 use super::workload::*;
 use super::BenchParams;
 use crate::dispatch_scheme;
-use crate::reclaim::{Reclaimer, SchemeId};
+use crate::reclaim::{DomainRef, Reclaimer};
 use crate::util::stats::fmt_ns;
 
 /// Which benchmark workload a figure runs.
@@ -32,7 +38,8 @@ impl Workload {
 }
 
 /// Run one scheme's thread sweep for `workload`; returns mean ns/op per
-/// thread count.
+/// thread count. Each thread count runs against structures in a fresh
+/// domain (dropped — and drained — when the configuration ends).
 fn sweep_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<f64> {
     crate::alloc::set_policy(p.alloc);
     p.threads
@@ -67,7 +74,8 @@ fn sweep_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<f64> {
                     }
                 }
             }
-            R::flush();
+            // Structures (and their domains) drop here: `Domain::drop`
+            // drains every parked node before the next configuration.
             cfg.mean_ns_per_op()
         })
         .collect()
@@ -106,12 +114,11 @@ pub fn fig_throughput(p: &BenchParams, workload: Workload) {
 }
 
 /// One scheme's efficiency run: `p.trials` trials at the max thread count,
-/// 50 samples each, structure retained across trials. Returns the series
-/// of (sample index, unreclaimed-above-baseline).
+/// 50 samples each, structure (and domain) retained across trials. Returns
+/// the series of (sample index, unreclaimed-above-baseline).
 fn efficiency_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<(usize, f64)> {
     crate::alloc::set_policy(p.alloc);
-    // Settle previous schemes' garbage, then baseline the global counter.
-    R::flush();
+    // Fresh domain per scheme run: baseline the global counter first.
     let baseline = crate::alloc::unreclaimed();
     let threads = *p.threads.iter().max().unwrap_or(&2);
     let mut series = Vec::with_capacity(p.trials * p.samples);
@@ -169,7 +176,6 @@ fn efficiency_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<(usi
             }
         }
     }
-    R::flush();
     series
 }
 
@@ -179,7 +185,8 @@ pub fn fig_efficiency(p: &BenchParams, workload: Workload) {
     let threads = *p.threads.iter().max().unwrap_or(&2);
     let mut table = SeriesTable {
         title: format!(
-            "{} reclamation efficiency — unreclaimed nodes over {} trials × {} samples, p={} [alloc={}]",
+            "{} reclamation efficiency — unreclaimed nodes over {} trials × {} samples, \
+             p={} [alloc={}]",
             workload.name(),
             p.trials,
             p.samples,
@@ -197,7 +204,7 @@ pub fn fig_efficiency(p: &BenchParams, workload: Workload) {
 }
 
 /// One scheme's warm-up run (Fig. 7/15): runtime per op per trial, cache
-/// retained across trials.
+/// (and its domain) retained across trials.
 fn trials_one<R: Reclaimer>(p: &BenchParams) -> Vec<f64> {
     crate::alloc::set_policy(p.alloc);
     let threads = *p.threads.iter().max().unwrap_or(&2);
@@ -209,7 +216,6 @@ fn trials_one<R: Reclaimer>(p: &BenchParams) -> Vec<f64> {
         });
         per_trial.push(r.avg_ns_per_op);
     }
-    R::flush();
     per_trial
 }
 
@@ -234,17 +240,23 @@ pub fn fig7_trials(p: &BenchParams) {
     maybe_write_csv(&p.csv, &table.to_csv());
 }
 
-/// E13: cost of a region enter/exit cycle per scheme vs thread count.
+/// E13: cost of a region enter/exit cycle per scheme vs thread count. Each
+/// thread registers one handle with a fresh domain and cycles through it —
+/// the TLS-free fast path this refactor targets (the seed paid a
+/// thread-local + `RefCell` lookup per cycle).
 fn region_cycle_one<R: Reclaimer>(p: &BenchParams) -> Vec<f64> {
     p.threads
         .iter()
         .map(|&threads| {
+            let domain = DomainRef::<R>::new_owned();
             let mut cfg = ConfigResult::default();
             for _ in 0..p.trials {
+                let domain = &domain;
                 cfg.push(&run_trial(threads, p.duration(), |_tid, stop| {
+                    let h = domain.register();
                     let mut ops = 0u64;
                     while !stop.load(std::sync::atomic::Ordering::Acquire) {
-                        let region = crate::reclaim::Region::<R>::enter();
+                        let region = crate::reclaim::Region::enter(&h);
                         std::hint::black_box(&region);
                         drop(region);
                         ops += 1;
@@ -252,7 +264,6 @@ fn region_cycle_one<R: Reclaimer>(p: &BenchParams) -> Vec<f64> {
                     ops
                 }));
             }
-            R::flush();
             cfg.mean_ns_per_op()
         })
         .collect()
@@ -261,7 +272,7 @@ fn region_cycle_one<R: Reclaimer>(p: &BenchParams) -> Vec<f64> {
 /// E13 (Propositions 2/3): region enter+exit microbenchmark.
 pub fn micro_region(p: &BenchParams) {
     let mut table = SweepTable {
-        title: "region enter+exit cycle cost".into(),
+        title: "region enter+exit cycle cost (cached handle, no TLS)".into(),
         threads: p.threads.clone(),
         rows: Vec::new(),
     };
@@ -311,18 +322,19 @@ pub fn micro_stamp_pool(p: &BenchParams) {
     );
 }
 
-/// A1: Stamp-it global-retire threshold ablation (paper picks 20).
+/// A1: Stamp-it global-retire threshold ablation (paper picks 20). Each
+/// threshold runs in its own domain with the knob set per-domain.
 pub fn abl_threshold(p: &BenchParams) {
-    use crate::reclaim::stamp::{set_threshold, StampIt};
+    use crate::reclaim::stamp::StampIt;
     let thresholds = [0usize, 1, 5, 20, 100, 100_000];
     let threads = *p.threads.iter().max().unwrap_or(&2);
     println!("\n== Stamp-it threshold ablation (HashMap workload, p={threads}) ==");
     println!("{:<12}{:>14}{:>18}", "threshold", "ns/op", "end unreclaimed");
     for &t in &thresholds {
-        set_threshold(t);
-        StampIt::flush();
+        let domain = DomainRef::<StampIt>::new_owned();
+        domain.domain().state().set_threshold(t);
         let baseline = crate::alloc::unreclaimed();
-        let cache = make_cache::<StampIt>(p);
+        let cache = make_cache_in::<StampIt>(domain.clone(), p);
         let mut cfg = ConfigResult::default();
         for trial in 0..p.trials {
             cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
@@ -331,24 +343,23 @@ pub fn abl_threshold(p: &BenchParams) {
         }
         let unreclaimed = crate::alloc::unreclaimed().saturating_sub(baseline);
         println!("{t:<12}{:>14}{:>18}", fmt_ns(cfg.mean_ns_per_op()), unreclaimed);
-        drop(cache);
-        StampIt::flush();
+        // cache + domain drop here; the drain settles the counters before
+        // the next threshold's baseline.
     }
-    set_threshold(20); // restore the paper's value
 }
 
 /// A2: HPR scan-threshold-base ablation (paper: 100 + 2ΣK).
 pub fn abl_hp_threshold(p: &BenchParams) {
-    use crate::reclaim::hp::{set_threshold_base, Hp};
+    use crate::reclaim::hp::Hp;
     let bases = [0usize, 10, 100, 1000];
     let threads = *p.threads.iter().max().unwrap_or(&2);
     println!("\n== HPR threshold-base ablation (Queue workload, p={threads}) ==");
     println!("{:<12}{:>14}{:>18}", "base", "ns/op", "end unreclaimed");
     for &base in &bases {
-        set_threshold_base(base);
-        Hp::flush();
+        let domain = DomainRef::<Hp>::new_owned();
+        domain.domain().state().set_threshold_base(base);
         let baseline = crate::alloc::unreclaimed();
-        let q = prefill_queue::<Hp>(p);
+        let q = prefill_queue_in::<Hp>(domain.clone(), p);
         let mut cfg = ConfigResult::default();
         for trial in 0..p.trials {
             cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
@@ -357,50 +368,51 @@ pub fn abl_hp_threshold(p: &BenchParams) {
         }
         let unreclaimed = crate::alloc::unreclaimed().saturating_sub(baseline);
         println!("{base:<12}{:>14}{:>18}", fmt_ns(cfg.mean_ns_per_op()), unreclaimed);
-        drop(q);
-        Hp::flush();
     }
-    set_threshold_base(100);
 }
 
-/// A3: epoch-advance / DEBRA-check period ablation (paper: 100 / 20).
+/// A3: epoch-advance / DEBRA-check period ablation (paper: 100 / 20). The
+/// period knob is per-domain, so each (scheme, period) cell is isolated.
 pub fn abl_epoch_period(p: &BenchParams) {
+    use crate::reclaim::debra::Debra;
+    use crate::reclaim::ebr::Ebr;
+    use crate::reclaim::epoch_core::EpochDomain;
+
+    fn one<R: Reclaimer<DomainState = EpochDomain>>(
+        p: &BenchParams,
+        threads: usize,
+        period: u32,
+    ) -> (f64, u64) {
+        let domain = DomainRef::<R>::new_owned();
+        domain.domain().state().set_period(period);
+        let baseline = crate::alloc::unreclaimed();
+        let list = prefill_list_in::<R>(domain.clone(), p);
+        let mut cfg = ConfigResult::default();
+        for trial in 0..p.trials {
+            cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
+                list_worker(&list, p, tid, trial, stop)
+            }));
+        }
+        let end = crate::alloc::unreclaimed().saturating_sub(baseline);
+        (cfg.mean_ns_per_op(), end)
+    }
+
     let periods = [1u32, 10, 20, 100, 1000];
     let threads = *p.threads.iter().max().unwrap_or(&2);
     println!("\n== Epoch advance/check period ablation (List workload, p={threads}) ==");
     println!("{:<10}{:<10}{:>14}{:>18}", "scheme", "period", "ns/op", "end unreclaimed");
     for &period in &periods {
-        for (name, domain, id) in [
-            ("ER", crate::reclaim::ebr::domain(), SchemeId::Ebr),
-            ("DEBRA", crate::reclaim::debra::domain(), SchemeId::Debra),
-        ] {
-            domain.set_period(period);
-            fn one<R: Reclaimer>(p: &BenchParams, threads: usize) -> (f64, u64) {
-                R::flush();
-                let baseline = crate::alloc::unreclaimed();
-                let list = prefill_list::<R>(p);
-                let mut cfg = ConfigResult::default();
-                for trial in 0..p.trials {
-                    cfg.push(&run_trial(threads, p.duration(), |tid, stop| {
-                        list_worker(&list, p, tid, trial, stop)
-                    }));
-                }
-                let end = crate::alloc::unreclaimed().saturating_sub(baseline);
-                drop(list);
-                R::flush();
-                (cfg.mean_ns_per_op(), end)
-            }
-            let (ns, unreclaimed) = dispatch_scheme!(id, one, p, threads);
-            println!("{name:<10}{period:<10}{:>14}{unreclaimed:>18}", fmt_ns(ns));
-        }
+        let (ns, unreclaimed) = one::<Ebr>(p, threads, period);
+        println!("{:<10}{period:<10}{:>14}{unreclaimed:>18}", "ER", fmt_ns(ns));
+        let (ns, unreclaimed) = one::<Debra>(p, threads, period);
+        println!("{:<10}{period:<10}{:>14}{unreclaimed:>18}", "DEBRA", fmt_ns(ns));
     }
-    crate::reclaim::ebr::domain().set_period(100);
-    crate::reclaim::debra::domain().set_period(20);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::reclaim::SchemeId;
 
     fn tiny() -> BenchParams {
         BenchParams {

@@ -12,12 +12,19 @@
 //! `region_ops` (100) operations — the paper's setup for QSR, NER and
 //! Stamp-it. The HashMap workload guards per operation (its regions are
 //! long-lived anyway: one op touches the map several times).
+//!
+//! Every structure is built in a **fresh owned domain**
+//! ([`crate::reclaim::DomainRef::new_owned`]), so benchmark configurations
+//! are isolated from each other (no state leaks between schemes, thread
+//! counts or trials beyond what a configuration deliberately retains), and
+//! each worker thread registers one explicit handle — the TLS-free fast
+//! path the refactor exists for.
 
 use super::BenchParams;
 use crate::ds::hashmap::FifoCache;
 use crate::ds::list::List;
 use crate::ds::queue::Queue;
-use crate::reclaim::{Reclaimer, Region};
+use crate::reclaim::{DomainRef, Reclaimer, Region};
 use crate::runtime::DIM;
 use crate::util::rng::{mix64, Xoshiro256};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -44,7 +51,8 @@ pub fn consume_payload(p: &SimPayload) -> f32 {
     p.iter().step_by(16).sum()
 }
 
-/// One thread's Queue-benchmark loop; returns its op count.
+/// One thread's Queue-benchmark loop; returns its op count. Registers one
+/// handle with the queue's domain and runs every operation through it.
 pub fn queue_worker<R: Reclaimer>(
     q: &Queue<u64, R>,
     params: &BenchParams,
@@ -52,15 +60,16 @@ pub fn queue_worker<R: Reclaimer>(
     trial: usize,
     stop: &AtomicBool,
 ) -> u64 {
+    let h = q.domain().register();
     let mut rng = Xoshiro256::new(0x9E37 ^ (trial as u64) << 32 ^ tid as u64);
     let mut ops = 0u64;
     while !stop.load(Ordering::Acquire) {
-        let _region: Region<R> = Region::enter();
+        let _region: Region<R> = Region::enter(&h);
         for _ in 0..params.region_ops {
             if rng.percent(50) {
-                q.enqueue(rng.next_u64());
+                q.enqueue_with(&h, rng.next_u64());
             } else {
-                let _ = q.dequeue();
+                let _ = q.dequeue_with(&h);
             }
             ops += 1;
         }
@@ -76,22 +85,23 @@ pub fn list_worker<R: Reclaimer>(
     trial: usize,
     stop: &AtomicBool,
 ) -> u64 {
+    let h = list.domain().register();
     let key_range = params.list_size * 2; // paper: twice the initial size
     let mut rng = Xoshiro256::new(0xA5A5 ^ (trial as u64) << 32 ^ tid as u64);
     let mut ops = 0u64;
     while !stop.load(Ordering::Acquire) {
-        let _region: Region<R> = Region::enter();
+        let _region: Region<R> = Region::enter(&h);
         for _ in 0..params.region_ops {
             let key = rng.below(key_range);
             if rng.percent(params.workload_pct) {
                 // Update: insert and remove with equal probability.
                 if rng.percent(50) {
-                    list.insert(key, ());
+                    list.insert_with(&h, key, ());
                 } else {
-                    list.remove(&key);
+                    list.remove_with(&h, &key);
                 }
             } else {
-                list.contains(&key);
+                list.contains_with(&h, &key);
             }
             ops += 1;
         }
@@ -107,17 +117,18 @@ pub fn hashmap_worker<R: Reclaimer>(
     trial: usize,
     stop: &AtomicBool,
 ) -> u64 {
+    let h = cache.domain().register();
     let mut rng = Xoshiro256::new(0xC0DE ^ (trial as u64) << 32 ^ tid as u64);
     let mut ops = 0u64;
     let mut sink = 0.0f32;
     while !stop.load(Ordering::Acquire) {
         let key = rng.below(params.key_space);
-        match cache.get_with(&key, consume_payload) {
+        match cache.get_with_handle(&h, &key, consume_payload) {
             Some(v) => sink += v,
             None => {
                 let payload = compute_payload(key);
                 sink += consume_payload(&payload);
-                cache.insert(key, payload);
+                cache.insert_with(&h, key, payload);
             }
         }
         ops += 1;
@@ -126,28 +137,59 @@ pub fn hashmap_worker<R: Reclaimer>(
     ops
 }
 
-/// Build + prefill a List for one configuration (paper: initial size s
-/// from key range 2s — insert every even key).
-pub fn prefill_list<R: Reclaimer>(params: &BenchParams) -> List<u64, (), R> {
-    let list = List::new();
+/// Build + prefill a List in `domain` (paper: initial size s from key range
+/// 2s — insert every even key).
+pub fn prefill_list_in<R: Reclaimer>(
+    domain: DomainRef<R>,
+    params: &BenchParams,
+) -> List<u64, (), R> {
+    let list = List::new_in(domain);
+    // Explicit handle: the prefill must not pin the per-trial domain in the
+    // calling thread's TLS handle cache (the domain should drop — and drain
+    // — when the configuration ends).
+    let h = list.domain().register();
     for i in 0..params.list_size {
-        list.insert(i * 2, ());
+        list.insert_with(&h, i * 2, ());
     }
     list
 }
 
-/// Build + prefill a Queue (a handful of nodes so dequeues hit).
-pub fn prefill_queue<R: Reclaimer>(_params: &BenchParams) -> Queue<u64, R> {
-    let q = Queue::new();
+/// Build + prefill a List in a fresh owned domain.
+pub fn prefill_list<R: Reclaimer>(params: &BenchParams) -> List<u64, (), R> {
+    prefill_list_in(DomainRef::new_owned(), params)
+}
+
+/// Build + prefill a Queue in `domain` (a handful of nodes so dequeues
+/// hit).
+pub fn prefill_queue_in<R: Reclaimer>(
+    domain: DomainRef<R>,
+    _params: &BenchParams,
+) -> Queue<u64, R> {
+    let q = Queue::new_in(domain);
+    // Explicit handle — see prefill_list_in.
+    let h = q.domain().register();
     for i in 0..64 {
-        q.enqueue(i);
+        q.enqueue_with(&h, i);
     }
     q
 }
 
-/// Build the HashMap-benchmark cache.
+/// Build + prefill a Queue in a fresh owned domain.
+pub fn prefill_queue<R: Reclaimer>(params: &BenchParams) -> Queue<u64, R> {
+    prefill_queue_in(DomainRef::new_owned(), params)
+}
+
+/// Build the HashMap-benchmark cache in `domain`.
+pub fn make_cache_in<R: Reclaimer>(
+    domain: DomainRef<R>,
+    params: &BenchParams,
+) -> FifoCache<u64, SimPayload, R> {
+    FifoCache::new_in(domain, params.map_buckets, params.map_capacity)
+}
+
+/// Build the HashMap-benchmark cache in a fresh owned domain.
 pub fn make_cache<R: Reclaimer>(params: &BenchParams) -> FifoCache<u64, SimPayload, R> {
-    FifoCache::new(params.map_buckets, params.map_capacity)
+    make_cache_in(DomainRef::new_owned(), params)
 }
 
 #[cfg(test)]

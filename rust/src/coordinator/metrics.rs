@@ -1,7 +1,7 @@
 //! Coordinator metrics: request counters, batch shape, and the paper's
 //! reclamation-efficiency signal (unreclaimed nodes) sampled per snapshot.
 
-use crossbeam_utils::CachePadded;
+use crate::util::cache_pad::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Live counters (relaxed; exact at quiescence).

@@ -13,15 +13,20 @@
 //! Everything on the request path is Rust; the hot structures (request
 //! queue **and** cache) are this crate's own lock-free data structures,
 //! reclaimed by the scheme `R` — the coordinator dogfoods the library.
+//!
+//! Every server instance (= one shard of the ROADMAP's sharded north-star)
+//! owns its **own reclamation domain**: two servers in one process never
+//! share retire lists, epochs or hazard registries, and worker threads use
+//! explicit per-thread handles on the hot path (no TLS per operation).
 
 pub mod metrics;
 
 use crate::ds::hashmap::FifoCache;
 use crate::ds::queue::Queue;
-use crate::reclaim::Reclaimer;
+use crate::reclaim::{DomainRef, Reclaimer};
 use crate::runtime::{Engine, DIM};
+use crate::util::error::{Context, Result};
 use crate::util::monotonic_ns;
-use anyhow::{Context, Result};
 use metrics::{Metrics, MetricsSnapshot};
 use std::collections::HashMap as StdHashMap;
 use std::path::PathBuf;
@@ -77,6 +82,8 @@ struct Request {
 }
 
 struct Shared<R: Reclaimer> {
+    /// This server's private reclamation domain (domain-per-shard).
+    domain: DomainRef<R>,
     cache: FifoCache<u32, Payload, R>,
     queue: Queue<Request, R>,
     queued: AtomicUsize,
@@ -92,11 +99,18 @@ pub struct CacheServer<R: Reclaimer> {
 }
 
 impl<R: Reclaimer> CacheServer<R> {
-    /// Start workers + batcher + engine. Fails if artifacts are missing.
+    /// Start workers + batcher + engine in a fresh reclamation domain.
+    /// Fails if artifacts are missing.
     pub fn start(cfg: ServerConfig) -> Result<Arc<Self>> {
+        Self::start_in(cfg, DomainRef::new_owned())
+    }
+
+    /// [`Self::start`] with an explicit domain (shared-shard setups).
+    pub fn start_in(cfg: ServerConfig, domain: DomainRef<R>) -> Result<Arc<Self>> {
         let shared = Arc::new(Shared {
-            cache: FifoCache::new(cfg.buckets, cfg.capacity),
-            queue: Queue::new(),
+            cache: FifoCache::new_in(domain.clone(), cfg.buckets, cfg.capacity),
+            queue: Queue::new_in(domain.clone()),
+            domain,
             queued: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             metrics: Metrics::default(),
@@ -195,15 +209,18 @@ impl<R: Reclaimer> Drop for CacheServer<R> {
 }
 
 fn worker_loop<R: Reclaimer>(shared: &Shared<R>, miss_tx: mpsc::Sender<Request>) {
+    // One registration for the worker's lifetime: every queue/cache
+    // operation below runs TLS-free through this handle.
+    let handle = shared.domain.register();
     let mut idle_spins = 0u32;
     loop {
-        match shared.queue.dequeue() {
+        match shared.queue.dequeue_with(&handle) {
             Some(req) => {
                 idle_spins = 0;
                 shared.queued.fetch_sub(1, Ordering::Release);
                 // Guarded cache read: the payload is copied out under the
                 // guard (the "reuse" path of the paper's simulation).
-                let hit = shared.cache.get_with(&req.key, |v| Box::new(*v));
+                let hit = shared.cache.get_with_handle(&handle, &req.key, |v| Box::new(*v));
                 match hit {
                     Some(data) => {
                         shared.metrics.hits.fetch_add(1, Ordering::Relaxed);
@@ -246,6 +263,7 @@ fn batcher_loop<R: Reclaimer>(
     batch_wait: Duration,
 ) {
     let max_batch = engine.max_batch();
+    let handle = shared.domain.register();
     let mut waiting: StdHashMap<u32, Vec<Request>> = StdHashMap::new();
     loop {
         // Block for the first miss (with a timeout to notice shutdown).
@@ -291,7 +309,7 @@ fn batcher_loop<R: Reclaimer>(
                     payload.copy_from_slice(&row);
                     // Insert evicts FIFO-oldest beyond capacity — retiring
                     // 1 KiB nodes through the reclamation scheme.
-                    if !shared.cache.insert(*key, payload) {
+                    if !shared.cache.insert_with(&handle, *key, payload) {
                         shared.metrics.evictions_observed.fetch_add(1, Ordering::Relaxed);
                     }
                     for req in waiting.remove(key).unwrap_or_default() {

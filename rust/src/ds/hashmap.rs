@@ -6,10 +6,14 @@
 //!
 //! Paper benchmark parameters (defaults in [`crate::bench_fw`]): 2048
 //! buckets, ≤ 10 000 entries, 30 000 possible keys, 1024-byte payloads.
+//!
+//! All buckets (and the FIFO order queue) share the map's reclamation
+//! [`DomainRef`]; `new` uses the global domain, `new_in` pins the map to an
+//! owned one. The `*_with` variants take an explicit [`LocalHandle`].
 
 use super::list::List;
 use super::queue::Queue;
-use crate::reclaim::Reclaimer;
+use crate::reclaim::{DomainRef, LocalHandle, Reclaimer};
 use crate::util::rng::mix64;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -20,6 +24,7 @@ where
     V: Send + Sync + 'static,
     R: Reclaimer,
 {
+    domain: DomainRef<R>,
     buckets: Box<[List<K, V, R>]>,
     len: AtomicUsize,
 }
@@ -59,13 +64,24 @@ where
     V: Send + Sync + 'static,
     R: Reclaimer,
 {
-    /// A map with `buckets` buckets (paper: 2048).
+    /// A map with `buckets` buckets (paper: 2048) on the global domain.
     pub fn new(buckets: usize) -> Self {
+        Self::new_in(DomainRef::global(), buckets)
+    }
+
+    /// A map whose nodes are retired into `domain`.
+    pub fn new_in(domain: DomainRef<R>, buckets: usize) -> Self {
         assert!(buckets > 0);
         Self {
-            buckets: (0..buckets).map(|_| List::new()).collect(),
+            buckets: (0..buckets).map(|_| List::new_in(domain.clone())).collect(),
+            domain,
             len: AtomicUsize::new(0),
         }
+    }
+
+    /// The map's reclamation domain.
+    pub fn domain(&self) -> &DomainRef<R> {
+        &self.domain
     }
 
     #[inline]
@@ -78,10 +94,25 @@ where
         self.bucket(key).contains(key)
     }
 
+    /// [`Self::contains`] through an explicit handle (no TLS).
+    pub fn contains_with(&self, h: &LocalHandle<R>, key: &K) -> bool {
+        self.bucket(key).contains_with(h, key)
+    }
+
     /// Guarded read of the value under `key` (no clone of the payload —
     /// the benchmark's 1 KiB results are consumed in place).
     pub fn get_with<U>(&self, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
         self.bucket(key).get_with(key, f)
+    }
+
+    /// [`Self::get_with`] through an explicit handle (no TLS).
+    pub fn get_with_handle<U>(
+        &self,
+        h: &LocalHandle<R>,
+        key: &K,
+        f: impl FnOnce(&V) -> U,
+    ) -> Option<U> {
+        self.bucket(key).get_with_handle(h, key, f)
     }
 
     /// Insert if absent; returns whether this call inserted.
@@ -93,9 +124,27 @@ where
         inserted
     }
 
+    /// [`Self::insert`] through an explicit handle (no TLS).
+    pub fn insert_with(&self, h: &LocalHandle<R>, key: K, value: V) -> bool {
+        let inserted = self.bucket(&key).insert_with(h, key, value);
+        if inserted {
+            self.len.fetch_add(1, Ordering::Relaxed);
+        }
+        inserted
+    }
+
     /// Remove `key`; returns whether this call removed it.
     pub fn remove(&self, key: &K) -> bool {
         let removed = self.bucket(key).remove(key);
+        if removed {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+        }
+        removed
+    }
+
+    /// [`Self::remove`] through an explicit handle (no TLS).
+    pub fn remove_with(&self, h: &LocalHandle<R>, key: &K) -> bool {
+        let removed = self.bucket(key).remove_with(h, key);
         if removed {
             self.len.fetch_sub(1, Ordering::Relaxed);
         }
@@ -119,9 +168,9 @@ where
 
 /// The paper's HashMap-benchmark container: a bounded hash-map with FIFO
 /// eviction. Insertion order is tracked in a Michael–Scott queue **built on
-/// the same reclamation scheme** — the benchmark therefore stresses two
-/// node types (map nodes carrying large payloads, queue nodes) at once,
-/// just like the paper's implementation.
+/// the same reclamation scheme and domain** — the benchmark therefore
+/// stresses two node types (map nodes carrying large payloads, queue nodes)
+/// at once, just like the paper's implementation.
 pub struct FifoCache<K, V, R>
 where
     K: Ord + std::hash::Hash + Clone + Send + Sync + 'static,
@@ -139,14 +188,39 @@ where
     V: Send + Sync + 'static,
     R: Reclaimer,
 {
-    /// A cache holding at most `capacity` entries across `buckets` buckets.
+    /// A cache holding at most `capacity` entries across `buckets` buckets,
+    /// on the global domain.
     pub fn new(buckets: usize, capacity: usize) -> Self {
-        Self { map: HashMap::new(buckets), order: Queue::new(), capacity }
+        Self::new_in(DomainRef::global(), buckets, capacity)
+    }
+
+    /// A cache whose nodes are retired into `domain`.
+    pub fn new_in(domain: DomainRef<R>, buckets: usize, capacity: usize) -> Self {
+        Self {
+            map: HashMap::new_in(domain.clone(), buckets),
+            order: Queue::new_in(domain),
+            capacity,
+        }
+    }
+
+    /// The cache's reclamation domain.
+    pub fn domain(&self) -> &DomainRef<R> {
+        self.map.domain()
     }
 
     /// Guarded read (a cache hit — the benchmark's "reuse" path).
     pub fn get_with<U>(&self, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
         self.map.get_with(key, f)
+    }
+
+    /// [`Self::get_with`] through an explicit handle (no TLS).
+    pub fn get_with_handle<U>(
+        &self,
+        h: &LocalHandle<R>,
+        key: &K,
+        f: impl FnOnce(&V) -> U,
+    ) -> Option<U> {
+        self.map.get_with_handle(h, key, f)
     }
 
     /// Is `key` cached?
@@ -158,17 +232,22 @@ where
     /// capacity. Returns whether this call inserted (false = already
     /// present, `value` dropped).
     pub fn insert(&self, key: K, value: V) -> bool {
-        if !self.map.insert(key.clone(), value) {
+        self.domain().with_handle(|h| self.insert_with(h, key, value))
+    }
+
+    /// [`Self::insert`] through an explicit handle (no TLS).
+    pub fn insert_with(&self, h: &LocalHandle<R>, key: K, value: V) -> bool {
+        if !self.map.insert_with(h, key.clone(), value) {
             return false;
         }
-        self.order.enqueue(key);
+        self.order.enqueue_with(h, key);
         // Evict until back under capacity. An evicted key may already have
         // been removed (rare double-insert races) — the queue is the single
         // source of eviction order, the map the source of truth.
         while self.map.len() > self.capacity {
-            match self.order.dequeue() {
+            match self.order.dequeue_with(h) {
                 Some(old) => {
-                    self.map.remove(&old);
+                    self.map.remove_with(h, &old);
                 }
                 None => break,
             }
@@ -244,21 +323,24 @@ mod tests {
     }
 
     fn concurrent_cache_exercise<R: Reclaimer>() {
+        use crate::reclaim::DomainRef;
         use crate::util::rng::Xoshiro256;
         use std::sync::Arc;
         // Shrunk HashMap-benchmark shape: large-ish payloads, bounded map,
-        // concurrent compute-or-reuse.
-        let cache: Arc<FifoCache<u64, [u8; 256], R>> = Arc::new(FifoCache::new(64, 100));
+        // concurrent compute-or-reuse — on an isolated domain.
+        let cache: Arc<FifoCache<u64, [u8; 256], R>> =
+            Arc::new(FifoCache::new_in(DomainRef::new_owned(), 64, 100));
         let threads = 4;
         let handles: Vec<_> = (0..threads)
             .map(|t| {
                 let cache = cache.clone();
                 std::thread::spawn(move || {
+                    let h = cache.domain().register();
                     let mut rng = Xoshiro256::new(0xCAFE + t as u64);
                     let mut hits = 0usize;
                     for i in 0..2000 {
                         let key = rng.below(300);
-                        let found = cache.get_with(&key, |v| {
+                        let found = cache.get_with_handle(&h, &key, |v| {
                             // Payload integrity: first byte encodes the key.
                             assert_eq!(v[0], (key % 251) as u8);
                         });
@@ -267,7 +349,7 @@ mod tests {
                             None => {
                                 let mut payload = [0u8; 256];
                                 payload[0] = (key % 251) as u8;
-                                cache.insert(key, payload);
+                                cache.insert_with(&h, key, payload);
                             }
                         }
                         if i % 128 == 0 {

@@ -7,8 +7,14 @@
 //! helps unlink marked nodes it passes, and restarts on interference. The
 //! delete mark lives in bit 0 of each node's `next` pointer — the
 //! `marked_ptr` trick the interface exists for.
+//!
+//! Every list belongs to a reclamation [`DomainRef`]; the `*_with` variants
+//! take an explicit [`LocalHandle`] (TLS-free), the plain variants resolve
+//! the thread's cached handle once per call.
 
-use crate::reclaim::{alloc_node, ConcurrentPtr, GuardPtr, MarkedPtr, Reclaimer};
+use crate::reclaim::{
+    alloc_node, ConcurrentPtr, DomainRef, GuardPtr, LocalHandle, MarkedPtr, Reclaimer,
+};
 use std::sync::atomic::Ordering;
 
 /// A list node: key plus optional value (the set uses `V = ()`; the
@@ -50,6 +56,7 @@ where
     V: Send + Sync + 'static,
     R: Reclaimer,
 {
+    domain: DomainRef<R>,
     head: ConcurrentPtr<LNode<K, V, R>, R>,
 }
 
@@ -70,19 +77,29 @@ where
     V: Send + Sync + 'static,
     R: Reclaimer,
 {
-    /// An empty list.
+    /// An empty list on the global domain.
     pub const fn new() -> Self {
-        Self { head: ConcurrentPtr::null() }
+        Self { domain: DomainRef::global(), head: ConcurrentPtr::null() }
+    }
+
+    /// An empty list whose nodes are retired into `domain`.
+    pub fn new_in(domain: DomainRef<R>) -> Self {
+        Self { domain, head: ConcurrentPtr::null() }
+    }
+
+    /// The list's reclamation domain.
+    pub fn domain(&self) -> &DomainRef<R> {
+        &self.domain
     }
 
     /// Paper Listing 1: locate `key`, helping unlink marked nodes on the
     /// way. On return, `prev`/`next` define the insertion point and `cur`
     /// guards the first node with `node.key >= key` (if any).
-    fn find(&self, key: &K) -> FindResult<K, V, R> {
+    fn find(&self, h: &LocalHandle<R>, key: &K) -> FindResult<K, V, R> {
         'retry: loop {
             let mut prev: *const ConcurrentPtr<LNode<K, V, R>, R> = &self.head;
-            let mut save: GuardPtr<LNode<K, V, R>, R> = GuardPtr::new();
-            let mut cur: GuardPtr<LNode<K, V, R>, R> = GuardPtr::new();
+            let mut save: GuardPtr<LNode<K, V, R>, R> = h.guard();
+            let mut cur: GuardPtr<LNode<K, V, R>, R> = h.guard();
             // SAFETY: prev is the head (owned by self) here; below it is a
             // field of the node pinned by `save`.
             let mut next = unsafe { (*prev).load(Ordering::Acquire) };
@@ -93,7 +110,8 @@ where
                     continue 'retry;
                 }
                 if cur.is_null() {
-                    return FindResult { prev, next: next.with_mark(0), cur, _save: save, found: false };
+                    let next = next.with_mark(0);
+                    return FindResult { prev, next, cur, _save: save, found: false };
                 }
                 let cur_ptr = cur.get();
                 // SAFETY: cur is guarded.
@@ -138,12 +156,27 @@ where
 
     /// Does the set contain `key`?
     pub fn contains(&self, key: &K) -> bool {
-        self.find(key).found
+        self.domain.with_handle(|h| self.contains_with(h, key))
+    }
+
+    /// [`Self::contains`] through an explicit handle (no TLS).
+    pub fn contains_with(&self, h: &LocalHandle<R>, key: &K) -> bool {
+        self.find(h, key).found
     }
 
     /// Read the value under `key` through `f` (guarded access — no clone).
     pub fn get_with<U>(&self, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
-        let r = self.find(key);
+        self.domain.with_handle(|h| self.get_with_handle(h, key, f))
+    }
+
+    /// [`Self::get_with`] through an explicit handle (no TLS).
+    pub fn get_with_handle<U>(
+        &self,
+        h: &LocalHandle<R>,
+        key: &K,
+        f: impl FnOnce(&V) -> U,
+    ) -> Option<U> {
+        let r = self.find(h, key);
         if r.found {
             // SAFETY: cur is guarded and non-null on a hit.
             Some(f(unsafe { r.cur.get().deref_data().value() }))
@@ -155,6 +188,11 @@ where
     /// Insert `key → value` if absent. Returns false (and drops `value`)
     /// when the key already exists.
     pub fn insert(&self, key: K, value: V) -> bool {
+        self.domain.with_handle(|h| self.insert_with(h, key, value))
+    }
+
+    /// [`Self::insert`] through an explicit handle (no TLS).
+    pub fn insert_with(&self, h: &LocalHandle<R>, key: K, value: V) -> bool {
         let node = alloc_node::<LNode<K, V, R>, R>(LNode {
             key,
             value,
@@ -164,7 +202,7 @@ where
         loop {
             // SAFETY: node is still private.
             let node_ref = unsafe { &*node };
-            let r = self.find(&node_ref.data().key);
+            let r = self.find(h, &node_ref.data().key);
             if r.found {
                 // SAFETY: never published.
                 unsafe { crate::reclaim::free_node(node) };
@@ -185,8 +223,13 @@ where
 
     /// Remove `key`. Returns true if this call removed it.
     pub fn remove(&self, key: &K) -> bool {
+        self.domain.with_handle(|h| self.remove_with(h, key))
+    }
+
+    /// [`Self::remove`] through an explicit handle (no TLS).
+    pub fn remove_with(&self, h: &LocalHandle<R>, key: &K) -> bool {
         loop {
-            let mut r = self.find(key);
+            let mut r = self.find(h, key);
             if !r.found {
                 return false;
             }
@@ -220,7 +263,7 @@ where
                 // SAFETY: we unlinked it and we won the marking CAS.
                 unsafe { r.cur.reclaim() };
             } else {
-                let _ = self.find(key); // helper pass retires it
+                let _ = self.find(h, key); // helper pass retires it
             }
             return true;
         }
@@ -228,28 +271,30 @@ where
 
     /// Number of (unmarked) nodes — O(n), diagnostics.
     pub fn len(&self) -> usize {
-        let mut n = 0;
-        let mut g: GuardPtr<LNode<K, V, R>, R> = GuardPtr::new();
-        #[allow(unused_assignments)]
-        let mut _save: GuardPtr<LNode<K, V, R>, R> = GuardPtr::new();
-        let mut prev: *const ConcurrentPtr<LNode<K, V, R>, R> = &self.head;
-        loop {
-            // SAFETY: prev is the head or a field of the node pinned by
-            // `save`.
-            let cur = g.acquire(unsafe { &*prev });
-            if cur.is_null() {
-                return n;
+        self.domain.with_handle(|h| {
+            let mut n = 0;
+            let mut g: GuardPtr<LNode<K, V, R>, R> = h.guard();
+            #[allow(unused_assignments)]
+            let mut _save: GuardPtr<LNode<K, V, R>, R> = h.guard();
+            let mut prev: *const ConcurrentPtr<LNode<K, V, R>, R> = &self.head;
+            loop {
+                // SAFETY: prev is the head or a field of the node pinned by
+                // `save`.
+                let cur = g.acquire(unsafe { &*prev });
+                if cur.is_null() {
+                    return n;
+                }
+                // SAFETY: guarded.
+                let node = unsafe { cur.deref_data() };
+                if node.next.load(Ordering::Acquire).mark() == 0 {
+                    n += 1;
+                }
+                prev = &node.next;
+                // Pin the node owning `prev`; the previous pin drops after
+                // the reassignment (prev no longer points into it).
+                _save = g.take();
             }
-            // SAFETY: guarded.
-            let node = unsafe { cur.deref_data() };
-            if node.next.load(Ordering::Acquire).mark() == 0 {
-                n += 1;
-            }
-            prev = &node.next;
-            // Pin the node owning `prev`; the previous pin drops after the
-            // reassignment (prev no longer points into it).
-            _save = g.take();
-        }
+        })
     }
 
     pub fn is_empty(&self) -> bool {
@@ -313,25 +358,26 @@ mod tests {
     fn concurrent_set_exercise<R: Reclaimer>() {
         use crate::util::rng::Xoshiro256;
         use std::sync::Arc;
-        let l: Arc<List<u64, (), R>> = Arc::new(List::new());
+        let l: Arc<List<u64, (), R>> = Arc::new(List::new_in(DomainRef::new_owned()));
         let key_range = 20u64; // paper: key range = 2 × list size (10)
         let threads = 4;
         let handles: Vec<_> = (0..threads)
             .map(|t| {
                 let l = l.clone();
                 std::thread::spawn(move || {
+                    let h = l.domain().register();
                     let mut rng = Xoshiro256::new(0xD5 + t as u64);
                     for i in 0..3000 {
                         let k = rng.below(key_range);
                         match rng.below(10) {
                             0..=3 => {
-                                l.insert(k, ());
+                                l.insert_with(&h, k, ());
                             }
                             4..=7 => {
-                                l.remove(&k);
+                                l.remove_with(&h, &k);
                             }
                             _ => {
-                                l.contains(&k);
+                                l.contains_with(&h, &k);
                             }
                         }
                         if i % 128 == 0 {
@@ -341,14 +387,15 @@ mod tests {
                 })
             })
             .collect();
-        for h in handles {
-            h.join().unwrap();
+        for t in handles {
+            t.join().unwrap();
         }
         // Structural sanity: strictly sorted, unique keys.
+        let h = l.domain().register();
         let mut prev_key = None;
-        let mut g: GuardPtr<LNode<u64, (), R>, R> = GuardPtr::new();
+        let mut g: GuardPtr<LNode<u64, (), R>, R> = h.guard();
         #[allow(unused_assignments)]
-        let mut _save: GuardPtr<LNode<u64, (), R>, R> = GuardPtr::new();
+        let mut _save: GuardPtr<LNode<u64, (), R>, R> = h.guard();
         let mut prev: *const ConcurrentPtr<LNode<u64, (), R>, R> = &l.head;
         loop {
             let cur = g.acquire(unsafe { &*prev });

@@ -7,6 +7,15 @@
 //! * [`hashmap::HashMap`] — the hash-map built from per-bucket lists, and
 //!   [`hashmap::FifoCache`] — the bounded FIFO-evicting variant the
 //!   HashMap benchmark uses.
+//!
+//! Every structure is bound to a reclamation
+//! [`DomainRef`](crate::reclaim::DomainRef): `new()` uses the process-wide
+//! global domain, `new_in(domain)` isolates the structure in its own
+//! reclamation universe (one per shard, test or benchmark trial). Each
+//! operation exists twice — the plain form resolves the calling thread's
+//! cached handle (one TLS lookup per call), and a `*_with` form takes an
+//! explicit [`LocalHandle`](crate::reclaim::LocalHandle) for the TLS-free
+//! hot path.
 pub mod hashmap;
 pub mod list;
 pub mod queue;

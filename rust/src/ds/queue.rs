@@ -5,8 +5,17 @@
 //! the nodes after it. Dequeue advances `head` and retires the old dummy
 //! through the reclaimer — this retired-dummy stream is exactly the
 //! workload of the paper's Queue benchmark (Figures 3, 8, 12, 16).
+//!
+//! Every queue belongs to a reclamation [`DomainRef`]: [`Queue::new`] uses
+//! the process-wide global domain (quickstart one-liner), [`Queue::new_in`]
+//! pins the queue to an owned domain (one per shard/test/trial). The
+//! `*_with` operation variants take an explicit [`LocalHandle`] — the
+//! TLS-free fast path; the plain variants resolve the thread's cached
+//! handle once per call.
 
-use crate::reclaim::{alloc_node, ConcurrentPtr, GuardPtr, MarkedPtr, Reclaimer};
+use crate::reclaim::{
+    alloc_node, ConcurrentPtr, DomainRef, GuardPtr, LocalHandle, MarkedPtr, Reclaimer,
+};
 use std::cell::UnsafeCell;
 use std::sync::atomic::Ordering;
 
@@ -24,6 +33,7 @@ unsafe impl<T: Send + Sync + 'static, R: Reclaimer> Send for QNode<T, R> {}
 
 /// Michael–Scott queue under reclamation scheme `R`.
 pub struct Queue<T: Send + Sync + 'static, R: Reclaimer> {
+    domain: DomainRef<R>,
     head: ConcurrentPtr<QNode<T, R>, R>,
     tail: ConcurrentPtr<QNode<T, R>, R>,
 }
@@ -35,24 +45,39 @@ impl<T: Send + Sync + 'static, R: Reclaimer> Default for Queue<T, R> {
 }
 
 impl<T: Send + Sync + 'static, R: Reclaimer> Queue<T, R> {
-    /// An empty queue (allocates the dummy node).
+    /// An empty queue on the global domain (allocates the dummy node).
     pub fn new() -> Self {
+        Self::new_in(DomainRef::global())
+    }
+
+    /// An empty queue whose nodes are retired into `domain`.
+    pub fn new_in(domain: DomainRef<R>) -> Self {
         let dummy = alloc_node::<QNode<T, R>, R>(QNode {
             value: UnsafeCell::new(None),
             next: ConcurrentPtr::null(),
         });
         let p = MarkedPtr::new(dummy, 0);
-        Self { head: ConcurrentPtr::new(p), tail: ConcurrentPtr::new(p) }
+        Self { domain, head: ConcurrentPtr::new(p), tail: ConcurrentPtr::new(p) }
+    }
+
+    /// The queue's reclamation domain.
+    pub fn domain(&self) -> &DomainRef<R> {
+        &self.domain
     }
 
     /// Append `value` (lock-free).
     pub fn enqueue(&self, value: T) {
+        self.domain.with_handle(|h| self.enqueue_with(h, value))
+    }
+
+    /// [`Self::enqueue`] through an explicit handle (no TLS).
+    pub fn enqueue_with(&self, h: &LocalHandle<R>, value: T) {
         let node = alloc_node::<QNode<T, R>, R>(QNode {
             value: UnsafeCell::new(Some(value)),
             next: ConcurrentPtr::null(),
         });
         let node_ptr = MarkedPtr::new(node, 0);
-        let mut tail_guard: GuardPtr<QNode<T, R>, R> = GuardPtr::new();
+        let mut tail_guard: GuardPtr<QNode<T, R>, R> = h.guard();
         loop {
             let tail = tail_guard.acquire(&self.tail);
             debug_assert!(!tail.is_null());
@@ -64,7 +89,8 @@ impl<T: Send + Sync + 'static, R: Reclaimer> Queue<T, R> {
             }
             if !next.is_null() {
                 // Tail lags behind: help advance it.
-                let _ = self.tail.compare_exchange(tail, next, Ordering::Release, Ordering::Relaxed);
+                let _ =
+                    self.tail.compare_exchange(tail, next, Ordering::Release, Ordering::Relaxed);
                 continue;
             }
             if tail_node
@@ -73,8 +99,12 @@ impl<T: Send + Sync + 'static, R: Reclaimer> Queue<T, R> {
                 .is_ok()
             {
                 // Linked; swing tail (failure is fine — someone helped).
-                let _ =
-                    self.tail.compare_exchange(tail, node_ptr, Ordering::Release, Ordering::Relaxed);
+                let _ = self.tail.compare_exchange(
+                    tail,
+                    node_ptr,
+                    Ordering::Release,
+                    Ordering::Relaxed,
+                );
                 return;
             }
         }
@@ -82,8 +112,13 @@ impl<T: Send + Sync + 'static, R: Reclaimer> Queue<T, R> {
 
     /// Remove the oldest value (lock-free); `None` when empty.
     pub fn dequeue(&self) -> Option<T> {
-        let mut head_guard: GuardPtr<QNode<T, R>, R> = GuardPtr::new();
-        let mut next_guard: GuardPtr<QNode<T, R>, R> = GuardPtr::new();
+        self.domain.with_handle(|h| self.dequeue_with(h))
+    }
+
+    /// [`Self::dequeue`] through an explicit handle (no TLS).
+    pub fn dequeue_with(&self, h: &LocalHandle<R>) -> Option<T> {
+        let mut head_guard: GuardPtr<QNode<T, R>, R> = h.guard();
+        let mut next_guard: GuardPtr<QNode<T, R>, R> = h.guard();
         loop {
             let head = head_guard.acquire(&self.head);
             debug_assert!(!head.is_null());
@@ -99,7 +134,8 @@ impl<T: Send + Sync + 'static, R: Reclaimer> Queue<T, R> {
             let tail = self.tail.load(Ordering::Acquire);
             if head.get() == tail.get() {
                 // Tail lags: help before moving head past it.
-                let _ = self.tail.compare_exchange(tail, next, Ordering::Release, Ordering::Relaxed);
+                let _ =
+                    self.tail.compare_exchange(tail, next, Ordering::Release, Ordering::Relaxed);
                 continue;
             }
             if self.head.compare_exchange(head, next, Ordering::AcqRel, Ordering::Relaxed).is_ok() {
@@ -117,10 +153,12 @@ impl<T: Send + Sync + 'static, R: Reclaimer> Queue<T, R> {
 
     /// Approximate emptiness check.
     pub fn is_empty(&self) -> bool {
-        let mut head_guard: GuardPtr<QNode<T, R>, R> = GuardPtr::new();
-        let head = head_guard.acquire(&self.head);
-        // SAFETY: guarded.
-        unsafe { head.deref_data().next.load(Ordering::Acquire).is_null() }
+        self.domain.with_handle(|h| {
+            let mut head_guard: GuardPtr<QNode<T, R>, R> = h.guard();
+            let head = head_guard.acquire(&self.head);
+            // SAFETY: guarded.
+            unsafe { head.deref_data().next.load(Ordering::Acquire).is_null() }
+        })
     }
 }
 
@@ -164,12 +202,13 @@ mod tests {
 
     #[test]
     fn values_drop_exactly_once() {
-        use crate::reclaim::tests_common::Payload;
+        use crate::reclaim::tests_common::{flush_until, Payload};
         use std::sync::atomic::AtomicUsize;
         use std::sync::Arc;
+        let domain = DomainRef::<Ebr>::new_owned();
         let drops = Arc::new(AtomicUsize::new(0));
         {
-            let q: Queue<Payload, Ebr> = Queue::new();
+            let q: Queue<Payload, Ebr> = Queue::new_in(domain.clone());
             for i in 0..50 {
                 q.enqueue(Payload::new(i, &drops));
             }
@@ -180,16 +219,33 @@ mod tests {
             // 20 dequeued values dropped here; 30 remain in the queue.
         }
         // Queue drop frees the rest.
-        crate::reclaim::tests_common::flush_until::<Ebr>(|| {
-            drops.load(std::sync::atomic::Ordering::Relaxed) == 50
-        });
+        let h = domain.register();
+        flush_until(&h, || drops.load(std::sync::atomic::Ordering::Relaxed) == 50);
         assert_eq!(drops.load(std::sync::atomic::Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn explicit_handle_ops_match_tls_ops() {
+        let domain = DomainRef::<StampIt>::new_owned();
+        let q: Queue<u64, StampIt> = Queue::new_in(domain.clone());
+        let h = domain.register();
+        for i in 0..64 {
+            q.enqueue_with(&h, i);
+        }
+        for i in 0..32 {
+            assert_eq!(q.dequeue_with(&h), Some(i));
+        }
+        // Mixed: TLS-path ops see the same structure.
+        for i in 32..64 {
+            assert_eq!(q.dequeue(), Some(i));
+        }
+        assert_eq!(q.dequeue_with(&h), None);
     }
 
     fn mpmc_exercise<R: Reclaimer>() {
         use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
         use std::sync::Arc;
-        let q: Arc<Queue<u64, R>> = Arc::new(Queue::new());
+        let q: Arc<Queue<u64, R>> = Arc::new(Queue::new_in(DomainRef::new_owned()));
         let producers = 3;
         let consumers = 3;
         let per = 2000u64;
@@ -201,8 +257,9 @@ mod tests {
         for p in 0..producers {
             let q = q.clone();
             handles.push(std::thread::spawn(move || {
+                let h = q.domain().register();
                 for i in 0..per {
-                    q.enqueue(p as u64 * per + i);
+                    q.enqueue_with(&h, p as u64 * per + i);
                     if i % 64 == 0 {
                         std::thread::yield_now();
                     }
@@ -214,16 +271,19 @@ mod tests {
             let sum_out = sum_out.clone();
             let count_out = count_out.clone();
             let total = producers as usize * per as usize;
-            handles.push(std::thread::spawn(move || loop {
-                if count_out.load(Ordering::Relaxed) >= total {
-                    break;
-                }
-                match q.dequeue() {
-                    Some(v) => {
-                        sum_out.fetch_add(v, Ordering::Relaxed);
-                        count_out.fetch_add(1, Ordering::Relaxed);
+            handles.push(std::thread::spawn(move || {
+                let h = q.domain().register();
+                loop {
+                    if count_out.load(Ordering::Relaxed) >= total {
+                        break;
                     }
-                    None => std::thread::yield_now(),
+                    match q.dequeue_with(&h) {
+                        Some(v) => {
+                            sum_out.fetch_add(v, Ordering::Relaxed);
+                            count_out.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => std::thread::yield_now(),
+                    }
                 }
             }));
         }

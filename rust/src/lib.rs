@@ -4,39 +4,83 @@
 //! Concurrent Memory Reclamation Scheme in the C++ Memory Model”*
 //! (Pöter & Träff, 2018) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! The crate provides:
+//! ## Architecture: reclamation domains + cached local handles
 //!
-//! * [`reclaim`] — seven safe-memory-reclamation (SMR) schemes behind one
-//!   generic [`reclaim::Reclaimer`] interface (the Rust rendering of the
-//!   Robison N3712 proposal the paper builds on): Stamp-it (the paper's
-//!   contribution), LFRC, hazard pointers, quiescent-state, epoch, new-epoch
-//!   and DEBRA, plus a leaky baseline.
+//! The reclamation layer is organized as a two-level **instance model**
+//! (no process-global scheme state):
+//!
+//! * [`reclaim::Domain`]`<R>` owns one complete instance of a scheme's
+//!   shared state — Stamp-it's stamp pool and global retire-list, an epoch
+//!   family's epoch counter + thread registry + orphan list, HP's hazard
+//!   registry. `Domain::global()` is the process-wide default;
+//!   `DomainRef::new_owned()` creates isolated domains (one per shard,
+//!   test, or benchmark trial). Independent domains never exchange retired
+//!   nodes, and an owned domain drains everything it still holds when its
+//!   last reference drops.
+//! * [`reclaim::LocalHandle`]`<R>` caches a thread's registration with one
+//!   domain (registry entry, hazard slots, local retire list — the paper's
+//!   `thread_control_block`). Guards ([`reclaim::GuardPtr`]), regions
+//!   ([`reclaim::Region`]) and retires created through a handle touch **no
+//!   TLS and no `RefCell`** on the fast path; the `Default`-style
+//!   data-structure methods resolve a thread-cached handle once per call
+//!   instead (one TLS lookup).
+//!
+//! The [`reclaim::Reclaimer`] trait is the scheme plug-point: every
+//! operation takes `(&DomainState, &LocalCell<LocalState>)`, so schemes are
+//! written against explicit state and the same code serves any number of
+//! domains.
+//!
+//! ## Crate layout
+//!
+//! * [`reclaim`] — seven safe-memory-reclamation (SMR) schemes behind the
+//!   [`reclaim::Reclaimer`] interface (the Rust rendering of the Robison
+//!   N3712 proposal the paper builds on): Stamp-it (the paper's
+//!   contribution), LFRC, hazard pointers, quiescent-state, epoch,
+//!   new-epoch and DEBRA, plus a leaky baseline.
 //! * [`ds`] — the paper's benchmark data structures, generic over the
-//!   reclaimer: Michael–Scott queue, Harris–Michael list-based set, and a
-//!   Michael-style hash-map with bounded FIFO eviction.
+//!   reclaimer and bound to a domain: Michael–Scott queue, Harris–Michael
+//!   list-based set, and a Michael-style hash-map with bounded FIFO
+//!   eviction. Each operation has a TLS-resolving form and an explicit
+//!   `*_with(handle, ...)` form.
 //! * [`alloc`] — a pluggable node allocator (system vs pooled) with
 //!   allocation/reclamation counters, reproducing the paper's
 //!   jemalloc-vs-libc axis.
 //! * [`bench_fw`] — the benchmark harness regenerating every figure of the
 //!   paper's evaluation (throughput sweeps, reclamation-efficiency time
-//!   series, warm-up trials).
+//!   series, warm-up trials), one fresh domain per configuration.
 //! * [`coordinator`] + [`runtime`] — a compute-cache server that makes the
 //!   paper's HashMap workload real: worker threads serve batched compute
-//!   requests through the reclaimed hash-map, dispatching misses to an
-//!   AOT-compiled JAX/Pallas computation via PJRT.
+//!   requests through the reclaimed hash-map (one domain per server =
+//!   domain-per-shard), dispatching misses to an AOT-compiled JAX/Pallas
+//!   computation via PJRT (behind the `pjrt` cargo feature; stubbed
+//!   otherwise so the crate builds std-only and offline).
+//! * [`util`] — std-only stand-ins for `rand`/`clap`/`criterion`/
+//!   `proptest`/`anyhow`/`crossbeam_utils::CachePadded`.
 //!
 //! ## Quickstart
 //!
-//! (`no_run`: doctest executables don't inherit the xla_extension rpath;
-//! `examples/quickstart.rs` runs the same code for real.)
+//! The one-liner API (global domain, cached handles):
 //!
-//! ```no_run
+//! ```
 //! use emr::reclaim::stamp::StampIt;
 //! use emr::ds::queue::Queue;
 //!
 //! let q: Queue<u64, StampIt> = Queue::new();
 //! q.enqueue(1);
 //! assert_eq!(q.dequeue(), Some(1));
+//! ```
+//!
+//! The isolated, TLS-free fast path (own domain + explicit handle):
+//!
+//! ```
+//! use emr::reclaim::{stamp::StampIt, DomainRef, Region};
+//! use emr::ds::queue::Queue;
+//!
+//! let q: Queue<u64, StampIt> = Queue::new_in(DomainRef::new_owned());
+//! let handle = q.domain().register();
+//! let _region = Region::enter(&handle); // amortized critical region
+//! q.enqueue_with(&handle, 1);
+//! assert_eq!(q.dequeue_with(&handle), Some(1));
 //! ```
 
 pub mod alloc;

@@ -10,22 +10,25 @@
 //! global epoch, resulting in poor reclamation efficiency".
 
 use super::epoch_core::{epoch_reclaimer_impl, EpochConfig, EpochDomain};
+use super::Domain;
 
 /// DEBRA (Brown 2015).
 pub struct Debra;
 
-static DOMAIN: EpochDomain = EpochDomain::new(EpochConfig {
-    advance_every: u32::MAX, // unused under DEBRA policy
-    debra_check_every: Some(20), // paper §4.2
-    quiescent_at_exit: false,
-});
+epoch_reclaimer_impl!(
+    Debra,
+    "DEBRA",
+    EpochConfig {
+        advance_every: u32::MAX, // unused under DEBRA policy
+        debra_check_every: Some(20), // paper §4.2
+        quiescent_at_exit: false,
+    }
+);
 
-/// The scheme's epoch domain (benchmark diagnostics).
+/// The global domain's epoch state (benchmark diagnostics / ablations).
 pub fn domain() -> &'static EpochDomain {
-    &DOMAIN
+    Domain::<Debra>::global().state()
 }
-
-epoch_reclaimer_impl!(Debra, "DEBRA", DOMAIN, DEBRA_LOCAL, DebraRegion);
 
 #[cfg(test)]
 mod tests {

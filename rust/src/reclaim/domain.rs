@@ -1,0 +1,393 @@
+//! Reclamation **domains** and cached per-thread **handles** — the
+//! instance layer of the [`Reclaimer`] interface.
+//!
+//! The paper's schemes are usually presented (and were first implemented
+//! here) as process-global singletons: one Stamp Pool, one epoch domain and
+//! one hazard registry per scheme, reached through `thread_local!` lookups
+//! on every operation. This module replaces that shape with two explicit
+//! objects, following the paper's own `thread_control_block` discipline
+//! (§3) and the per-instance handle model of hazptr-rewrite / Hyaline:
+//!
+//! * [`Domain<R>`] owns **all** of a scheme's shared state (stamp pool,
+//!   epoch counter + registry, hazard registry, global retire lists). Every
+//!   former `static` is a field. [`Domain::global()`] is the process-wide
+//!   default instance; independent domains (one per shard, per test, per
+//!   benchmark trial) never observe each other's retired nodes.
+//! * [`LocalHandle<R>`] caches the calling thread's registry entry and
+//!   retire list for one domain. Guard acquire/release and region
+//!   enter/exit through a handle touch **no TLS and no `RefCell`** — the
+//!   thread-control-block access the paper's fast path assumes.
+//!
+//! ## Borrow discipline ([`LocalCell`])
+//!
+//! Reclamation runs user `Drop` code, which may re-enter the same scheme on
+//! the same thread (a dropped payload retiring further nodes). Handles are
+//! single-threaded (`!Send`/`!Sync` via `Rc`), so per-thread state needs no
+//! synchronization — but it must never be *mutably aliased* across such a
+//! re-entry. [`LocalCell`] enforces the crate-wide rule
+//!
+//! > scheme code takes short exclusive borrows and **never** runs user
+//! > drops while one is active (detach state → release the borrow →
+//! > reclaim → merge back)
+//!
+//! with zero release-mode cost: a plain `UnsafeCell` plus a
+//! `debug_assertions`-only borrow flag that turns a violation into a loud
+//! panic in debug builds (the role `RefCell` used to play on the hot path).
+
+use std::cell::UnsafeCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use super::{GuardPtr, Node, Reclaimer};
+
+/// Debug-checked, zero-release-cost exclusive access to per-thread scheme
+/// state. See the module docs for the discipline it encodes.
+pub struct LocalCell<S> {
+    state: UnsafeCell<S>,
+    #[cfg(debug_assertions)]
+    borrowed: std::cell::Cell<bool>,
+}
+
+#[cfg(debug_assertions)]
+struct BorrowReset<'a>(&'a std::cell::Cell<bool>);
+
+#[cfg(debug_assertions)]
+impl Drop for BorrowReset<'_> {
+    fn drop(&mut self) {
+        self.0.set(false);
+    }
+}
+
+impl<S> LocalCell<S> {
+    pub(crate) fn new(state: S) -> Self {
+        Self {
+            state: UnsafeCell::new(state),
+            #[cfg(debug_assertions)]
+            borrowed: std::cell::Cell::new(false),
+        }
+    }
+
+    /// Run `f` with exclusive access to the state. `f` must not run user
+    /// code (drops) that could re-enter this cell — debug builds panic on
+    /// violation, release builds rely on the crate-wide discipline.
+    #[inline]
+    pub fn with<O>(&self, f: impl FnOnce(&mut S) -> O) -> O {
+        #[cfg(debug_assertions)]
+        let _reset = {
+            assert!(
+                !self.borrowed.replace(true),
+                "LocalCell re-entered: scheme code ran user drops under an active borrow"
+            );
+            BorrowReset(&self.borrowed)
+        };
+        // SAFETY: handles are single-threaded (`!Send`/`!Sync`), and the
+        // no-user-code-under-borrow discipline (debug-checked above) rules
+        // out re-entrant aliasing on this thread.
+        f(unsafe { &mut *self.state.get() })
+    }
+
+    /// Exclusive access through `&mut self` (handle teardown).
+    pub(crate) fn get_mut(&mut self) -> &mut S {
+        self.state.get_mut()
+    }
+}
+
+/// A reclamation domain: one instance of a scheme's shared state.
+///
+/// Data structures, tests and benchmark trials that use different domains
+/// are fully isolated: nodes retired into one domain are reclaimed using
+/// only that domain's regions/hazards, and two domains never exchange
+/// retired nodes.
+pub struct Domain<R: Reclaimer> {
+    state: R::DomainState,
+}
+
+impl<R: Reclaimer> Domain<R> {
+    /// A fresh, empty domain.
+    pub fn new() -> Self {
+        Self { state: R::new_domain_state() }
+    }
+
+    /// The process-wide default domain (what `Queue::new()` &c. use).
+    pub fn global() -> &'static Domain<R> {
+        R::global()
+    }
+
+    /// The scheme's state (stamp pool / epoch domain / hazard registry).
+    pub fn state(&self) -> &R::DomainState {
+        &self.state
+    }
+}
+
+impl<R: Reclaimer> Default for Domain<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R: Reclaimer> Drop for Domain<R> {
+    fn drop(&mut self) {
+        // `&mut self` proves no handles (they hold `DomainRef`s) and hence
+        // no guards or regions exist: every parked retired node is
+        // unreachable and safe to reclaim. Never runs for `global()`
+        // (statics don't drop).
+        R::drain_domain(&mut self.state);
+    }
+}
+
+enum DomainRefInner<R: Reclaimer> {
+    Global,
+    Owned(Arc<Domain<R>>),
+}
+
+/// A shareable reference to a [`Domain`]: either the process-wide global
+/// one or a counted owned instance. This is what data structures store.
+pub struct DomainRef<R: Reclaimer>(DomainRefInner<R>);
+
+impl<R: Reclaimer> Clone for DomainRef<R> {
+    fn clone(&self) -> Self {
+        Self(match &self.0 {
+            DomainRefInner::Global => DomainRefInner::Global,
+            DomainRefInner::Owned(a) => DomainRefInner::Owned(a.clone()),
+        })
+    }
+}
+
+impl<R: Reclaimer> Default for DomainRef<R> {
+    fn default() -> Self {
+        Self::global()
+    }
+}
+
+impl<R: Reclaimer> std::fmt::Debug for DomainRef<R> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            DomainRefInner::Global => write!(f, "DomainRef::<{}>::global", R::NAME),
+            DomainRefInner::Owned(a) => {
+                write!(f, "DomainRef::<{}>({:p})", R::NAME, Arc::as_ptr(a))
+            }
+        }
+    }
+}
+
+impl<R: Reclaimer> DomainRef<R> {
+    /// The process-wide default domain.
+    pub const fn global() -> Self {
+        Self(DomainRefInner::Global)
+    }
+
+    /// A fresh, isolated domain (one per shard / test / trial).
+    pub fn new_owned() -> Self {
+        Self(DomainRefInner::Owned(Arc::new(Domain::new())))
+    }
+
+    /// Share an existing owned domain.
+    pub fn from_arc(domain: Arc<Domain<R>>) -> Self {
+        Self(DomainRefInner::Owned(domain))
+    }
+
+    /// The referenced domain.
+    pub fn domain(&self) -> &Domain<R> {
+        match &self.0 {
+            DomainRefInner::Global => Domain::global(),
+            DomainRefInner::Owned(a) => a,
+        }
+    }
+
+    /// Stable identity of the referenced domain (TLS handle-cache key;
+    /// cached handles keep the `Arc` alive, so the address cannot be
+    /// recycled while a cache entry uses it).
+    pub(crate) fn key(&self) -> usize {
+        self.domain() as *const Domain<R> as usize
+    }
+
+    /// Register the calling thread with this domain, returning an explicit
+    /// handle. The fast-path API: every guard/region/retire through the
+    /// handle is TLS-free.
+    pub fn register(&self) -> LocalHandle<R> {
+        let local = R::register(self.domain().state());
+        LocalHandle {
+            inner: Rc::new(HandleInner { domain: self.clone(), local: LocalCell::new(local) }),
+        }
+    }
+
+    /// Run `f` with the calling thread's cached handle for this domain,
+    /// registering on first use (one TLS lookup; the convenience path the
+    /// default data-structure methods use). Falls back to an ephemeral
+    /// registration during thread teardown, when the TLS cache is gone.
+    ///
+    /// Note: the cached handle (and therefore the domain, for owned
+    /// domains) lives until the calling thread exits. Short-lived domains
+    /// that must drop promptly — per-trial benchmark domains, per-test
+    /// domains — should use explicit [`Self::register`] handles instead.
+    pub fn with_handle<O>(&self, f: impl FnOnce(&LocalHandle<R>) -> O) -> O {
+        match R::cached_handle(self) {
+            Some(h) => f(&h),
+            None => f(&self.register()),
+        }
+    }
+}
+
+// DomainRef is Send + Sync by auto-derivation: `DomainState` is bounded
+// `Send + Sync`, so `Arc<Domain<R>>` (and the Global unit variant) already
+// carry both. No manual unsafe impls — the compiler revokes the auto traits
+// if a non-thread-safe field is ever added.
+
+/// Shared interior of a [`LocalHandle`] (also what attached [`GuardPtr`]s
+/// and [`Region`]s keep alive).
+pub struct HandleInner<R: Reclaimer> {
+    domain: DomainRef<R>,
+    local: LocalCell<R::LocalState>,
+}
+
+impl<R: Reclaimer> HandleInner<R> {
+    #[inline]
+    pub(crate) fn domain_state(&self) -> &R::DomainState {
+        self.domain.domain().state()
+    }
+
+    #[inline]
+    pub(crate) fn local(&self) -> &LocalCell<R::LocalState> {
+        &self.local
+    }
+}
+
+impl<R: Reclaimer> Drop for HandleInner<R> {
+    fn drop(&mut self) {
+        // Thread (or last guard) done with this domain: hand unreclaimed
+        // nodes to the domain's shared lists and release the registry entry
+        // for reuse. Disjoint field borrows: shared `domain`, `&mut local`.
+        R::unregister(self.domain.domain().state(), self.local.get_mut());
+    }
+}
+
+/// A thread's cached attachment to one [`Domain`]: the scheme's
+/// thread-control-block (registry entry, hazard slots, retire list) resolved
+/// once, then reused by every guard/region/retire without TLS.
+///
+/// Cheap to clone (`Rc`); not `Send`/`Sync` — each thread registers its own.
+pub struct LocalHandle<R: Reclaimer> {
+    inner: Rc<HandleInner<R>>,
+}
+
+impl<R: Reclaimer> Clone for LocalHandle<R> {
+    fn clone(&self) -> Self {
+        Self { inner: self.inner.clone() }
+    }
+}
+
+impl<R: Reclaimer> LocalHandle<R> {
+    /// The domain this handle is registered with.
+    pub fn domain(&self) -> &Domain<R> {
+        self.inner.domain.domain()
+    }
+
+    /// A [`DomainRef`] to this handle's domain.
+    pub fn domain_ref(&self) -> DomainRef<R> {
+        self.inner.domain.clone()
+    }
+
+    #[inline]
+    pub(crate) fn domain_state(&self) -> &R::DomainState {
+        self.inner.domain_state()
+    }
+
+    #[inline]
+    pub(crate) fn local(&self) -> &LocalCell<R::LocalState> {
+        self.inner.local()
+    }
+
+    /// An empty guard attached to this handle (the only way to make one).
+    pub fn guard<T: Send + Sync + 'static>(&self) -> GuardPtr<T, R> {
+        GuardPtr::new_in(self)
+    }
+
+    /// Enter a critical region scoped to the returned RAII token.
+    pub fn region(&self) -> Region<R> {
+        Region::enter(self)
+    }
+
+    /// Retire a node into this handle's domain.
+    ///
+    /// # Safety
+    /// See [`Reclaimer::retire`]: the node must be unlinked, retired exactly
+    /// once, and have been allocated by [`super::alloc_node`] for `R`.
+    pub unsafe fn retire<T: Send + Sync + 'static>(&self, node: *mut Node<T, R>) {
+        R::retire(self.domain_state(), self.local(), node)
+    }
+
+    /// Best-effort: reclaim everything currently reclaimable in this
+    /// domain (bench/test hook; e.g. forces an epoch-advance attempt or an
+    /// HP scan).
+    pub fn flush(&self) {
+        R::flush(self.domain_state(), self.local())
+    }
+}
+
+/// RAII `region_guard` (paper §2): amortizes critical-region entry across
+/// many guard acquisitions for region-based schemes (NER, QSR, Stamp-it).
+pub struct Region<R: Reclaimer> {
+    handle: LocalHandle<R>,
+}
+
+impl<R: Reclaimer> Region<R> {
+    /// Enter a critical region through `handle` (reentrant; guards nest
+    /// inside). TLS-free.
+    pub fn enter(handle: &LocalHandle<R>) -> Self {
+        R::enter_region(handle.domain_state(), handle.local());
+        Self { handle: handle.clone() }
+    }
+
+    /// Convenience: enter a region on the global domain through the
+    /// thread's cached handle (one TLS lookup).
+    pub fn enter_global() -> Self {
+        DomainRef::<R>::global().with_handle(Region::enter)
+    }
+}
+
+impl<R: Reclaimer> Drop for Region<R> {
+    fn drop(&mut self) {
+        R::exit_region(self.handle.domain_state(), self.handle.local());
+    }
+}
+
+/// Generates the two per-scheme statics the instance model still needs —
+/// the `Domain::global()` singleton and the thread-local handle cache —
+/// for a concrete scheme type. Statics cannot be generic in Rust, so each
+/// scheme instantiates this inside its `Reclaimer` impl.
+macro_rules! impl_domain_statics {
+    ($scheme:ty) => {
+        fn global() -> &'static $crate::reclaim::Domain<Self> {
+            // The only `static` scheme state left: the default Domain.
+            static GLOBAL: std::sync::OnceLock<$crate::reclaim::Domain<$scheme>> =
+                std::sync::OnceLock::new();
+            GLOBAL.get_or_init($crate::reclaim::Domain::new)
+        }
+
+        fn cached_handle(
+            domain: &$crate::reclaim::DomainRef<Self>,
+        ) -> Option<$crate::reclaim::LocalHandle<Self>> {
+            thread_local! {
+                static HANDLES: std::cell::RefCell<
+                    Vec<(usize, $crate::reclaim::LocalHandle<$scheme>)>,
+                > = const { std::cell::RefCell::new(Vec::new()) };
+            }
+            let key = domain.key();
+            HANDLES
+                .try_with(|cache| {
+                    // Handles are cloned out before use so the cache borrow
+                    // never spans user code (re-entrant lookups just miss).
+                    let mut cache = cache.try_borrow_mut().ok()?;
+                    if let Some((_, h)) = cache.iter().find(|(k, _)| *k == key) {
+                        return Some(h.clone());
+                    }
+                    let h = domain.register();
+                    cache.push((key, h.clone()));
+                    Some(h)
+                })
+                .ok()
+                .flatten()
+        }
+    };
+}
+pub(crate) use impl_domain_statics;

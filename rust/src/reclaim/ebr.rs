@@ -1,29 +1,35 @@
 //! ER — epoch-based reclamation (Fraser 2004), as configured in the paper's
 //! comparison (§4.2): critical regions are *per guard* (every operation
 //! pays region entry/exit — no application-level amortization), and an
-//! epoch-advance attempt runs every 100 region entries.
+//! epoch-advance attempt runs every 100 critical-region entries.
 //!
 //! The `Region` type still exists (the interface requires it) but entering
 //! one deliberately amortizes nothing beyond nesting — that behaviour is
 //! NER's distinguishing feature, see [`super::nebr`].
 
 use super::epoch_core::{epoch_reclaimer_impl, EpochConfig, EpochDomain};
+use super::Domain;
 
 /// Epoch-based reclamation (Fraser).
 pub struct Ebr;
 
-static DOMAIN: EpochDomain = EpochDomain::new(EpochConfig {
-    advance_every: 100, // paper §4.2: "ER/NER try to advance the epoch every 100 critical region entries"
-    debra_check_every: None,
-    quiescent_at_exit: false,
-});
+epoch_reclaimer_impl!(
+    Ebr,
+    "ER",
+    EpochConfig {
+        // paper §4.2: "ER/NER try to advance the epoch every 100 critical
+        // region entries"
+        advance_every: 100,
+        debra_check_every: None,
+        quiescent_at_exit: false,
+    }
+);
 
-/// The scheme's epoch domain (benchmark diagnostics).
+/// The global domain's epoch state (benchmark diagnostics / ablations;
+/// per-instance state lives in each [`Domain`]).
 pub fn domain() -> &'static EpochDomain {
-    &DOMAIN
+    Domain::<Ebr>::global().state()
 }
-
-epoch_reclaimer_impl!(Ebr, "ER", DOMAIN, EBR_LOCAL, EbrRegion);
 
 #[cfg(test)]
 mod tests {

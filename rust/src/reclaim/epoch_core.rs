@@ -1,11 +1,14 @@
 //! Shared machinery for the epoch-family schemes: ER (Fraser), NER (Hart),
 //! QSR (McKenney) and DEBRA (Brown) are four policies over the same core —
 //! a global epoch counter, per-thread epoch announcements, stamped
-//! per-thread retire lists and an orphan hand-off list.
+//! per-thread retire lists and an orphan hand-off list. One [`EpochDomain`]
+//! is the `DomainState` of each scheme (instantiated per
+//! [`crate::reclaim::Domain`]); [`LocalEpoch`] is the per-thread state a
+//! [`crate::reclaim::LocalHandle`] caches.
 //!
 //! ## Reclamation rule
 //!
-//! A node is stamped with the **global** epoch value read *after* it was
+//! A node is stamped with the **domain's** epoch value read *after* it was
 //! unlinked, and reclaimed once `global >= stamp + 2`. Correctness (the
 //! classic two-advance argument, in C++-memory-model terms):
 //!
@@ -32,16 +35,16 @@
 //!
 //! Reclaiming runs user `Drop` code, which may itself create guards or
 //! retire nodes through the same scheme. All entry points therefore release
-//! the thread-local `RefCell` borrow *before* reclaiming; nested retires
-//! land in the (temporarily emptied) local list and are merged back after.
+//! the [`LocalCell`] borrow *before* reclaiming; nested retires land in the
+//! (temporarily emptied) local list and are merged back after.
 
-use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::domain::LocalCell;
 use super::registry::{ThreadEntry, ThreadList};
 use super::retire::{prepare_retire, GlobalRetireList, RetireList};
 use super::{Node, Reclaimer};
-use crossbeam_utils::CachePadded;
+use crate::util::cache_pad::CachePadded;
 
 /// Scheme-policy parameters.
 #[derive(Copy, Clone, Debug)]
@@ -71,7 +74,8 @@ impl EpochSlot {
     }
 }
 
-/// One epoch domain (global state); each scheme owns a static one.
+/// One epoch domain (shared state); the `DomainState` of every epoch-family
+/// scheme — each [`crate::reclaim::Domain`] owns its own instance.
 pub struct EpochDomain {
     pub cfg: EpochConfig,
     /// Runtime-tunable copy of `cfg.advance_every` / the DEBRA check
@@ -140,7 +144,7 @@ impl EpochDomain {
     }
 
     /// Reclaim eligible orphans (runs user drops — never call while holding
-    /// a thread-local borrow).
+    /// a [`LocalCell`] borrow).
     fn drain_orphans(&self) -> usize {
         if self.orphans.is_empty() {
             return 0;
@@ -155,9 +159,8 @@ impl EpochDomain {
     }
 }
 
-/// Thread-local epoch state (one per scheme per thread).
+/// Thread-local epoch state (the `LocalState` cached by a handle).
 pub struct LocalEpoch {
-    domain: &'static EpochDomain,
     entry: &'static ThreadEntry<EpochSlot>,
     retired: RetireList,
     nesting: u32,
@@ -176,7 +179,10 @@ enum Deferred {
 }
 
 impl LocalEpoch {
-    pub fn new(domain: &'static EpochDomain) -> Self {
+    /// Register the calling thread with `domain` (recycling an inactive
+    /// registry entry when one exists; entries are immortal, so the
+    /// `'static` borrow survives any domain lifetime).
+    pub fn register(domain: &EpochDomain) -> Self {
         let entry = domain.threads.acquire(EpochSlot::default, |slot| {
             slot.announce(0, false, Ordering::Release);
         });
@@ -187,7 +193,6 @@ impl LocalEpoch {
             std::sync::atomic::fence(Ordering::SeqCst);
         }
         Self {
-            domain,
             entry,
             retired: RetireList::new(),
             nesting: 0,
@@ -197,22 +202,22 @@ impl LocalEpoch {
         }
     }
 
-    fn enter_inner(&mut self) -> Deferred {
+    fn enter_inner(&mut self, domain: &EpochDomain) -> Deferred {
         self.nesting += 1;
         if self.nesting > 1 {
             return Deferred::None;
         }
-        let cfg = self.domain.cfg;
+        let cfg = domain.cfg;
         if !cfg.quiescent_at_exit {
             // Announce (epoch, blocking): Release store + SeqCst fence
             // orders the announcement before all subsequent shared-data
             // loads (pairs with the scan fence in try_advance).
-            let e = self.domain.global.load(Ordering::Relaxed);
+            let e = domain.global.load(Ordering::Relaxed);
             self.entry.data().announce(e, true, Ordering::Release);
             std::sync::atomic::fence(Ordering::SeqCst);
         }
         self.entries += 1;
-        let period = self.domain.period();
+        let period = domain.period();
         if cfg.debra_check_every.is_some() {
             if self.entries >= period {
                 self.entries = 0;
@@ -225,21 +230,21 @@ impl LocalEpoch {
         Deferred::None
     }
 
-    fn exit_inner(&mut self) -> Deferred {
+    fn exit_inner(&mut self, domain: &EpochDomain) -> Deferred {
         debug_assert!(self.nesting > 0, "unbalanced region exit");
         self.nesting -= 1;
         if self.nesting > 0 {
             return Deferred::None;
         }
-        let cfg = self.domain.cfg;
+        let cfg = domain.cfg;
         if cfg.quiescent_at_exit {
             // QSR's fuzzy barrier: announce passage through a quiescent
             // state by adopting the current global epoch.
-            let e = self.domain.global.load(Ordering::Relaxed);
+            let e = domain.global.load(Ordering::Relaxed);
             self.entry.data().announce(e, true, Ordering::Release);
             std::sync::atomic::fence(Ordering::SeqCst);
             self.entries += 1;
-            if self.entries >= self.domain.period() {
+            if self.entries >= domain.period() {
                 self.entries = 0;
                 return Deferred::TryAdvance;
             }
@@ -270,34 +275,22 @@ impl LocalEpoch {
     }
 }
 
-impl Drop for LocalEpoch {
-    fn drop(&mut self) {
-        // Thread exit: hand unreclaimed nodes to the orphan list (the paper:
-        // "when a thread terminates, all schemes add the remaining nodes to
-        // a global list") and release the registry entry for reuse.
-        let (chain, _) = self.retired.take_chain();
-        self.domain.orphans.push_sublist(chain);
-        self.entry.data().announce(0, false, Ordering::Release);
-        self.domain.threads.release(self.entry);
-    }
-}
-
 // ---- Borrow-safe entry points (see "Reentrancy discipline" above) ----
 
-/// Enter a critical region for the scheme owning `cell`.
-pub fn enter(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
-    let deferred = cell.borrow_mut().enter_inner();
-    run_deferred(domain, cell, deferred);
+/// Enter a critical region in `domain`.
+pub fn enter(domain: &EpochDomain, local: &LocalCell<LocalEpoch>) {
+    let deferred = local.with(|l| l.enter_inner(domain));
+    run_deferred(domain, local, deferred);
 }
 
 /// Leave a critical region; reclaims the eligible local prefix.
-pub fn exit(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
-    let deferred = cell.borrow_mut().exit_inner();
-    run_deferred(domain, cell, deferred);
-    reclaim_local(domain, cell);
+pub fn exit(domain: &EpochDomain, local: &LocalCell<LocalEpoch>) {
+    let deferred = local.with(|l| l.exit_inner(domain));
+    run_deferred(domain, local, deferred);
+    reclaim_local(domain, local);
 }
 
-fn run_deferred(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>, deferred: Deferred) {
+fn run_deferred(domain: &EpochDomain, local: &LocalCell<LocalEpoch>, deferred: Deferred) {
     match deferred {
         Deferred::None => {}
         Deferred::TryAdvance => {
@@ -305,32 +298,31 @@ fn run_deferred(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>, deferr
                 domain.drain_orphans();
             }
         }
-        Deferred::DebraCheck => debra_check_one(domain, cell),
+        Deferred::DebraCheck => debra_check_one(domain, local),
     }
 }
 
-/// Retire a node: stamp with the global epoch (read after unlink — Acquire
+/// Retire a node: stamp with the domain epoch (read after unlink — Acquire
 /// pairs with the unlink CAS) and append to the ordered local retire list.
 ///
 /// # Safety
 /// See [`Reclaimer::retire`].
 pub unsafe fn retire<T: Send + Sync + 'static, R: Reclaimer>(
-    domain: &'static EpochDomain,
-    cell: &RefCell<LocalEpoch>,
+    domain: &EpochDomain,
+    local: &LocalCell<LocalEpoch>,
     node: *mut Node<T, R>,
 ) {
     let stamp = domain.global.load(Ordering::Acquire);
     let r = prepare_retire::<T, R>(node, stamp);
-    cell.borrow_mut().retired.push_back(r);
+    local.with(|l| l.retired.push_back(r));
 }
 
-/// Orphan-path retire for when the thread-local state is unavailable
-/// (thread teardown).
+/// Orphan-path retire for when no thread-local state is available.
 ///
 /// # Safety
 /// See [`Reclaimer::retire`].
 pub unsafe fn retire_to_orphans<T: Send + Sync + 'static, R: Reclaimer>(
-    domain: &'static EpochDomain,
+    domain: &EpochDomain,
     node: *mut Node<T, R>,
 ) {
     let stamp = domain.global.load(Ordering::Acquire);
@@ -340,43 +332,44 @@ pub unsafe fn retire_to_orphans<T: Send + Sync + 'static, R: Reclaimer>(
 
 /// Reclaim the eligible prefix of the local retire list. The list is
 /// detached while user drops run; nested retires are merged back after.
-pub fn reclaim_local(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) -> usize {
-    if cell.borrow().retired.is_empty() {
+pub fn reclaim_local(domain: &EpochDomain, local: &LocalCell<LocalEpoch>) -> usize {
+    if local.with(|l| l.retired.is_empty()) {
         return 0;
     }
-    let mut mine = std::mem::take(&mut cell.borrow_mut().retired);
+    let mut mine = local.with(|l| std::mem::take(&mut l.retired));
     // SAFETY: reclaimable() implements the two-advance rule (module docs).
     let freed = unsafe { mine.reclaim_prefix(|s| domain.reclaimable(s)) };
-    let mut l = cell.borrow_mut();
-    let nested = std::mem::replace(&mut l.retired, mine);
-    l.append_merge(nested);
+    local.with(|l| {
+        let nested = std::mem::replace(&mut l.retired, mine);
+        l.append_merge(nested);
+    });
     freed
 }
 
 /// DEBRA: check a single registry entry; advance the epoch when a full pass
 /// over the registry observed everyone at the current epoch.
-fn debra_check_one(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
+fn debra_check_one(domain: &EpochDomain, local: &LocalCell<LocalEpoch>) {
     std::sync::atomic::fence(Ordering::SeqCst);
     let e = domain.global.load(Ordering::Relaxed);
-    let pos = {
-        let mut l = cell.borrow_mut();
+    let pos = local.with(|l| {
         if e != l.scan_epoch {
             // Epoch moved since the pass started: restart.
             l.scan_epoch = e;
             l.scan_pos = 0;
         }
         l.scan_pos
-    };
+    });
     match domain.threads.iter().nth(pos) {
         None => {
             // Full pass done at epoch e: advance.
-            let advanced =
-                domain.global.compare_exchange(e, e + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok();
-            {
-                let mut l = cell.borrow_mut();
+            let advanced = domain
+                .global
+                .compare_exchange(e, e + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            local.with(|l| {
                 l.scan_pos = 0;
                 l.scan_epoch = e + 1;
-            }
+            });
             if advanced {
                 domain.drain_orphans();
             }
@@ -385,7 +378,7 @@ fn debra_check_one(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
             let s = entry.data().state.load(Ordering::Acquire);
             let blocking = entry.is_active() && s & 1 == 1;
             if !blocking || (s >> 1) == e {
-                cell.borrow_mut().scan_pos += 1;
+                local.with(|l| l.scan_pos += 1);
             }
             // else: stay on this entry; re-check on the next opportunity.
         }
@@ -393,18 +386,39 @@ fn debra_check_one(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
 }
 
 /// Bench/test hook: repeatedly advance + reclaim until quiescent.
-pub fn flush(domain: &'static EpochDomain, cell: &RefCell<LocalEpoch>) {
+pub fn flush(domain: &EpochDomain, local: &LocalCell<LocalEpoch>) {
     for _ in 0..4 {
         // Cycle a region so *our own* announcement stops blocking the
         // advance: the exit updates QSR's quiescent state and clears the
         // blocking bit for the in-region schemes. A nested cycle (flush
         // under a live guard) deliberately changes nothing — the guard
         // must keep blocking.
-        enter(domain, cell);
-        exit(domain, cell);
+        enter(domain, local);
+        exit(domain, local);
         domain.try_advance();
-        reclaim_local(domain, cell);
+        reclaim_local(domain, local);
         domain.drain_orphans();
+    }
+}
+
+/// Thread exit / handle drop: hand unreclaimed nodes to the orphan list
+/// (the paper: "when a thread terminates, all schemes add the remaining
+/// nodes to a global list") and release the registry entry for reuse.
+pub fn unregister(domain: &EpochDomain, local: &mut LocalEpoch) {
+    debug_assert_eq!(local.nesting, 0, "handle dropped inside a critical region");
+    let (chain, _) = local.retired.take_chain();
+    domain.orphans.push_sublist(chain);
+    local.entry.data().announce(0, false, Ordering::Release);
+    domain.threads.release(local.entry);
+}
+
+/// Domain teardown: reclaim every parked orphan. Exclusive access — no
+/// handles, guards or regions reference the domain anymore.
+pub fn drain(domain: &mut EpochDomain) {
+    // SAFETY: exclusive access (see above); nothing can still hold a
+    // reference into the orphaned nodes.
+    unsafe {
+        domain.orphans.reclaim_where(|_| true);
     }
 }
 
@@ -427,52 +441,63 @@ pub struct EpochGuardToken {
     pub(crate) entered: bool,
 }
 
-/// Implements [`Reclaimer`] for an epoch-family scheme over its `DOMAIN`
-/// static and `LOCAL` thread-local.
+/// Implements [`Reclaimer`] for an epoch-family scheme: `DomainState` is an
+/// [`EpochDomain`] built from the given [`EpochConfig`], `LocalState` a
+/// [`LocalEpoch`].
 ///
 /// Protection argument: `protect` is a plain Acquire load — being inside a
 /// critical region (entered by the guard token or an enclosing
 /// [`crate::reclaim::Region`]) is what protects the target (paper §2/§3).
 macro_rules! epoch_reclaimer_impl {
-    ($scheme:ty, $name:literal, $domain:ident, $local:ident, $region:ident) => {
-        /// RAII region token for this scheme.
-        pub struct $region {
-            _not_send: std::marker::PhantomData<*const ()>,
-        }
-
-        impl Drop for $region {
-            fn drop(&mut self) {
-                let _ = $local.try_with(|l| $crate::reclaim::epoch_core::exit(&$domain, l));
-            }
-        }
-
-        thread_local! {
-            static $local: std::cell::RefCell<$crate::reclaim::epoch_core::LocalEpoch> =
-                std::cell::RefCell::new($crate::reclaim::epoch_core::LocalEpoch::new(&$domain));
-        }
-
+    ($scheme:ty, $name:literal, $cfg:expr) => {
         // SAFETY: the epoch protocol (see epoch_core module docs) reclaims a
-        // retired node only after every region that could reference it has
-        // exited.
+        // retired node only after every region in the same domain that could
+        // reference it has exited; domains share nothing.
         unsafe impl $crate::reclaim::Reclaimer for $scheme {
             const NAME: &'static str = $name;
             type Header = $crate::reclaim::epoch_core::EpochHeader;
             type GuardState = $crate::reclaim::epoch_core::EpochGuardToken;
-            type Region = $region;
+            type DomainState = $crate::reclaim::epoch_core::EpochDomain;
+            type LocalState = $crate::reclaim::epoch_core::LocalEpoch;
 
-            fn enter_region() -> Self::Region {
-                $local.with(|l| $crate::reclaim::epoch_core::enter(&$domain, l));
-                $region { _not_send: std::marker::PhantomData }
+            fn new_domain_state() -> Self::DomainState {
+                $crate::reclaim::epoch_core::EpochDomain::new($cfg)
+            }
+
+            $crate::reclaim::domain::impl_domain_statics!($scheme);
+
+            fn register(domain: &Self::DomainState) -> Self::LocalState {
+                $crate::reclaim::epoch_core::LocalEpoch::register(domain)
+            }
+
+            fn unregister(domain: &Self::DomainState, local: &mut Self::LocalState) {
+                $crate::reclaim::epoch_core::unregister(domain, local)
+            }
+
+            fn enter_region(
+                domain: &Self::DomainState,
+                local: &$crate::reclaim::LocalCell<Self::LocalState>,
+            ) {
+                $crate::reclaim::epoch_core::enter(domain, local)
+            }
+
+            fn exit_region(
+                domain: &Self::DomainState,
+                local: &$crate::reclaim::LocalCell<Self::LocalState>,
+            ) {
+                $crate::reclaim::epoch_core::exit(domain, local)
             }
 
             #[inline]
             fn protect<T: Send + Sync + 'static>(
+                domain: &Self::DomainState,
+                local: &$crate::reclaim::LocalCell<Self::LocalState>,
                 state: &mut Self::GuardState,
                 src: &$crate::reclaim::ConcurrentPtr<T, Self>,
             ) -> $crate::reclaim::MarkedPtr<T, Self> {
                 if !state.entered {
                     state.entered = true;
-                    $local.with(|l| $crate::reclaim::epoch_core::enter(&$domain, l));
+                    $crate::reclaim::epoch_core::enter(domain, local);
                 }
                 // Acquire pairs with the Release publication of the node.
                 src.load(std::sync::atomic::Ordering::Acquire)
@@ -480,19 +505,23 @@ macro_rules! epoch_reclaimer_impl {
 
             #[inline]
             fn protect_if_equal<T: Send + Sync + 'static>(
+                domain: &Self::DomainState,
+                local: &$crate::reclaim::LocalCell<Self::LocalState>,
                 state: &mut Self::GuardState,
                 src: &$crate::reclaim::ConcurrentPtr<T, Self>,
                 expected: $crate::reclaim::MarkedPtr<T, Self>,
             ) -> bool {
                 if !state.entered {
                     state.entered = true;
-                    $local.with(|l| $crate::reclaim::epoch_core::enter(&$domain, l));
+                    $crate::reclaim::epoch_core::enter(domain, local);
                 }
                 src.load(std::sync::atomic::Ordering::Acquire) == expected
             }
 
             #[inline]
             fn release<T: Send + Sync + 'static>(
+                _domain: &Self::DomainState,
+                _local: &$crate::reclaim::LocalCell<Self::LocalState>,
                 _state: &mut Self::GuardState,
                 _ptr: $crate::reclaim::MarkedPtr<T, Self>,
             ) {
@@ -500,26 +529,34 @@ macro_rules! epoch_reclaimer_impl {
                 // guard is dropped (drop_guard_state).
             }
 
-            fn drop_guard_state(state: &mut Self::GuardState) {
+            fn drop_guard_state(
+                domain: &Self::DomainState,
+                local: &$crate::reclaim::LocalCell<Self::LocalState>,
+                state: &mut Self::GuardState,
+            ) {
                 if state.entered {
                     state.entered = false;
-                    let _ = $local.try_with(|l| $crate::reclaim::epoch_core::exit(&$domain, l));
+                    $crate::reclaim::epoch_core::exit(domain, local);
                 }
             }
 
             unsafe fn retire<T: Send + Sync + 'static>(
+                domain: &Self::DomainState,
+                local: &$crate::reclaim::LocalCell<Self::LocalState>,
                 node: *mut $crate::reclaim::Node<T, Self>,
             ) {
-                $local
-                    .try_with(|l| $crate::reclaim::epoch_core::retire::<T, Self>(&$domain, l, node))
-                    .unwrap_or_else(|_| {
-                        // Thread teardown: hand straight to the orphan list.
-                        $crate::reclaim::epoch_core::retire_to_orphans::<T, Self>(&$domain, node)
-                    });
+                $crate::reclaim::epoch_core::retire::<T, Self>(domain, local, node)
             }
 
-            fn flush() {
-                $local.with(|l| $crate::reclaim::epoch_core::flush(&$domain, l));
+            fn flush(
+                domain: &Self::DomainState,
+                local: &$crate::reclaim::LocalCell<Self::LocalState>,
+            ) {
+                $crate::reclaim::epoch_core::flush(domain, local)
+            }
+
+            fn drain_domain(domain: &mut Self::DomainState) {
+                $crate::reclaim::epoch_core::drain(domain)
             }
         }
     };

@@ -16,28 +16,26 @@
 //!
 //! The per-thread unreclaimed population is therefore Θ(total slots) — the
 //! quadratic-in-threads behaviour the paper measures in App. A.2.
+//!
+//! Registry, slot count and orphan list are per-[`HpDomain`] (one per
+//! [`crate::reclaim::Domain`]); the slots + retire list a thread uses are
+//! its [`HpLocal`], cached by a [`crate::reclaim::LocalHandle`].
 
 use std::ptr;
 use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
 
+use super::domain::LocalCell;
 use super::registry::{ThreadEntry, ThreadList};
-use super::retire::{prepare_retire, AsRetireHeader, GlobalRetireList, Retired, RetireHeader, RetireList};
-use super::{ConcurrentPtr, MarkedPtr, Node, Reclaimer};
-use std::cell::RefCell;
+use super::retire::{
+    prepare_retire, AsRetireHeader, GlobalRetireList, Retired, RetireHeader, RetireList,
+};
+use super::{ConcurrentPtr, Domain, MarkedPtr, Node, Reclaimer};
 
 /// Inline hazard slots per thread (covers the queue/list benchmarks; the
 /// hash-map benchmark grows beyond them dynamically).
 const K_STATIC: usize = 8;
 /// Slots per dynamically added chunk.
 const CHUNK_SLOTS: usize = 16;
-/// Base term of the scan threshold (paper §4.2); runtime-tunable for
-/// ablation bench A2.
-static THRESHOLD_BASE: AtomicU64 = AtomicU64::new(100);
-
-/// Tune the scan-threshold base (paper value: 100).
-pub fn set_threshold_base(n: usize) {
-    THRESHOLD_BASE.store(n as u64, Ordering::Relaxed);
-}
 
 /// Hazard pointers (Michael).
 pub struct Hp;
@@ -76,14 +74,47 @@ impl Default for HpSlots {
     }
 }
 
-static THREADS: ThreadList<HpSlots> = ThreadList::new();
-/// ΣKᵢ — total hazard slots ever allocated (inline + chunks), for the
-/// paper's scan threshold.
-static TOTAL_SLOTS: AtomicU64 = AtomicU64::new(0);
-static ORPHANS: GlobalRetireList = GlobalRetireList::new();
+/// One hazard-pointer reclamation universe (the `DomainState` of [`Hp`]).
+pub struct HpDomain {
+    threads: ThreadList<HpSlots>,
+    /// ΣKᵢ — total hazard slots ever allocated in this domain (inline +
+    /// chunks), for the paper's scan threshold.
+    total_slots: AtomicU64,
+    orphans: GlobalRetireList,
+    /// Base term of the scan threshold (paper §4.2: 100); runtime-tunable
+    /// per domain for ablation bench A2.
+    threshold_base: AtomicU64,
+}
 
-/// Thread-local hazard-pointer state.
-struct HpLocal {
+impl HpDomain {
+    fn new() -> Self {
+        Self {
+            threads: ThreadList::new(),
+            total_slots: AtomicU64::new(0),
+            orphans: GlobalRetireList::new(),
+            threshold_base: AtomicU64::new(100),
+        }
+    }
+
+    /// Tune the scan-threshold base (paper value: 100).
+    pub fn set_threshold_base(&self, n: usize) {
+        self.threshold_base.store(n as u64, Ordering::Relaxed);
+    }
+
+    /// Total hazard slots across all threads of this domain (ΣKᵢ).
+    pub fn total_slots(&self) -> u64 {
+        self.total_slots.load(Ordering::Relaxed)
+    }
+
+    /// Current scan threshold `base + 2·ΣKᵢ` (diagnostics / ablations).
+    pub fn current_threshold(&self) -> usize {
+        self.threshold_base.load(Ordering::Relaxed) as usize
+            + 2 * self.total_slots.load(Ordering::Relaxed) as usize
+    }
+}
+
+/// Thread-local hazard-pointer state (the `LocalState` cached by a handle).
+pub struct HpLocal {
     entry: &'static ThreadEntry<HpSlots>,
     /// Currently unpublished slots available to guards.
     free_slots: Vec<&'static AtomicUsize>,
@@ -91,9 +122,9 @@ struct HpLocal {
 }
 
 impl HpLocal {
-    fn new() -> Self {
+    fn register(domain: &HpDomain) -> Self {
         let mut fresh_entry = false;
-        let entry = THREADS.acquire(
+        let entry = domain.threads.acquire(
             || {
                 fresh_entry = true;
                 HpSlots::default()
@@ -101,11 +132,11 @@ impl HpLocal {
             |_| {},
         );
         if fresh_entry {
-            TOTAL_SLOTS.fetch_add(K_STATIC as u64, Ordering::Relaxed);
+            domain.total_slots.fetch_add(K_STATIC as u64, Ordering::Relaxed);
         }
         // Collect every slot of the entry (inline + previously grown
         // chunks) — all must be unpublished (previous owner's guards are
-        // dropped before thread exit).
+        // dropped before its handle is).
         let mut free_slots: Vec<&'static AtomicUsize> = Vec::with_capacity(K_STATIC);
         for s in &entry.data().inline {
             debug_assert_eq!(s.load(Ordering::Relaxed), 0);
@@ -127,7 +158,7 @@ impl HpLocal {
 
     /// Take a free slot, growing the dynamic chunk chain if needed
     /// (Michael's extended scheme).
-    fn acquire_slot(&mut self) -> &'static AtomicUsize {
+    fn acquire_slot(&mut self, domain: &HpDomain) -> &'static AtomicUsize {
         if let Some(s) = self.free_slots.pop() {
             return s;
         }
@@ -135,7 +166,7 @@ impl HpLocal {
             slots: [const { AtomicUsize::new(0) }; CHUNK_SLOTS],
             next: AtomicPtr::new(ptr::null_mut()),
         }));
-        TOTAL_SLOTS.fetch_add(CHUNK_SLOTS as u64, Ordering::Relaxed);
+        domain.total_slots.fetch_add(CHUNK_SLOTS as u64, Ordering::Relaxed);
         // Prepend to the entry's chunk chain (publish with Release so
         // scanners see initialized slots).
         let extra = &self.entry.data().extra;
@@ -157,34 +188,14 @@ impl HpLocal {
         }
         unsafe { &*(&chunk.slots[0] as *const AtomicUsize) }
     }
-
-    fn threshold() -> usize {
-        THRESHOLD_BASE.load(Ordering::Relaxed) as usize
-            + 2 * TOTAL_SLOTS.load(Ordering::Relaxed) as usize
-    }
 }
 
-impl Drop for HpLocal {
-    fn drop(&mut self) {
-        // Final scan, then orphan the remainder (it will be picked up by
-        // other threads' scans).
-        scan_with(&mut self.retired);
-        let (chain, _) = self.retired.take_chain();
-        ORPHANS.push_sublist(chain);
-        THREADS.release(self.entry);
-    }
-}
-
-thread_local! {
-    static HP_LOCAL: RefCell<HpLocal> = RefCell::new(HpLocal::new());
-}
-
-/// Snapshot all published hazards and reclaim every node in `retired` that
-/// none of them protects. Also adopts orphaned retire lists.
-fn scan_with(retired: &mut RetireList) {
+/// Snapshot all published hazards of `domain` and reclaim every node in
+/// `retired` that none of them protects. Also adopts orphaned retire lists.
+fn scan_with(domain: &HpDomain, retired: &mut RetireList) {
     // Adopt orphans (stamps are unused by HP — push_back order is fine
     // because all stamps are 0).
-    let mut orphan = ORPHANS.steal_all();
+    let mut orphan = domain.orphans.steal_all();
     while !orphan.is_null() {
         // SAFETY: stolen chains are exclusively ours.
         let next_list = unsafe { (*orphan).next_list() };
@@ -200,7 +211,7 @@ fn scan_with(retired: &mut RetireList) {
     // Pairs with the publication fences in protect().
     std::sync::atomic::fence(Ordering::SeqCst);
     let mut hazards: Vec<usize> = Vec::with_capacity(64);
-    for entry in THREADS.iter() {
+    for entry in domain.threads.iter() {
         // Scan *all* entries (even inactive ones — a leaked guard keeps its
         // slot published and must still block reclamation).
         for s in &entry.data().inline {
@@ -242,6 +253,24 @@ fn scan_with(retired: &mut RetireList) {
     }
 }
 
+/// Detach the local retire list, scan, and merge nested retires back —
+/// reclaim runs user drops, so no [`LocalCell`] borrow spans the scan.
+fn flush_impl(domain: &HpDomain, local: &LocalCell<HpLocal>) {
+    let mut mine = local.with(|l| std::mem::take(&mut l.retired));
+    scan_with(domain, &mut mine);
+    local.with(|l| {
+        let mut nested = std::mem::replace(&mut l.retired, mine);
+        let (chain, _) = nested.take_chain();
+        let mut cur = chain;
+        while !cur.is_null() {
+            // SAFETY: we own the detached nested chain.
+            let next = unsafe { (*cur).next_in_chain() };
+            l.retired.push_back(cur);
+            cur = next;
+        }
+    });
+}
+
 /// Guard state: the hazard slot this guard owns (lazily acquired, returned
 /// on guard drop).
 #[derive(Default)]
@@ -250,34 +279,54 @@ pub struct HpGuardState {
 }
 
 impl HpGuardState {
-    fn slot(&mut self) -> &'static AtomicUsize {
+    fn slot(&mut self, domain: &HpDomain, local: &LocalCell<HpLocal>) -> &'static AtomicUsize {
         if let Some(s) = self.slot {
             return s;
         }
-        let s = HP_LOCAL.with(|l| l.borrow_mut().acquire_slot());
+        let s = local.with(|l| l.acquire_slot(domain));
         self.slot = Some(s);
         s
     }
 }
 
 // SAFETY: protect publishes the pointer in a hazard slot and re-validates
-// the source; scan() snapshots all slots after a SeqCst fence and never
-// frees a published node — Michael's classic argument. A node is retired
-// only after being unlinked, so post-scan publications can no longer
-// validate successfully against any source.
+// the source; scan() snapshots all slots of the domain after a SeqCst fence
+// and never frees a published node — Michael's classic argument. A node is
+// retired only after being unlinked, so post-scan publications can no
+// longer validate successfully against any source.
 unsafe impl Reclaimer for Hp {
     const NAME: &'static str = "HPR";
     type Header = HpHeader;
     type GuardState = HpGuardState;
-    type Region = ();
+    type DomainState = HpDomain;
+    type LocalState = HpLocal;
 
-    fn enter_region() -> Self::Region {}
+    fn new_domain_state() -> Self::DomainState {
+        HpDomain::new()
+    }
+
+    crate::reclaim::domain::impl_domain_statics!(Hp);
+
+    fn register(domain: &Self::DomainState) -> Self::LocalState {
+        HpLocal::register(domain)
+    }
+
+    fn unregister(domain: &Self::DomainState, local: &mut Self::LocalState) {
+        // Final scan, then orphan the remainder (it will be picked up by
+        // other threads' scans or by domain teardown).
+        scan_with(domain, &mut local.retired);
+        let (chain, _) = local.retired.take_chain();
+        domain.orphans.push_sublist(chain);
+        domain.threads.release(local.entry);
+    }
 
     fn protect<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
         state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
     ) -> MarkedPtr<T, Self> {
-        let slot = state.slot();
+        let slot = state.slot(domain, local);
         loop {
             let p = src.load(Ordering::Acquire);
             if p.is_null() {
@@ -296,6 +345,8 @@ unsafe impl Reclaimer for Hp {
     }
 
     fn protect_if_equal<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
         state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
         expected: MarkedPtr<T, Self>,
@@ -303,7 +354,7 @@ unsafe impl Reclaimer for Hp {
         if expected.is_null() {
             return src.load(Ordering::Acquire) == expected;
         }
-        let slot = state.slot();
+        let slot = state.slot(domain, local);
         slot.store(expected.get() as usize, Ordering::Release);
         std::sync::atomic::fence(Ordering::SeqCst);
         if src.load(Ordering::Acquire) == expected {
@@ -315,6 +366,8 @@ unsafe impl Reclaimer for Hp {
     }
 
     fn release<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
         state: &mut Self::GuardState,
         _ptr: MarkedPtr<T, Self>,
     ) {
@@ -323,73 +376,69 @@ unsafe impl Reclaimer for Hp {
         }
     }
 
-    fn drop_guard_state(state: &mut Self::GuardState) {
+    fn drop_guard_state(
+        _domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        state: &mut Self::GuardState,
+    ) {
         if let Some(slot) = state.slot.take() {
             slot.store(0, Ordering::Release);
-            // Return the slot for reuse; during thread teardown just leave
-            // it unpublished (slot stays owned by the immortal entry).
-            let _ = HP_LOCAL.try_with(|l| l.borrow_mut().free_slots.push(slot));
+            // Return the slot for reuse (the slot stays owned by the
+            // immortal registry entry either way).
+            local.with(|l| l.free_slots.push(slot));
         }
     }
 
-    unsafe fn retire<T: Send + Sync + 'static>(node: *mut Node<T, Self>) {
+    unsafe fn retire<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        node: *mut Node<T, Self>,
+    ) {
         let r = prepare_retire::<T, Self>(node, 0);
-        let over_threshold = HP_LOCAL
-            .try_with(|l| {
-                let mut l = l.borrow_mut();
-                l.retired.push_back(r);
-                l.retired.len() >= HpLocal::threshold()
-            })
-            .unwrap_or_else(|_| {
-                // Thread teardown: orphan immediately.
-                ORPHANS.push_sublist(r);
-                false
-            });
+        let over_threshold = local.with(|l| {
+            l.retired.push_back(r);
+            l.retired.len() >= domain.current_threshold()
+        });
         if over_threshold {
-            Self::flush();
+            flush_impl(domain, local);
         }
     }
 
-    fn flush() {
-        // Detach the retire list before scanning: reclaim runs user drops,
-        // which may re-enter (see epoch_core's reentrancy discipline).
-        let mut mine = match HP_LOCAL.try_with(|l| std::mem::take(&mut l.borrow_mut().retired)) {
-            Ok(m) => m,
-            Err(_) => return,
-        };
-        scan_with(&mut mine);
-        let _ = HP_LOCAL.try_with(|l| {
-            let mut l = l.borrow_mut();
-            let nested = std::mem::replace(&mut l.retired, mine);
-            let (chain, _) = {
-                let mut n = nested;
-                n.take_chain()
-            };
-            let mut cur = chain;
-            while !cur.is_null() {
-                // SAFETY: we own the detached nested chain.
-                let next = unsafe { (*cur).next_in_chain() };
-                l.retired.push_back(cur);
-                cur = next;
-            }
-        });
+    fn flush(domain: &Self::DomainState, local: &LocalCell<Self::LocalState>) {
+        flush_impl(domain, local);
+    }
+
+    fn drain_domain(domain: &mut Self::DomainState) {
+        // Exclusive access: no handles → no guards → no published hazards;
+        // every orphan is reclaimable.
+        // SAFETY: see above.
+        unsafe {
+            domain.orphans.reclaim_where(|_| true);
+        }
     }
 }
 
-/// Current scan threshold (diagnostics / ablation benches).
-pub fn current_threshold() -> usize {
-    HpLocal::threshold()
+/// Tune the global domain's scan-threshold base (ablation compatibility;
+/// owned domains use [`HpDomain::set_threshold_base`]).
+pub fn set_threshold_base(n: usize) {
+    Domain::<Hp>::global().state().set_threshold_base(n);
 }
 
-/// Total hazard slots across all threads (ΣKᵢ).
+/// The global domain's current scan threshold.
+pub fn current_threshold() -> usize {
+    Domain::<Hp>::global().state().current_threshold()
+}
+
+/// Total hazard slots across all threads of the global domain (ΣKᵢ).
 pub fn total_slots() -> u64 {
-    TOTAL_SLOTS.load(Ordering::Relaxed)
+    Domain::<Hp>::global().state().total_slots()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::reclaim::tests_common::*;
+    use crate::reclaim::DomainRef;
 
     #[test]
     fn basic_reclamation() {
@@ -409,29 +458,34 @@ mod tests {
     #[test]
     fn dynamic_slots_grow_on_demand() {
         use crate::reclaim::{alloc_node, GuardPtr};
+        // Own domain: the slot count assertion is exact, not raced by
+        // sibling tests.
+        let domain = DomainRef::<Hp>::new_owned();
+        let h = domain.register();
         // Hold more guards than K_STATIC simultaneously: slots must grow.
         let drops = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        let nodes: Vec<_> =
-            (0..K_STATIC * 2).map(|i| alloc_node::<Payload, Hp>(Payload::new(i as u64, &drops))).collect();
+        let nodes: Vec<_> = (0..K_STATIC * 2)
+            .map(|i| alloc_node::<Payload, Hp>(Payload::new(i as u64, &drops)))
+            .collect();
         let cells: Vec<ConcurrentPtr<Payload, Hp>> =
             nodes.iter().map(|&n| ConcurrentPtr::new(MarkedPtr::new(n, 0))).collect();
         let mut guards: Vec<GuardPtr<Payload, Hp>> = Vec::new();
         for c in &cells {
-            let mut g = GuardPtr::new();
+            let mut g = h.guard();
             g.acquire(c);
             assert!(!g.is_null());
             guards.push(g);
         }
-        assert!(total_slots() >= (K_STATIC * 2) as u64);
+        assert!(domain.domain().state().total_slots() >= (K_STATIC * 2) as u64);
         // All still guarded: retiring must not drop any.
         for (c, &n) in cells.iter().zip(&nodes) {
             c.store(MarkedPtr::null(), Ordering::Release);
-            unsafe { Hp::retire(n) };
+            unsafe { h.retire(n) };
         }
-        Hp::flush();
+        h.flush();
         assert_eq!(drops.load(Ordering::Relaxed), 0);
         drop(guards);
-        Hp::flush();
+        h.flush();
         assert_eq!(drops.load(Ordering::Relaxed), K_STATIC * 2);
     }
 }

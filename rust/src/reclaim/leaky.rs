@@ -2,10 +2,12 @@
 //!
 //! Protection is trivially satisfied (nodes are immortal), making this the
 //! zero-overhead upper bound for per-operation cost and the scaffold for
-//! testing data-structure logic in isolation from reclamation. Excluded
-//! from the paper-figure scheme set (the paper has no such baseline), but
-//! available to benchmarks via `--schemes leaky,...`.
+//! testing data-structure logic in isolation from reclamation. Its domain
+//! and local state are empty (`()`): domains exist only for interface
+//! uniformity. Excluded from the paper-figure scheme set (the paper has no
+//! such baseline), but available to benchmarks via `--schemes leaky,...`.
 
+use super::domain::LocalCell;
 use super::retire::{AsRetireHeader, RetireHeader};
 use super::{ConcurrentPtr, MarkedPtr, Node, Reclaimer};
 use std::sync::atomic::Ordering;
@@ -33,13 +35,21 @@ unsafe impl Reclaimer for Leaky {
     const NAME: &'static str = "Leaky";
     type Header = LeakyHeader;
     type GuardState = ();
-    type Region = ();
+    type DomainState = ();
+    type LocalState = ();
 
-    #[inline]
-    fn enter_region() -> Self::Region {}
+    fn new_domain_state() -> Self::DomainState {}
+
+    crate::reclaim::domain::impl_domain_statics!(Leaky);
+
+    fn register(_domain: &Self::DomainState) -> Self::LocalState {}
+
+    fn unregister(_domain: &Self::DomainState, _local: &mut Self::LocalState) {}
 
     #[inline]
     fn protect<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
         _state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
     ) -> MarkedPtr<T, Self> {
@@ -50,6 +60,8 @@ unsafe impl Reclaimer for Leaky {
 
     #[inline]
     fn protect_if_equal<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
         _state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
         expected: MarkedPtr<T, Self>,
@@ -59,13 +71,19 @@ unsafe impl Reclaimer for Leaky {
 
     #[inline]
     fn release<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
         _state: &mut Self::GuardState,
         _ptr: MarkedPtr<T, Self>,
     ) {
     }
 
     #[inline]
-    unsafe fn retire<T: Send + Sync + 'static>(_node: *mut Node<T, Self>) {
+    unsafe fn retire<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
+        _node: *mut Node<T, Self>,
+    ) {
         // Intentionally leaked. The allocation counters keep counting, so
         // the efficiency benchmark honestly reports an ever-growing
         // unreclaimed population for this baseline.
@@ -75,13 +93,14 @@ unsafe impl Reclaimer for Leaky {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::reclaim::{alloc_node, GuardPtr};
+    use crate::reclaim::{alloc_node, DomainRef, GuardPtr};
 
     #[test]
     fn guard_roundtrip() {
+        let h = DomainRef::<Leaky>::new_owned().register();
         let node = alloc_node::<u64, Leaky>(42);
         let c = ConcurrentPtr::new(MarkedPtr::new(node, 0));
-        let mut g: GuardPtr<u64, Leaky> = GuardPtr::new();
+        let mut g: GuardPtr<u64, Leaky> = h.guard();
         let p = g.acquire(&c);
         assert_eq!(p.get(), node);
         assert_eq!(g.as_ref(), Some(&42));
@@ -93,9 +112,10 @@ mod tests {
 
     #[test]
     fn acquire_if_equal_checks_value() {
+        let h = DomainRef::<Leaky>::new_owned().register();
         let node = alloc_node::<u64, Leaky>(1);
         let c = ConcurrentPtr::new(MarkedPtr::new(node, 0));
-        let mut g: GuardPtr<u64, Leaky> = GuardPtr::new();
+        let mut g: GuardPtr<u64, Leaky> = h.guard();
         assert!(g.acquire_if_equal(&c, MarkedPtr::new(node, 0)));
         assert!(!g.acquire_if_equal(&c, MarkedPtr::null()));
         assert!(g.is_null(), "failed acquire leaves the guard empty");
@@ -104,13 +124,14 @@ mod tests {
 
     #[test]
     fn take_moves_ownership() {
+        let h = DomainRef::<Leaky>::new_owned().register();
         let node = alloc_node::<u64, Leaky>(9);
         let c = ConcurrentPtr::new(MarkedPtr::new(node, 0));
-        let mut g: GuardPtr<u64, Leaky> = GuardPtr::new();
+        let mut g: GuardPtr<u64, Leaky> = h.guard();
         g.acquire(&c);
-        let h = g.take();
+        let t = g.take();
         assert!(g.is_null());
-        assert_eq!(h.as_ref(), Some(&9));
+        assert_eq!(t.as_ref(), Some(&9));
         unsafe { crate::reclaim::free_node(node) };
     }
 }

@@ -11,6 +11,10 @@
 //! unmapped and whose free-lists never touch the first slot word (where the
 //! refcount lives).
 //!
+//! All state is per-node (the refcount word), so LFRC's domain and local
+//! state are empty (`()`): every domain trivially provides the same
+//! guarantees, and the handle exists only for interface uniformity.
+//!
 //! ## Protocol
 //!
 //! The node's first word packs `{RETIRED:1 | count:63}`:
@@ -32,6 +36,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use super::domain::LocalCell;
 use super::retire::{prepare_retire, reclaim_one, AsRetireHeader, RetireHeader};
 use super::{ConcurrentPtr, MarkedPtr, Node, Reclaimer};
 
@@ -131,9 +136,16 @@ unsafe impl Reclaimer for Lfrc {
     const FORCE_POOL: bool = true;
     type Header = LfrcHeader;
     type GuardState = ();
-    type Region = ();
+    type DomainState = ();
+    type LocalState = ();
 
-    fn enter_region() -> Self::Region {}
+    fn new_domain_state() -> Self::DomainState {}
+
+    crate::reclaim::domain::impl_domain_statics!(Lfrc);
+
+    fn register(_domain: &Self::DomainState) -> Self::LocalState {}
+
+    fn unregister(_domain: &Self::DomainState, _local: &mut Self::LocalState) {}
 
     unsafe fn on_alloc<T: Send + Sync + 'static>(node: *mut Node<T, Self>) {
         // Record the type-erased destructor *before* arming the refcount:
@@ -143,6 +155,8 @@ unsafe impl Reclaimer for Lfrc {
     }
 
     fn protect<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
         _state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
     ) -> MarkedPtr<T, Self> {
@@ -172,6 +186,8 @@ unsafe impl Reclaimer for Lfrc {
     }
 
     fn protect_if_equal<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
         _state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
         expected: MarkedPtr<T, Self>,
@@ -194,6 +210,8 @@ unsafe impl Reclaimer for Lfrc {
     }
 
     fn release<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
         _state: &mut Self::GuardState,
         ptr: MarkedPtr<T, Self>,
     ) {
@@ -201,7 +219,11 @@ unsafe impl Reclaimer for Lfrc {
         unsafe { release_ref(ptr.get()) };
     }
 
-    unsafe fn retire<T: Send + Sync + 'static>(node: *mut Node<T, Self>) {
+    unsafe fn retire<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
+        node: *mut Node<T, Self>,
+    ) {
         // AcqRel: the unlink happens-before the (possible) free, and we see
         // all prior increments.
         let old = refs_of(node).fetch_or(RETIRED, Ordering::AcqRel);
@@ -216,16 +238,17 @@ unsafe impl Reclaimer for Lfrc {
 mod tests {
     use super::*;
     use crate::reclaim::tests_common::*;
-    use crate::reclaim::{alloc_node, GuardPtr};
+    use crate::reclaim::{alloc_node, DomainRef, GuardPtr};
     use std::sync::atomic::AtomicUsize;
     use std::sync::Arc;
 
     #[test]
     fn basic_reclamation_is_immediate() {
+        let h = DomainRef::<Lfrc>::new_owned().register();
         let drops = Arc::new(AtomicUsize::new(0));
         let node = alloc_node::<Payload, Lfrc>(Payload::new(1, &drops));
         // No guards: retire frees immediately — the "no delay" property.
-        unsafe { Lfrc::retire(node) };
+        unsafe { h.retire(node) };
         assert_eq!(drops.load(Ordering::Relaxed), 1);
     }
 
@@ -246,34 +269,36 @@ mod tests {
 
     #[test]
     fn acquire_fails_on_retired_slot() {
+        let h = DomainRef::<Lfrc>::new_owned().register();
         let drops = Arc::new(AtomicUsize::new(0));
         let node = alloc_node::<Payload, Lfrc>(Payload::new(2, &drops));
         let cell: ConcurrentPtr<Payload, Lfrc> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
         let stale = cell.load(Ordering::Acquire);
         cell.store(MarkedPtr::null(), Ordering::Release);
-        unsafe { Lfrc::retire(node) };
+        unsafe { h.retire(node) };
         assert_eq!(drops.load(Ordering::Relaxed), 1);
         // A stale acquire_if_equal against the retired slot must fail
         // cleanly (the slot word is RETIRED in the pool free-list).
-        let mut g: GuardPtr<Payload, Lfrc> = GuardPtr::new();
+        let mut g: GuardPtr<Payload, Lfrc> = h.guard();
         assert!(!g.acquire_if_equal(&cell, stale));
         assert!(g.is_null());
     }
 
     #[test]
     fn many_guards_one_node() {
+        let h = DomainRef::<Lfrc>::new_owned().register();
         let drops = Arc::new(AtomicUsize::new(0));
         let node = alloc_node::<Payload, Lfrc>(Payload::new(3, &drops));
         let cell: ConcurrentPtr<Payload, Lfrc> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
         let mut guards: Vec<GuardPtr<Payload, Lfrc>> = (0..32)
             .map(|_| {
-                let mut g = GuardPtr::new();
+                let mut g = h.guard();
                 g.acquire(&cell);
                 g
             })
             .collect();
         cell.store(MarkedPtr::null(), Ordering::Release);
-        unsafe { Lfrc::retire(node) };
+        unsafe { h.retire(node) };
         // Drop guards one by one; only the very last drop frees.
         while guards.len() > 1 {
             drop(guards.pop());

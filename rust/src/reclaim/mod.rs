@@ -3,7 +3,18 @@
 //! This module is the Rust rendering of the C++ interface the paper builds
 //! on (Robison's N3712 proposal, paper §2): [`MarkedPtr`] (`marked_ptr`),
 //! [`ConcurrentPtr`] (`concurrent_ptr`), [`GuardPtr`] (`guard_ptr`) and
-//! [`Region`] (`region_guard`), generic over a [`Reclaimer`].
+//! [`Region`] (`region_guard`), generic over a [`Reclaimer`] — organized as
+//! instance-based **reclamation domains** (see [`domain`]):
+//!
+//! * [`Domain<R>`] owns one instance of a scheme's shared state (what used
+//!   to be process-global statics); [`Domain::global()`] is the default.
+//! * [`LocalHandle<R>`] caches a thread's registry entry + retire list for
+//!   one domain; guards and regions created through it touch no TLS and no
+//!   `RefCell` on the fast path.
+//! * [`DomainRef<R>`] (global | owned `Arc`) is what data structures store;
+//!   their default constructors use the global domain so the quickstart API
+//!   stays one-liner simple, while `new_in` gives every shard/test/trial
+//!   its own isolated reclamation universe.
 //!
 //! Seven schemes implement [`Reclaimer`]:
 //!
@@ -24,6 +35,7 @@
 
 pub mod concurrent_ptr;
 pub mod debra;
+pub mod domain;
 pub mod ebr;
 pub mod epoch_core;
 pub mod hp;
@@ -39,6 +51,7 @@ pub mod stamp;
 pub mod tests_common;
 
 pub use concurrent_ptr::ConcurrentPtr;
+pub use domain::{Domain, DomainRef, LocalCell, LocalHandle, Region};
 pub use marked_ptr::MarkedPtr;
 pub use retire::AsRetireHeader;
 
@@ -75,6 +88,9 @@ impl<T, R: Reclaimer> Node<T, R> {
 
 /// Allocate a node (policy-routed, counted). The node starts unpublished —
 /// the caller links it into a structure via [`ConcurrentPtr`] CAS.
+/// Allocation is domain-independent: the domain matters only at retire
+/// time, so a node must be retired into the domain whose regions/hazards
+/// protect its readers.
 pub fn alloc_node<T: Send + Sync + 'static, R: Reclaimer>(data: T) -> *mut Node<T, R> {
     let layout = Layout::new::<Node<T, R>>();
     let pooled = crate::alloc::currently_pooled(R::FORCE_POOL);
@@ -116,15 +132,20 @@ pub unsafe fn free_node_parts<T: Send + Sync + 'static, R: Reclaimer>(
     crate::alloc::free_raw(node as *mut u8, Layout::new::<Node<T, R>>(), pooled);
 }
 
-/// A safe-memory-reclamation scheme.
+/// A safe-memory-reclamation scheme, shaped as a two-layer instance model:
+/// every operation takes the owning [`Domain`]'s state and the calling
+/// thread's [`LocalCell`]-wrapped local state (resolved once by a
+/// [`LocalHandle`] — no TLS on the fast path).
 ///
 /// # Safety
-/// Implementations must guarantee: a node passed to [`Reclaimer::retire`]
-/// is dropped/freed only after every [`GuardPtr`] that protected it *before*
-/// the retire has been reset — the paper's Proposition 1 ("a node is
-/// reclaimed only when it is referenced by no thread"). Protection
-/// established by `protect`/`protect_if_equal` must hold until the matching
-/// `release`.
+/// Implementations must guarantee, **per domain**: a node passed to
+/// [`Reclaimer::retire`] is dropped/freed only after every [`GuardPtr`]
+/// registered with the *same domain* that protected it *before* the retire
+/// has been reset — the paper's Proposition 1 ("a node is reclaimed only
+/// when it is referenced by no thread"). Protection established by
+/// `protect`/`protect_if_equal` must hold until the matching `release`.
+/// Domains must be independent: state shared between two `DomainState`
+/// instances would silently couple their reclamation decisions.
 pub unsafe trait Reclaimer: Sized + Send + Sync + 'static {
     /// Scheme name as used in benchmark output (paper plot legends).
     const NAME: &'static str;
@@ -138,16 +159,51 @@ pub unsafe trait Reclaimer: Sized + Send + Sync + 'static {
     /// Per-guard scheme state (hazard slot, region token, ...).
     type GuardState: Default;
 
-    /// RAII critical-region token (`region_guard` of §2). For schemes whose
-    /// regions are per-guard (ER, DEBRA, HPR, LFRC) this is a no-op type.
-    type Region;
+    /// Shared scheme state owned by a [`Domain`] (stamp pool, epoch state,
+    /// hazard registry, global retire lists — the former statics).
+    type DomainState: Send + Sync + 'static;
 
-    /// Enter a critical region (reentrant; guards nest inside).
-    fn enter_region() -> Self::Region;
+    /// Per-thread, per-domain state cached by a [`LocalHandle`] (registry
+    /// entry, local retire list, nesting counters).
+    type LocalState: 'static;
+
+    /// Fresh shared state for a new [`Domain`].
+    fn new_domain_state() -> Self::DomainState;
+
+    /// The process-wide default domain. Schemes generate this (plus the
+    /// thread-local handle cache behind [`Self::cached_handle`]) with the
+    /// crate-internal `impl_domain_statics!` macro — statics cannot be
+    /// generic.
+    fn global() -> &'static Domain<Self>;
+
+    /// The calling thread's cached handle for `domain`, registering on
+    /// first use. `None` during thread teardown (TLS gone) — callers fall
+    /// back to an ephemeral registration.
+    fn cached_handle(domain: &DomainRef<Self>) -> Option<LocalHandle<Self>>;
+
+    /// Register the calling thread with a domain (acquire/recycle the
+    /// registry entry, fresh retire list). Must not run user code.
+    fn register(domain: &Self::DomainState) -> Self::LocalState;
+
+    /// Release a thread's attachment: hand unreclaimed retired nodes to the
+    /// domain's shared lists and recycle the registry entry. May run user
+    /// drops (e.g. a final HP scan) — called with exclusive `local` access
+    /// and no live guards/regions on this handle.
+    fn unregister(domain: &Self::DomainState, local: &mut Self::LocalState);
+
+    /// Enter a critical region (reentrant; guards nest inside). No-op for
+    /// schemes whose protection is per-guard (HPR, LFRC, leaky).
+    fn enter_region(_domain: &Self::DomainState, _local: &LocalCell<Self::LocalState>) {}
+
+    /// Leave a critical region; typically reclaims the eligible local
+    /// prefix (runs user drops — never under a [`LocalCell`] borrow).
+    fn exit_region(_domain: &Self::DomainState, _local: &LocalCell<Self::LocalState>) {}
 
     /// `guard_ptr::acquire`: snapshot `src` and protect the target until
     /// `release`. Returns the protected (possibly null/marked) value.
     fn protect<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
         state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
     ) -> MarkedPtr<T, Self>;
@@ -156,6 +212,8 @@ pub unsafe trait Reclaimer: Sized + Send + Sync + 'static {
     /// `expected`; never loops unboundedly (wait-free for HPR — paper §2).
     /// Returns true on success (protection established or expected null).
     fn protect_if_equal<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
         state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
         expected: MarkedPtr<T, Self>,
@@ -163,10 +221,20 @@ pub unsafe trait Reclaimer: Sized + Send + Sync + 'static {
 
     /// Drop the protection for `ptr` (guard reset). `ptr` is the value the
     /// matching `protect` returned (non-null).
-    fn release<T: Send + Sync + 'static>(state: &mut Self::GuardState, ptr: MarkedPtr<T, Self>);
+    fn release<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        state: &mut Self::GuardState,
+        ptr: MarkedPtr<T, Self>,
+    );
 
     /// Return guard resources (hazard slot, region nesting) on guard drop.
-    fn drop_guard_state(_state: &mut Self::GuardState) {}
+    fn drop_guard_state(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
+        _state: &mut Self::GuardState,
+    ) {
+    }
 
     /// Scheme hook running right after a node is allocated and initialized
     /// (still private to the allocating thread). LFRC uses it to prepare the
@@ -176,50 +244,73 @@ pub unsafe trait Reclaimer: Sized + Send + Sync + 'static {
     /// `node` is a fresh, fully initialized, unpublished node.
     unsafe fn on_alloc<T: Send + Sync + 'static>(_node: *mut Node<T, Self>) {}
 
-    /// Retire a node: reclaim it once no thread can hold a reference.
+    /// Retire a node into a domain: reclaim it once no thread registered
+    /// with that domain can hold a reference.
     ///
     /// # Safety
     /// The node must be unlinked (unreachable for new references), retired
-    /// exactly once, and allocated by [`alloc_node`] for this scheme.
-    unsafe fn retire<T: Send + Sync + 'static>(node: *mut Node<T, Self>);
+    /// exactly once, allocated by [`alloc_node`] for this scheme, and its
+    /// readers must be protected through the *same* domain.
+    unsafe fn retire<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        node: *mut Node<T, Self>,
+    );
 
     /// Best-effort: reclaim everything currently reclaimable (bench/test
     /// hook; e.g. forces an epoch advance attempt or HP scan).
-    fn flush() {}
+    fn flush(_domain: &Self::DomainState, _local: &LocalCell<Self::LocalState>) {}
+
+    /// Reclaim every node still parked in the domain's shared lists. Called
+    /// from `Domain::drop` with exclusive access — no handles, guards or
+    /// regions exist, so everything retired is reclaimable.
+    fn drain_domain(_domain: &mut Self::DomainState) {}
 }
 
 /// `guard_ptr` (paper §2): shared ownership of one node. While a non-null
 /// `GuardPtr` holds a node, the node will not be reclaimed.
+///
+/// Guards are created from a [`LocalHandle`] ([`LocalHandle::guard`]) and
+/// stay attached to it: acquire/release resolve the thread's cached
+/// registry entry through the handle — no TLS lookup per operation (the
+/// seed paid one per guard transition). Guards are single-threaded, like
+/// the handle they came from.
 pub struct GuardPtr<T: Send + Sync + 'static, R: Reclaimer> {
     ptr: MarkedPtr<T, R>,
     state: R::GuardState,
-}
-
-impl<T: Send + Sync + 'static, R: Reclaimer> Default for GuardPtr<T, R> {
-    fn default() -> Self {
-        Self::new()
-    }
+    handle: LocalHandle<R>,
 }
 
 impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
-    /// An empty guard.
-    pub fn new() -> Self {
-        Self { ptr: MarkedPtr::null(), state: R::GuardState::default() }
+    /// An empty guard attached to `handle` (see [`LocalHandle::guard`]).
+    pub(crate) fn new_in(handle: &LocalHandle<R>) -> Self {
+        Self { ptr: MarkedPtr::null(), state: R::GuardState::default(), handle: handle.clone() }
     }
 
     /// Atomically snapshot `src` and protect the target (paper: `acquire`).
     /// Returns the protected value (also kept in the guard).
     pub fn acquire(&mut self, src: &ConcurrentPtr<T, R>) -> MarkedPtr<T, R> {
         self.reset();
-        self.ptr = R::protect(&mut self.state, src);
+        self.ptr =
+            R::protect(self.handle.domain_state(), self.handle.local(), &mut self.state, src);
         self.ptr
     }
 
     /// Protect only if `src` still equals `expected`; returns whether the
     /// snapshot succeeded (paper: `acquire_if_equal`).
-    pub fn acquire_if_equal(&mut self, src: &ConcurrentPtr<T, R>, expected: MarkedPtr<T, R>) -> bool {
+    pub fn acquire_if_equal(
+        &mut self,
+        src: &ConcurrentPtr<T, R>,
+        expected: MarkedPtr<T, R>,
+    ) -> bool {
         self.reset();
-        if R::protect_if_equal(&mut self.state, src, expected) {
+        if R::protect_if_equal(
+            self.handle.domain_state(),
+            self.handle.local(),
+            &mut self.state,
+            src,
+            expected,
+        ) {
             self.ptr = expected;
             true
         } else {
@@ -251,19 +342,24 @@ impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
     /// Release ownership; the guard becomes empty (paper: `reset`).
     pub fn reset(&mut self) {
         if !self.ptr.is_null() {
-            R::release(&mut self.state, self.ptr);
+            R::release(self.handle.domain_state(), self.handle.local(), &mut self.state, self.ptr);
             self.ptr = MarkedPtr::null();
         }
     }
 
     /// Move the guarded pointer out of `self` into a fresh guard
-    /// (`save = std::move(cur)` in the paper's Listing 1).
+    /// (`save = std::move(cur)` in the paper's Listing 1). The protection
+    /// (hazard slot / region token) travels with it; `self` becomes empty.
     pub fn take(&mut self) -> GuardPtr<T, R> {
-        std::mem::take(self)
+        GuardPtr {
+            ptr: std::mem::replace(&mut self.ptr, MarkedPtr::null()),
+            state: std::mem::take(&mut self.state),
+            handle: self.handle.clone(),
+        }
     }
 
     /// Mark the guarded node for reclamation once safe, and reset the guard
-    /// (paper: `reclaim`).
+    /// (paper: `reclaim`). Retires into the guard's domain.
     ///
     /// # Safety
     /// The node must be unlinked from its data structure: no new references
@@ -273,26 +369,14 @@ impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
         debug_assert!(!self.ptr.is_null());
         let node = self.ptr.get();
         self.reset();
-        R::retire(node);
+        R::retire(self.handle.domain_state(), self.handle.local(), node);
     }
 }
 
 impl<T: Send + Sync + 'static, R: Reclaimer> Drop for GuardPtr<T, R> {
     fn drop(&mut self) {
         self.reset();
-        R::drop_guard_state(&mut self.state);
-    }
-}
-
-/// RAII `region_guard` (paper §2): amortizes critical-region entry across
-/// many guard acquisitions for region-based schemes (NER, QSR, Stamp-it).
-pub struct Region<R: Reclaimer> {
-    _token: R::Region,
-}
-
-impl<R: Reclaimer> Region<R> {
-    pub fn enter() -> Self {
-        Self { _token: R::enter_region() }
+        R::drop_guard_state(self.handle.domain_state(), self.handle.local(), &mut self.state);
     }
 }
 

@@ -5,26 +5,29 @@
 //! whole region instead of being paid per operation.
 //!
 //! In this crate the scheme mechanics are shared with [`super::ebr`]; the
-//! semantic difference materializes through a separate epoch domain and the
+//! semantic difference materializes through separate domains and the
 //! benchmark drivers entering [`crate::reclaim::Region`]s.
 
 use super::epoch_core::{epoch_reclaimer_impl, EpochConfig, EpochDomain};
+use super::Domain;
 
 /// New epoch-based reclamation (Hart et al.).
 pub struct Nebr;
 
-static DOMAIN: EpochDomain = EpochDomain::new(EpochConfig {
-    advance_every: 100, // paper §4.2
-    debra_check_every: None,
-    quiescent_at_exit: false,
-});
+epoch_reclaimer_impl!(
+    Nebr,
+    "NER",
+    EpochConfig {
+        advance_every: 100, // paper §4.2
+        debra_check_every: None,
+        quiescent_at_exit: false,
+    }
+);
 
-/// The scheme's epoch domain (benchmark diagnostics).
+/// The global domain's epoch state (benchmark diagnostics / ablations).
 pub fn domain() -> &'static EpochDomain {
-    &DOMAIN
+    Domain::<Nebr>::global().state()
 }
-
-epoch_reclaimer_impl!(Nebr, "NER", DOMAIN, NEBR_LOCAL, NebrRegion);
 
 #[cfg(test)]
 mod tests {

@@ -8,29 +8,32 @@
 //! * region entry is nearly free (no announcement, no fence) — QSR has the
 //!   cheapest guards of all schemes;
 //! * a registered thread that stops passing quiescent states (idle, long
-//!   region, or busy elsewhere) blocks reclamation globally — the reason
-//!   QSR "basically fails completely to reliably reclaim nodes" in the
-//!   update-heavy HashMap benchmark (paper App. A.2).
+//!   region, or busy elsewhere) blocks reclamation in its domain — the
+//!   reason QSR "basically fails completely to reliably reclaim nodes" in
+//!   the update-heavy HashMap benchmark (paper App. A.2).
 
 use super::epoch_core::{epoch_reclaimer_impl, EpochConfig, EpochDomain};
+use super::Domain;
 
 /// Quiescent-state-based reclamation.
 pub struct Qsr;
 
-static DOMAIN: EpochDomain = EpochDomain::new(EpochConfig {
-    // With quiescent_at_exit, `advance_every` counts quiescent passes
-    // between advance attempts; the fuzzy barrier itself is every exit.
-    advance_every: 1,
-    debra_check_every: None,
-    quiescent_at_exit: true,
-});
+epoch_reclaimer_impl!(
+    Qsr,
+    "QSR",
+    EpochConfig {
+        // With quiescent_at_exit, `advance_every` counts quiescent passes
+        // between advance attempts; the fuzzy barrier itself is every exit.
+        advance_every: 1,
+        debra_check_every: None,
+        quiescent_at_exit: true,
+    }
+);
 
-/// The scheme's epoch domain (benchmark diagnostics).
+/// The global domain's epoch state (benchmark diagnostics / ablations).
 pub fn domain() -> &'static EpochDomain {
-    &DOMAIN
+    Domain::<Qsr>::global().state()
 }
-
-epoch_reclaimer_impl!(Qsr, "QSR", DOMAIN, QSR_LOCAL, QsrRegion);
 
 #[cfg(test)]
 mod tests {

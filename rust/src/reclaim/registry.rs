@@ -1,9 +1,10 @@
-//! Per-scheme thread registries.
+//! Per-domain thread registries.
 //!
-//! Every scheme keeps a global, lock-free list of per-thread entries
+//! Every reclamation domain keeps a lock-free list of per-thread entries
 //! (hazard-pointer records, epoch records, ...). Entries are never freed —
-//! they are marked inactive on thread exit and recycled by later threads, so
-//! the list length is bounded by the *peak* number of concurrent threads
+//! they are marked inactive when a thread's handle drops and recycled by
+//! later threads, so the list length is bounded by the *peak* number of
+//! concurrently registered threads
 //! (the paper's schemes reuse their `thread_control_block`s the same way,
 //! and the implementation "works with arbitrary numbers of threads that can
 //! be started and stopped arbitrarily").
@@ -184,6 +185,65 @@ mod tests {
         assert!(LIST.iter().all(|e| !e.is_active()));
         assert!(LIST.len() <= n);
         assert!(!ptrs.is_empty());
+    }
+
+    #[test]
+    fn recycled_entry_state_is_reset_before_reuse() {
+        // Satellite of the domain refactor: a recycled entry must come back
+        // with fully reset state — the `recycle` hook runs after the claim
+        // CAS and before the entry is handed to the new owner, so the owner
+        // never observes the previous thread's residue.
+        static LIST: ThreadList<AtomicUsize> = ThreadList::new();
+        let a = LIST.acquire(|| AtomicUsize::new(0), |_| {});
+        a.data().store(0xDEAD, Ordering::Relaxed); // previous owner's residue
+        LIST.release(a);
+        let b = LIST.acquire(
+            || AtomicUsize::new(0),
+            |slot| slot.store(0, Ordering::Relaxed),
+        );
+        assert_eq!(b as *const _, a as *const _, "must recycle, not grow");
+        assert_eq!(b.data().load(Ordering::Relaxed), 0, "residue must be reset");
+        assert!(b.is_active());
+        LIST.release(b);
+    }
+
+    #[test]
+    fn churn_recycles_with_reset_under_concurrency() {
+        // Waves of short-lived owners: every acquire must observe reset
+        // state (the recycle hook zeroes it; owners poison it before
+        // release). Also bounds the list by peak concurrency.
+        static LIST: ThreadList<AtomicUsize> = ThreadList::new();
+        let waves = 8;
+        let per_wave = 4;
+        for _ in 0..waves {
+            let barrier = Arc::new(Barrier::new(per_wave));
+            let handles: Vec<_> = (0..per_wave)
+                .map(|_| {
+                    let barrier = barrier.clone();
+                    std::thread::spawn(move || {
+                        barrier.wait();
+                        let e = LIST.acquire(
+                            || AtomicUsize::new(0),
+                            |slot| slot.store(0, Ordering::Relaxed),
+                        );
+                        assert_eq!(
+                            e.data().load(Ordering::Relaxed),
+                            0,
+                            "stale state handed to a recycled owner"
+                        );
+                        e.data().store(0xBAD, Ordering::Relaxed);
+                        std::thread::yield_now();
+                        e.data().store(0xBAD, Ordering::Relaxed);
+                        LIST.release(e);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        assert!(LIST.len() <= per_wave, "list must be bounded by peak concurrency");
+        assert!(LIST.iter().all(|e| !e.is_active()));
     }
 
     #[test]

@@ -14,119 +14,121 @@
 //!   nodes that cannot yet be reclaimed" (Proposition 2).
 //! * If the thread was *not* the last one and its list exceeds the
 //!   threshold (20, the paper's empirical choice), the remainder moves to
-//!   the global retire-list as an ordered sublist. The thread whose
-//!   `remove` returned `true` — the one holding the lowest stamp — owns
-//!   reclamation of the global list, rechecking the lowest stamp and
+//!   the domain's global retire-list as an ordered sublist. The thread
+//!   whose `remove` returned `true` — the one holding the lowest stamp —
+//!   owns reclamation of the global list, rechecking the lowest stamp and
 //!   restarting if it moved (this is what rescues the end-of-run race the
 //!   other schemes suffer, §4.4).
+//!
+//! All of this state (pool, global retire-list, threshold) lives in a
+//! [`StampDomain`] — one per [`crate::reclaim::Domain`]; the thread's
+//! control-block index and local retire-list are the [`StampLocal`] a
+//! [`crate::reclaim::LocalHandle`] caches, so region enter/exit touches
+//! neither TLS nor `RefCell` (§Perf: the seed's fused-TLS path measured
+//! ~74 ns per cycle; the cached handle removes the lookup entirely).
 
 pub mod pool;
 
-use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::domain::LocalCell;
 use super::retire::{prepare_retire, GlobalRetireList, RetireList};
-use super::{ConcurrentPtr, MarkedPtr, Node, Reclaimer};
-use once_cell::sync::Lazy;
+use super::{ConcurrentPtr, Domain, MarkedPtr, Node, Reclaimer};
 use pool::StampPool;
 
 /// Stamp-it (Pöter & Träff 2018).
 pub struct StampIt;
 
-/// Maximum simultaneously registered threads (blocks recycle on exit).
+/// Maximum simultaneously registered threads per domain (blocks recycle on
+/// handle drop).
 const POOL_CAPACITY: usize = 4096;
 
-/// Paper §3: "we use a static threshold with an empirical value of 20".
-/// Runtime-tunable for the ablation bench (`abl_threshold`).
-static THRESHOLD: AtomicUsize = AtomicUsize::new(20);
-
-static POOL: Lazy<StampPool> = Lazy::new(|| StampPool::new(POOL_CAPACITY));
-static GLOBAL_RETIRED: GlobalRetireList = GlobalRetireList::new();
-
-/// The global Stamp Pool (diagnostics, micro-benches).
-pub fn stamp_pool() -> &'static StampPool {
-    &POOL
+/// One Stamp-it reclamation universe: the Stamp Pool, the global list of
+/// ordered retire sublists, and the local-list threshold. The `DomainState`
+/// of [`StampIt`].
+pub struct StampDomain {
+    pool: StampPool,
+    global_retired: GlobalRetireList,
+    /// Paper §3: "we use a static threshold with an empirical value of 20".
+    /// Runtime-tunable per domain for the ablation bench (`abl_threshold`).
+    threshold: AtomicUsize,
 }
 
-/// Set the local-retire-list threshold (ablation bench A1).
-pub fn set_threshold(t: usize) {
-    THRESHOLD.store(t, Ordering::Relaxed);
+impl StampDomain {
+    fn new() -> Self {
+        Self {
+            pool: StampPool::new(POOL_CAPACITY),
+            global_retired: GlobalRetireList::new(),
+            threshold: AtomicUsize::new(20),
+        }
+    }
+
+    /// The domain's Stamp Pool (diagnostics, micro-benches).
+    pub fn pool(&self) -> &StampPool {
+        &self.pool
+    }
+
+    /// Set the local-retire-list threshold (ablation bench A1).
+    pub fn set_threshold(&self, t: usize) {
+        self.threshold.store(t, Ordering::Relaxed);
+    }
+
+    /// Current threshold.
+    pub fn threshold(&self) -> usize {
+        self.threshold.load(Ordering::Relaxed)
+    }
+
+    /// Nodes currently parked on the domain's global retire-list
+    /// (diagnostics).
+    pub fn global_retired_count(&self) -> usize {
+        self.global_retired.count()
+    }
 }
 
-/// Current threshold.
-pub fn threshold() -> usize {
-    THRESHOLD.load(Ordering::Relaxed)
-}
-
-/// Per-thread Stamp-it state.
-struct StampLocal {
+/// Per-thread Stamp-it state (the `LocalState` cached by a handle).
+pub struct StampLocal {
     block: u32,
     nesting: u32,
     retired: RetireList,
 }
 
-impl StampLocal {
-    fn new() -> Self {
-        Self { block: POOL.alloc_block(), nesting: 0, retired: RetireList::new() }
-    }
-}
-
-impl Drop for StampLocal {
-    fn drop(&mut self) {
-        debug_assert_eq!(self.nesting, 0, "thread exiting inside a critical region");
-        // Hand any unreclaimed nodes to the global list (ordered sublist);
-        // the next "last thread" reclaims them — Stamp-it's answer to the
-        // end-of-run race (§4.4).
-        let (chain, _) = self.retired.take_chain();
-        GLOBAL_RETIRED.push_sublist(chain);
-        POOL.free_block(self.block);
-    }
-}
-
-thread_local! {
-    static STAMP_LOCAL: RefCell<StampLocal> = RefCell::new(StampLocal::new());
-}
-
 /// Region exit: remove from the pool, reclaim local prefix, then either
 /// hand the surplus to the global list or (as the last thread) reclaim the
-/// global list. Runs user drops — called with **no** RefCell borrow held.
-fn leave_region() {
-    // One TLS access covers the common case (nested exit, or outermost
-    // with an empty retire list and nothing global to do) — §Perf: this
-    // fused check cut the region cycle from ~74 ns to the pool-op cost.
-    let (was_last, retired_empty) = {
-        let state = STAMP_LOCAL.with(|l| {
-            let mut l = l.borrow_mut();
-            debug_assert!(l.nesting > 0);
-            l.nesting -= 1;
-            if l.nesting > 0 {
-                return None;
-            }
-            Some((POOL.remove(l.block), l.retired.is_empty()))
-        });
-        let Some(state) = state else { return };
-        state
-    };
-    if retired_empty && !(was_last && !GLOBAL_RETIRED.is_empty()) {
+/// global list. Runs user drops — called with **no** [`LocalCell`] borrow
+/// held.
+fn leave_region(domain: &StampDomain, local: &LocalCell<StampLocal>) {
+    // One borrow covers the common case (nested exit, or outermost with an
+    // empty retire list and nothing global to do) — §Perf: this fused
+    // check cut the region cycle to the pool-op cost.
+    let state = local.with(|l| {
+        debug_assert!(l.nesting > 0);
+        l.nesting -= 1;
+        if l.nesting > 0 {
+            None
+        } else {
+            Some((domain.pool.remove(l.block), l.retired.is_empty()))
+        }
+    });
+    let Some((was_last, retired_empty)) = state else { return };
+    if retired_empty && !(was_last && !domain.global_retired.is_empty()) {
         return;
     }
 
-    reclaim_local();
+    reclaim_local(domain, local);
 
     if was_last {
-        reclaim_global();
+        reclaim_global(domain);
     } else {
         // Over threshold? Move the (ordered) remainder to the global list.
-        let chain = STAMP_LOCAL.with(|l| {
-            let mut l = l.borrow_mut();
-            if l.retired.len() > THRESHOLD.load(Ordering::Relaxed) {
+        let chain = local.with(|l| {
+            if l.retired.len() > domain.threshold() {
                 Some(l.retired.take_chain().0)
             } else {
                 None
             }
         });
         if let Some(chain) = chain {
-            GLOBAL_RETIRED.push_sublist(chain);
+            domain.global_retired.push_sublist(chain);
         }
     }
 }
@@ -134,23 +136,18 @@ fn leave_region() {
 /// Reclaim the local retire-list prefix with stamps below the pool's lowest
 /// stamp. Borrow-free while running user drops (nested retires are merged
 /// back, cf. `epoch_core`'s reentrancy discipline).
-fn reclaim_local() -> usize {
-    let empty = STAMP_LOCAL.with(|l| l.borrow().retired.is_empty());
-    if empty {
+fn reclaim_local(domain: &StampDomain, local: &LocalCell<StampLocal>) -> usize {
+    if local.with(|l| l.retired.is_empty()) {
         return 0;
     }
-    let mut mine = STAMP_LOCAL.with(|l| std::mem::take(&mut l.borrow_mut().retired));
-    let lowest = POOL.lowest_stamp();
+    let mut mine = local.with(|l| std::mem::take(&mut l.retired));
+    let lowest = domain.pool.lowest_stamp();
     // SAFETY: Proposition 1 — stamp < lowest implies every thread currently
     // in a region entered after the node was retired.
     let freed = unsafe { mine.reclaim_prefix(|s| s < lowest) };
-    STAMP_LOCAL.with(|l| {
-        let mut l = l.borrow_mut();
-        let nested = std::mem::replace(&mut l.retired, mine);
-        let (chain, _) = {
-            let mut n = nested;
-            n.take_chain()
-        };
+    local.with(|l| {
+        let mut nested = std::mem::replace(&mut l.retired, mine);
+        let (chain, _) = nested.take_chain();
         let mut cur = chain;
         while !cur.is_null() {
             // SAFETY: we own the detached nested chain; nested stamps are
@@ -165,41 +162,27 @@ fn reclaim_local() -> usize {
 
 /// Last-thread duty: reclaim the global list of ordered sublists,
 /// restarting while the lowest stamp keeps moving (paper §4.4).
-fn reclaim_global() -> usize {
+fn reclaim_global(domain: &StampDomain) -> usize {
     let mut total = 0;
     loop {
-        if GLOBAL_RETIRED.is_empty() {
+        if domain.global_retired.is_empty() {
             return total;
         }
-        let lowest = POOL.lowest_stamp();
+        let lowest = domain.pool.lowest_stamp();
         // SAFETY: Proposition 1, as in reclaim_local.
-        total += unsafe { GLOBAL_RETIRED.reclaim_where(|s| s < lowest) };
-        if POOL.lowest_stamp() == lowest {
+        total += unsafe { domain.global_retired.reclaim_where(|s| s < lowest) };
+        if domain.pool.lowest_stamp() == lowest {
             return total;
         }
         // The stamp advanced while we scanned: restart with the new bound.
     }
 }
 
-/// RAII region token.
-pub struct StampRegion {
-    _not_send: std::marker::PhantomData<*const ()>,
-}
-
-impl Drop for StampRegion {
-    fn drop(&mut self) {
-        if STAMP_LOCAL.try_with(|_| ()).is_ok() {
-            leave_region();
-        }
-    }
-}
-
-fn enter_region_impl() {
-    STAMP_LOCAL.with(|l| {
-        let mut l = l.borrow_mut();
+fn enter_region_impl(domain: &StampDomain, local: &LocalCell<StampLocal>) {
+    local.with(|l| {
         l.nesting += 1;
         if l.nesting == 1 {
-            POOL.push(l.block);
+            domain.pool.push(l.block);
         }
     });
 }
@@ -212,27 +195,53 @@ pub struct StampGuardToken {
 
 // SAFETY: Propositions 1–3 of the paper, transcribed in the module and
 // pool docs: a node is reclaimed only when its stamp is below the lowest
-// stamp of any thread inside a critical region, and guards keep their
-// thread inside a region.
+// stamp of any thread inside a critical region of the same domain, and
+// guards keep their thread inside a region.
 unsafe impl Reclaimer for StampIt {
     const NAME: &'static str = "Stamp-it";
     type Header = super::epoch_core::EpochHeader;
     type GuardState = StampGuardToken;
-    type Region = StampRegion;
+    type DomainState = StampDomain;
+    type LocalState = StampLocal;
 
-    fn enter_region() -> Self::Region {
-        enter_region_impl();
-        StampRegion { _not_send: std::marker::PhantomData }
+    fn new_domain_state() -> Self::DomainState {
+        StampDomain::new()
+    }
+
+    crate::reclaim::domain::impl_domain_statics!(StampIt);
+
+    fn register(domain: &Self::DomainState) -> Self::LocalState {
+        StampLocal { block: domain.pool.alloc_block(), nesting: 0, retired: RetireList::new() }
+    }
+
+    fn unregister(domain: &Self::DomainState, local: &mut Self::LocalState) {
+        debug_assert_eq!(local.nesting, 0, "handle dropped inside a critical region");
+        // Hand any unreclaimed nodes to the global list (ordered sublist);
+        // the next "last thread" reclaims them — Stamp-it's answer to the
+        // end-of-run race (§4.4).
+        let (chain, _) = local.retired.take_chain();
+        domain.global_retired.push_sublist(chain);
+        domain.pool.free_block(local.block);
+    }
+
+    fn enter_region(domain: &Self::DomainState, local: &LocalCell<Self::LocalState>) {
+        enter_region_impl(domain, local);
+    }
+
+    fn exit_region(domain: &Self::DomainState, local: &LocalCell<Self::LocalState>) {
+        leave_region(domain, local);
     }
 
     #[inline]
     fn protect<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
         state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
     ) -> MarkedPtr<T, Self> {
         if !state.entered {
             state.entered = true;
-            enter_region_impl();
+            enter_region_impl(domain, local);
         }
         // Acquire pairs with the Release publication of the node.
         src.load(Ordering::Acquire)
@@ -240,97 +249,119 @@ unsafe impl Reclaimer for StampIt {
 
     #[inline]
     fn protect_if_equal<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
         state: &mut Self::GuardState,
         src: &ConcurrentPtr<T, Self>,
         expected: MarkedPtr<T, Self>,
     ) -> bool {
         if !state.entered {
             state.entered = true;
-            enter_region_impl();
+            enter_region_impl(domain, local);
         }
         src.load(Ordering::Acquire) == expected
     }
 
     #[inline]
     fn release<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
         _state: &mut Self::GuardState,
         _ptr: MarkedPtr<T, Self>,
     ) {
         // Protection is region-scoped (left on guard drop).
     }
 
-    fn drop_guard_state(state: &mut Self::GuardState) {
+    fn drop_guard_state(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        state: &mut Self::GuardState,
+    ) {
         if state.entered {
             state.entered = false;
-            if STAMP_LOCAL.try_with(|_| ()).is_ok() {
-                leave_region();
-            }
+            leave_region(domain, local);
         }
     }
 
-    unsafe fn retire<T: Send + Sync + 'static>(node: *mut Node<T, Self>) {
+    unsafe fn retire<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        node: *mut Node<T, Self>,
+    ) {
         // Stamp with the highest stamp assigned so far (§3): every thread
         // that might reference the node is ordered before this stamp.
-        let stamp = POOL.highest_stamp();
+        let stamp = domain.pool.highest_stamp();
         let r = prepare_retire::<T, Self>(node, stamp);
-        let pushed = STAMP_LOCAL
-            .try_with(|l| {
-                l.borrow_mut().retired.push_back(r);
-            })
-            .is_ok();
-        if !pushed {
-            // Thread teardown: single-node ordered sublist to the global
-            // list.
-            GLOBAL_RETIRED.push_sublist(r);
-        }
+        local.with(|l| l.retired.push_back(r));
     }
 
-    fn flush() {
+    fn flush(domain: &Self::DomainState, local: &LocalCell<Self::LocalState>) {
         // Cycle a region: the push/remove pair advances tail.stamp past
         // every stamp assigned before, making prior retires reclaimable
         // (when no other thread sits in an older region).
-        {
-            let _r = Self::enter_region();
+        enter_region_impl(domain, local);
+        leave_region(domain, local);
+        reclaim_local(domain, local);
+        reclaim_global(domain);
+    }
+
+    fn drain_domain(domain: &mut Self::DomainState) {
+        // Exclusive access: no handles → no regions → everything parked on
+        // the global list is reclaimable.
+        // SAFETY: see above.
+        unsafe {
+            domain.global_retired.reclaim_where(|_| true);
         }
-        reclaim_local();
-        reclaim_global();
     }
 }
 
-/// Nodes currently parked on the global retire-list (diagnostics).
+/// The global domain's Stamp Pool (diagnostics, micro-benches).
+pub fn stamp_pool() -> &'static StampPool {
+    Domain::<StampIt>::global().state().pool()
+}
+
+/// Set the global domain's threshold (ablation compatibility; owned domains
+/// use [`StampDomain::set_threshold`]).
+pub fn set_threshold(t: usize) {
+    Domain::<StampIt>::global().state().set_threshold(t);
+}
+
+/// The global domain's current threshold.
+pub fn threshold() -> usize {
+    Domain::<StampIt>::global().state().threshold()
+}
+
+/// Nodes currently parked on the global domain's retire-list (diagnostics).
 pub fn global_retired_count() -> usize {
-    GLOBAL_RETIRED.count()
+    Domain::<StampIt>::global().state().global_retired_count()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::reclaim::tests_common::*;
+    use crate::reclaim::{DomainRef, Region};
 
-    // Stamp-it's tests share one global pool; region-timing-sensitive
-    // assertions serialize on the crate test lock.
+    // Each test runs in its own domain — no cross-test retire-list or
+    // region traffic, no serialization lock needed.
 
     #[test]
     fn basic_reclamation() {
-        let _l = serial_lock();
         exercise_basic_reclamation::<StampIt>();
     }
 
     #[test]
     fn guard_blocks_reclamation() {
-        let _l = serial_lock();
         exercise_guard_blocks_reclamation::<StampIt>();
     }
 
     #[test]
     fn region_guard_amortizes_and_protects() {
-        let _l = serial_lock();
         exercise_region_guard::<StampIt>();
     }
 
     #[test]
     fn concurrent_smoke() {
-        let _l = serial_lock();
         exercise_concurrent_smoke::<StampIt>(4, 500);
     }
 
@@ -339,15 +370,16 @@ mod tests {
         use crate::reclaim::alloc_node;
         use std::sync::atomic::AtomicUsize;
         use std::sync::Arc;
-        let _l = serial_lock();
         // Stamp-it's efficiency claim in miniature: retire inside a region,
         // and one region cycle later the node is gone — no epoch lag.
+        let domain = DomainRef::<StampIt>::new_owned();
+        let h = domain.register();
         let drops = Arc::new(AtomicUsize::new(0));
         {
-            let _r = crate::reclaim::Region::<StampIt>::enter();
+            let _r = Region::enter(&h);
             let node = alloc_node::<Payload, StampIt>(Payload::new(1, &drops));
-            unsafe { StampIt::retire(node) };
-        } // region exit reclaims: we are the last thread
+            unsafe { h.retire(node) };
+        } // region exit reclaims: we are the last thread in this domain
         assert_eq!(drops.load(Ordering::Relaxed), 1, "retire must resolve at region exit");
     }
 
@@ -356,23 +388,26 @@ mod tests {
         use crate::reclaim::alloc_node;
         use std::sync::atomic::AtomicUsize;
         use std::sync::{Arc, Barrier};
-        let _l = serial_lock();
+        let domain = DomainRef::<StampIt>::new_owned();
+        let h = domain.register();
         let drops = Arc::new(AtomicUsize::new(0));
         let gate = Arc::new(Barrier::new(2));
         let gate2 = gate.clone();
+        let domain2 = domain.clone();
         // A second thread parks inside a region so our exit is NOT last.
         let parked = std::thread::spawn(move || {
-            let _r = crate::reclaim::Region::<StampIt>::enter();
+            let h2 = domain2.register();
+            let _r = Region::enter(&h2);
             gate2.wait(); // region open
             gate2.wait(); // main thread done retiring
         });
         gate.wait();
-        let n = threshold() + 8;
+        let n = domain.domain().state().threshold() + 8;
         {
-            let _r = crate::reclaim::Region::<StampIt>::enter();
+            let _r = Region::enter(&h);
             for i in 0..n {
                 let node = alloc_node::<Payload, StampIt>(Payload::new(i as u64, &drops));
-                unsafe { StampIt::retire(node) };
+                unsafe { h.retire(node) };
             }
         }
         // Not last (parked thread holds an older stamp): nothing reclaimed;
@@ -380,13 +415,25 @@ mod tests {
         assert_eq!(drops.load(Ordering::Relaxed), 0);
         gate.wait();
         parked.join().unwrap();
-        for _ in 0..100 {
-            if drops.load(Ordering::Relaxed) == n {
-                break;
-            }
-            StampIt::flush();
-            std::thread::sleep(std::time::Duration::from_millis(1));
-        }
+        flush_until(&h, || drops.load(Ordering::Relaxed) == n);
         assert_eq!(drops.load(Ordering::Relaxed), n);
+    }
+
+    #[test]
+    fn owned_domain_drains_on_drop() {
+        use crate::reclaim::alloc_node;
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Arc;
+        let drops = Arc::new(AtomicUsize::new(0));
+        {
+            let domain = DomainRef::<StampIt>::new_owned();
+            let h = domain.register();
+            // Retire without ever cycling a region: nothing is reclaimable
+            // while the handle lives (no "last thread" event).
+            let node = alloc_node::<Payload, StampIt>(Payload::new(9, &drops));
+            unsafe { h.retire(node) };
+            drop(h); // hands the node to the domain's global list
+        } // last DomainRef drops → drain_domain reclaims everything
+        assert_eq!(drops.load(Ordering::Relaxed), 1, "domain drop must drain parked nodes");
     }
 }

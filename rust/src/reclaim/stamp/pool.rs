@@ -29,7 +29,7 @@
 //! PendingPush` until its push completes (Listing 4), so its stamp sorts
 //! *below* its final position while it is not yet reliably in the list.
 
-use crossbeam_utils::CachePadded;
+use crate::util::cache_pad::CachePadded;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// `PendingPush` flag (paper §3.1).
@@ -271,7 +271,12 @@ impl StampPool {
             }
             if succ
                 .next
-                .compare_exchange(link, bump(link, b_idx, false), Ordering::AcqRel, Ordering::Acquire)
+                .compare_exchange(
+                    link,
+                    bump(link, b_idx, false),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
                 .is_ok()
             {
                 break;

@@ -1,26 +1,38 @@
 //! Shared scheme-conformance exercises: every [`Reclaimer`] must pass the
 //! same battery. Used by the per-scheme unit tests and re-exported
 //! (`#[doc(hidden)]`) for the integration suites under `rust/tests/`.
+//!
+//! Every exercise runs in its **own** [`DomainRef::new_owned`] domain:
+//! tests never share retire lists, epochs, stamps or hazard registries, so
+//! they neither race each other's reclamation decisions nor need a
+//! serialization lock (the cross-talk the global-singleton design forced).
 
-use super::{alloc_node, ConcurrentPtr, GuardPtr, MarkedPtr, Reclaimer, Region};
+use super::{
+    alloc_node, ConcurrentPtr, DomainRef, GuardPtr, LocalHandle, MarkedPtr, Reclaimer, Region,
+};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
-/// Crate-wide test lock: schemes with global shared state (one Stamp Pool,
-/// one epoch domain per scheme) use it to serialize tests whose assertions
-/// are sensitive to concurrent regions from sibling tests.
+/// Crate-wide test lock for the few tests that exercise the **global**
+/// domain (the TLS convenience path); per-domain tests don't need it.
 pub fn serial_lock() -> MutexGuard<'static, ()> {
     static LOCK: Mutex<()> = Mutex::new(());
     LOCK.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// Poll `done` with flushes until it returns true or ~2 s elapse.
-pub fn flush_until<R: Reclaimer>(mut done: impl FnMut() -> bool) -> bool {
+///
+/// Flushes both `h` and the calling thread's *cached* handle for the same
+/// domain: nodes retired through the TLS convenience path sit in the cached
+/// handle's local retire list, which `h` alone cannot drain.
+pub fn flush_until<R: Reclaimer>(h: &LocalHandle<R>, mut done: impl FnMut() -> bool) -> bool {
+    let domain = h.domain_ref();
     for _ in 0..2000 {
         if done() {
             return true;
         }
-        R::flush();
+        h.flush();
+        domain.with_handle(|cached| cached.flush());
         std::thread::yield_now();
         std::thread::sleep(std::time::Duration::from_micros(500));
     }
@@ -63,55 +75,61 @@ impl Drop for Payload {
 /// Retire a batch of nodes with no guards around; after flushing, all of
 /// them must have been dropped exactly once.
 pub fn exercise_basic_reclamation<R: Reclaimer>() {
+    let domain = DomainRef::<R>::new_owned();
+    let h = domain.register();
     let drops = Arc::new(AtomicUsize::new(0));
     const N: usize = 64;
     for i in 0..N {
         let node = alloc_node::<Payload, R>(Payload::new(i as u64, &drops));
         // SAFETY: never published, so trivially unlinked; retired once.
-        unsafe { R::retire(node) };
+        unsafe { h.retire(node) };
     }
     // Flush until everything is reclaimed (epoch schemes need a few
     // advances; guard-free, so progress is guaranteed).
-    flush_until::<R>(|| drops.load(Ordering::Relaxed) == N);
+    flush_until(&h, || drops.load(Ordering::Relaxed) == N);
     assert_eq!(drops.load(Ordering::Relaxed), N, "{} leaked retired nodes", R::NAME);
 }
 
 /// A guarded node must survive `retire` + aggressive flushing until the
 /// guard is dropped.
 pub fn exercise_guard_blocks_reclamation<R: Reclaimer>() {
+    let domain = DomainRef::<R>::new_owned();
+    let h = domain.register();
     let drops = Arc::new(AtomicUsize::new(0));
     let node = alloc_node::<Payload, R>(Payload::new(7, &drops));
     let cell: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
 
-    let mut guard: GuardPtr<Payload, R> = GuardPtr::new();
+    let mut guard: GuardPtr<Payload, R> = h.guard();
     let p = guard.acquire(&cell);
     assert_eq!(p.get(), node);
 
     // Unlink, then retire while still guarded.
     cell.store(MarkedPtr::null(), Ordering::Release);
     // SAFETY: unlinked above; retired exactly once.
-    unsafe { R::retire(node) };
+    unsafe { h.retire(node) };
 
     // The reclaimer may try as hard as it wants — the guard must hold.
     // (Retirer == guard holder, the strictest single-thread case.)
-    R::flush();
+    h.flush();
     assert_eq!(drops.load(Ordering::Relaxed), 0, "{}: reclaimed under a live guard", R::NAME);
     assert_eq!(guard.as_ref().unwrap().read(), 7);
 
     drop(guard);
-    flush_until::<R>(|| drops.load(Ordering::Relaxed) == 1);
+    flush_until(&h, || drops.load(Ordering::Relaxed) == 1);
     assert_eq!(drops.load(Ordering::Relaxed), 1, "{}: leak after guard drop", R::NAME);
 }
 
 /// Guards created inside an explicit region must be protected and cheap;
 /// the region must not leak protection after it ends.
 pub fn exercise_region_guard<R: Reclaimer>() {
+    let domain = DomainRef::<R>::new_owned();
+    let h = domain.register();
     let drops = Arc::new(AtomicUsize::new(0));
     let node = alloc_node::<Payload, R>(Payload::new(3, &drops));
     let cell: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
     {
-        let _region: Region<R> = Region::enter();
-        let mut g: GuardPtr<Payload, R> = GuardPtr::new();
+        let _region: Region<R> = Region::enter(&h);
+        let mut g: GuardPtr<Payload, R> = h.guard();
         for _ in 0..100 {
             g.acquire(&cell);
             assert_eq!(g.as_ref().unwrap().read(), 3);
@@ -119,27 +137,31 @@ pub fn exercise_region_guard<R: Reclaimer>() {
         }
         cell.store(MarkedPtr::null(), Ordering::Release);
         // SAFETY: unlinked; retired once.
-        unsafe { R::retire(node) };
+        unsafe { h.retire(node) };
     }
-    flush_until::<R>(|| drops.load(Ordering::Relaxed) == 1);
+    flush_until(&h, || drops.load(Ordering::Relaxed) == 1);
     assert_eq!(drops.load(Ordering::Relaxed), 1, "{}: leak after region end", R::NAME);
 }
 
 /// Multi-threaded swap storm over one shared cell: all nodes funneled
 /// through `retire` must be dropped exactly once, and no reader may observe
-/// a poisoned payload.
+/// a poisoned payload. Each thread registers its own handle with the shared
+/// domain — the TLS-free fast path.
 pub fn exercise_concurrent_smoke<R: Reclaimer>(threads: usize, iters: usize) {
+    let domain = DomainRef::<R>::new_owned();
     let drops = Arc::new(AtomicUsize::new(0));
     let allocated = Arc::new(AtomicUsize::new(0));
     let cell: Arc<ConcurrentPtr<Payload, R>> = Arc::new(ConcurrentPtr::null());
 
     let handles: Vec<_> = (0..threads)
         .map(|t| {
+            let domain = domain.clone();
             let drops = drops.clone();
             let allocated = allocated.clone();
             let cell = cell.clone();
             std::thread::spawn(move || {
-                let mut g: GuardPtr<Payload, R> = GuardPtr::new();
+                let h = domain.register();
+                let mut g: GuardPtr<Payload, R> = h.guard();
                 for i in 0..iters {
                     let value = (t * iters + i) as u64;
                     let node = alloc_node::<Payload, R>(Payload::new(value, &drops));
@@ -164,7 +186,7 @@ pub fn exercise_concurrent_smoke<R: Reclaimer>(threads: usize, iters: usize) {
                             if !old.is_null() {
                                 // SAFETY: we unlinked `old` with the CAS;
                                 // only the successful CASer retires it.
-                                unsafe { R::retire(old.get()) };
+                                unsafe { h.retire(old.get()) };
                             }
                             break;
                         }
@@ -176,23 +198,73 @@ pub fn exercise_concurrent_smoke<R: Reclaimer>(threads: usize, iters: usize) {
             })
         })
         .collect();
-    for h in handles {
-        h.join().unwrap();
+    for t in handles {
+        t.join().unwrap();
     }
 
+    let h = domain.register();
     // Retire the final occupant.
     let last = cell.load(Ordering::Acquire);
     if !last.is_null() {
         cell.store(MarkedPtr::null(), Ordering::Release);
         // SAFETY: all writers joined; we own the last node.
-        unsafe { R::retire(last.get()) };
+        unsafe { h.retire(last.get()) };
     }
 
-    flush_until::<R>(|| drops.load(Ordering::Relaxed) == allocated.load(Ordering::Relaxed));
+    flush_until(&h, || drops.load(Ordering::Relaxed) == allocated.load(Ordering::Relaxed));
     assert_eq!(
         drops.load(Ordering::Relaxed),
         allocated.load(Ordering::Relaxed),
         "{}: drops != allocations after flush",
         R::NAME
     );
+}
+
+/// Two domains of the same scheme must be fully isolated: aggressive
+/// retiring + flushing in one may never reclaim a node whose only
+/// protection is a guard registered with the *other*.
+pub fn exercise_domain_isolation<R: Reclaimer>() {
+    let domain_a = DomainRef::<R>::new_owned();
+    let domain_b = DomainRef::<R>::new_owned();
+    let ha = domain_a.register();
+    let hb = domain_b.register();
+
+    let drops_a = Arc::new(AtomicUsize::new(0));
+    let drops_b = Arc::new(AtomicUsize::new(0));
+
+    // Domain A: guard a node, then retire it — protected by A only.
+    let node_a = alloc_node::<Payload, R>(Payload::new(0xA, &drops_a));
+    let cell_a: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node_a, 0));
+    let mut guard_a: GuardPtr<Payload, R> = ha.guard();
+    guard_a.acquire(&cell_a);
+    cell_a.store(MarkedPtr::null(), Ordering::Release);
+    // SAFETY: unlinked; retired once, into the domain whose guard holds it.
+    unsafe { ha.retire(node_a) };
+
+    // Domain B: churn hard — lots of retires, lots of flushes. None of
+    // B's activity (epoch advances, stamp cycles, hazard scans) may free
+    // A's node.
+    const N: usize = 128;
+    for i in 0..N {
+        let node = alloc_node::<Payload, R>(Payload::new(i as u64, &drops_b));
+        // SAFETY: never published.
+        unsafe { hb.retire(node) };
+        if i % 8 == 0 {
+            hb.flush();
+        }
+    }
+    flush_until(&hb, || drops_b.load(Ordering::Relaxed) == N);
+    assert_eq!(drops_b.load(Ordering::Relaxed), N, "{}: domain B must reclaim its own", R::NAME);
+    assert_eq!(
+        drops_a.load(Ordering::Relaxed),
+        0,
+        "{}: domain B's reclamation defeated domain A's guard",
+        R::NAME
+    );
+    assert_eq!(guard_a.as_ref().unwrap().read(), 0xA);
+
+    // Release A's guard: now A (and only A) reclaims its node.
+    drop(guard_a);
+    flush_until(&ha, || drops_a.load(Ordering::Relaxed) == 1);
+    assert_eq!(drops_a.load(Ordering::Relaxed), 1, "{}: domain A leaked after guard drop", R::NAME);
 }

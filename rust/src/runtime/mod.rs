@@ -2,13 +2,21 @@
 //! (`artifacts/model_b{B}.hlo.txt`, produced once by `make artifacts`) and
 //! execute it from Rust. Python never runs here.
 //!
-//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the
-//! [`Engine`] lives on a single thread; [`EngineThread`] wraps it behind an
-//! mpsc channel for the coordinator (which is exactly one dispatch thread
-//! anyway — the batcher).
+//! The PJRT backend (the `xla` crate) is behind the **`pjrt`** cargo
+//! feature, which is off by default so the crate builds std-only and fully
+//! offline: enabling it requires adding the `xla` dependency to
+//! `rust/Cargo.toml` (see the commented stanza there). Without the feature
+//! every entry point reports "built without pjrt" and
+//! [`artifacts_available`] returns false, so the coordinator tests and
+//! examples skip gracefully instead of failing.
+//!
+//! With the feature: the `xla` crate's `PjRtClient` is `Rc`-based (not
+//! `Send`), so the [`Engine`] lives on a single thread; [`EngineThread`]
+//! wraps it behind an mpsc channel for the coordinator (which is exactly
+//! one dispatch thread anyway — the batcher).
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 
@@ -18,18 +26,19 @@ pub const DIM: usize = 256;
 
 /// A single-threaded PJRT engine holding one compiled executable per batch
 /// size.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     _client: xla::PjRtClient,
-    execs: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    execs: std::collections::BTreeMap<usize, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load every `model_b*.hlo.txt` under `dir` and compile it on the CPU
     /// PJRT client.
     pub fn load(dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        let mut execs = BTreeMap::new();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut execs = std::collections::BTreeMap::new();
         for entry in std::fs::read_dir(dir)
             .with_context(|| format!("artifact dir {dir:?} (run `make artifacts`)"))?
         {
@@ -45,9 +54,7 @@ impl Engine {
             let proto = xla::HloModuleProto::from_text_file(&path)
                 .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
             execs.insert(batch, exe);
         }
         if execs.is_empty() {
@@ -69,11 +76,7 @@ impl Engine {
     /// The smallest compiled batch that fits `n` seeds (or the largest one
     /// if nothing fits — callers then split).
     pub fn pick_batch(&self, n: usize) -> usize {
-        self.execs
-            .keys()
-            .copied()
-            .find(|&b| b >= n)
-            .unwrap_or_else(|| self.max_batch())
+        self.execs.keys().copied().find(|&b| b >= n).unwrap_or_else(|| self.max_batch())
     }
 
     /// Compute partial results for up to `max_batch()` seeds: pads to the
@@ -106,6 +109,36 @@ impl Engine {
             }
         }
         Ok(out)
+    }
+}
+
+/// Stub engine when built without the `pjrt` feature: loading always fails
+/// with an explanatory error, so everything downstream skips.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    never: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!("emr was built without the `pjrt` feature — PJRT execution is unavailable")
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        match self.never {}
+    }
+
+    pub fn max_batch(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn pick_batch(&self, _n: usize) -> usize {
+        match self.never {}
+    }
+
+    pub fn execute(&self, _seeds: &[i32]) -> Result<Vec<Vec<f32>>> {
+        match self.never {}
     }
 }
 
@@ -142,7 +175,8 @@ impl EngineThread {
                 while let Ok(job) = rx.recv() {
                     let _ = job.reply.send(engine.execute(&job.seeds));
                 }
-            })?;
+            })
+            .map_err(|e| anyhow!("spawn engine thread: {e}"))?;
         let batches = ready_rx.recv().context("engine thread died during load")??;
         eprintln!("[engine] compiled batch sizes: {batches:?}");
         Ok(Self { tx: Some(tx), handle: Some(handle) })
@@ -174,8 +208,12 @@ pub fn default_artifact_dir() -> PathBuf {
     std::env::var_os("EMR_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|| "artifacts".into())
 }
 
-/// True when AOT artifacts exist (tests skip gracefully otherwise).
+/// True when PJRT is compiled in **and** AOT artifacts exist (tests skip
+/// gracefully otherwise).
 pub fn artifacts_available() -> bool {
+    if !cfg!(feature = "pjrt") {
+        return false;
+    }
     std::fs::read_dir(default_artifact_dir())
         .map(|mut d| {
             d.any(|e| {
@@ -249,5 +287,13 @@ mod tests {
     fn empty_batch_is_ok() {
         let Some(e) = engine() else { return };
         assert!(e.execute(&[]).unwrap().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = Engine::load(Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+        assert!(!artifacts_available());
     }
 }

@@ -1,0 +1,67 @@
+//! Cache-line padding, replacing the `crossbeam_utils::CachePadded`
+//! dependency (the crate is std-only; see `Cargo.toml`).
+//!
+//! 128-byte alignment covers the two-line prefetcher pairs on recent x86
+//! and the 128-byte lines on apple-silicon-class aarch64 — the same
+//! conservative choice crossbeam makes on these targets.
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns `T` to 128 bytes so two `CachePadded` values never share
+/// a cache line (false-sharing avoidance for hot atomics).
+#[derive(Default, Debug)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap `value` in its own cache line.
+    pub const fn new(value: T) -> Self {
+        Self { value }
+    }
+
+    /// Unwrap.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn alignment_and_size() {
+        assert_eq!(std::mem::align_of::<CachePadded<AtomicU64>>(), 128);
+        assert!(std::mem::size_of::<CachePadded<AtomicU64>>() >= 128);
+        let a = [CachePadded::new(0u64), CachePadded::new(1u64)];
+        let d = &a[1] as *const _ as usize - &a[0] as *const _ as usize;
+        assert!(d >= 128, "neighbours must not share a line");
+    }
+
+    #[test]
+    fn deref_roundtrip() {
+        let mut c = CachePadded::new(41u32);
+        *c += 1;
+        assert_eq!(*c, 42);
+        assert_eq!(c.into_inner(), 42);
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal `anyhow`-shaped error handling (the crate is std-only).
+//!
+//! Provides the subset the coordinator/runtime layers use: a boxed dynamic
+//! [`Error`], the [`anyhow!`]/[`bail!`] macros and a [`Context`] extension
+//! trait for `Result` and `Option`.
+//!
+//! [`anyhow!`]: crate::anyhow
+//! [`bail!`]: crate::bail
+
+use std::fmt;
+
+/// Boxed dynamic error (what `anyhow::Error` is, minus the backtrace).
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message layered over a source error (what `.context(...)` produces).
+#[derive(Debug)]
+pub struct ContextError {
+    msg: String,
+    source: Option<Error>,
+}
+
+impl ContextError {
+    /// A leaf error carrying only a message (the `anyhow!` constructor).
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into(), source: None }
+    }
+
+    /// Wrap `source` with a higher-level message.
+    pub fn wrap(msg: impl Into<String>, source: Error) -> Self {
+        Self { msg: msg.into(), source: Some(source) }
+    }
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.source {
+            // `{:#}`-style chain rendering, always on: "msg: cause".
+            Some(s) => write!(f, "{}: {}", self.msg, s),
+            None => write!(f, "{}", self.msg),
+        }
+    }
+}
+
+impl std::error::Error for ContextError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+/// Construct an [`Error`] from a format string (shim for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::from(
+            $crate::util::error::ContextError::msg(format!($($arg)*)),
+        )
+    };
+}
+
+/// Early-return with a formatted [`Error`] (shim for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `.context(...)` / `.with_context(...)` for `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context(self, msg: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::from(ContextError::wrap(msg.to_string(), e.into())))
+    }
+
+    fn with_context(self, msg: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::from(ContextError::wrap(msg(), e.into())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::from(ContextError::msg(msg.to_string())))
+    }
+
+    fn with_context(self, msg: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::from(ContextError::msg(msg())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 7)
+    }
+
+    #[test]
+    fn bail_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let r: std::io::Result<()> = Err(std::io::Error::other("boom"));
+        let e = r.with_context(|| "reading".to_string()).unwrap_err();
+        assert!(e.to_string().starts_with("reading: "));
+    }
+}

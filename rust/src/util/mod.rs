@@ -6,28 +6,26 @@
 //! ([`stats`]), a tiny CLI parser ([`cli`]) and a seeded model-based
 //! property-testing harness ([`prop`]).
 
+pub mod cache_pad;
 pub mod cli;
+pub mod error;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
 /// Number of logical CPUs visible to this process.
 pub fn num_cpus() -> usize {
-    // SAFETY: plain libc query, no preconditions.
-    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
-    if n < 1 {
-        1
-    } else {
-        n as usize
-    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Monotonic nanosecond clock (CLOCK_MONOTONIC); the benchmark timebase.
+/// Monotonic nanosecond clock; the benchmark timebase. Nanoseconds since
+/// the first call (an arbitrary but fixed epoch — only differences are
+/// meaningful).
 pub fn monotonic_ns() -> u64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: ts is a valid out-pointer.
-    unsafe { libc::clock_gettime(libc::CLOCK_MONOTONIC, &mut ts) };
-    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
 }
 
 #[cfg(test)]

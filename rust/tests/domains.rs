@@ -1,0 +1,123 @@
+//! Reclamation-domain isolation under concurrency: independent domains of
+//! the same scheme must never observe each other's retired nodes, even
+//! while both churn from multiple threads at once.
+
+use emr::ds::queue::Queue;
+use emr::reclaim::tests_common::{flush_until, Payload};
+use emr::reclaim::{ConcurrentPtr, DomainRef, MarkedPtr, Reclaimer};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Two domains churn concurrently; a guard held in domain A pins its node
+/// for the whole run regardless of how hard domain B reclaims.
+fn concurrent_domains_do_not_cross_reclaim<R: Reclaimer>() {
+    let domain_a = DomainRef::<R>::new_owned();
+    let domain_b = DomainRef::<R>::new_owned();
+    let drops_a = Arc::new(AtomicUsize::new(0));
+
+    // Domain A, main thread: guard a retired node.
+    let ha = domain_a.register();
+    let node_a = emr::reclaim::alloc_node::<Payload, R>(Payload::new(0xAA, &drops_a));
+    let cell_a: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node_a, 0));
+    let mut guard_a = ha.guard();
+    guard_a.acquire(&cell_a);
+    cell_a.store(MarkedPtr::null(), Ordering::Release);
+    // SAFETY: unlinked; retired once, into the guarding domain.
+    unsafe { ha.retire(node_a) };
+
+    // Domain B: 4 threads churn a queue (steady retire stream) and flush
+    // aggressively the whole time.
+    let q: Arc<Queue<u64, R>> = Arc::new(Queue::new_in(domain_b.clone()));
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let h = q.domain().register();
+                for i in 0..2000u64 {
+                    q.enqueue_with(&h, t * 10_000 + i);
+                    q.dequeue_with(&h);
+                    if i % 64 == 0 {
+                        h.flush();
+                    }
+                }
+                h.flush();
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    // Everything domain B did must leave domain A's guarded node alone.
+    assert_eq!(drops_a.load(Ordering::Relaxed), 0, "{}: cross-domain reclamation", R::NAME);
+    assert_eq!(guard_a.as_ref().unwrap().read(), 0xAA);
+
+    drop(guard_a);
+    flush_until(&ha, || drops_a.load(Ordering::Relaxed) == 1);
+    assert_eq!(drops_a.load(Ordering::Relaxed), 1, "{}: leak after guard drop", R::NAME);
+}
+
+/// One shared owned domain across threads: handles registered from many
+/// threads cooperate exactly like the global domain does.
+fn shared_owned_domain_reclaims<R: Reclaimer>() {
+    let domain = DomainRef::<R>::new_owned();
+    let drops = Arc::new(AtomicUsize::new(0));
+    let allocs = Arc::new(AtomicUsize::new(0));
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            let domain = domain.clone();
+            let drops = drops.clone();
+            let allocs = allocs.clone();
+            std::thread::spawn(move || {
+                let h = domain.register();
+                for i in 0..500u64 {
+                    let node = emr::reclaim::alloc_node::<Payload, R>(Payload::new(i, &drops));
+                    allocs.fetch_add(1, Ordering::Relaxed);
+                    // SAFETY: never published.
+                    unsafe { h.retire(node) };
+                    if i % 50 == 0 {
+                        h.flush();
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let h = domain.register();
+    let ok = flush_until(&h, || drops.load(Ordering::Relaxed) == allocs.load(Ordering::Relaxed));
+    assert!(
+        ok,
+        "{}: shared domain leaked — {}/{}",
+        R::NAME,
+        drops.load(Ordering::Relaxed),
+        allocs.load(Ordering::Relaxed)
+    );
+}
+
+macro_rules! domain_tests {
+    ($mod_name:ident, $scheme:ty) => {
+        mod $mod_name {
+            use super::*;
+
+            #[test]
+            fn concurrent_isolation() {
+                concurrent_domains_do_not_cross_reclaim::<$scheme>();
+            }
+
+            #[test]
+            fn shared_owned_domain() {
+                shared_owned_domain_reclaims::<$scheme>();
+            }
+        }
+    };
+}
+
+domain_tests!(lfrc, emr::reclaim::lfrc::Lfrc);
+domain_tests!(hp, emr::reclaim::hp::Hp);
+domain_tests!(ebr, emr::reclaim::ebr::Ebr);
+domain_tests!(nebr, emr::reclaim::nebr::Nebr);
+domain_tests!(qsr, emr::reclaim::qsr::Qsr);
+domain_tests!(debra, emr::reclaim::debra::Debra);
+domain_tests!(stamp, emr::reclaim::stamp::StampIt);

@@ -1,15 +1,18 @@
 //! Conformance matrix: every scheme × every shared exercise × every data
 //! structure. A new scheme only has to pass this file to be trusted by the
 //! benchmarks.
+//!
+//! Structure roundtrips run twice: once on the **global** domain (the
+//! quickstart TLS path) and once in an **owned** domain (the isolated
+//! fast path) — both plumbing variants must behave identically.
 
 use emr::ds::hashmap::FifoCache;
 use emr::ds::list::List;
 use emr::ds::queue::Queue;
 use emr::reclaim::tests_common::*;
-use emr::reclaim::{Reclaimer, Region};
+use emr::reclaim::{DomainRef, Reclaimer, Region};
 
-fn queue_roundtrip<R: Reclaimer>() {
-    let q: Queue<u64, R> = Queue::new();
+fn queue_roundtrip<R: Reclaimer>(q: Queue<u64, R>) {
     for i in 0..1000 {
         q.enqueue(i);
     }
@@ -19,8 +22,7 @@ fn queue_roundtrip<R: Reclaimer>() {
     assert_eq!(q.dequeue(), None);
 }
 
-fn list_roundtrip<R: Reclaimer>() {
-    let l: List<u64, u64, R> = List::new();
+fn list_roundtrip<R: Reclaimer>(l: List<u64, u64, R>) {
     for k in 0..200u64 {
         assert!(l.insert(k, k * 3));
     }
@@ -36,8 +38,7 @@ fn list_roundtrip<R: Reclaimer>() {
     assert!(l.contains(&1));
 }
 
-fn cache_roundtrip<R: Reclaimer>() {
-    let c: FifoCache<u64, [u8; 128], R> = FifoCache::new(32, 50);
+fn cache_roundtrip<R: Reclaimer>(c: FifoCache<u64, [u8; 128], R>) {
     for k in 0..200u64 {
         c.insert(k, [k as u8; 128]);
     }
@@ -47,13 +48,17 @@ fn cache_roundtrip<R: Reclaimer>() {
 }
 
 fn region_nesting<R: Reclaimer>() {
-    // Regions are reentrant; guards nest within regions.
-    let _outer = Region::<R>::enter();
+    // Regions are reentrant; guards nest within regions. Handle-based…
+    let domain = DomainRef::<R>::new_owned();
+    let h = domain.register();
+    let _outer = Region::enter(&h);
     {
-        let _inner = Region::<R>::enter();
-        let _third = Region::<R>::enter();
+        let _inner = Region::enter(&h);
+        let _third = Region::enter(&h);
     }
-    let _after = Region::<R>::enter();
+    let _after = Region::enter(&h);
+    // …and via the global-domain TLS convenience path.
+    let _global = Region::<R>::enter_global();
 }
 
 macro_rules! matrix {
@@ -68,14 +73,17 @@ macro_rules! matrix {
 
             #[test]
             fn guard_blocks_reclamation() {
-                let _l = serial_lock();
                 exercise_guard_blocks_reclamation::<$scheme>();
             }
 
             #[test]
             fn region_guard() {
-                let _l = serial_lock();
                 exercise_region_guard::<$scheme>();
+            }
+
+            #[test]
+            fn domain_isolation() {
+                exercise_domain_isolation::<$scheme>();
             }
 
             #[test]
@@ -84,18 +92,33 @@ macro_rules! matrix {
             }
 
             #[test]
-            fn queue() {
-                queue_roundtrip::<$scheme>();
+            fn queue_global_domain() {
+                queue_roundtrip::<$scheme>(Queue::new());
             }
 
             #[test]
-            fn list() {
-                list_roundtrip::<$scheme>();
+            fn queue_owned_domain() {
+                queue_roundtrip::<$scheme>(Queue::new_in(DomainRef::new_owned()));
             }
 
             #[test]
-            fn cache() {
-                cache_roundtrip::<$scheme>();
+            fn list_global_domain() {
+                list_roundtrip::<$scheme>(List::new());
+            }
+
+            #[test]
+            fn list_owned_domain() {
+                list_roundtrip::<$scheme>(List::new_in(DomainRef::new_owned()));
+            }
+
+            #[test]
+            fn cache_global_domain() {
+                cache_roundtrip::<$scheme>(FifoCache::new(32, 50));
+            }
+
+            #[test]
+            fn cache_owned_domain() {
+                cache_roundtrip::<$scheme>(FifoCache::new_in(DomainRef::new_owned(), 32, 50));
             }
 
             #[test]
@@ -114,17 +137,17 @@ mod leaky {
 
     #[test]
     fn queue() {
-        queue_roundtrip::<Leaky>();
+        queue_roundtrip::<Leaky>(Queue::new());
     }
 
     #[test]
     fn list() {
-        list_roundtrip::<Leaky>();
+        list_roundtrip::<Leaky>(List::new());
     }
 
     #[test]
     fn cache() {
-        cache_roundtrip::<Leaky>();
+        cache_roundtrip::<Leaky>(FifoCache::new(32, 50));
     }
 
     #[test]

@@ -1,12 +1,13 @@
 //! Heavy concurrent stress: value conservation, use-after-reclaim
 //! detection (poisoned payloads), and capacity bounds under every scheme,
-//! with all three structures churning simultaneously.
+//! with all three structures churning simultaneously. Each stress case
+//! runs in its own reclamation domain.
 
 use emr::ds::hashmap::FifoCache;
 use emr::ds::list::List;
 use emr::ds::queue::Queue;
 use emr::reclaim::tests_common::{flush_until, Payload};
-use emr::reclaim::Reclaimer;
+use emr::reclaim::{DomainRef, Reclaimer};
 use emr::util::rng::Xoshiro256;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -14,8 +15,9 @@ use std::sync::Arc;
 /// MPMC conservation: every enqueued value dequeued exactly once, payload
 /// drops exactly match allocations.
 fn queue_conservation<R: Reclaimer>(threads: usize, per_thread: usize) {
+    let domain = DomainRef::<R>::new_owned();
     let drops = Arc::new(AtomicUsize::new(0));
-    let q: Queue<Payload, R> = Queue::new();
+    let q: Queue<Payload, R> = Queue::new_in(domain.clone());
     let dequeued_sum = AtomicU64::new(0);
     let dequeued_count = AtomicUsize::new(0);
     let expected_sum: u64 = (0..(threads * per_thread) as u64).sum();
@@ -25,9 +27,10 @@ fn queue_conservation<R: Reclaimer>(threads: usize, per_thread: usize) {
             let q = &q;
             let drops = &drops;
             s.spawn(move || {
+                let h = q.domain().register();
                 for i in 0..per_thread {
                     let v = (t * per_thread + i) as u64;
-                    q.enqueue(Payload::new(v, drops));
+                    q.enqueue_with(&h, Payload::new(v, drops));
                     if i % 97 == 0 {
                         std::thread::yield_now();
                     }
@@ -39,25 +42,34 @@ fn queue_conservation<R: Reclaimer>(threads: usize, per_thread: usize) {
             let dequeued_sum = &dequeued_sum;
             let dequeued_count = &dequeued_count;
             let total = threads * per_thread;
-            s.spawn(move || loop {
-                if dequeued_count.load(Ordering::Relaxed) >= total {
-                    break;
-                }
-                match q.dequeue() {
-                    Some(p) => {
-                        dequeued_sum.fetch_add(p.read(), Ordering::Relaxed);
-                        dequeued_count.fetch_add(1, Ordering::Relaxed);
+            s.spawn(move || {
+                let h = q.domain().register();
+                loop {
+                    if dequeued_count.load(Ordering::Relaxed) >= total {
+                        break;
                     }
-                    None => std::thread::yield_now(),
+                    match q.dequeue_with(&h) {
+                        Some(p) => {
+                            dequeued_sum.fetch_add(p.read(), Ordering::Relaxed);
+                            dequeued_count.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => std::thread::yield_now(),
+                    }
                 }
             });
         }
     });
 
     assert_eq!(dequeued_count.load(Ordering::Relaxed), threads * per_thread);
-    assert_eq!(dequeued_sum.load(Ordering::Relaxed), expected_sum, "{}: values lost/duplicated", R::NAME);
+    assert_eq!(
+        dequeued_sum.load(Ordering::Relaxed),
+        expected_sum,
+        "{}: values lost/duplicated",
+        R::NAME
+    );
     drop(q);
-    flush_until::<R>(|| drops.load(Ordering::Relaxed) == threads * per_thread);
+    let h = domain.register();
+    flush_until(&h, || drops.load(Ordering::Relaxed) == threads * per_thread);
     assert_eq!(
         drops.load(Ordering::Relaxed),
         threads * per_thread,
@@ -69,9 +81,10 @@ fn queue_conservation<R: Reclaimer>(threads: usize, per_thread: usize) {
 /// Random mixed list workload with poisoned-payload reads; afterwards every
 /// allocation is accounted for.
 fn list_poison_detection<R: Reclaimer>(threads: usize, iters: usize) {
+    let domain = DomainRef::<R>::new_owned();
     let drops = Arc::new(AtomicUsize::new(0));
     let allocs = Arc::new(AtomicUsize::new(0));
-    let list: List<u64, Payload, R> = List::new();
+    let list: List<u64, Payload, R> = List::new_in(domain.clone());
 
     std::thread::scope(|s| {
         for t in 0..threads {
@@ -79,6 +92,7 @@ fn list_poison_detection<R: Reclaimer>(threads: usize, iters: usize) {
             let drops = &drops;
             let allocs = &allocs;
             s.spawn(move || {
+                let h = list.domain().register();
                 let mut rng = Xoshiro256::new(0x715 + t as u64);
                 for i in 0..iters {
                     let k = rng.below(40);
@@ -88,14 +102,14 @@ fn list_poison_detection<R: Reclaimer>(threads: usize, iters: usize) {
                             // dropped — either via reclamation or, for a
                             // rejected duplicate, immediately by insert.
                             allocs.fetch_add(1, Ordering::Relaxed);
-                            list.insert(k, Payload::new(k, drops));
+                            list.insert_with(&h, k, Payload::new(k, drops));
                         }
                         4..=6 => {
-                            list.remove(&k);
+                            list.remove_with(&h, &k);
                         }
                         _ => {
                             // read() panics on poisoned (reclaimed) payloads.
-                            list.get_with(&k, |p| assert_eq!(p.read(), k));
+                            list.get_with_handle(&h, &k, |p| assert_eq!(p.read(), k));
                         }
                     }
                     if i % 128 == 0 {
@@ -108,7 +122,8 @@ fn list_poison_detection<R: Reclaimer>(threads: usize, iters: usize) {
 
     let live = list.len();
     drop(list);
-    flush_until::<R>(|| drops.load(Ordering::Relaxed) == allocs.load(Ordering::Relaxed));
+    let h = domain.register();
+    flush_until(&h, || drops.load(Ordering::Relaxed) == allocs.load(Ordering::Relaxed));
     assert_eq!(
         drops.load(Ordering::Relaxed),
         allocs.load(Ordering::Relaxed),
@@ -121,15 +136,17 @@ fn list_poison_detection<R: Reclaimer>(threads: usize, iters: usize) {
 /// The HashMap-benchmark shape under stress: payload integrity + bounded
 /// capacity while evictions retire 1 KiB nodes.
 fn cache_bounded_integrity<R: Reclaimer>(threads: usize, iters: usize) {
-    let cache: FifoCache<u64, [u64; 128], R> = FifoCache::new(64, 200);
+    let cache: FifoCache<u64, [u64; 128], R> =
+        FifoCache::new_in(DomainRef::new_owned(), 64, 200);
     std::thread::scope(|s| {
         for t in 0..threads {
             let cache = &cache;
             s.spawn(move || {
+                let h = cache.domain().register();
                 let mut rng = Xoshiro256::new(0xCAC4E + t as u64);
                 for i in 0..iters {
                     let k = rng.below(2_000);
-                    match cache.get_with(&k, |v| {
+                    match cache.get_with_handle(&h, &k, |v| {
                         // Payload self-describes its key: catches
                         // cross-node corruption from bad reclamation.
                         assert_eq!(v[0], k);
@@ -140,7 +157,7 @@ fn cache_bounded_integrity<R: Reclaimer>(threads: usize, iters: usize) {
                             let mut payload = [0u64; 128];
                             payload[0] = k;
                             payload[127] = k ^ 0xFFFF;
-                            cache.insert(k, payload);
+                            cache.insert_with(&h, k, payload);
                         }
                     }
                     if i % 256 == 0 {

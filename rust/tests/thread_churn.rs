@@ -3,21 +3,23 @@
 //! numbers of threads that can be started and stopped arbitrarily".
 //!
 //! Exercises: orphan hand-off (threads exiting with unreclaimed retired
-//! nodes), registry-entry reuse (peak-bounded), Stamp Pool block recycling,
-//! and hazard-slot recycling.
+//! nodes), registry-entry reuse (peak-bounded) with fully reset recycled
+//! state, Stamp Pool block recycling, and hazard-slot recycling — all on
+//! owned domains, so the assertions are exact and unraced.
 
 use emr::ds::queue::Queue;
 use emr::reclaim::tests_common::{flush_until, Payload};
-use emr::reclaim::Reclaimer;
+use emr::reclaim::{DomainRef, Reclaimer, Region};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Waves of short-lived threads leave retired-but-unreclaimed nodes behind
-/// (orphans); a later wave plus a flush must reclaim everything.
+/// (orphans); a later flush must reclaim everything.
 fn orphan_handoff<R: Reclaimer>(waves: usize, threads_per_wave: usize) {
+    let domain = DomainRef::<R>::new_owned();
     let drops = Arc::new(AtomicUsize::new(0));
     let allocs = Arc::new(AtomicUsize::new(0));
-    let q: Arc<Queue<Payload, R>> = Arc::new(Queue::new());
+    let q: Arc<Queue<Payload, R>> = Arc::new(Queue::new_in(domain.clone()));
 
     for wave in 0..waves {
         let handles: Vec<_> = (0..threads_per_wave)
@@ -26,18 +28,20 @@ fn orphan_handoff<R: Reclaimer>(waves: usize, threads_per_wave: usize) {
                 let drops = drops.clone();
                 let allocs = allocs.clone();
                 std::thread::spawn(move || {
+                    let h = q.domain().register();
                     for i in 0..200u64 {
                         let v = (wave * 1000 + t * 200) as u64 + i;
-                        q.enqueue(Payload::new(v, &drops));
+                        q.enqueue_with(&h, Payload::new(v, &drops));
                         allocs.fetch_add(1, Ordering::Relaxed);
                         // Dequeue retires the old dummy through the scheme;
                         // exiting right after leaves orphans.
-                        if let Some(p) = q.dequeue() {
+                        if let Some(p) = q.dequeue_with(&h) {
                             p.read();
                         }
                     }
-                    // Thread exits here, mid-stream: its retire list is
-                    // handed to the scheme's orphan machinery.
+                    // Thread exits here, mid-stream: its handle drops and
+                    // its retire list is handed to the domain's orphan
+                    // machinery.
                 })
             })
             .collect();
@@ -48,11 +52,12 @@ fn orphan_handoff<R: Reclaimer>(waves: usize, threads_per_wave: usize) {
 
     // Main thread drains what is left and flushes until every payload is
     // accounted for.
-    while let Some(p) = q.dequeue() {
+    let h = domain.register();
+    while let Some(p) = q.dequeue_with(&h) {
         p.read();
     }
-    drop(std::sync::Arc::try_unwrap(q).ok());
-    let ok = flush_until::<R>(|| drops.load(Ordering::Relaxed) == allocs.load(Ordering::Relaxed));
+    drop(Arc::try_unwrap(q).ok());
+    let ok = flush_until(&h, || drops.load(Ordering::Relaxed) == allocs.load(Ordering::Relaxed));
     assert!(
         ok,
         "{}: orphans leaked — {} of {} dropped",
@@ -62,18 +67,20 @@ fn orphan_handoff<R: Reclaimer>(waves: usize, threads_per_wave: usize) {
     );
 }
 
-/// Thread start/stop storms: scheme-internal registries must recycle
+/// Thread start/stop storms: domain-internal registries must recycle
 /// entries instead of growing per thread.
 fn churn_storm<R: Reclaimer>(iterations: usize) {
-    let q: Arc<Queue<u64, R>> = Arc::new(Queue::new());
+    let domain = DomainRef::<R>::new_owned();
+    let q: Arc<Queue<u64, R>> = Arc::new(Queue::new_in(domain.clone()));
     for round in 0..iterations {
         let handles: Vec<_> = (0..4)
             .map(|t| {
                 let q = q.clone();
                 std::thread::spawn(move || {
+                    let h = q.domain().register();
                     for i in 0..50u64 {
-                        q.enqueue(round as u64 * 100 + t as u64 * 50 + i);
-                        q.dequeue();
+                        q.enqueue_with(&h, round as u64 * 100 + t as u64 * 50 + i);
+                        q.dequeue_with(&h);
                     }
                 })
             })
@@ -82,7 +89,8 @@ fn churn_storm<R: Reclaimer>(iterations: usize) {
             h.join().unwrap();
         }
     }
-    R::flush();
+    let h = domain.register();
+    h.flush();
 }
 
 macro_rules! churn {
@@ -111,25 +119,27 @@ churn!(qsr, emr::reclaim::qsr::Qsr);
 churn!(debra, emr::reclaim::debra::Debra);
 churn!(stamp, emr::reclaim::stamp::StampIt);
 
-/// The Stamp Pool must recycle control blocks across thread generations:
-/// 100 sequential short-lived threads may not consume 100 fresh blocks.
+/// The Stamp Pool must recycle control blocks across handle generations:
+/// vastly more sequential registrations than the pool's capacity (4096)
+/// may not exhaust it.
 #[test]
 fn stamp_blocks_recycle_across_threads() {
     use emr::reclaim::stamp::StampIt;
-    use emr::reclaim::Region;
-    for _ in 0..100 {
-        std::thread::spawn(|| {
-            let _r = Region::<StampIt>::enter();
-        })
-        .join()
-        .unwrap();
+    let domain = DomainRef::<StampIt>::new_owned();
+    // 3× the pool capacity of sequential handle generations: if unregister
+    // stopped returning blocks to the free-list, `alloc_block` would assert
+    // "stamp pool exhausted" partway through this loop.
+    for _ in 0..3 * 4096 {
+        let h = domain.register();
+        let _r = Region::enter(&h);
     }
-    // No direct block counter is exposed; the real assertion is that the
-    // pool's capacity (4096) is never exhausted even for vastly more
-    // thread generations than capacity:
-    for _ in 0..200 {
-        std::thread::spawn(|| {
-            let _r = Region::<StampIt>::enter();
+    // And across real thread generations (exercises handle drop at thread
+    // exit rather than in-scope drop).
+    for _ in 0..32 {
+        let domain = domain.clone();
+        std::thread::spawn(move || {
+            let h = domain.register();
+            let _r = Region::enter(&h);
         })
         .join()
         .unwrap();
@@ -137,37 +147,84 @@ fn stamp_blocks_recycle_across_threads() {
 }
 
 /// Hazard slots are recycled with their registry entry: repeated
-/// single-thread generations must not grow ΣK without bound.
+/// single-thread generations must not grow ΣK at all on an owned domain.
 #[test]
 fn hp_slots_recycle_across_threads() {
-    use emr::reclaim::hp::{total_slots, Hp};
-    use emr::reclaim::{ConcurrentPtr, GuardPtr, MarkedPtr};
+    use emr::reclaim::hp::Hp;
+    let domain = DomainRef::<Hp>::new_owned();
     // Warm one generation up first (allocates the entry).
-    let warm = || {
-        std::thread::spawn(|| {
+    let warm = |domain: &DomainRef<Hp>| {
+        let domain = domain.clone();
+        std::thread::spawn(move || {
+            use emr::reclaim::{ConcurrentPtr, GuardPtr, MarkedPtr};
+            let h = domain.register();
             let node = emr::reclaim::alloc_node::<u64, Hp>(7);
             let cell: ConcurrentPtr<u64, Hp> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
-            let mut g: GuardPtr<u64, Hp> = GuardPtr::new();
+            let mut g: GuardPtr<u64, Hp> = h.guard();
             g.acquire(&cell);
             drop(g);
             cell.store(MarkedPtr::null(), std::sync::atomic::Ordering::Release);
-            unsafe { Hp::retire(node) };
+            unsafe { h.retire(node) };
         })
         .join()
         .unwrap();
     };
-    warm();
-    let before = total_slots();
+    warm(&domain);
+    let before = domain.domain().state().total_slots();
     for _ in 0..50 {
-        warm();
+        warm(&domain);
     }
-    let after = total_slots();
-    // Parallel tests may add a few legitimate thread entries; what must not
-    // happen is one entry per generation (50 × K_STATIC = 400 slots).
-    assert!(
-        after - before < 200,
-        "hazard slots grew {} → {} across 50 sequential generations",
-        before,
-        after
+    let after = domain.domain().state().total_slots();
+    // Owned domain ⇒ nobody else registers: sequential generations must
+    // reuse the single recycled entry exactly (one entry per peak thread,
+    // not one per generation).
+    assert_eq!(
+        after, before,
+        "hazard slots grew {before} → {after} across 50 sequential generations"
     );
+}
+
+/// Recycled registry entries must come back with fully reset epoch state:
+/// a stale announcement from a dead thread would block the epoch forever.
+#[test]
+fn recycled_entries_have_reset_epoch_state() {
+    use emr::reclaim::qsr::Qsr;
+    let domain = DomainRef::<Qsr>::new_owned();
+    let drops = Arc::new(AtomicUsize::new(0));
+
+    // Generation 1: register, retire a node, exit without ever passing
+    // another quiescent state — the node is orphaned, and the entry is
+    // released holding a stale (old-epoch) announcement value.
+    {
+        let domain = domain.clone();
+        let drops = drops.clone();
+        std::thread::spawn(move || {
+            let h = domain.register();
+            let node = emr::reclaim::alloc_node::<Payload, Qsr>(Payload::new(1, &drops));
+            // SAFETY: never published.
+            unsafe { h.retire(node) };
+        })
+        .join()
+        .unwrap();
+    }
+
+    // Generation 2: recycles the entry (peak concurrency is 1). If the
+    // recycled entry's announcement were not reset, QSR's epoch could
+    // never advance past the dead thread's stale value and the orphan
+    // would leak.
+    {
+        let domain = domain.clone();
+        std::thread::spawn(move || {
+            let h = domain.register();
+            for _ in 0..4 {
+                let _r = Region::enter(&h);
+            }
+        })
+        .join()
+        .unwrap();
+    }
+
+    let h = domain.register();
+    let ok = flush_until(&h, || drops.load(Ordering::Relaxed) == 1);
+    assert!(ok, "stale recycled epoch state blocked reclamation");
 }
