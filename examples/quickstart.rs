@@ -15,12 +15,13 @@ use emr::ds::list::List;
 use emr::ds::queue::Queue;
 use emr::reclaim::ebr::Ebr;
 use emr::reclaim::stamp::StampIt;
-use emr::reclaim::{DomainRef, Region};
+use emr::reclaim::{Cached, DomainRef, Region};
 
 fn main() {
     // --- a Michael-Scott queue, reclaimed by Stamp-it ------------------
-    // `Queue::new()` uses the process-wide global domain: the one-liner
-    // API. Operations resolve the thread's cached handle automatically.
+    // `Queue::new()` uses the process-wide global domain. `Cached` resolves
+    // the thread's cached handle (one TLS lookup) — the quickstart path;
+    // passing `&handle` instead is the TLS-free fast path.
     let queue: Queue<u64, StampIt> = Queue::new();
     std::thread::scope(|s| {
         for t in 0..4u64 {
@@ -33,16 +34,16 @@ fn main() {
                 // many operations (paper §2).
                 let _region = Region::enter(&handle);
                 for i in 0..1000 {
-                    queue.enqueue_with(&handle, t * 1000 + i);
+                    queue.enqueue(&handle, t * 1000 + i);
                     if i % 2 == 0 {
-                        queue.dequeue_with(&handle);
+                        queue.dequeue(&handle);
                     }
                 }
             });
         }
     });
     let mut drained = 0;
-    while queue.dequeue().is_some() {
+    while queue.dequeue(Cached).is_some() {
         drained += 1;
     }
     println!("queue: drained {drained} values");
@@ -50,11 +51,15 @@ fn main() {
     // --- a Harris-Michael set: same structure, different scheme --------
     let set: List<u64, (), Ebr> = List::new();
     for k in [3, 1, 4, 1, 5, 9, 2, 6] {
-        set.insert(k, ());
+        set.insert(Cached, k, ());
     }
-    println!("set: len={} contains(4)={} (duplicate 1 rejected)", set.len(), set.contains(&4));
-    set.remove(&4);
-    println!("set: after remove, contains(4)={}", set.contains(&4));
+    println!(
+        "set: len={} contains(4)={} (duplicate 1 rejected)",
+        set.len(Cached),
+        set.contains(Cached, &4)
+    );
+    set.remove(Cached, &4);
+    println!("set: after remove, contains(4)={}", set.contains(Cached, &4));
 
     // --- the paper's HashMap-benchmark cache, in its own domain --------
     // `new_in` + an owned domain = an isolated reclamation universe: its
@@ -64,7 +69,7 @@ fn main() {
     let cache: FifoCache<u64, [u8; 1024], StampIt> =
         FifoCache::new_in(DomainRef::new_owned(), 64, 100);
     for key in 0..300u64 {
-        cache.insert(key, [key as u8; 1024]);
+        cache.insert(Cached, key, [key as u8; 1024]);
     }
     println!(
         "cache: {} entries after 300 inserts into capacity 100 (FIFO eviction)",

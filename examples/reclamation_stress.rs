@@ -47,14 +47,14 @@ fn run<R: Reclaimer>(secs: f64, threads: usize) {
                 let mut sink = 0.0f32;
                 while !stop.load(Ordering::Acquire) {
                     // Queue churn: retire a steady stream of small nodes.
-                    queue.enqueue_with(&h, rng.next_u64());
-                    queue.dequeue_with(&h);
+                    queue.enqueue(&h, rng.next_u64());
+                    queue.dequeue(&h);
                     // Cache churn: evictions retire 1 KiB nodes.
                     let key = rng.below(5_000);
-                    match cache.get_with_handle(&h, &key, consume_payload) {
+                    match cache.get(&h, &key, consume_payload) {
                         Some(v) => sink += v,
                         None => {
-                            cache.insert_with(&h, key, compute_payload(key));
+                            cache.insert(&h, key, compute_payload(key));
                         }
                     }
                 }

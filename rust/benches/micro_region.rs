@@ -1,9 +1,34 @@
 //! E13: cost of a critical-region enter+exit cycle per scheme — the
 //! operations Propositions 2/3 claim are (amortized) constant-time.
-use emr::bench_fw::figures::micro_region;
+//!
+//! Plain run prints the thread sweep (the figure). Two extra modes drive
+//! the CI regression gate (EXPERIMENTS.md §E13):
+//!
+//! ```bash
+//! # gate against the recorded baseline (exit 1 on >20% regression or
+//! # measurable facade-over-raw guard overhead):
+//! cargo bench --bench micro_region -- --gate ci/micro_region_baseline.csv
+//! # (re)record the baseline on this machine:
+//! cargo bench --bench micro_region -- --record ci/micro_region_baseline.csv
+//! ```
+use emr::bench_fw::figures::{micro_region, micro_region_gate};
 use emr::bench_fw::BenchParams;
 use emr::util::cli::Args;
 
 fn main() {
-    micro_region(&BenchParams::from_args(&Args::parse()));
+    let args = Args::parse();
+    let params = BenchParams::from_args(&args);
+    match (args.get("record"), args.get("gate")) {
+        (Some(path), _) => {
+            if !micro_region_gate(&params, None, Some(path)) {
+                std::process::exit(1);
+            }
+        }
+        (None, Some(path)) => {
+            if !micro_region_gate(&params, Some(path), None) {
+                std::process::exit(1);
+            }
+        }
+        (None, None) => micro_region(&params),
+    }
 }

@@ -98,19 +98,26 @@ pub fn snapshot() -> CounterSnapshot {
     CounterSnapshot { allocated: allocated(), reclaimed: reclaimed() }
 }
 
-/// Allocate one node of `layout` under the given policy. Never returns null.
+/// Allocate one node of `layout` under the given policy. Never returns
+/// null. Returns the pointer **and the provenance actually used**: the
+/// policy is sampled exactly once, so a concurrent [`set_policy`] toggle
+/// (the benchmark ablation knob) can never make a node's recorded pool
+/// flag disagree with where its memory really came from — the caller must
+/// tag the node with the returned provenance, not re-sample the policy.
 ///
 /// `force_pool` is set by LFRC (type-stable memory requirement).
-pub fn alloc_raw(layout: Layout, force_pool: bool) -> *mut u8 {
+pub fn alloc_raw(layout: Layout, force_pool: bool) -> (*mut u8, bool) {
     ALLOCATED.fetch_add(1, Ordering::Relaxed);
-    if force_pool || policy() == Policy::Pool {
+    let pooled = force_pool || policy() == Policy::Pool;
+    let p = if pooled {
         pool::alloc(layout)
     } else {
         // SAFETY: layout has non-zero size (nodes always carry a header).
         let p = unsafe { std::alloc::alloc(layout) };
         assert!(!p.is_null(), "system allocator returned null");
         p
-    }
+    };
+    (p, pooled)
 }
 
 /// Return a node's memory.
@@ -127,7 +134,9 @@ pub unsafe fn free_raw(ptr: *mut u8, layout: Layout, from_pool: bool) {
     }
 }
 
-/// Whether an allocation made *now* would come from the pool.
+/// Whether an allocation made *now* would come from the pool. Diagnostics
+/// only — allocation sites must use the provenance [`alloc_raw`] returns
+/// (sampling the policy twice is the TOCTOU this API shape prevents).
 pub fn currently_pooled(force_pool: bool) -> bool {
     force_pool || policy() == Policy::Pool
 }
@@ -140,8 +149,10 @@ mod tests {
     fn counters_move() {
         let before = snapshot();
         let layout = Layout::from_size_align(64, 8).unwrap();
-        let p = alloc_raw(layout, false);
-        unsafe { free_raw(p, layout, currently_pooled(false)) };
+        // Free with the provenance alloc_raw returned — never a second
+        // policy sample (the TOCTOU the returned flag exists to prevent).
+        let (p, pooled) = alloc_raw(layout, false);
+        unsafe { free_raw(p, layout, pooled) };
         let after = snapshot();
         assert!(after.allocated >= before.allocated + 1);
         assert!(after.reclaimed >= before.reclaimed + 1);

@@ -322,6 +322,192 @@ pub fn micro_stamp_pool(p: &BenchParams) {
     );
 }
 
+/// ns/op of `f` over ~`secs` of wall time (batched to amortize the clock).
+fn time_ns_per_op(secs: f64, mut f: impl FnMut()) -> f64 {
+    use crate::util::monotonic_ns;
+    let t0 = monotonic_ns();
+    let deadline = t0 + (secs * 1e9) as u64;
+    let mut ops = 0u64;
+    while monotonic_ns() < deadline {
+        for _ in 0..64 {
+            f();
+        }
+        ops += 64;
+    }
+    (monotonic_ns() - t0) as f64 / ops as f64
+}
+
+/// Machine-speed calibration for the E13 gate: ns per dependent
+/// [`mix64`](crate::util::rng::mix64) step. Region-cycle costs are stored
+/// as multiples of this, so a recorded baseline transfers across machines
+/// of different absolute speed (EXPERIMENTS.md §E13).
+fn calibration_ns() -> f64 {
+    use crate::util::monotonic_ns;
+    use crate::util::rng::mix64;
+    const N: u64 = 4_000_000;
+    let t0 = monotonic_ns();
+    let mut x = 0x9E37_79B9_7F4A_7C15u64;
+    for _ in 0..N {
+        x = mix64(x);
+    }
+    std::hint::black_box(x);
+    (monotonic_ns() - t0) as f64 / N as f64
+}
+
+/// Single-threaded region enter+exit cycle cost — the Propositions 2/3
+/// quantity the E13 gate tracks.
+fn region_cycle_ns<R: Reclaimer>(secs: f64) -> f64 {
+    let domain = DomainRef::<R>::new_owned();
+    let h = domain.register();
+    time_ns_per_op(secs, || {
+        let region = crate::reclaim::Region::enter(&h);
+        std::hint::black_box(&region);
+    })
+}
+
+/// (raw `GuardPtr` cycle, facade `Guard` cycle): protect+reset against one
+/// hot cell. The lifetime-branded facade must not add measurable cost
+/// over the raw layer it wraps.
+fn guard_cycle_pair_ns<R: Reclaimer>(secs: f64) -> (f64, f64) {
+    use crate::reclaim::{Atomic, MarkedPtr, Owned};
+    let domain = DomainRef::<R>::new_owned();
+    let h = domain.register();
+    let cell: Atomic<u64, R> = Atomic::new(Owned::new(7));
+    let raw = {
+        let mut g = crate::reclaim::GuardPtr::<u64, R>::new_in(&h);
+        time_ns_per_op(secs, || {
+            g.acquire(cell.raw());
+            g.reset();
+        })
+    };
+    let facade = {
+        let mut g: crate::reclaim::Guard<'_, u64, R> = h.guard();
+        time_ns_per_op(secs, || {
+            g.protect(&cell);
+            g.reset();
+        })
+    };
+    // Unlink + retire the hot node so the owned domain drains clean.
+    let last = cell.load(std::sync::atomic::Ordering::Acquire);
+    cell.store(MarkedPtr::null(), std::sync::atomic::Ordering::Release);
+    // SAFETY: unlinked above; sole retirer, in-domain.
+    unsafe { h.retire(last.get()) };
+    (raw, facade)
+}
+
+/// Regression threshold for the E13 gate: fail on >20% regression.
+const GATE_RATIO: f64 = 1.2;
+
+/// Compare measured `(scheme, cycle/calib)` pairs against the contents of
+/// a recorded baseline file; returns false on any regression beyond
+/// [`GATE_RATIO`]. Pure (no timing, no IO) so the gate logic is
+/// deterministically unit-testable.
+fn check_baseline(measured: &[(String, f64)], content: &str) -> bool {
+    let recorded: std::collections::BTreeMap<String, f64> = content
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .filter_map(|l| {
+            let (name, v) = l.split_once(',')?;
+            Some((name.trim().to_string(), v.trim().parse().ok()?))
+        })
+        .collect();
+    let mut ok = true;
+    for (name, ratio) in measured {
+        match recorded.get(name) {
+            Some(base) => {
+                if *ratio > base * GATE_RATIO {
+                    eprintln!(
+                        "GATE FAIL: {name} region cycle {ratio:.2}x calib exceeds \
+                         baseline {base:.2} by more than {:.0}%",
+                        (GATE_RATIO - 1.0) * 100.0
+                    );
+                    ok = false;
+                }
+            }
+            None => println!("(no baseline entry for {name}; skipping)"),
+        }
+    }
+    ok
+}
+
+/// E13 CI regression gate. Verifies, in order:
+///
+/// 1. **facade overhead** — the reusable [`crate::reclaim::Guard`] adds no
+///    measurable cost over the raw `GuardPtr` cycle it wraps (relative,
+///    machine-independent; always enforced);
+/// 2. **region-cycle regression** — per-scheme region enter/exit cost,
+///    normalized by [`calibration_ns`], has not regressed >20% against the
+///    recorded baseline (`rust/ci/micro_region_baseline.csv`).
+///
+/// With `record`, (re)writes the baseline file instead of gating against
+/// it. Returns false when any gate fails.
+pub fn micro_region_gate(p: &BenchParams, baseline: Option<&str>, record: Option<&str>) -> bool {
+    let secs = p.secs.clamp(0.02, 0.5);
+    let calib = calibration_ns();
+    println!("== micro_region gate (calibration: {calib:.3} ns/mix64) ==");
+
+    let mut ok = true;
+    println!("{:<10}{:>12}{:>14}{:>9}", "scheme", "raw ns/op", "facade ns/op", "delta");
+    for &scheme in &p.schemes {
+        let (raw, facade) = dispatch_scheme!(scheme, guard_cycle_pair_ns, secs);
+        let delta = (facade - raw) / raw.max(0.01) * 100.0;
+        println!("{:<10}{:>12}{:>14}{:>8.1}%", scheme.name(), fmt_ns(raw), fmt_ns(facade), delta);
+        // Tolerance: 30% + 10 ns absolute slack — wide enough that debug
+        // builds and near-zero-cost schemes aren't noise-flaky, tight
+        // enough to catch a real wrapper regression (e.g. a reintroduced
+        // per-op TLS lookup costs far more than 10 ns).
+        if facade > raw * 1.3 + 10.0 {
+            eprintln!(
+                "GATE FAIL: facade Guard adds cost over raw GuardPtr for {} \
+                 ({facade:.1} ns vs {raw:.1} ns)",
+                scheme.name()
+            );
+            ok = false;
+        }
+    }
+
+    let mut measured: Vec<(String, f64)> = Vec::new();
+    for &scheme in &p.schemes {
+        let ns = dispatch_scheme!(scheme, region_cycle_ns, secs);
+        measured.push((scheme.name().to_string(), ns / calib));
+    }
+    println!("{:<10}{:>16}", "scheme", "cycle/calib");
+    for (name, ratio) in &measured {
+        println!("{name:<10}{ratio:>16.2}");
+    }
+
+    if let Some(path) = record {
+        let mut out = String::from(
+            "# micro_region baseline: region enter+exit cycle cost per scheme, in\n\
+             # units of the calibration loop (ns per dependent mix64 step) so the\n\
+             # file transfers across hosts of different absolute speed.\n\
+             # Re-record: cargo bench --bench micro_region -- --record <this file>\n",
+        );
+        for (name, ratio) in &measured {
+            out.push_str(&format!("{name},{ratio:.2}\n"));
+        }
+        if let Err(e) = std::fs::write(path, out) {
+            eprintln!("cannot write baseline {path}: {e}");
+            return false;
+        }
+        println!("baseline recorded to {path}");
+        return ok;
+    }
+
+    if let Some(path) = baseline {
+        match std::fs::read_to_string(path) {
+            Ok(content) => {
+                ok &= check_baseline(&measured, &content);
+            }
+            Err(e) => {
+                eprintln!("cannot read baseline {path}: {e} — failing the gate");
+                ok = false;
+            }
+        }
+    }
+    ok
+}
+
 /// A1: Stamp-it global-retire threshold ablation (paper picks 20). Each
 /// threshold runs in its own domain with the knob set per-domain.
 pub fn abl_threshold(p: &BenchParams) {
@@ -443,5 +629,21 @@ mod tests {
         let p = tiny();
         micro_region(&p);
         micro_stamp_pool(&p);
+    }
+
+    #[test]
+    fn baseline_gate_logic() {
+        // Deterministic unit test of the comparison logic (the timed
+        // halves of the gate run in the CI bench step, where the machine
+        // is not saturated by parallel tests).
+        let measured = vec![("ER".to_string(), 12.0), ("Stamp-it".to_string(), 50.0)];
+        // Within 20% of baseline on both rows: passes.
+        assert!(check_baseline(&measured, "# comment\nER,11.0\nStamp-it,60.0\n"));
+        // ER regressed beyond 20% (12.0 > 9.0 * 1.2): fails.
+        assert!(!check_baseline(&measured, "ER,9.0\nStamp-it,60.0\n"));
+        // Missing baseline rows are skipped, not failed.
+        assert!(check_baseline(&measured, "ER,11.5\n"));
+        // Malformed rows are ignored rather than panicking.
+        assert!(check_baseline(&measured, "garbage\nER,not-a-number\nStamp-it,55.0\n"));
     }
 }

@@ -17,8 +17,9 @@
 //! ([`crate::reclaim::DomainRef::new_owned`]), so benchmark configurations
 //! are isolated from each other (no state leaks between schemes, thread
 //! counts or trials beyond what a configuration deliberately retains), and
-//! each worker thread registers one explicit handle — the TLS-free fast
-//! path the refactor exists for.
+//! each worker thread registers one explicit handle, passed to every
+//! operation as its [`HandleSource`](crate::reclaim::HandleSource) — the
+//! TLS-free fast path the facade preserves.
 
 use super::BenchParams;
 use crate::ds::hashmap::FifoCache;
@@ -67,9 +68,9 @@ pub fn queue_worker<R: Reclaimer>(
         let _region: Region<R> = Region::enter(&h);
         for _ in 0..params.region_ops {
             if rng.percent(50) {
-                q.enqueue_with(&h, rng.next_u64());
+                q.enqueue(&h, rng.next_u64());
             } else {
-                let _ = q.dequeue_with(&h);
+                let _ = q.dequeue(&h);
             }
             ops += 1;
         }
@@ -96,12 +97,12 @@ pub fn list_worker<R: Reclaimer>(
             if rng.percent(params.workload_pct) {
                 // Update: insert and remove with equal probability.
                 if rng.percent(50) {
-                    list.insert_with(&h, key, ());
+                    list.insert(&h, key, ());
                 } else {
-                    list.remove_with(&h, &key);
+                    list.remove(&h, &key);
                 }
             } else {
-                list.contains_with(&h, &key);
+                list.contains(&h, &key);
             }
             ops += 1;
         }
@@ -123,12 +124,12 @@ pub fn hashmap_worker<R: Reclaimer>(
     let mut sink = 0.0f32;
     while !stop.load(Ordering::Acquire) {
         let key = rng.below(params.key_space);
-        match cache.get_with_handle(&h, &key, consume_payload) {
+        match cache.get(&h, &key, consume_payload) {
             Some(v) => sink += v,
             None => {
                 let payload = compute_payload(key);
                 sink += consume_payload(&payload);
-                cache.insert_with(&h, key, payload);
+                cache.insert(&h, key, payload);
             }
         }
         ops += 1;
@@ -149,7 +150,7 @@ pub fn prefill_list_in<R: Reclaimer>(
     // — when the configuration ends).
     let h = list.domain().register();
     for i in 0..params.list_size {
-        list.insert_with(&h, i * 2, ());
+        list.insert(&h, i * 2, ());
     }
     list
 }
@@ -169,7 +170,7 @@ pub fn prefill_queue_in<R: Reclaimer>(
     // Explicit handle — see prefill_list_in.
     let h = q.domain().register();
     for i in 0..64 {
-        q.enqueue_with(&h, i);
+        q.enqueue(&h, i);
     }
     q
 }
@@ -196,6 +197,7 @@ pub fn make_cache<R: Reclaimer>(params: &BenchParams) -> FifoCache<u64, SimPaylo
 mod tests {
     use super::*;
     use crate::reclaim::stamp::StampIt;
+    use crate::reclaim::Cached;
 
     #[test]
     fn payload_compute_is_deterministic_and_spread() {
@@ -251,8 +253,8 @@ mod tests {
     fn prefilled_list_has_paper_shape() {
         let params = BenchParams::default();
         let list = prefill_list::<StampIt>(&params);
-        assert_eq!(list.len() as u64, params.list_size);
-        assert!(list.contains(&0));
-        assert!(!list.contains(&1)); // odd keys start absent
+        assert_eq!(list.len(Cached) as u64, params.list_size);
+        assert!(list.contains(Cached, &0));
+        assert!(!list.contains(Cached, &1)); // odd keys start absent
     }
 }

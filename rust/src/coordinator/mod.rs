@@ -23,7 +23,7 @@ pub mod metrics;
 
 use crate::ds::hashmap::FifoCache;
 use crate::ds::queue::Queue;
-use crate::reclaim::{DomainRef, Reclaimer};
+use crate::reclaim::{Cached, DomainRef, Reclaimer};
 use crate::runtime::{Engine, DIM};
 use crate::util::error::{Context, Result};
 use crate::util::monotonic_ns;
@@ -164,7 +164,7 @@ impl<R: Reclaimer> CacheServer<R> {
     pub fn submit(&self, key: u32) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.shared.queue.enqueue(Request { key, t0: monotonic_ns(), reply: tx });
+        self.shared.queue.enqueue(Cached, Request { key, t0: monotonic_ns(), reply: tx });
         self.shared.queued.fetch_add(1, Ordering::Release);
         rx
     }
@@ -214,13 +214,13 @@ fn worker_loop<R: Reclaimer>(shared: &Shared<R>, miss_tx: mpsc::Sender<Request>)
     let handle = shared.domain.register();
     let mut idle_spins = 0u32;
     loop {
-        match shared.queue.dequeue_with(&handle) {
+        match shared.queue.dequeue(&handle) {
             Some(req) => {
                 idle_spins = 0;
                 shared.queued.fetch_sub(1, Ordering::Release);
                 // Guarded cache read: the payload is copied out under the
                 // guard (the "reuse" path of the paper's simulation).
-                let hit = shared.cache.get_with_handle(&handle, &req.key, |v| Box::new(*v));
+                let hit = shared.cache.get(&handle, &req.key, |v| Box::new(*v));
                 match hit {
                     Some(data) => {
                         shared.metrics.hits.fetch_add(1, Ordering::Relaxed);
@@ -309,7 +309,7 @@ fn batcher_loop<R: Reclaimer>(
                     payload.copy_from_slice(&row);
                     // Insert evicts FIFO-oldest beyond capacity — retiring
                     // 1 KiB nodes through the reclamation scheme.
-                    if !shared.cache.insert_with(&handle, *key, payload) {
+                    if !shared.cache.insert(&handle, *key, payload) {
                         shared.metrics.evictions_observed.fetch_add(1, Ordering::Relaxed);
                     }
                     for req in waiting.remove(key).unwrap_or_default() {

@@ -9,11 +9,16 @@
 //!
 //! All buckets (and the FIFO order queue) share the map's reclamation
 //! [`DomainRef`]; `new` uses the global domain, `new_in` pins the map to an
-//! owned one. The `*_with` variants take an explicit [`LocalHandle`].
+//! owned one. Every operation takes an `impl HandleSource<R>`
+//! ([`Cached`](crate::reclaim::Cached) or a registered
+//! [`&LocalHandle`](crate::reclaim::LocalHandle)); composite operations
+//! resolve the handle **once** at the entry point and pass it through to
+//! the buckets and the order queue. This file is entirely safe code — the
+//! list and queue carry the retire sites.
 
 use super::list::List;
 use super::queue::Queue;
-use crate::reclaim::{DomainRef, LocalHandle, Reclaimer};
+use crate::reclaim::{DomainRef, HandleSource, Reclaimer};
 use crate::util::rng::mix64;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -90,65 +95,36 @@ where
     }
 
     /// Is `key` present?
-    pub fn contains(&self, key: &K) -> bool {
-        self.bucket(key).contains(key)
-    }
-
-    /// [`Self::contains`] through an explicit handle (no TLS).
-    pub fn contains_with(&self, h: &LocalHandle<R>, key: &K) -> bool {
-        self.bucket(key).contains_with(h, key)
+    pub fn contains(&self, h: impl HandleSource<R>, key: &K) -> bool {
+        h.with_source(&self.domain, |h| self.bucket(key).contains(h, key))
     }
 
     /// Guarded read of the value under `key` (no clone of the payload —
     /// the benchmark's 1 KiB results are consumed in place).
-    pub fn get_with<U>(&self, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
-        self.bucket(key).get_with(key, f)
-    }
-
-    /// [`Self::get_with`] through an explicit handle (no TLS).
-    pub fn get_with_handle<U>(
-        &self,
-        h: &LocalHandle<R>,
-        key: &K,
-        f: impl FnOnce(&V) -> U,
-    ) -> Option<U> {
-        self.bucket(key).get_with_handle(h, key, f)
+    pub fn get<U>(&self, h: impl HandleSource<R>, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
+        h.with_source(&self.domain, |h| self.bucket(key).get(h, key, f))
     }
 
     /// Insert if absent; returns whether this call inserted.
-    pub fn insert(&self, key: K, value: V) -> bool {
-        let inserted = self.bucket(&key).insert(key, value);
-        if inserted {
-            self.len.fetch_add(1, Ordering::Relaxed);
-        }
-        inserted
-    }
-
-    /// [`Self::insert`] through an explicit handle (no TLS).
-    pub fn insert_with(&self, h: &LocalHandle<R>, key: K, value: V) -> bool {
-        let inserted = self.bucket(&key).insert_with(h, key, value);
-        if inserted {
-            self.len.fetch_add(1, Ordering::Relaxed);
-        }
-        inserted
+    pub fn insert(&self, h: impl HandleSource<R>, key: K, value: V) -> bool {
+        h.with_source(&self.domain, |h| {
+            let inserted = self.bucket(&key).insert(h, key, value);
+            if inserted {
+                self.len.fetch_add(1, Ordering::Relaxed);
+            }
+            inserted
+        })
     }
 
     /// Remove `key`; returns whether this call removed it.
-    pub fn remove(&self, key: &K) -> bool {
-        let removed = self.bucket(key).remove(key);
-        if removed {
-            self.len.fetch_sub(1, Ordering::Relaxed);
-        }
-        removed
-    }
-
-    /// [`Self::remove`] through an explicit handle (no TLS).
-    pub fn remove_with(&self, h: &LocalHandle<R>, key: &K) -> bool {
-        let removed = self.bucket(key).remove_with(h, key);
-        if removed {
-            self.len.fetch_sub(1, Ordering::Relaxed);
-        }
-        removed
+    pub fn remove(&self, h: impl HandleSource<R>, key: &K) -> bool {
+        h.with_source(&self.domain, |h| {
+            let removed = self.bucket(key).remove(h, key);
+            if removed {
+                self.len.fetch_sub(1, Ordering::Relaxed);
+            }
+            removed
+        })
     }
 
     /// Entry count (maintained with relaxed counters; exact when quiescent).
@@ -209,50 +185,39 @@ where
     }
 
     /// Guarded read (a cache hit — the benchmark's "reuse" path).
-    pub fn get_with<U>(&self, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
-        self.map.get_with(key, f)
-    }
-
-    /// [`Self::get_with`] through an explicit handle (no TLS).
-    pub fn get_with_handle<U>(
-        &self,
-        h: &LocalHandle<R>,
-        key: &K,
-        f: impl FnOnce(&V) -> U,
-    ) -> Option<U> {
-        self.map.get_with_handle(h, key, f)
+    pub fn get<U>(&self, h: impl HandleSource<R>, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
+        h.with_source(self.domain(), |h| self.map.get(h, key, f))
     }
 
     /// Is `key` cached?
-    pub fn contains(&self, key: &K) -> bool {
-        self.map.contains(key)
+    pub fn contains(&self, h: impl HandleSource<R>, key: &K) -> bool {
+        h.with_source(self.domain(), |h| self.map.contains(h, key))
     }
 
     /// Insert a computed result; evicts FIFO-oldest entries beyond
     /// capacity. Returns whether this call inserted (false = already
-    /// present, `value` dropped).
-    pub fn insert(&self, key: K, value: V) -> bool {
-        self.domain().with_handle(|h| self.insert_with(h, key, value))
-    }
-
-    /// [`Self::insert`] through an explicit handle (no TLS).
-    pub fn insert_with(&self, h: &LocalHandle<R>, key: K, value: V) -> bool {
-        if !self.map.insert_with(h, key.clone(), value) {
-            return false;
-        }
-        self.order.enqueue_with(h, key);
-        // Evict until back under capacity. An evicted key may already have
-        // been removed (rare double-insert races) — the queue is the single
-        // source of eviction order, the map the source of truth.
-        while self.map.len() > self.capacity {
-            match self.order.dequeue_with(h) {
-                Some(old) => {
-                    self.map.remove_with(h, &old);
-                }
-                None => break,
+    /// present, `value` dropped). The handle is resolved once for the
+    /// whole insert-enqueue-evict sequence.
+    pub fn insert(&self, h: impl HandleSource<R>, key: K, value: V) -> bool {
+        h.with_source(self.domain(), |h| {
+            if !self.map.insert(h, key.clone(), value) {
+                return false;
             }
-        }
-        true
+            self.order.enqueue(h, key);
+            // Evict until back under capacity. An evicted key may already
+            // have been removed (rare double-insert races) — the queue is
+            // the single source of eviction order, the map the source of
+            // truth.
+            while self.map.len() > self.capacity {
+                match self.order.dequeue(h) {
+                    Some(old) => {
+                        self.map.remove(h, &old);
+                    }
+                    None => break,
+                }
+            }
+            true
+        })
     }
 
     /// Current entry count.
@@ -277,22 +242,23 @@ mod tests {
     use crate::reclaim::leaky::Leaky;
     use crate::reclaim::lfrc::Lfrc;
     use crate::reclaim::stamp::StampIt;
+    use crate::reclaim::Cached;
 
     #[test]
     fn map_semantics() {
         let m: HashMap<u64, u64, Leaky> = HashMap::new(16);
         assert!(m.is_empty());
         for i in 0..100 {
-            assert!(m.insert(i, i * 10));
+            assert!(m.insert(Cached, i, i * 10));
         }
-        assert!(!m.insert(5, 0), "duplicate insert must fail");
+        assert!(!m.insert(Cached, 5, 0), "duplicate insert must fail");
         assert_eq!(m.len(), 100);
         for i in 0..100 {
-            assert_eq!(m.get_with(&i, |v| *v), Some(i * 10));
+            assert_eq!(m.get(Cached, &i, |v| *v), Some(i * 10));
         }
-        assert!(m.remove(&50));
-        assert!(!m.remove(&50));
-        assert!(!m.contains(&50));
+        assert!(m.remove(Cached, &50));
+        assert!(!m.remove(Cached, &50));
+        assert!(!m.contains(Cached, &50));
         assert_eq!(m.len(), 99);
     }
 
@@ -313,13 +279,13 @@ mod tests {
     fn fifo_cache_evicts_oldest() {
         let c: FifoCache<u64, u64, Leaky> = FifoCache::new(16, 10);
         for i in 0..25 {
-            assert!(c.insert(i, i));
+            assert!(c.insert(Cached, i, i));
         }
         assert!(c.len() <= 10, "capacity must bound entries: {}", c.len());
         // The oldest entries are gone, the newest survive.
-        assert!(!c.contains(&0));
-        assert!(!c.contains(&5));
-        assert!(c.contains(&24));
+        assert!(!c.contains(Cached, &0));
+        assert!(!c.contains(Cached, &5));
+        assert!(c.contains(Cached, &24));
     }
 
     fn concurrent_cache_exercise<R: Reclaimer>() {
@@ -340,7 +306,7 @@ mod tests {
                     let mut hits = 0usize;
                     for i in 0..2000 {
                         let key = rng.below(300);
-                        let found = cache.get_with_handle(&h, &key, |v| {
+                        let found = cache.get(&h, &key, |v| {
                             // Payload integrity: first byte encodes the key.
                             assert_eq!(v[0], (key % 251) as u8);
                         });
@@ -349,7 +315,7 @@ mod tests {
                             None => {
                                 let mut payload = [0u8; 256];
                                 payload[0] = (key % 251) as u8;
-                                cache.insert_with(&h, key, payload);
+                                cache.insert(&h, key, payload);
                             }
                         }
                         if i % 128 == 0 {

@@ -2,18 +2,26 @@
 //! "the linked-list and hash-map [are based] on Michael's improved version
 //! [18] of Harris' list-based set [14]").
 //!
-//! `find` follows the paper's Listing 1: it walks with two guards (`cur`
+//! `find` follows the paper's Listing 1: it walks with two shields (`cur`
 //! and `save`, the latter pinning the node that owns the `prev` link),
 //! helps unlink marked nodes it passes, and restarts on interference. The
 //! delete mark lives in bit 0 of each node's `next` pointer — the
 //! `marked_ptr` trick the interface exists for.
 //!
-//! Every list belongs to a reclamation [`DomainRef`]; the `*_with` variants
-//! take an explicit [`LocalHandle`] (TLS-free), the plain variants resolve
-//! the thread's cached handle once per call.
+//! Written entirely against the safe facade ([`Atomic`] / [`Guard`] /
+//! [`Shared`] / [`Owned`]): the `prev` link is re-derived from the `save`
+//! shield on every use (so it is valid by construction — no raw pointer
+//! into a node), traversal dereferences are safe through [`Shared`], and
+//! trusted code narrows to the two unlink-then-retire sites plus the
+//! exclusive-access teardown in `Drop`, each with its safety argument.
+//!
+//! Every list belongs to a reclamation [`DomainRef`]; each operation takes
+//! an `impl HandleSource<R>`: pass [`Cached`](crate::reclaim::Cached) to
+//! resolve the thread's cached handle (one TLS lookup), or a registered
+//! [`&LocalHandle`](LocalHandle) for the TLS-free fast path.
 
 use crate::reclaim::{
-    alloc_node, ConcurrentPtr, DomainRef, GuardPtr, LocalHandle, MarkedPtr, Reclaimer,
+    Atomic, DomainRef, Guard, HandleSource, LocalHandle, MarkedPtr, Owned, Reclaimer,
 };
 use std::sync::atomic::Ordering;
 
@@ -22,7 +30,7 @@ use std::sync::atomic::Ordering;
 pub struct LNode<K: Send + Sync + 'static, V: Send + Sync + 'static, R: Reclaimer> {
     key: K,
     value: V,
-    next: ConcurrentPtr<LNode<K, V, R>, R>,
+    next: Atomic<LNode<K, V, R>, R>,
 }
 
 impl<K: Send + Sync + 'static, V: Send + Sync + 'static, R: Reclaimer> LNode<K, V, R> {
@@ -35,17 +43,22 @@ impl<K: Send + Sync + 'static, V: Send + Sync + 'static, R: Reclaimer> LNode<K, 
     }
 }
 
-/// Result of a `find`: the insertion point and (on hit) the guarded node.
-pub struct FindResult<K: Send + Sync + 'static, V: Send + Sync + 'static, R: Reclaimer> {
-    /// Pointer to the `next` field to CAS for insertion (head or a node
-    /// kept alive by `save`).
-    prev: *const ConcurrentPtr<LNode<K, V, R>, R>,
-    /// Snapshot of `*prev` (what an insertion CAS must expect).
+/// Result of a `find`: the two traversal shields plus the insertion-point
+/// snapshot. `save` pins the node owning the predecessor link (empty when
+/// that link is the list head — see [`List::prev_link`]); `cur` pins the
+/// first node with `node.key >= key` (on a hit, the found node).
+struct FindResult<'h, K, V, R>
+where
+    K: Send + Sync + 'static,
+    V: Send + Sync + 'static,
+    R: Reclaimer,
+{
+    /// Shield on the node owning the predecessor link.
+    save: Guard<'h, LNode<K, V, R>, R>,
+    /// Shield on the node at `next` (the found node on a hit).
+    cur: Guard<'h, LNode<K, V, R>, R>,
+    /// Snapshot of the predecessor link (what an insertion CAS expects).
     next: MarkedPtr<LNode<K, V, R>, R>,
-    /// Guard on the node at `next` (the found node on a hit).
-    cur: GuardPtr<LNode<K, V, R>, R>,
-    /// Guard on the node owning `prev` (null when `prev` is the head).
-    _save: GuardPtr<LNode<K, V, R>, R>,
     found: bool,
 }
 
@@ -57,7 +70,7 @@ where
     R: Reclaimer,
 {
     domain: DomainRef<R>,
-    head: ConcurrentPtr<LNode<K, V, R>, R>,
+    head: Atomic<LNode<K, V, R>, R>,
 }
 
 impl<K, V, R> Default for List<K, V, R>
@@ -79,12 +92,12 @@ where
 {
     /// An empty list on the global domain.
     pub const fn new() -> Self {
-        Self { domain: DomainRef::global(), head: ConcurrentPtr::null() }
+        Self { domain: DomainRef::global(), head: Atomic::null() }
     }
 
     /// An empty list whose nodes are retired into `domain`.
     pub fn new_in(domain: DomainRef<R>) -> Self {
-        Self { domain, head: ConcurrentPtr::null() }
+        Self { domain, head: Atomic::null() }
     }
 
     /// The list's reclamation domain.
@@ -92,150 +105,139 @@ where
         &self.domain
     }
 
+    /// The predecessor link for the current traversal position: the
+    /// `next` field of the node pinned by `save`, or the list head while
+    /// `save` is empty. Re-derived on every use, so the returned reference
+    /// is valid by construction (the shield freezes while it is borrowed).
+    fn prev_link<'a>(
+        &'a self,
+        save: &'a Guard<'_, LNode<K, V, R>, R>,
+    ) -> &'a Atomic<LNode<K, V, R>, R> {
+        match save.shared() {
+            Some(s) => &s.get().next,
+            None => &self.head,
+        }
+    }
+
     /// Paper Listing 1: locate `key`, helping unlink marked nodes on the
-    /// way. On return, `prev`/`next` define the insertion point and `cur`
-    /// guards the first node with `node.key >= key` (if any).
-    fn find(&self, h: &LocalHandle<R>, key: &K) -> FindResult<K, V, R> {
+    /// way. On return, `save`/`next` define the insertion point and `cur`
+    /// pins the first node with `node.key >= key` (if any).
+    fn find<'h>(&self, h: &'h LocalHandle<R>, key: &K) -> FindResult<'h, K, V, R> {
         'retry: loop {
-            let mut prev: *const ConcurrentPtr<LNode<K, V, R>, R> = &self.head;
-            let mut save: GuardPtr<LNode<K, V, R>, R> = h.guard();
-            let mut cur: GuardPtr<LNode<K, V, R>, R> = h.guard();
-            // SAFETY: prev is the head (owned by self) here; below it is a
-            // field of the node pinned by `save`.
-            let mut next = unsafe { (*prev).load(Ordering::Acquire) };
+            let mut save: Guard<'h, LNode<K, V, R>, R> = Guard::new(h);
+            let mut cur: Guard<'h, LNode<K, V, R>, R> = Guard::new(h);
+            let mut next = self.head.load(Ordering::Acquire);
             loop {
                 // Acquire the snapshot; restart if prev moved under us.
-                // SAFETY: prev valid as above.
-                if !unsafe { cur.acquire_if_equal(&*prev, next.with_mark(0)) } {
+                if cur.try_protect(self.prev_link(&save), next.with_mark(0)).is_err() {
                     continue 'retry;
                 }
-                if cur.is_null() {
-                    let next = next.with_mark(0);
-                    return FindResult { prev, next, cur, _save: save, found: false };
+                if cur.is_empty() {
+                    return FindResult { save, cur, next: next.with_mark(0), found: false };
                 }
-                let cur_ptr = cur.get();
-                // SAFETY: cur is guarded.
-                let cur_node = unsafe { cur_ptr.deref_data() };
+                let cur_shared = cur.shared().expect("non-empty shield");
+                let cur_marked = cur_shared.as_marked();
+                let cur_node = cur_shared.get();
                 let succ = cur_node.next.load(Ordering::Acquire);
                 if succ.mark() != 0 {
                     // cur is logically deleted: help splice it out.
-                    // SAFETY: prev valid (head or pinned by save).
-                    if unsafe {
-                        (*prev)
-                            .compare_exchange(
-                                cur_ptr.with_mark(0),
-                                succ.with_mark(0),
-                                Ordering::AcqRel,
-                                Ordering::Acquire,
-                            )
-                            .is_err()
-                    } {
+                    if self
+                        .prev_link(&save)
+                        .compare_exchange(
+                            cur_marked,
+                            succ.with_mark(0),
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_err()
+                    {
                         continue 'retry;
                     }
-                    // SAFETY: we unlinked cur; the unlinking CAS winner
-                    // retires it (Michael's rule).
-                    unsafe { cur.reclaim() };
+                    // SAFETY: our CAS unlinked cur (Michael's rule: the
+                    // unlinking-CAS winner is the unique retirer), and its
+                    // readers are protected through this list's domain.
+                    unsafe { cur.retire() };
                     next = succ.with_mark(0);
                     continue;
                 }
                 // Validate prev still points at cur (paper line 15).
-                // SAFETY: prev valid as above.
-                if unsafe { (*prev).load(Ordering::Acquire) } != cur_ptr.with_mark(0) {
+                if self.prev_link(&save).load(Ordering::Acquire) != cur_marked {
                     continue 'retry;
                 }
                 if cur_node.key >= *key {
                     let found = cur_node.key == *key;
-                    return FindResult { prev, next: cur_ptr.with_mark(0), cur, _save: save, found };
+                    return FindResult { save, cur, next: cur_marked, found };
                 }
-                prev = &cur_node.next;
-                save = cur.take(); // `save = std::move(cur)` (Listing 1)
+                // Advance: the shield that pinned cur becomes `save`
+                // (`save = std::move(cur)` in Listing 1), and the freed
+                // shield walks on.
                 next = succ;
+                std::mem::swap(&mut save, &mut cur);
+                cur.reset();
             }
         }
     }
 
     /// Does the set contain `key`?
-    pub fn contains(&self, key: &K) -> bool {
-        self.domain.with_handle(|h| self.contains_with(h, key))
-    }
-
-    /// [`Self::contains`] through an explicit handle (no TLS).
-    pub fn contains_with(&self, h: &LocalHandle<R>, key: &K) -> bool {
-        self.find(h, key).found
+    pub fn contains(&self, h: impl HandleSource<R>, key: &K) -> bool {
+        h.with_source(&self.domain, |h| self.find(h, key).found)
     }
 
     /// Read the value under `key` through `f` (guarded access — no clone).
-    pub fn get_with<U>(&self, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
-        self.domain.with_handle(|h| self.get_with_handle(h, key, f))
-    }
-
-    /// [`Self::get_with`] through an explicit handle (no TLS).
-    pub fn get_with_handle<U>(
-        &self,
-        h: &LocalHandle<R>,
-        key: &K,
-        f: impl FnOnce(&V) -> U,
-    ) -> Option<U> {
-        let r = self.find(h, key);
-        if r.found {
-            // SAFETY: cur is guarded and non-null on a hit.
-            Some(f(unsafe { r.cur.get().deref_data().value() }))
-        } else {
-            None
-        }
+    pub fn get<U>(&self, h: impl HandleSource<R>, key: &K, f: impl FnOnce(&V) -> U) -> Option<U> {
+        h.with_source(&self.domain, |h| {
+            let r = self.find(h, key);
+            if !r.found {
+                return None;
+            }
+            // The shield keeps the node protected for the callback.
+            r.cur.shared().map(|s| f(&s.get().value))
+        })
     }
 
     /// Insert `key → value` if absent. Returns false (and drops `value`)
     /// when the key already exists.
-    pub fn insert(&self, key: K, value: V) -> bool {
-        self.domain.with_handle(|h| self.insert_with(h, key, value))
+    pub fn insert(&self, h: impl HandleSource<R>, key: K, value: V) -> bool {
+        h.with_source(&self.domain, |h| self.insert_inner(h, key, value))
     }
 
-    /// [`Self::insert`] through an explicit handle (no TLS).
-    pub fn insert_with(&self, h: &LocalHandle<R>, key: K, value: V) -> bool {
-        let node = alloc_node::<LNode<K, V, R>, R>(LNode {
-            key,
-            value,
-            next: ConcurrentPtr::null(),
-        });
-        let node_ptr = MarkedPtr::new(node, 0);
+    fn insert_inner(&self, h: &LocalHandle<R>, key: K, value: V) -> bool {
+        let mut node = Owned::<LNode<K, V, R>, R>::new(LNode { key, value, next: Atomic::null() });
         loop {
-            // SAFETY: node is still private.
-            let node_ref = unsafe { &*node };
-            let r = self.find(h, &node_ref.data().key);
+            let r = self.find(h, &node.key);
             if r.found {
-                // SAFETY: never published.
-                unsafe { crate::reclaim::free_node(node) };
+                // Never published: dropping the Owned frees it.
                 return false;
             }
-            node_ref.data().next.store(r.next, Ordering::Relaxed);
-            // Release publishes the node's contents.
-            // SAFETY: r.prev is the head or pinned by r._save.
-            if unsafe {
-                (*r.prev)
-                    .compare_exchange(r.next, node_ptr, Ordering::Release, Ordering::Relaxed)
-                    .is_ok()
-            } {
-                return true;
+            // Still private: link the successor, then publish with a
+            // Release CAS on the predecessor link.
+            node.next.store(r.next, Ordering::Relaxed);
+            match self.prev_link(&r.save).cas_publish(
+                r.next,
+                node,
+                Ordering::Release,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err((_, n)) => node = n,
             }
         }
     }
 
     /// Remove `key`. Returns true if this call removed it.
-    pub fn remove(&self, key: &K) -> bool {
-        self.domain.with_handle(|h| self.remove_with(h, key))
+    pub fn remove(&self, h: impl HandleSource<R>, key: &K) -> bool {
+        h.with_source(&self.domain, |h| self.remove_inner(h, key))
     }
 
-    /// [`Self::remove`] through an explicit handle (no TLS).
-    pub fn remove_with(&self, h: &LocalHandle<R>, key: &K) -> bool {
+    fn remove_inner(&self, h: &LocalHandle<R>, key: &K) -> bool {
         loop {
             let mut r = self.find(h, key);
             if !r.found {
                 return false;
             }
-            let cur_ptr = r.cur.get();
-            // SAFETY: guarded.
-            let cur_node = unsafe { cur_ptr.deref_data() };
+            let cur_shared = r.cur.shared().expect("found implies a pinned node");
+            let cur_marked = cur_shared.as_marked();
+            let cur_node = cur_shared.get();
             let succ = cur_node.next.load(Ordering::Acquire);
             if succ.mark() != 0 {
                 continue; // someone else is deleting it; re-find (help)
@@ -249,19 +251,20 @@ where
                 continue;
             }
             // Physical unlink; on failure find() will clean up later.
-            // SAFETY: r.prev is the head or pinned by r._save.
-            if unsafe {
-                (*r.prev)
-                    .compare_exchange(
-                        cur_ptr.with_mark(0),
-                        succ.with_mark(0),
-                        Ordering::AcqRel,
-                        Ordering::Acquire,
-                    )
-                    .is_ok()
-            } {
-                // SAFETY: we unlinked it and we won the marking CAS.
-                unsafe { r.cur.reclaim() };
+            if self
+                .prev_link(&r.save)
+                .compare_exchange(
+                    cur_marked,
+                    succ.with_mark(0),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                // SAFETY: we won both the marking CAS and the unlinking
+                // CAS, so we are the unique retirer of an unlinked node;
+                // readers are protected through this list's domain.
+                unsafe { r.cur.retire() };
             } else {
                 let _ = self.find(h, key); // helper pass retires it
             }
@@ -270,29 +273,22 @@ where
     }
 
     /// Number of (unmarked) nodes — O(n), diagnostics.
-    pub fn len(&self) -> usize {
-        self.domain.with_handle(|h| {
+    pub fn len(&self, h: impl HandleSource<R>) -> usize {
+        h.with_source(&self.domain, |h| {
             let mut n = 0;
-            let mut g: GuardPtr<LNode<K, V, R>, R> = h.guard();
-            #[allow(unused_assignments)]
-            let mut _save: GuardPtr<LNode<K, V, R>, R> = h.guard();
-            let mut prev: *const ConcurrentPtr<LNode<K, V, R>, R> = &self.head;
+            let mut save: Guard<'_, LNode<K, V, R>, R> = Guard::new(h);
+            let mut walk: Guard<'_, LNode<K, V, R>, R> = Guard::new(h);
             loop {
-                // SAFETY: prev is the head or a field of the node pinned by
-                // `save`.
-                let cur = g.acquire(unsafe { &*prev });
-                if cur.is_null() {
+                let Some(node) = walk.protect(self.prev_link(&save)) else {
                     return n;
-                }
-                // SAFETY: guarded.
-                let node = unsafe { cur.deref_data() };
+                };
                 if node.next.load(Ordering::Acquire).mark() == 0 {
                     n += 1;
                 }
-                prev = &node.next;
-                // Pin the node owning `prev`; the previous pin drops after
-                // the reassignment (prev no longer points into it).
-                _save = g.take();
+                // Pin the node owning the next prev link; the old pin is
+                // released once the swapped-out shield resets.
+                std::mem::swap(&mut save, &mut walk);
+                walk.reset();
             }
         })
     }
@@ -309,10 +305,11 @@ where
     R: Reclaimer,
 {
     fn drop(&mut self) {
-        // Exclusive access: free all nodes directly.
         let mut cur = self.head.load(Ordering::Relaxed);
         while !cur.is_null() {
-            // SAFETY: exclusive during drop.
+            // SAFETY: `&mut self` proves exclusive access (no concurrent
+            // operations, no live shields on these nodes): every node is
+            // reachable exactly once and freed exactly once.
             unsafe {
                 let next = cur.deref_data().next.load(Ordering::Relaxed);
                 crate::reclaim::free_node(cur.get());
@@ -328,31 +325,44 @@ mod tests {
     use crate::reclaim::hp::Hp;
     use crate::reclaim::leaky::Leaky;
     use crate::reclaim::stamp::StampIt;
+    use crate::reclaim::Cached;
 
     #[test]
     fn set_semantics_single_thread() {
         let l: List<u64, (), Leaky> = List::new();
-        assert!(!l.contains(&5));
-        assert!(l.insert(5, ()));
-        assert!(!l.insert(5, ()), "duplicate insert must fail");
-        assert!(l.insert(3, ()));
-        assert!(l.insert(7, ()));
-        assert_eq!(l.len(), 3);
-        assert!(l.contains(&3) && l.contains(&5) && l.contains(&7));
-        assert!(!l.contains(&4));
-        assert!(l.remove(&5));
-        assert!(!l.remove(&5), "double remove must fail");
-        assert!(!l.contains(&5));
-        assert_eq!(l.len(), 2);
+        assert!(!l.contains(Cached, &5));
+        assert!(l.insert(Cached, 5, ()));
+        assert!(!l.insert(Cached, 5, ()), "duplicate insert must fail");
+        assert!(l.insert(Cached, 3, ()));
+        assert!(l.insert(Cached, 7, ()));
+        assert_eq!(l.len(Cached), 3);
+        assert!(l.contains(Cached, &3) && l.contains(Cached, &5) && l.contains(Cached, &7));
+        assert!(!l.contains(Cached, &4));
+        assert!(l.remove(Cached, &5));
+        assert!(!l.remove(Cached, &5), "double remove must fail");
+        assert!(!l.contains(Cached, &5));
+        assert_eq!(l.len(Cached), 2);
     }
 
     #[test]
-    fn values_accessible_through_get_with() {
+    fn values_accessible_through_get() {
         let l: List<u32, String, Leaky> = List::new();
-        l.insert(1, "one".to_string());
-        l.insert(2, "two".to_string());
-        assert_eq!(l.get_with(&1, |v| v.clone()), Some("one".to_string()));
-        assert_eq!(l.get_with(&3, |v| v.clone()), None);
+        l.insert(Cached, 1, "one".to_string());
+        l.insert(Cached, 2, "two".to_string());
+        assert_eq!(l.get(Cached, &1, |v| v.clone()), Some("one".to_string()));
+        assert_eq!(l.get(Cached, &3, |v| v.clone()), None);
+    }
+
+    #[test]
+    fn cached_and_explicit_handles_interoperate() {
+        let l: List<u64, u64, StampIt> = List::new_in(DomainRef::new_owned());
+        let h = l.domain().register();
+        assert!(l.insert(&h, 1, 10));
+        assert!(l.insert(Cached, 2, 20));
+        assert_eq!(l.get(&h, &2, |v| *v), Some(20));
+        assert_eq!(l.get(Cached, &1, |v| *v), Some(10));
+        assert!(l.remove(&h, &2));
+        assert_eq!(l.len(&h), 1);
     }
 
     fn concurrent_set_exercise<R: Reclaimer>() {
@@ -371,13 +381,13 @@ mod tests {
                         let k = rng.below(key_range);
                         match rng.below(10) {
                             0..=3 => {
-                                l.insert_with(&h, k, ());
+                                l.insert(&h, k, ());
                             }
                             4..=7 => {
-                                l.remove_with(&h, &k);
+                                l.remove(&h, &k);
                             }
                             _ => {
-                                l.contains_with(&h, &k);
+                                l.contains(&h, &k);
                             }
                         }
                         if i % 128 == 0 {
@@ -390,25 +400,22 @@ mod tests {
         for t in handles {
             t.join().unwrap();
         }
-        // Structural sanity: strictly sorted, unique keys.
+        // Structural sanity: strictly sorted, unique keys — a safe-facade
+        // walk with the same two-shield dance `find` uses.
         let h = l.domain().register();
         let mut prev_key = None;
-        let mut g: GuardPtr<LNode<u64, (), R>, R> = h.guard();
-        #[allow(unused_assignments)]
-        let mut _save: GuardPtr<LNode<u64, (), R>, R> = h.guard();
-        let mut prev: *const ConcurrentPtr<LNode<u64, (), R>, R> = &l.head;
+        let mut save: Guard<'_, LNode<u64, (), R>, R> = Guard::new(&h);
+        let mut walk: Guard<'_, LNode<u64, (), R>, R> = Guard::new(&h);
         loop {
-            let cur = g.acquire(unsafe { &*prev });
-            if cur.is_null() {
+            let Some(node) = walk.protect(l.prev_link(&save)) else {
                 break;
-            }
-            let node = unsafe { cur.deref_data() };
+            };
             if let Some(p) = prev_key {
                 assert!(node.key > p, "keys must be strictly sorted: {} !> {}", node.key, p);
             }
             prev_key = Some(node.key);
-            prev = &node.next;
-            _save = g.take(); // pin the node owning `prev`
+            std::mem::swap(&mut save, &mut walk);
+            walk.reset();
         }
     }
 

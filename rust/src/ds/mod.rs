@@ -12,10 +12,16 @@
 //! [`DomainRef`](crate::reclaim::DomainRef): `new()` uses the process-wide
 //! global domain, `new_in(domain)` isolates the structure in its own
 //! reclamation universe (one per shard, test or benchmark trial). Each
-//! operation exists twice — the plain form resolves the calling thread's
-//! cached handle (one TLS lookup per call), and a `*_with` form takes an
-//! explicit [`LocalHandle`](crate::reclaim::LocalHandle) for the TLS-free
-//! hot path.
+//! operation takes one `impl `[`HandleSource`](crate::reclaim::HandleSource)
+//! argument selecting the plumbing: [`Cached`](crate::reclaim::Cached)
+//! resolves the calling thread's cached handle (one TLS lookup per call),
+//! a registered [`&LocalHandle`](crate::reclaim::LocalHandle) is the
+//! TLS-free hot path.
+//!
+//! The structures are written entirely on the safe SMR facade
+//! ([`crate::reclaim::facade`]); `unsafe` appears only at
+//! unlink-then-retire sites and in exclusive-access `Drop` teardowns, each
+//! with its one-line safety argument.
 pub mod hashmap;
 pub mod list;
 pub mod queue;

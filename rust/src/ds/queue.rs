@@ -6,15 +6,22 @@
 //! through the reclaimer — this retired-dummy stream is exactly the
 //! workload of the paper's Queue benchmark (Figures 3, 8, 12, 16).
 //!
+//! Written against the safe facade: nodes are allocated as [`Owned`] and
+//! published with [`Atomic::cas_publish`], traversal goes through
+//! [`Guard`]/[`Shared`], and trusted code remains only in `dequeue` (the
+//! unique-dequeuer value take and the dummy's unlink-then-retire site) and
+//! the exclusive-access teardown in `Drop`.
+//!
 //! Every queue belongs to a reclamation [`DomainRef`]: [`Queue::new`] uses
-//! the process-wide global domain (quickstart one-liner), [`Queue::new_in`]
-//! pins the queue to an owned domain (one per shard/test/trial). The
-//! `*_with` operation variants take an explicit [`LocalHandle`] — the
-//! TLS-free fast path; the plain variants resolve the thread's cached
-//! handle once per call.
+//! the process-wide global domain, [`Queue::new_in`] pins the queue to an
+//! owned domain (one per shard/test/trial). Operations take an
+//! `impl HandleSource<R>` — [`Cached`](crate::reclaim::Cached) for the
+//! one-TLS-lookup quickstart path, or a registered
+//! [`&LocalHandle`](crate::reclaim::LocalHandle) for the TLS-free fast
+//! path.
 
 use crate::reclaim::{
-    alloc_node, ConcurrentPtr, DomainRef, GuardPtr, LocalHandle, MarkedPtr, Reclaimer,
+    Atomic, DomainRef, Guard, HandleSource, LocalHandle, MarkedPtr, Owned, Reclaimer,
 };
 use std::cell::UnsafeCell;
 use std::sync::atomic::Ordering;
@@ -23,7 +30,7 @@ use std::sync::atomic::Ordering;
 /// dequeuer, hence the `UnsafeCell`.
 pub struct QNode<T: Send + Sync + 'static, R: Reclaimer> {
     value: UnsafeCell<Option<T>>,
-    next: ConcurrentPtr<QNode<T, R>, R>,
+    next: Atomic<QNode<T, R>, R>,
 }
 
 // SAFETY: `value` is accessed mutably only by the single thread whose
@@ -34,8 +41,8 @@ unsafe impl<T: Send + Sync + 'static, R: Reclaimer> Send for QNode<T, R> {}
 /// Michael–Scott queue under reclamation scheme `R`.
 pub struct Queue<T: Send + Sync + 'static, R: Reclaimer> {
     domain: DomainRef<R>,
-    head: ConcurrentPtr<QNode<T, R>, R>,
-    tail: ConcurrentPtr<QNode<T, R>, R>,
+    head: Atomic<QNode<T, R>, R>,
+    tail: Atomic<QNode<T, R>, R>,
 }
 
 impl<T: Send + Sync + 'static, R: Reclaimer> Default for Queue<T, R> {
@@ -52,12 +59,14 @@ impl<T: Send + Sync + 'static, R: Reclaimer> Queue<T, R> {
 
     /// An empty queue whose nodes are retired into `domain`.
     pub fn new_in(domain: DomainRef<R>) -> Self {
-        let dummy = alloc_node::<QNode<T, R>, R>(QNode {
+        let dummy = Owned::<QNode<T, R>, R>::new(QNode {
             value: UnsafeCell::new(None),
-            next: ConcurrentPtr::null(),
+            next: Atomic::null(),
         });
-        let p = MarkedPtr::new(dummy, 0);
-        Self { domain, head: ConcurrentPtr::new(p), tail: ConcurrentPtr::new(p) }
+        let q = Self { domain, head: Atomic::new(dummy), tail: Atomic::null() };
+        // head and tail share the dummy; still constructor-private.
+        q.tail.store(q.head.load(Ordering::Relaxed), Ordering::Relaxed);
+        q
     }
 
     /// The queue's reclamation domain.
@@ -66,109 +75,122 @@ impl<T: Send + Sync + 'static, R: Reclaimer> Queue<T, R> {
     }
 
     /// Append `value` (lock-free).
-    pub fn enqueue(&self, value: T) {
-        self.domain.with_handle(|h| self.enqueue_with(h, value))
+    pub fn enqueue(&self, h: impl HandleSource<R>, value: T) {
+        h.with_source(&self.domain, |h| self.enqueue_inner(h, value))
     }
 
-    /// [`Self::enqueue`] through an explicit handle (no TLS).
-    pub fn enqueue_with(&self, h: &LocalHandle<R>, value: T) {
-        let node = alloc_node::<QNode<T, R>, R>(QNode {
+    fn enqueue_inner(&self, h: &LocalHandle<R>, value: T) {
+        let mut node = Owned::<QNode<T, R>, R>::new(QNode {
             value: UnsafeCell::new(Some(value)),
-            next: ConcurrentPtr::null(),
+            next: Atomic::null(),
         });
-        let node_ptr = MarkedPtr::new(node, 0);
-        let mut tail_guard: GuardPtr<QNode<T, R>, R> = h.guard();
+        let mut tail_guard: Guard<'_, QNode<T, R>, R> = Guard::new(h);
         loop {
-            let tail = tail_guard.acquire(&self.tail);
-            debug_assert!(!tail.is_null());
-            // SAFETY: tail is guarded.
-            let tail_node = unsafe { tail.deref_data() };
-            let next = tail_node.next.load(Ordering::Acquire);
-            if tail != self.tail.load(Ordering::Acquire) {
+            let tail = tail_guard.protect(&self.tail).expect("queue tail is never null");
+            let tail_marked = tail.as_marked();
+            let next = tail.next.load(Ordering::Acquire);
+            if tail_marked != self.tail.load(Ordering::Acquire) {
                 continue; // stale snapshot
             }
             if !next.is_null() {
                 // Tail lags behind: help advance it.
-                let _ =
-                    self.tail.compare_exchange(tail, next, Ordering::Release, Ordering::Relaxed);
-                continue;
-            }
-            if tail_node
-                .next
-                .compare_exchange(MarkedPtr::null(), node_ptr, Ordering::Release, Ordering::Relaxed)
-                .is_ok()
-            {
-                // Linked; swing tail (failure is fine — someone helped).
                 let _ = self.tail.compare_exchange(
-                    tail,
-                    node_ptr,
+                    tail_marked,
+                    next,
                     Ordering::Release,
                     Ordering::Relaxed,
                 );
-                return;
+                continue;
+            }
+            let published = tail.next.cas_publish(
+                MarkedPtr::null(),
+                node,
+                Ordering::Release,
+                Ordering::Relaxed,
+            );
+            match published {
+                Ok(published) => {
+                    // Linked; swing tail (failure is fine — someone helped).
+                    let _ = self.tail.compare_exchange(
+                        tail_marked,
+                        published,
+                        Ordering::Release,
+                        Ordering::Relaxed,
+                    );
+                    return;
+                }
+                Err((_, n)) => node = n,
             }
         }
     }
 
     /// Remove the oldest value (lock-free); `None` when empty.
-    pub fn dequeue(&self) -> Option<T> {
-        self.domain.with_handle(|h| self.dequeue_with(h))
+    pub fn dequeue(&self, h: impl HandleSource<R>) -> Option<T> {
+        h.with_source(&self.domain, |h| self.dequeue_inner(h))
     }
 
-    /// [`Self::dequeue`] through an explicit handle (no TLS).
-    pub fn dequeue_with(&self, h: &LocalHandle<R>) -> Option<T> {
-        let mut head_guard: GuardPtr<QNode<T, R>, R> = h.guard();
-        let mut next_guard: GuardPtr<QNode<T, R>, R> = h.guard();
+    fn dequeue_inner(&self, h: &LocalHandle<R>) -> Option<T> {
+        let mut head_guard: Guard<'_, QNode<T, R>, R> = Guard::new(h);
+        let mut next_guard: Guard<'_, QNode<T, R>, R> = Guard::new(h);
         loop {
-            let head = head_guard.acquire(&self.head);
-            debug_assert!(!head.is_null());
-            // SAFETY: head is guarded.
-            let head_node = unsafe { head.deref_data() };
-            let next = next_guard.acquire(&head_node.next);
-            if head != self.head.load(Ordering::Acquire) {
+            let head = head_guard.protect(&self.head).expect("queue head is never null");
+            let head_marked = head.as_marked();
+            let next = next_guard.protect(&head.next);
+            if head_marked != self.head.load(Ordering::Acquire) {
                 continue;
             }
-            if next.is_null() {
+            let Some(next) = next else {
                 return None; // empty
-            }
+            };
             let tail = self.tail.load(Ordering::Acquire);
-            if head.get() == tail.get() {
+            if head.ptr_eq(tail) {
                 // Tail lags: help before moving head past it.
-                let _ =
-                    self.tail.compare_exchange(tail, next, Ordering::Release, Ordering::Relaxed);
+                let _ = self.tail.compare_exchange(
+                    tail,
+                    next.as_marked(),
+                    Ordering::Release,
+                    Ordering::Relaxed,
+                );
                 continue;
             }
-            if self.head.compare_exchange(head, next, Ordering::AcqRel, Ordering::Relaxed).is_ok() {
-                // SAFETY: our CAS succeeded, so we are the unique dequeuer
-                // of `next`'s value; next is guarded.
-                let value = unsafe { (*next.deref_data().value.get()).take() };
+            let advanced = self.head.compare_exchange(
+                head_marked,
+                next.as_marked(),
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            );
+            if advanced.is_ok() {
+                // SAFETY: our head-CAS succeeded, so we are the unique
+                // dequeuer of `next`'s value; `next` is pinned by its
+                // shield for the duration of the take.
+                let value = unsafe { (*next.get().value.get()).take() };
                 debug_assert!(value.is_some());
-                // SAFETY: the old dummy is unlinked (head moved past it);
-                // only the successful CASer retires it.
-                unsafe { head_guard.reclaim() };
+                // SAFETY: the old dummy is unlinked (head moved past it)
+                // and only the successful CASer retires it; its readers
+                // are protected through this queue's domain.
+                unsafe { head_guard.retire() };
                 return value;
             }
         }
     }
 
     /// Approximate emptiness check.
-    pub fn is_empty(&self) -> bool {
-        self.domain.with_handle(|h| {
-            let mut head_guard: GuardPtr<QNode<T, R>, R> = h.guard();
-            let head = head_guard.acquire(&self.head);
-            // SAFETY: guarded.
-            unsafe { head.deref_data().next.load(Ordering::Acquire).is_null() }
+    pub fn is_empty(&self, h: impl HandleSource<R>) -> bool {
+        h.with_source(&self.domain, |h| {
+            let mut head_guard: Guard<'_, QNode<T, R>, R> = Guard::new(h);
+            let head = head_guard.protect(&self.head).expect("queue head is never null");
+            head.next.load(Ordering::Acquire).is_null()
         })
     }
 }
 
 impl<T: Send + Sync + 'static, R: Reclaimer> Drop for Queue<T, R> {
     fn drop(&mut self) {
-        // Exclusive access: free the dummy and any remaining nodes
-        // directly (no retire round-trip needed).
         let mut cur = self.head.load(Ordering::Relaxed);
         while !cur.is_null() {
-            // SAFETY: exclusive access during drop.
+            // SAFETY: `&mut self` proves exclusive access during drop (no
+            // concurrent operations, no live shields): the dummy and any
+            // remaining nodes are each freed exactly once.
             unsafe {
                 let next = cur.deref_data().next.load(Ordering::Relaxed);
                 crate::reclaim::free_node(cur.get());
@@ -184,20 +206,21 @@ mod tests {
     use crate::reclaim::ebr::Ebr;
     use crate::reclaim::leaky::Leaky;
     use crate::reclaim::stamp::StampIt;
+    use crate::reclaim::Cached;
 
     #[test]
     fn fifo_order_single_thread() {
         let q: Queue<u64, Leaky> = Queue::new();
-        assert!(q.is_empty());
-        assert_eq!(q.dequeue(), None);
+        assert!(q.is_empty(Cached));
+        assert_eq!(q.dequeue(Cached), None);
         for i in 0..100 {
-            q.enqueue(i);
+            q.enqueue(Cached, i);
         }
-        assert!(!q.is_empty());
+        assert!(!q.is_empty(Cached));
         for i in 0..100 {
-            assert_eq!(q.dequeue(), Some(i));
+            assert_eq!(q.dequeue(Cached), Some(i));
         }
-        assert_eq!(q.dequeue(), None);
+        assert_eq!(q.dequeue(Cached), None);
     }
 
     #[test]
@@ -209,11 +232,12 @@ mod tests {
         let drops = Arc::new(AtomicUsize::new(0));
         {
             let q: Queue<Payload, Ebr> = Queue::new_in(domain.clone());
+            let h = domain.register();
             for i in 0..50 {
-                q.enqueue(Payload::new(i, &drops));
+                q.enqueue(&h, Payload::new(i, &drops));
             }
             for _ in 0..20 {
-                let v = q.dequeue().unwrap();
+                let v = q.dequeue(&h).unwrap();
                 v.read();
             }
             // 20 dequeued values dropped here; 30 remain in the queue.
@@ -225,21 +249,21 @@ mod tests {
     }
 
     #[test]
-    fn explicit_handle_ops_match_tls_ops() {
+    fn explicit_handle_ops_match_cached_ops() {
         let domain = DomainRef::<StampIt>::new_owned();
         let q: Queue<u64, StampIt> = Queue::new_in(domain.clone());
         let h = domain.register();
         for i in 0..64 {
-            q.enqueue_with(&h, i);
+            q.enqueue(&h, i);
         }
         for i in 0..32 {
-            assert_eq!(q.dequeue_with(&h), Some(i));
+            assert_eq!(q.dequeue(&h), Some(i));
         }
-        // Mixed: TLS-path ops see the same structure.
+        // Mixed: cached-path ops see the same structure.
         for i in 32..64 {
-            assert_eq!(q.dequeue(), Some(i));
+            assert_eq!(q.dequeue(Cached), Some(i));
         }
-        assert_eq!(q.dequeue_with(&h), None);
+        assert_eq!(q.dequeue(&h), None);
     }
 
     fn mpmc_exercise<R: Reclaimer>() {
@@ -259,7 +283,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 let h = q.domain().register();
                 for i in 0..per {
-                    q.enqueue_with(&h, p as u64 * per + i);
+                    q.enqueue(&h, p as u64 * per + i);
                     if i % 64 == 0 {
                         std::thread::yield_now();
                     }
@@ -277,7 +301,7 @@ mod tests {
                     if count_out.load(Ordering::Relaxed) >= total {
                         break;
                     }
-                    match q.dequeue_with(&h) {
+                    match q.dequeue(&h) {
                         Some(v) => {
                             sum_out.fetch_add(v, Ordering::Relaxed);
                             count_out.fetch_add(1, Ordering::Relaxed);
@@ -292,7 +316,8 @@ mod tests {
         }
         assert_eq!(count_out.load(Ordering::Relaxed), producers as usize * per as usize);
         assert_eq!(sum_out.load(Ordering::Relaxed), sum_in, "every value exactly once");
-        assert!(q.is_empty());
+        let h = q.domain().register();
+        assert!(q.is_empty(&h));
     }
 
     #[test]

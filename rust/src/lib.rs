@@ -4,10 +4,22 @@
 //! Concurrent Memory Reclamation Scheme in the C++ Memory Model”*
 //! (Pöter & Träff, 2018) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! ## Architecture: reclamation domains + cached local handles
+//! ## Architecture: a safe facade over reclamation domains
 //!
-//! The reclamation layer is organized as a two-level **instance model**
-//! (no process-global scheme state):
+//! User-facing code (the data structures, the coordinator, the benches)
+//! is written against the **lifetime-branded facade**
+//! ([`reclaim::facade`]): [`reclaim::Atomic`] link words,
+//! [`reclaim::Guard`] reusable shields, [`reclaim::Shared`] protected
+//! pointers branded by their guard's borrow (safe dereference — the brand
+//! is the proof), [`reclaim::Owned`] unpublished nodes, and one generic
+//! [`reclaim::HandleSource`] argument per operation
+//! ([`reclaim::Cached`] | `&LocalHandle`) instead of duplicated
+//! `op`/`op_with` method pairs. `unsafe` at data-structure level narrows
+//! to the unlink-then-retire sites. The raw N3712 `guard_ptr` machinery
+//! remains underneath as the crate-internal scheme-facing layer.
+//!
+//! The reclamation layer itself is organized as a two-level **instance
+//! model** (no process-global scheme state):
 //!
 //! * [`reclaim::Domain`]`<R>` owns one complete instance of a scheme's
 //!   shared state — Stamp-it's stamp pool and global retire-list, an epoch
@@ -19,11 +31,12 @@
 //!   last reference drops.
 //! * [`reclaim::LocalHandle`]`<R>` caches a thread's registration with one
 //!   domain (registry entry, hazard slots, local retire list — the paper's
-//!   `thread_control_block`). Guards ([`reclaim::GuardPtr`]), regions
+//!   `thread_control_block`). Guards ([`reclaim::Guard`]), regions
 //!   ([`reclaim::Region`]) and retires created through a handle touch **no
-//!   TLS and no `RefCell`** on the fast path; the `Default`-style
-//!   data-structure methods resolve a thread-cached handle once per call
-//!   instead (one TLS lookup).
+//!   TLS and no `RefCell`** on the fast path; the [`reclaim::Cached`]
+//!   handle source resolves a thread-cached handle once per call instead
+//!   (one TLS lookup), evicting cached handles whose domain has otherwise
+//!   died.
 //!
 //! The [`reclaim::Reclaimer`] trait is the scheme plug-point: every
 //! operation takes `(&DomainState, &LocalCell<LocalState>)`, so schemes are
@@ -40,8 +53,8 @@
 //! * [`ds`] — the paper's benchmark data structures, generic over the
 //!   reclaimer and bound to a domain: Michael–Scott queue, Harris–Michael
 //!   list-based set, and a Michael-style hash-map with bounded FIFO
-//!   eviction. Each operation has a TLS-resolving form and an explicit
-//!   `*_with(handle, ...)` form.
+//!   eviction. Each operation takes one `impl HandleSource<R>` argument:
+//!   [`reclaim::Cached`] or a registered `&LocalHandle`.
 //! * [`alloc`] — a pluggable node allocator (system vs pooled) with
 //!   allocation/reclamation counters, reproducing the paper's
 //!   jemalloc-vs-libc axis.
@@ -62,12 +75,12 @@
 //! The one-liner API (global domain, cached handles):
 //!
 //! ```
-//! use emr::reclaim::stamp::StampIt;
+//! use emr::reclaim::{stamp::StampIt, Cached};
 //! use emr::ds::queue::Queue;
 //!
 //! let q: Queue<u64, StampIt> = Queue::new();
-//! q.enqueue(1);
-//! assert_eq!(q.dequeue(), Some(1));
+//! q.enqueue(Cached, 1);
+//! assert_eq!(q.dequeue(Cached), Some(1));
 //! ```
 //!
 //! The isolated, TLS-free fast path (own domain + explicit handle):
@@ -79,8 +92,29 @@
 //! let q: Queue<u64, StampIt> = Queue::new_in(DomainRef::new_owned());
 //! let handle = q.domain().register();
 //! let _region = Region::enter(&handle); // amortized critical region
-//! q.enqueue_with(&handle, 1);
-//! assert_eq!(q.dequeue_with(&handle), Some(1));
+//! q.enqueue(&handle, 1);
+//! assert_eq!(q.dequeue(&handle), Some(1));
+//! ```
+//!
+//! Protected reads hand out [`reclaim::Shared`] pointers whose lifetime
+//! is branded by the shield that protects them — escaping the shield is a
+//! compile error (see `rust/tests/compile_fail.rs`):
+//!
+//! ```
+//! use emr::reclaim::{stamp::StampIt, Atomic, DomainRef, Guard, Owned};
+//!
+//! let domain = DomainRef::<StampIt>::new_owned();
+//! let handle = domain.register();
+//! let cell: Atomic<String, StampIt> = Atomic::new(Owned::new("hi".into()));
+//! let mut shield: Guard<String, StampIt> = handle.guard();
+//! if let Some(s) = shield.protect(&cell) {
+//!     assert_eq!(s.get(), "hi"); // safe deref: the brand is the proof
+//! }
+//! # // drain the owned domain cleanly
+//! # let last = cell.load(std::sync::atomic::Ordering::Acquire);
+//! # cell.store(emr::reclaim::MarkedPtr::null(), std::sync::atomic::Ordering::Release);
+//! # shield.reset();
+//! # unsafe { handle.retire(last.get()) };
 //! ```
 
 pub mod alloc;

@@ -1,8 +1,9 @@
 //! `concurrent_ptr` (paper §2): an atomic [`MarkedPtr`] — the "weak" shared
-//! pointer living inside lock-free data structures. Only a [`GuardPtr`]
-//! acquired *from* a `ConcurrentPtr` protects the target from deletion.
+//! pointer living inside lock-free data structures. Only a guard
+//! (facade [`Guard`], wrapping the internal `guard_ptr`) acquired *from*
+//! a `ConcurrentPtr` protects the target from deletion.
 //!
-//! [`GuardPtr`]: super::GuardPtr
+//! [`Guard`]: super::facade::Guard
 
 use super::marked_ptr::MarkedPtr;
 use super::Reclaimer;

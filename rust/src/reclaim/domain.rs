@@ -36,9 +36,11 @@
 
 use std::cell::UnsafeCell;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use super::{GuardPtr, Node, Reclaimer};
+use super::facade::{Guard, Owned};
+use super::{Node, Reclaimer};
 
 /// Debug-checked, zero-release-cost exclusive access to per-thread scheme
 /// state. See the module docs for the discipline it encodes.
@@ -100,12 +102,18 @@ impl<S> LocalCell<S> {
 /// retired nodes.
 pub struct Domain<R: Reclaimer> {
     state: R::DomainState,
+    /// Number of TLS handle-cache entries (across all threads) currently
+    /// holding a `DomainRef` to this domain. Compared against the `Arc`
+    /// strong count to decide eviction: when every remaining owner is a
+    /// cache entry, each thread's next sweep drops its own (see
+    /// `impl_domain_statics!`).
+    cache_pins: AtomicUsize,
 }
 
 impl<R: Reclaimer> Domain<R> {
     /// A fresh, empty domain.
     pub fn new() -> Self {
-        Self { state: R::new_domain_state() }
+        Self { state: R::new_domain_state(), cache_pins: AtomicUsize::new(0) }
     }
 
     /// The process-wide default domain (what `Queue::new()` &c. use).
@@ -201,6 +209,25 @@ impl<R: Reclaimer> DomainRef<R> {
         self.domain() as *const Domain<R> as usize
     }
 
+    /// Is this owned domain kept alive *only* by TLS handle-cache entries
+    /// (every structure, explicit handle and other external `DomainRef`
+    /// gone)? Drives cache eviction: each cache entry owns exactly one
+    /// `DomainRef` and registers itself in [`Domain::cache_pins`], so
+    /// "strong count ≤ pin count" means only caches remain — every
+    /// thread's next sweep then drops its own entry (the last one drops,
+    /// and drains, the domain). The two counters are read racily, but a
+    /// torn reading only defers or triggers an eviction; evicting a cache
+    /// entry is always safe (it is a cache — live users hold their own
+    /// `DomainRef`s/handles, which keep the strong count above the pins).
+    pub(crate) fn only_cache_owned(&self) -> bool {
+        match &self.0 {
+            DomainRefInner::Global => false,
+            DomainRefInner::Owned(a) => {
+                Arc::strong_count(a) <= a.cache_pins.load(Ordering::Relaxed)
+            }
+        }
+    }
+
     /// Register the calling thread with this domain, returning an explicit
     /// handle. The fast-path API: every guard/region/retire through the
     /// handle is TLS-free.
@@ -213,13 +240,17 @@ impl<R: Reclaimer> DomainRef<R> {
 
     /// Run `f` with the calling thread's cached handle for this domain,
     /// registering on first use (one TLS lookup; the convenience path the
-    /// default data-structure methods use). Falls back to an ephemeral
-    /// registration during thread teardown, when the TLS cache is gone.
+    /// [`super::facade::Cached`] handle source uses). Falls back to an
+    /// ephemeral registration during thread teardown, when the TLS cache
+    /// is gone.
     ///
-    /// Note: the cached handle (and therefore the domain, for owned
-    /// domains) lives until the calling thread exits. Short-lived domains
-    /// that must drop promptly — per-trial benchmark domains, per-test
-    /// domains — should use explicit [`Self::register`] handles instead.
+    /// Cache lifetime: cache misses (and periodically, hits) sweep the
+    /// calling thread's cache and drop cached handles whose owned domain
+    /// is kept alive *only* by cache entries — on this or any other
+    /// thread (see [`CachePin`]) — so long-lived threads no longer pin
+    /// short-lived domains until thread exit. A domain that must drop
+    /// (and drain) at a deterministic point should still use explicit
+    /// [`Self::register`] handles.
     pub fn with_handle<O>(&self, f: impl FnOnce(&LocalHandle<R>) -> O) -> O {
         match R::cached_handle(self) {
             Some(h) => f(&h),
@@ -233,8 +264,8 @@ impl<R: Reclaimer> DomainRef<R> {
 // carry both. No manual unsafe impls — the compiler revokes the auto traits
 // if a non-thread-safe field is ever added.
 
-/// Shared interior of a [`LocalHandle`] (also what attached [`GuardPtr`]s
-/// and [`Region`]s keep alive).
+/// Shared interior of a [`LocalHandle`] (also what attached guards and
+/// [`Region`]s keep alive).
 pub struct HandleInner<R: Reclaimer> {
     domain: DomainRef<R>,
     local: LocalCell<R::LocalState>,
@@ -297,9 +328,10 @@ impl<R: Reclaimer> LocalHandle<R> {
         self.inner.local()
     }
 
-    /// An empty guard attached to this handle (the only way to make one).
-    pub fn guard<T: Send + Sync + 'static>(&self) -> GuardPtr<T, R> {
-        GuardPtr::new_in(self)
+    /// An empty protection shield attached to this handle (alias for
+    /// [`Guard::new`]; the shield cannot outlive the handle).
+    pub fn guard<T: Send + Sync + 'static>(&self) -> Guard<'_, T, R> {
+        Guard::new(self)
     }
 
     /// Enter a critical region scoped to the returned RAII token.
@@ -316,11 +348,50 @@ impl<R: Reclaimer> LocalHandle<R> {
         R::retire(self.domain_state(), self.local(), node)
     }
 
+    /// Retire an **unpublished** node — safe, because an [`Owned`] is
+    /// trivially unlinked (it was never reachable from any `Atomic`), is
+    /// consumed by value (retired exactly once) and was allocated for `R`.
+    pub fn retire_owned<T: Send + Sync + 'static>(&self, node: Owned<T, R>) {
+        // SAFETY: see above — every obligation of `Reclaimer::retire` is
+        // discharged by the `Owned` invariants.
+        unsafe { R::retire(self.domain_state(), self.local(), node.into_raw()) }
+    }
+
+    /// Is this handle's owned domain kept alive only by TLS cache entries
+    /// (no outside `DomainRef` left)? TLS-cache eviction predicate.
+    pub(crate) fn evictable(&self) -> bool {
+        self.inner.domain.only_cache_owned()
+    }
+
     /// Best-effort: reclaim everything currently reclaimable in this
     /// domain (bench/test hook; e.g. forces an epoch-advance attempt or an
     /// HP scan).
     pub fn flush(&self) {
         R::flush(self.domain_state(), self.local())
+    }
+}
+
+/// A TLS handle-cache entry: a cached [`LocalHandle`] registered in its
+/// domain's [`Domain::cache_pins`] counter for the eviction policy. The
+/// pin is released in `Drop` — which covers both an eviction sweep and
+/// the thread-exit TLS destructor — *before* the handle itself drops, so
+/// a torn (pins low / count high) reading can only defer an eviction.
+pub(crate) struct CachePin<R: Reclaimer>(LocalHandle<R>);
+
+impl<R: Reclaimer> CachePin<R> {
+    pub(crate) fn new(handle: LocalHandle<R>) -> Self {
+        handle.domain().cache_pins.fetch_add(1, Ordering::Relaxed);
+        Self(handle)
+    }
+
+    pub(crate) fn handle(&self) -> &LocalHandle<R> {
+        &self.0
+    }
+}
+
+impl<R: Reclaimer> Drop for CachePin<R> {
+    fn drop(&mut self) {
+        self.0.domain().cache_pins.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -367,23 +438,61 @@ macro_rules! impl_domain_statics {
         fn cached_handle(
             domain: &$crate::reclaim::DomainRef<Self>,
         ) -> Option<$crate::reclaim::LocalHandle<Self>> {
+            use $crate::reclaim::domain::CachePin;
             thread_local! {
-                static HANDLES: std::cell::RefCell<
-                    Vec<(usize, $crate::reclaim::LocalHandle<$scheme>)>,
-                > = const { std::cell::RefCell::new(Vec::new()) };
+                static HANDLES: std::cell::RefCell<Vec<(usize, CachePin<$scheme>)>> =
+                    const { std::cell::RefCell::new(Vec::new()) };
+                static SWEEP_TICK: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
             }
             let key = domain.key();
+            // Amortize the eviction scan off the hot hit path: misses
+            // (which mutate the cache anyway) always sweep, hits sweep
+            // only every 64th resolution. `1` (never 0) on TLS teardown.
+            let tick = SWEEP_TICK
+                .try_with(|t| {
+                    let v = t.get().wrapping_add(1);
+                    t.set(v);
+                    v
+                })
+                .unwrap_or(1);
             HANDLES
                 .try_with(|cache| {
-                    // Handles are cloned out before use so the cache borrow
-                    // never spans user code (re-entrant lookups just miss).
-                    let mut cache = cache.try_borrow_mut().ok()?;
-                    if let Some((_, h)) = cache.iter().find(|(k, _)| *k == key) {
-                        return Some(h.clone());
-                    }
-                    let h = domain.register();
-                    cache.push((key, h.clone()));
-                    Some(h)
+                    // Evicted entries are collected here and dropped only
+                    // after the cache borrow is released: dropping a
+                    // handle runs `unregister` (and possibly the domain's
+                    // drain), which may run user drops that re-enter this
+                    // cache.
+                    let mut evicted: Vec<(usize, CachePin<$scheme>)> = Vec::new();
+                    let found = {
+                        // Handles are cloned out before use so the cache
+                        // borrow never spans user code (re-entrant lookups
+                        // just miss).
+                        let mut cache = cache.try_borrow_mut().ok()?;
+                        let is_miss = !cache.iter().any(|(k, _)| *k == key);
+                        // Eviction sweep: drop cached handles whose owned
+                        // domain is kept alive only by cache entries (on
+                        // any thread), so long-lived threads don't pin
+                        // dead domains until thread exit.
+                        if is_miss || tick % 64 == 0 {
+                            let mut i = 0;
+                            while i < cache.len() {
+                                if cache[i].1.handle().evictable() {
+                                    evicted.push(cache.swap_remove(i));
+                                } else {
+                                    i += 1;
+                                }
+                            }
+                        }
+                        if let Some((_, p)) = cache.iter().find(|(k, _)| *k == key) {
+                            Some(p.handle().clone())
+                        } else {
+                            let h = domain.register();
+                            cache.push((key, CachePin::new(h.clone())));
+                            Some(h)
+                        }
+                    };
+                    drop(evicted);
+                    found
                 })
                 .ok()
                 .flatten()

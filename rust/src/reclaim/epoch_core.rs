@@ -317,19 +317,6 @@ pub unsafe fn retire<T: Send + Sync + 'static, R: Reclaimer>(
     local.with(|l| l.retired.push_back(r));
 }
 
-/// Orphan-path retire for when no thread-local state is available.
-///
-/// # Safety
-/// See [`Reclaimer::retire`].
-pub unsafe fn retire_to_orphans<T: Send + Sync + 'static, R: Reclaimer>(
-    domain: &EpochDomain,
-    node: *mut Node<T, R>,
-) {
-    let stamp = domain.global.load(Ordering::Acquire);
-    let r = prepare_retire::<T, R>(node, stamp);
-    domain.orphans.push_sublist(r);
-}
-
 /// Reclaim the eligible prefix of the local retire list. The list is
 /// detached while user drops run; nested retires are merged back after.
 pub fn reclaim_local(domain: &EpochDomain, local: &LocalCell<LocalEpoch>) -> usize {

@@ -1,0 +1,542 @@
+//! The **safe SMR facade**: lifetime-branded, misuse-resistant types over
+//! the raw `guard_ptr` layer (see DESIGN.md §2 for the layering).
+//!
+//! The paper's N3712-style interface ([`ConcurrentPtr`] / `GuardPtr`) is
+//! faithful but raw: every data structure juggles bare [`MarkedPtr`] words
+//! and carries `unsafe` at each dereference. This module rebuilds that
+//! surface in the style of `crossbeam-epoch`'s `Guard`/`Shared`, adapted to
+//! the per-domain [`LocalHandle`] model:
+//!
+//! * [`Atomic<T, R>`] — a typed atomic marked pointer, the link word of a
+//!   lock-free structure (replaces bare `ConcurrentPtr` use in ds code).
+//! * [`Guard`] — a **reusable shield** created from a [`LocalHandle`]
+//!   ([`LocalHandle::guard`]). One guard is re-aimed at node after node in
+//!   a hot loop, so the hazard-slot / region-token amortization of the
+//!   paper's Listing 1 is preserved (no per-acquire registration cost).
+//! * [`Shared<'g, T, R>`] — a **non-null, mark-carrying protected
+//!   pointer** whose lifetime `'g` is branded by the borrow of its guard:
+//!   safe code cannot hold a node reference past the protection that makes
+//!   it valid. Dereferencing is *safe* — the brand is the proof.
+//! * [`Owned<T, R>`] — a uniquely-owned, **unpublished** node (replaces
+//!   raw `alloc_node` / `free_node` at ds level). Dropping an `Owned`
+//!   frees the node; publishing it ([`Atomic::cas_publish`]) transfers
+//!   ownership to the structure.
+//! * [`HandleSource`] — collapses the old `op` / `op_with(handle)` method
+//!   duplication: every data-structure operation takes one
+//!   `impl HandleSource<R>` argument, which is either [`Cached`] (resolve
+//!   the calling thread's cached handle — the quickstart path) or a
+//!   borrowed [`&LocalHandle`](LocalHandle) (the TLS-free fast path).
+//!
+//! ## What stays `unsafe`, and why
+//!
+//! Exactly one obligation cannot be expressed in the type system: *a node
+//! may be retired only after it has been unlinked* (no new references can
+//! be created from any [`Atomic`]), and only once. That is
+//! [`Guard::retire`] / [`LocalHandle::retire`] — the unlink-then-retire
+//! sites in the data structures, each carrying a one-line `// SAFETY:`
+//! argument. Everything else (allocation, publication, traversal,
+//! dereference, unpublished-node disposal) is safe. Note the standard SMR
+//! caveat, documented on [`Atomic::store`]: pointer *values* are treated
+//! as data, so the structure-wide reachability invariant is discharged at
+//! the retire sites, not re-checked per store (DESIGN.md §2.3).
+
+use std::marker::PhantomData;
+use std::sync::atomic::Ordering;
+
+use super::domain::{DomainRef, LocalHandle};
+use super::{alloc_node, free_node, ConcurrentPtr, GuardPtr, MarkedPtr, Node, Reclaimer};
+
+// ---------------------------------------------------------------------------
+// Atomic
+// ---------------------------------------------------------------------------
+
+/// A typed atomic marked pointer — the link word of a lock-free structure.
+///
+/// `Atomic` stores [`MarkedPtr`] *values*; a value conveys no protection
+/// and cannot be dereferenced. Protected access goes through a
+/// [`Guard`] ([`Guard::protect`] / [`Guard::try_protect`]), which yields a
+/// branded [`Shared`].
+pub struct Atomic<T: Send + Sync + 'static, R: Reclaimer> {
+    inner: ConcurrentPtr<T, R>,
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> Atomic<T, R> {
+    /// A null link.
+    pub const fn null() -> Self {
+        Self { inner: ConcurrentPtr::null() }
+    }
+
+    /// A link initialized to a freshly published node (constructor-time
+    /// publication; ownership moves into the structure).
+    pub fn new(node: Owned<T, R>) -> Self {
+        Self { inner: ConcurrentPtr::new(MarkedPtr::new(node.into_raw(), 0)) }
+    }
+
+    /// Snapshot the current value (pointer + mark). The snapshot is plain
+    /// data: comparable, storable, not dereferenceable.
+    #[inline]
+    pub fn load(&self, order: Ordering) -> MarkedPtr<T, R> {
+        self.inner.load(order)
+    }
+
+    /// Store a pointer value.
+    ///
+    /// Safe under the facade's invariant (DESIGN.md §2.3): the only values
+    /// a structure stores are null, just-published [`Owned`]s, and
+    /// snapshots of pointers still reachable from the same structure —
+    /// and a node stops being reachable only at its (unsafe, argued)
+    /// retire site. Storing a pointer to an already-retired node would
+    /// violate that retire site's safety argument, not this method's.
+    #[inline]
+    pub fn store(&self, value: MarkedPtr<T, R>, order: Ordering) {
+        self.inner.store(value, order)
+    }
+
+    /// Single-word CAS on the (pointer, mark) value; returns the witness
+    /// value on failure. Same invariant note as [`Self::store`].
+    #[inline]
+    pub fn compare_exchange(
+        &self,
+        expected: MarkedPtr<T, R>,
+        desired: MarkedPtr<T, R>,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<(), MarkedPtr<T, R>> {
+        self.inner.compare_exchange(expected, desired, success, failure)
+    }
+
+    /// Weak CAS variant for retry loops.
+    #[inline]
+    pub fn compare_exchange_weak(
+        &self,
+        expected: MarkedPtr<T, R>,
+        desired: MarkedPtr<T, R>,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<(), MarkedPtr<T, R>> {
+        self.inner.compare_exchange_weak(expected, desired, success, failure)
+    }
+
+    /// Atomically set mark bits (Harris delete marks), returning the
+    /// previous value.
+    #[inline]
+    pub fn fetch_mark(&self, mark: usize, order: Ordering) -> MarkedPtr<T, R> {
+        self.inner.fetch_mark(mark, order)
+    }
+
+    /// Publish an unpublished node: CAS `expected → node`. On success the
+    /// node's ownership transfers to the structure and the published
+    /// pointer is returned; on failure the witness value and the
+    /// still-owned node are handed back for the retry loop.
+    pub fn cas_publish(
+        &self,
+        expected: MarkedPtr<T, R>,
+        node: Owned<T, R>,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<MarkedPtr<T, R>, (MarkedPtr<T, R>, Owned<T, R>)> {
+        let desired = MarkedPtr::new(node.as_raw(), 0);
+        match self.inner.compare_exchange(expected, desired, success, failure) {
+            Ok(()) => {
+                // Ownership moved into the structure: skip Owned's drop.
+                std::mem::forget(node);
+                Ok(desired)
+            }
+            Err(witness) => Err((witness, node)),
+        }
+    }
+
+    /// The raw N3712 `concurrent_ptr` underneath (scheme-layer plumbing
+    /// and the micro_region facade-overhead gate).
+    #[inline]
+    pub(crate) fn raw(&self) -> &ConcurrentPtr<T, R> {
+        &self.inner
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> Default for Atomic<T, R> {
+    fn default() -> Self {
+        Self::null()
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> std::fmt::Debug for Atomic<T, R> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Atomic({:?})", self.load(Ordering::Relaxed))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Owned
+// ---------------------------------------------------------------------------
+
+/// A uniquely-owned, unpublished node. The safe replacement for raw
+/// `alloc_node` / `free_node` at data-structure level:
+///
+/// * [`Owned::new`] allocates (policy-routed, counted — see
+///   [`crate::alloc`]);
+/// * dropping an `Owned` frees the node (it was never published, so no
+///   reclamation protocol is needed);
+/// * [`Atomic::cas_publish`] / [`Atomic::new`] transfer ownership into a
+///   structure;
+/// * [`LocalHandle::retire_owned`] retires an unpublished node safely
+///   (trivially "unlinked").
+pub struct Owned<T: Send + Sync + 'static, R: Reclaimer> {
+    node: *mut Node<T, R>,
+}
+
+// SAFETY: an Owned is exclusive ownership of a private (unpublished) node;
+// moving it between threads moves the T, so T's own Send + Sync bounds
+// (already required for reclaimable payloads) are what governs.
+unsafe impl<T: Send + Sync + 'static, R: Reclaimer> Send for Owned<T, R> {}
+unsafe impl<T: Send + Sync + 'static, R: Reclaimer> Sync for Owned<T, R> {}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> Owned<T, R> {
+    /// Allocate a fresh, private node holding `data`.
+    pub fn new(data: T) -> Self {
+        Self { node: alloc_node::<T, R>(data) }
+    }
+
+    /// The raw node pointer, ownership retained.
+    #[inline]
+    fn as_raw(&self) -> *mut Node<T, R> {
+        self.node
+    }
+
+    /// The raw node pointer, ownership released (no drop).
+    #[inline]
+    pub(crate) fn into_raw(self) -> *mut Node<T, R> {
+        let p = self.node;
+        std::mem::forget(self);
+        p
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> std::ops::Deref for Owned<T, R> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        // SAFETY: the node is private to this Owned (unpublished), fully
+        // initialized by alloc_node, and live until into_raw/drop.
+        unsafe { (*self.node).data() }
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> Drop for Owned<T, R> {
+    fn drop(&mut self) {
+        // SAFETY: still unpublished (cas_publish/into_raw forget self), so
+        // no other thread can reference the node; freed exactly once.
+        unsafe { free_node(self.node) }
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> std::fmt::Debug for Owned<T, R> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Owned({:p})", self.node)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Guard + Shared
+// ---------------------------------------------------------------------------
+
+/// A reusable protection shield attached to one [`LocalHandle`] (and, by
+/// the `'h` brand, unable to outlive it).
+///
+/// A guard is aimed at nodes with [`Guard::protect`] /
+/// [`Guard::try_protect`] and re-aimed freely — the underlying hazard slot
+/// or region token is acquired once and reused, which is what keeps hot
+/// loops at the amortized cost the paper's Listing 1 relies on. Protected
+/// access comes back as a [`Shared`] branded by the borrow of the guard:
+/// while any `Shared` from a guard is alive, every operation that could
+/// drop the protection (`protect`, `reset`, `retire`, moving the guard)
+/// is rejected by the borrow checker.
+pub struct Guard<'h, T: Send + Sync + 'static, R: Reclaimer> {
+    inner: GuardPtr<T, R>,
+    _handle: PhantomData<&'h LocalHandle<R>>,
+}
+
+impl<'h, T: Send + Sync + 'static, R: Reclaimer> Guard<'h, T, R> {
+    /// An empty shield attached to `handle` (alias:
+    /// [`LocalHandle::guard`]).
+    pub fn new(handle: &'h LocalHandle<R>) -> Self {
+        Self { inner: GuardPtr::new_in(handle), _handle: PhantomData }
+    }
+
+    /// Atomically snapshot `src` and protect the target (paper:
+    /// `guard_ptr::acquire`). Returns the protected node, or `None` when
+    /// the link was null (mark bits of a null snapshot carry no node).
+    /// Any previous protection is dropped first.
+    #[inline]
+    pub fn protect(&mut self, src: &Atomic<T, R>) -> Option<Shared<'_, T, R>> {
+        let p = self.inner.acquire(src.raw());
+        (!p.is_null()).then_some(Shared { ptr: p, _guard: PhantomData })
+    }
+
+    /// Protect only if `src` still holds `expected` (paper:
+    /// `guard_ptr::acquire_if_equal`; never loops unboundedly — wait-free
+    /// for HPR). On `Ok` the guard protects `expected` (empty if
+    /// `expected` was null) — read it back with [`Self::shared`]. On
+    /// [`Stale`] the guard is left empty and the caller restarts.
+    #[inline]
+    pub fn try_protect(
+        &mut self,
+        src: &Atomic<T, R>,
+        expected: MarkedPtr<T, R>,
+    ) -> Result<(), Stale> {
+        if self.inner.acquire_if_equal(src.raw(), expected) {
+            Ok(())
+        } else {
+            Err(Stale)
+        }
+    }
+
+    /// The currently protected node, if any — a re-borrow that keeps the
+    /// guard frozen (immutably) while the `Shared` is alive.
+    #[inline]
+    pub fn shared(&self) -> Option<Shared<'_, T, R>> {
+        let p = self.inner.get();
+        (!p.is_null()).then_some(Shared { ptr: p, _guard: PhantomData })
+    }
+
+    /// Raw snapshot of the guarded value (null when empty; mark bits
+    /// preserved from acquire time). Plain data, not dereferenceable.
+    #[inline]
+    pub fn marked(&self) -> MarkedPtr<T, R> {
+        self.inner.get()
+    }
+
+    /// Is the shield currently empty?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_null()
+    }
+
+    /// Drop the current protection; the shield stays usable (paper:
+    /// `guard_ptr::reset`).
+    #[inline]
+    pub fn reset(&mut self) {
+        self.inner.reset()
+    }
+
+    /// Retire the protected node into the handle's domain and reset the
+    /// shield (paper: `guard_ptr::reclaim`). This — together with
+    /// [`LocalHandle::retire`] — is the facade's *only* unsafe surface.
+    ///
+    /// # Safety
+    /// The protected node must be **unlinked** (no new reference can be
+    /// created from any [`Atomic`] of the structure), and across all
+    /// threads exactly one call site retires it (typically: the winner of
+    /// the unlinking CAS). The node's readers must be protected through
+    /// the same domain this guard's handle is registered with.
+    pub unsafe fn retire(&mut self) {
+        self.inner.reclaim()
+    }
+}
+
+/// `try_protect` lost the race: the link no longer holds the expected
+/// value. Restart the traversal.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Stale;
+
+/// A non-null, mark-carrying pointer to a node that is **protected** for
+/// the lifetime `'g` — the borrow of the [`Guard`] (or [`Owned`]-free
+/// exclusive context) that produced it. Because every protection-dropping
+/// guard operation needs `&mut Guard`, no `Shared` can witness its node
+/// unprotected: dereferencing is safe.
+pub struct Shared<'g, T: Send + Sync + 'static, R: Reclaimer> {
+    ptr: MarkedPtr<T, R>,
+    _guard: PhantomData<&'g ()>,
+}
+
+// Manual impls: `derive` would bound `T: Copy`/`T: Clone`.
+impl<T: Send + Sync + 'static, R: Reclaimer> Copy for Shared<'_, T, R> {}
+impl<T: Send + Sync + 'static, R: Reclaimer> Clone for Shared<'_, T, R> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<'g, T: Send + Sync + 'static, R: Reclaimer> Shared<'g, T, R> {
+    /// Borrow the node's payload for the whole protected lifetime `'g`.
+    #[inline]
+    pub fn get(self) -> &'g T {
+        // SAFETY: the `'g` brand ties this reference to a live borrow of
+        // the guard that protects the node; protection cannot be dropped
+        // (all dropping operations take `&mut Guard`) while 'g is alive.
+        unsafe { self.ptr.deref_data() }
+    }
+
+    /// The (pointer, mark) value — plain data for CAS arguments.
+    #[inline]
+    pub fn as_marked(self) -> MarkedPtr<T, R> {
+        self.ptr
+    }
+
+    /// The acquire-time mark bits (bit 0 = Harris delete mark).
+    #[inline]
+    pub fn mark(self) -> usize {
+        self.ptr.mark()
+    }
+
+    /// Does this point at the same node as `other` (marks ignored)?
+    #[inline]
+    pub fn ptr_eq(self, other: MarkedPtr<T, R>) -> bool {
+        self.ptr.get() == other.get()
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> std::ops::Deref for Shared<'_, T, R> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        (*self).get()
+    }
+}
+
+impl<T: Send + Sync + 'static, R: Reclaimer> std::fmt::Debug for Shared<'_, T, R> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Shared({:?})", self.ptr)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HandleSource
+// ---------------------------------------------------------------------------
+
+/// How a data-structure operation obtains the per-thread [`LocalHandle`]
+/// it runs under — the single generic entry point that replaces the old
+/// `op()` / `op_with(handle)` method pairs.
+///
+/// Two sources exist:
+/// * [`Cached`] — resolve the calling thread's cached handle for the
+///   structure's domain (one TLS lookup; the quickstart path);
+/// * `&LocalHandle<R>` — a handle the caller registered explicitly
+///   (TLS-free; the hot-loop path). Debug builds assert it belongs to the
+///   structure's domain.
+pub trait HandleSource<R: Reclaimer>: Copy {
+    /// Run `f` with a handle registered to `domain`.
+    fn with_source<O>(self, domain: &DomainRef<R>, f: impl FnOnce(&LocalHandle<R>) -> O) -> O;
+}
+
+/// Resolve the calling thread's cached handle for the structure's domain
+/// (registering on first use): `queue.enqueue(Cached, v)`.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct Cached;
+
+impl<R: Reclaimer> HandleSource<R> for Cached {
+    #[inline]
+    fn with_source<O>(self, domain: &DomainRef<R>, f: impl FnOnce(&LocalHandle<R>) -> O) -> O {
+        domain.with_handle(f)
+    }
+}
+
+impl<R: Reclaimer> HandleSource<R> for &LocalHandle<R> {
+    #[inline]
+    fn with_source<O>(self, domain: &DomainRef<R>, f: impl FnOnce(&LocalHandle<R>) -> O) -> O {
+        debug_assert!(
+            std::ptr::eq(self.domain(), domain.domain()),
+            "handle registered with a different domain than the structure's"
+        );
+        f(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::ebr::Ebr;
+    use crate::reclaim::leaky::Leaky;
+
+    #[test]
+    fn owned_drop_frees_unpublished_nodes() {
+        let before = crate::alloc::snapshot();
+        {
+            let o: Owned<u64, Leaky> = Owned::new(17);
+            assert_eq!(*o, 17);
+        }
+        let after = crate::alloc::snapshot();
+        assert!(after.reclaimed >= before.reclaimed + 1, "Owned drop must free");
+    }
+
+    #[test]
+    fn protect_brands_and_derefs() {
+        let domain = DomainRef::<Ebr>::new_owned();
+        let h = domain.register();
+        let cell: Atomic<u64, Ebr> = Atomic::new(Owned::new(99));
+        let mut g: Guard<u64, Ebr> = h.guard();
+        assert!(g.is_empty());
+        {
+            let s = g.protect(&cell).expect("non-null");
+            assert_eq!(*s.get(), 99);
+            assert_eq!(*s, 99); // Deref
+            assert_eq!(s.mark(), 0);
+            assert!(s.ptr_eq(cell.load(Ordering::Relaxed)));
+        }
+        assert!(!g.is_empty());
+        g.reset();
+        assert!(g.is_empty());
+        // Drain: unlink + retire so the owned domain shuts down clean.
+        let last = cell.load(Ordering::Relaxed);
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        // SAFETY: unlinked above; sole retirer; readers (none) in-domain.
+        unsafe { h.retire(last.get()) };
+    }
+
+    #[test]
+    fn try_protect_reports_stale_links() {
+        let domain = DomainRef::<Ebr>::new_owned();
+        let h = domain.register();
+        let cell: Atomic<u64, Ebr> = Atomic::new(Owned::new(5));
+        let actual = cell.load(Ordering::Relaxed);
+        let mut g: Guard<u64, Ebr> = h.guard();
+        assert_eq!(g.try_protect(&cell, MarkedPtr::null()), Err(Stale));
+        assert!(g.is_empty(), "failed try_protect leaves the shield empty");
+        assert_eq!(g.try_protect(&cell, actual), Ok(()));
+        assert_eq!(g.shared().map(|s| *s.get()), Some(5));
+        g.reset();
+        let last = cell.load(Ordering::Relaxed);
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        // SAFETY: unlinked above; sole retirer.
+        unsafe { h.retire(last.get()) };
+    }
+
+    #[test]
+    fn cas_publish_returns_owned_on_failure() {
+        let domain = DomainRef::<Ebr>::new_owned();
+        let h = domain.register();
+        let cell: Atomic<u64, Ebr> = Atomic::new(Owned::new(1));
+        let occupant = cell.load(Ordering::Relaxed);
+        // Expected null but the cell is occupied: node comes back.
+        let fresh = Owned::new(2);
+        let (witness, fresh) = cell
+            .cas_publish(MarkedPtr::null(), fresh, Ordering::AcqRel, Ordering::Acquire)
+            .expect_err("cell was occupied");
+        assert_eq!(witness, occupant);
+        assert_eq!(*fresh, 2);
+        // Correct expected value: publishes, ownership moves.
+        let published = cell
+            .cas_publish(occupant, fresh, Ordering::AcqRel, Ordering::Acquire)
+            .expect("uncontended");
+        assert_eq!(cell.load(Ordering::Relaxed), published);
+        // SAFETY: `occupant` was unlinked by the successful CAS just
+        // above; sole retirer.
+        unsafe { h.retire(occupant.get()) };
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        // SAFETY: unlinked above; sole retirer.
+        unsafe { h.retire(published.get()) };
+    }
+
+    #[test]
+    fn handle_source_routes_both_paths() {
+        fn resolves_in<R: Reclaimer, H: HandleSource<R>>(h: H, domain: &DomainRef<R>) -> bool {
+            h.with_source(domain, |inner| std::ptr::eq(inner.domain(), domain.domain()))
+        }
+        let domain = DomainRef::<Ebr>::new_owned();
+        let h = domain.register();
+        // Explicit handle: hands back the borrow we gave it, same domain.
+        assert!(resolves_in(&h, &domain));
+        // Cached: resolves some handle registered to the same domain.
+        assert!(resolves_in(Cached, &domain));
+    }
+}

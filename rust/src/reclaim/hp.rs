@@ -457,30 +457,30 @@ mod tests {
 
     #[test]
     fn dynamic_slots_grow_on_demand() {
-        use crate::reclaim::{alloc_node, GuardPtr};
+        use crate::reclaim::{Atomic, Guard, Owned};
         // Own domain: the slot count assertion is exact, not raced by
         // sibling tests.
         let domain = DomainRef::<Hp>::new_owned();
         let h = domain.register();
         // Hold more guards than K_STATIC simultaneously: slots must grow.
         let drops = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
-        let nodes: Vec<_> = (0..K_STATIC * 2)
-            .map(|i| alloc_node::<Payload, Hp>(Payload::new(i as u64, &drops)))
+        let cells: Vec<Atomic<Payload, Hp>> = (0..K_STATIC * 2)
+            .map(|i| Atomic::new(Owned::new(Payload::new(i as u64, &drops))))
             .collect();
-        let cells: Vec<ConcurrentPtr<Payload, Hp>> =
-            nodes.iter().map(|&n| ConcurrentPtr::new(MarkedPtr::new(n, 0))).collect();
-        let mut guards: Vec<GuardPtr<Payload, Hp>> = Vec::new();
+        let nodes: Vec<MarkedPtr<Payload, Hp>> =
+            cells.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let mut guards: Vec<Guard<'_, Payload, Hp>> = Vec::new();
         for c in &cells {
             let mut g = h.guard();
-            g.acquire(c);
-            assert!(!g.is_null());
+            assert!(g.protect(c).is_some());
             guards.push(g);
         }
         assert!(domain.domain().state().total_slots() >= (K_STATIC * 2) as u64);
         // All still guarded: retiring must not drop any.
         for (c, &n) in cells.iter().zip(&nodes) {
             c.store(MarkedPtr::null(), Ordering::Release);
-            unsafe { h.retire(n) };
+            // SAFETY: unlinked above; retired exactly once, in-domain.
+            unsafe { h.retire(n.get()) };
         }
         h.flush();
         assert_eq!(drops.load(Ordering::Relaxed), 0);

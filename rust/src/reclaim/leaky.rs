@@ -93,45 +93,51 @@ unsafe impl Reclaimer for Leaky {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::reclaim::{alloc_node, DomainRef, GuardPtr};
+    use crate::reclaim::{Atomic, DomainRef, Guard, Owned, Stale};
 
     #[test]
     fn guard_roundtrip() {
         let h = DomainRef::<Leaky>::new_owned().register();
-        let node = alloc_node::<u64, Leaky>(42);
-        let c = ConcurrentPtr::new(MarkedPtr::new(node, 0));
-        let mut g: GuardPtr<u64, Leaky> = h.guard();
-        let p = g.acquire(&c);
-        assert_eq!(p.get(), node);
-        assert_eq!(g.as_ref(), Some(&42));
+        let c: Atomic<u64, Leaky> = Atomic::new(Owned::new(42));
+        let node = c.load(Ordering::Relaxed);
+        let mut g: Guard<u64, Leaky> = h.guard();
+        let p = g.protect(&c).expect("non-null");
+        assert!(p.ptr_eq(node));
+        assert_eq!(*p, 42);
         g.reset();
-        assert!(g.is_null());
-        assert_eq!(g.as_ref(), None);
-        unsafe { crate::reclaim::free_node(node) };
+        assert!(g.is_empty());
+        assert!(g.shared().is_none());
+        // Leaky never reclaims; free the node directly (it is private
+        // again: no guard holds it and the cell is test-local).
+        unsafe { crate::reclaim::free_node(node.get()) };
     }
 
     #[test]
-    fn acquire_if_equal_checks_value() {
+    fn try_protect_checks_value() {
         let h = DomainRef::<Leaky>::new_owned().register();
-        let node = alloc_node::<u64, Leaky>(1);
-        let c = ConcurrentPtr::new(MarkedPtr::new(node, 0));
-        let mut g: GuardPtr<u64, Leaky> = h.guard();
-        assert!(g.acquire_if_equal(&c, MarkedPtr::new(node, 0)));
-        assert!(!g.acquire_if_equal(&c, MarkedPtr::null()));
-        assert!(g.is_null(), "failed acquire leaves the guard empty");
-        unsafe { crate::reclaim::free_node(node) };
+        let c: Atomic<u64, Leaky> = Atomic::new(Owned::new(1));
+        let node = c.load(Ordering::Relaxed);
+        let mut g: Guard<u64, Leaky> = h.guard();
+        assert_eq!(g.try_protect(&c, node), Ok(()));
+        assert_eq!(g.try_protect(&c, MarkedPtr::null()), Err(Stale));
+        assert!(g.is_empty(), "failed try_protect leaves the shield empty");
+        unsafe { crate::reclaim::free_node(node.get()) };
     }
 
     #[test]
-    fn take_moves_ownership() {
+    fn swap_moves_protection_between_shields() {
+        // `save = std::move(cur)` from the paper's Listing 1, spelled as a
+        // plain mem::swap of facade shields.
         let h = DomainRef::<Leaky>::new_owned().register();
-        let node = alloc_node::<u64, Leaky>(9);
-        let c = ConcurrentPtr::new(MarkedPtr::new(node, 0));
-        let mut g: GuardPtr<u64, Leaky> = h.guard();
-        g.acquire(&c);
-        let t = g.take();
-        assert!(g.is_null());
-        assert_eq!(t.as_ref(), Some(&9));
-        unsafe { crate::reclaim::free_node(node) };
+        let c: Atomic<u64, Leaky> = Atomic::new(Owned::new(9));
+        let node = c.load(Ordering::Relaxed);
+        let mut cur: Guard<u64, Leaky> = h.guard();
+        let mut save: Guard<u64, Leaky> = h.guard();
+        cur.protect(&c);
+        std::mem::swap(&mut save, &mut cur);
+        cur.reset();
+        assert!(cur.is_empty());
+        assert_eq!(save.shared().map(|s| *s.get()), Some(9));
+        unsafe { crate::reclaim::free_node(node.get()) };
     }
 }

@@ -238,7 +238,7 @@ unsafe impl Reclaimer for Lfrc {
 mod tests {
     use super::*;
     use crate::reclaim::tests_common::*;
-    use crate::reclaim::{alloc_node, DomainRef, GuardPtr};
+    use crate::reclaim::{Atomic, DomainRef, Guard, Owned, Stale};
     use std::sync::atomic::AtomicUsize;
     use std::sync::Arc;
 
@@ -246,9 +246,8 @@ mod tests {
     fn basic_reclamation_is_immediate() {
         let h = DomainRef::<Lfrc>::new_owned().register();
         let drops = Arc::new(AtomicUsize::new(0));
-        let node = alloc_node::<Payload, Lfrc>(Payload::new(1, &drops));
         // No guards: retire frees immediately — the "no delay" property.
-        unsafe { h.retire(node) };
+        h.retire_owned(Owned::new(Payload::new(1, &drops)));
         assert_eq!(drops.load(Ordering::Relaxed), 1);
     }
 
@@ -268,37 +267,38 @@ mod tests {
     }
 
     #[test]
-    fn acquire_fails_on_retired_slot() {
+    fn try_protect_fails_on_retired_slot() {
         let h = DomainRef::<Lfrc>::new_owned().register();
         let drops = Arc::new(AtomicUsize::new(0));
-        let node = alloc_node::<Payload, Lfrc>(Payload::new(2, &drops));
-        let cell: ConcurrentPtr<Payload, Lfrc> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+        let cell: Atomic<Payload, Lfrc> = Atomic::new(Owned::new(Payload::new(2, &drops)));
         let stale = cell.load(Ordering::Acquire);
         cell.store(MarkedPtr::null(), Ordering::Release);
-        unsafe { h.retire(node) };
+        // SAFETY: unlinked above; retired exactly once, in-domain.
+        unsafe { h.retire(stale.get()) };
         assert_eq!(drops.load(Ordering::Relaxed), 1);
-        // A stale acquire_if_equal against the retired slot must fail
-        // cleanly (the slot word is RETIRED in the pool free-list).
-        let mut g: GuardPtr<Payload, Lfrc> = h.guard();
-        assert!(!g.acquire_if_equal(&cell, stale));
-        assert!(g.is_null());
+        // A stale try_protect against the retired slot must fail cleanly
+        // (the slot word is RETIRED in the pool free-list).
+        let mut g: Guard<Payload, Lfrc> = h.guard();
+        assert_eq!(g.try_protect(&cell, stale), Err(Stale));
+        assert!(g.is_empty());
     }
 
     #[test]
     fn many_guards_one_node() {
         let h = DomainRef::<Lfrc>::new_owned().register();
         let drops = Arc::new(AtomicUsize::new(0));
-        let node = alloc_node::<Payload, Lfrc>(Payload::new(3, &drops));
-        let cell: ConcurrentPtr<Payload, Lfrc> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
-        let mut guards: Vec<GuardPtr<Payload, Lfrc>> = (0..32)
+        let cell: Atomic<Payload, Lfrc> = Atomic::new(Owned::new(Payload::new(3, &drops)));
+        let node = cell.load(Ordering::Acquire);
+        let mut guards: Vec<Guard<'_, Payload, Lfrc>> = (0..32)
             .map(|_| {
                 let mut g = h.guard();
-                g.acquire(&cell);
+                assert!(g.protect(&cell).is_some());
                 g
             })
             .collect();
         cell.store(MarkedPtr::null(), Ordering::Release);
-        unsafe { h.retire(node) };
+        // SAFETY: unlinked above; retired exactly once, in-domain.
+        unsafe { h.retire(node.get()) };
         // Drop guards one by one; only the very last drop frees.
         while guards.len() > 1 {
             drop(guards.pop());

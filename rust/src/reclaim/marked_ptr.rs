@@ -14,9 +14,11 @@ pub const MARK_BITS: u32 = 2;
 const MARK_MASK: usize = (1 << MARK_BITS) - 1;
 
 /// A (possibly marked) pointer to a `Node<T, R>`. Plain value type — copies
-/// freely, conveys no protection by itself (that is [`GuardPtr`]'s job).
+/// freely, conveys no protection by itself (that is the job of the facade
+/// [`Guard`]/[`Shared`] pair).
 ///
-/// [`GuardPtr`]: super::GuardPtr
+/// [`Guard`]: super::facade::Guard
+/// [`Shared`]: super::facade::Shared
 pub struct MarkedPtr<T, R: Reclaimer> {
     raw: usize,
     _phantom: PhantomData<*mut Node<T, R>>,

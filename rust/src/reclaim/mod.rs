@@ -1,10 +1,17 @@
 //! Safe memory reclamation (SMR) for lock-free data structures.
 //!
-//! This module is the Rust rendering of the C++ interface the paper builds
-//! on (Robison's N3712 proposal, paper §2): [`MarkedPtr`] (`marked_ptr`),
-//! [`ConcurrentPtr`] (`concurrent_ptr`), [`GuardPtr`] (`guard_ptr`) and
-//! [`Region`] (`region_guard`), generic over a [`Reclaimer`] — organized as
-//! instance-based **reclamation domains** (see [`domain`]):
+//! The module is layered (DESIGN.md §2):
+//!
+//! 1. The **facade** ([`facade`]): [`Atomic`], [`Guard`], [`Shared`],
+//!    [`Owned`] and [`HandleSource`] — the lifetime-branded, safe surface
+//!    data structures are written against. `unsafe` at ds level narrows to
+//!    the unlink-then-retire sites.
+//! 2. The raw rendering of the C++ interface the paper builds on
+//!    (Robison's N3712 proposal, paper §2): [`MarkedPtr`] (`marked_ptr`),
+//!    [`ConcurrentPtr`] (`concurrent_ptr`), the crate-internal `GuardPtr`
+//!    (`guard_ptr`) and [`Region`] (`region_guard`), generic over a
+//!    [`Reclaimer`].
+//! 3. Instance-based **reclamation domains** (see [`domain`]):
 //!
 //! * [`Domain<R>`] owns one instance of a scheme's shared state (what used
 //!   to be process-global statics); [`Domain::global()`] is the default.
@@ -38,6 +45,7 @@ pub mod debra;
 pub mod domain;
 pub mod ebr;
 pub mod epoch_core;
+pub mod facade;
 pub mod hp;
 pub mod leaky;
 pub mod lfrc;
@@ -52,6 +60,7 @@ pub mod tests_common;
 
 pub use concurrent_ptr::ConcurrentPtr;
 pub use domain::{Domain, DomainRef, LocalCell, LocalHandle, Region};
+pub use facade::{Atomic, Cached, Guard, HandleSource, Owned, Shared, Stale};
 pub use marked_ptr::MarkedPtr;
 pub use retire::AsRetireHeader;
 
@@ -93,8 +102,11 @@ impl<T, R: Reclaimer> Node<T, R> {
 /// protect its readers.
 pub fn alloc_node<T: Send + Sync + 'static, R: Reclaimer>(data: T) -> *mut Node<T, R> {
     let layout = Layout::new::<Node<T, R>>();
-    let pooled = crate::alloc::currently_pooled(R::FORCE_POOL);
-    let raw = crate::alloc::alloc_raw(layout, R::FORCE_POOL) as *mut Node<T, R>;
+    // The node is tagged with the provenance `alloc_raw` *actually used*
+    // (single policy sample) — re-sampling the policy here would race with
+    // a concurrent ablation-knob toggle and mis-route the eventual free.
+    let (raw, pooled) = crate::alloc::alloc_raw(layout, R::FORCE_POOL);
+    let raw = raw as *mut Node<T, R>;
     // SAFETY: fresh allocation of the right layout.
     unsafe {
         raw.write(Node { header: R::Header::default(), data: ManuallyDrop::new(data) });
@@ -270,12 +282,13 @@ pub unsafe trait Reclaimer: Sized + Send + Sync + 'static {
 /// `guard_ptr` (paper §2): shared ownership of one node. While a non-null
 /// `GuardPtr` holds a node, the node will not be reclaimed.
 ///
-/// Guards are created from a [`LocalHandle`] ([`LocalHandle::guard`]) and
-/// stay attached to it: acquire/release resolve the thread's cached
-/// registry entry through the handle — no TLS lookup per operation (the
-/// seed paid one per guard transition). Guards are single-threaded, like
-/// the handle they came from.
-pub struct GuardPtr<T: Send + Sync + 'static, R: Reclaimer> {
+/// Crate-internal since the facade redesign: user code holds the
+/// lifetime-branded [`facade::Guard`] instead, which wraps a `GuardPtr`
+/// and mediates access through [`facade::Shared`]. Guards stay attached
+/// to the [`LocalHandle`] that created them: acquire/release resolve the
+/// thread's cached registry entry through the handle — no TLS lookup per
+/// operation. Guards are single-threaded, like the handle they came from.
+pub(crate) struct GuardPtr<T: Send + Sync + 'static, R: Reclaimer> {
     ptr: MarkedPtr<T, R>,
     state: R::GuardState,
     handle: LocalHandle<R>,
@@ -289,7 +302,7 @@ impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
 
     /// Atomically snapshot `src` and protect the target (paper: `acquire`).
     /// Returns the protected value (also kept in the guard).
-    pub fn acquire(&mut self, src: &ConcurrentPtr<T, R>) -> MarkedPtr<T, R> {
+    pub(crate) fn acquire(&mut self, src: &ConcurrentPtr<T, R>) -> MarkedPtr<T, R> {
         self.reset();
         self.ptr =
             R::protect(self.handle.domain_state(), self.handle.local(), &mut self.state, src);
@@ -298,7 +311,7 @@ impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
 
     /// Protect only if `src` still equals `expected`; returns whether the
     /// snapshot succeeded (paper: `acquire_if_equal`).
-    pub fn acquire_if_equal(
+    pub(crate) fn acquire_if_equal(
         &mut self,
         src: &ConcurrentPtr<T, R>,
         expected: MarkedPtr<T, R>,
@@ -321,40 +334,21 @@ impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
     /// The guarded value (null if empty). Mark bits are preserved from the
     /// acquire-time snapshot.
     #[inline]
-    pub fn get(&self) -> MarkedPtr<T, R> {
+    pub(crate) fn get(&self) -> MarkedPtr<T, R> {
         self.ptr
     }
 
     /// Is the guard empty?
     #[inline]
-    pub fn is_null(&self) -> bool {
+    pub(crate) fn is_null(&self) -> bool {
         self.ptr.is_null()
     }
 
-    /// Borrow the protected payload.
-    #[inline]
-    pub fn as_ref(&self) -> Option<&T> {
-        // SAFETY: the guard protects the node from reclamation, and a
-        // non-null guarded pointer always came from a successful protect.
-        (!self.ptr.is_null()).then(|| unsafe { self.ptr.deref_data() })
-    }
-
     /// Release ownership; the guard becomes empty (paper: `reset`).
-    pub fn reset(&mut self) {
+    pub(crate) fn reset(&mut self) {
         if !self.ptr.is_null() {
             R::release(self.handle.domain_state(), self.handle.local(), &mut self.state, self.ptr);
             self.ptr = MarkedPtr::null();
-        }
-    }
-
-    /// Move the guarded pointer out of `self` into a fresh guard
-    /// (`save = std::move(cur)` in the paper's Listing 1). The protection
-    /// (hazard slot / region token) travels with it; `self` becomes empty.
-    pub fn take(&mut self) -> GuardPtr<T, R> {
-        GuardPtr {
-            ptr: std::mem::replace(&mut self.ptr, MarkedPtr::null()),
-            state: std::mem::take(&mut self.state),
-            handle: self.handle.clone(),
         }
     }
 
@@ -365,7 +359,7 @@ impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
     /// The node must be unlinked from its data structure: no new references
     /// can be created from any `ConcurrentPtr`, and `retire` is called at
     /// most once for the node across all threads.
-    pub unsafe fn reclaim(&mut self) {
+    pub(crate) unsafe fn reclaim(&mut self) {
         debug_assert!(!self.ptr.is_null());
         let node = self.ptr.get();
         self.reset();

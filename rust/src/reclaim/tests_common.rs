@@ -6,10 +6,15 @@
 //! tests never share retire lists, epochs, stamps or hazard registries, so
 //! they neither race each other's reclamation decisions nor need a
 //! serialization lock (the cross-talk the global-singleton design forced).
+//!
+//! Since the facade redesign the exercises are written against the safe
+//! surface ([`Atomic`] / [`Guard`] / [`Shared`](super::Shared) /
+//! [`Owned`]): the only remaining `unsafe` is the raw
+//! [`LocalHandle::retire`] at unlink sites — the same boundary the data
+//! structures keep.
 
-use super::{
-    alloc_node, ConcurrentPtr, DomainRef, GuardPtr, LocalHandle, MarkedPtr, Reclaimer, Region,
-};
+use super::facade::{Atomic, Guard, Owned};
+use super::{DomainRef, LocalHandle, MarkedPtr, Reclaimer, Region};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
@@ -23,7 +28,7 @@ pub fn serial_lock() -> MutexGuard<'static, ()> {
 /// Poll `done` with flushes until it returns true or ~2 s elapse.
 ///
 /// Flushes both `h` and the calling thread's *cached* handle for the same
-/// domain: nodes retired through the TLS convenience path sit in the cached
+/// domain: nodes retired through the cached-handle path sit in the cached
 /// handle's local retire list, which `h` alone cannot drain.
 pub fn flush_until<R: Reclaimer>(h: &LocalHandle<R>, mut done: impl FnMut() -> bool) -> bool {
     let domain = h.domain_ref();
@@ -72,17 +77,15 @@ impl Drop for Payload {
     }
 }
 
-/// Retire a batch of nodes with no guards around; after flushing, all of
-/// them must have been dropped exactly once.
+/// Retire a batch of unpublished nodes (safe: [`LocalHandle::retire_owned`]);
+/// after flushing, all of them must have been dropped exactly once.
 pub fn exercise_basic_reclamation<R: Reclaimer>() {
     let domain = DomainRef::<R>::new_owned();
     let h = domain.register();
     let drops = Arc::new(AtomicUsize::new(0));
     const N: usize = 64;
     for i in 0..N {
-        let node = alloc_node::<Payload, R>(Payload::new(i as u64, &drops));
-        // SAFETY: never published, so trivially unlinked; retired once.
-        unsafe { h.retire(node) };
+        h.retire_owned(Owned::<Payload, R>::new(Payload::new(i as u64, &drops)));
     }
     // Flush until everything is reclaimed (epoch schemes need a few
     // advances; guard-free, so progress is guaranteed).
@@ -96,23 +99,23 @@ pub fn exercise_guard_blocks_reclamation<R: Reclaimer>() {
     let domain = DomainRef::<R>::new_owned();
     let h = domain.register();
     let drops = Arc::new(AtomicUsize::new(0));
-    let node = alloc_node::<Payload, R>(Payload::new(7, &drops));
-    let cell: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+    let cell: Atomic<Payload, R> = Atomic::new(Owned::new(Payload::new(7, &drops)));
+    let node = cell.load(Ordering::Relaxed);
 
-    let mut guard: GuardPtr<Payload, R> = h.guard();
-    let p = guard.acquire(&cell);
-    assert_eq!(p.get(), node);
+    let mut guard: Guard<Payload, R> = h.guard();
+    assert!(guard.protect(&cell).expect("non-null").ptr_eq(node));
 
     // Unlink, then retire while still guarded.
     cell.store(MarkedPtr::null(), Ordering::Release);
-    // SAFETY: unlinked above; retired exactly once.
-    unsafe { h.retire(node) };
+    // SAFETY: unlinked above; retired exactly once, into the domain whose
+    // guard protects it.
+    unsafe { h.retire(node.get()) };
 
     // The reclaimer may try as hard as it wants — the guard must hold.
     // (Retirer == guard holder, the strictest single-thread case.)
     h.flush();
     assert_eq!(drops.load(Ordering::Relaxed), 0, "{}: reclaimed under a live guard", R::NAME);
-    assert_eq!(guard.as_ref().unwrap().read(), 7);
+    assert_eq!(guard.shared().expect("still guarded").read(), 7);
 
     drop(guard);
     flush_until(&h, || drops.load(Ordering::Relaxed) == 1);
@@ -125,22 +128,70 @@ pub fn exercise_region_guard<R: Reclaimer>() {
     let domain = DomainRef::<R>::new_owned();
     let h = domain.register();
     let drops = Arc::new(AtomicUsize::new(0));
-    let node = alloc_node::<Payload, R>(Payload::new(3, &drops));
-    let cell: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
+    let cell: Atomic<Payload, R> = Atomic::new(Owned::new(Payload::new(3, &drops)));
+    let node = cell.load(Ordering::Relaxed);
     {
         let _region: Region<R> = Region::enter(&h);
-        let mut g: GuardPtr<Payload, R> = h.guard();
+        let mut g: Guard<Payload, R> = h.guard();
         for _ in 0..100 {
-            g.acquire(&cell);
-            assert_eq!(g.as_ref().unwrap().read(), 3);
+            assert_eq!(g.protect(&cell).expect("non-null").read(), 3);
             g.reset();
         }
         cell.store(MarkedPtr::null(), Ordering::Release);
-        // SAFETY: unlinked; retired once.
-        unsafe { h.retire(node) };
+        // SAFETY: unlinked above; retired once, in-domain.
+        unsafe { h.retire(node.get()) };
     }
     flush_until(&h, || drops.load(Ordering::Relaxed) == 1);
     assert_eq!(drops.load(Ordering::Relaxed), 1, "{}: leak after region end", R::NAME);
+}
+
+/// The facade roundtrip every scheme must support: `Owned` disposal,
+/// publish via CAS, branded `Shared` reads, retire-through-guard, and the
+/// safe `retire_owned` path. (Leaky runs the structural half only — it
+/// never reclaims; see the leaky matrix module.)
+pub fn exercise_facade<R: Reclaimer>() {
+    let domain = DomainRef::<R>::new_owned();
+    let h = domain.register();
+    let drops = Arc::new(AtomicUsize::new(0));
+
+    // 1. Dropping an unpublished Owned frees it immediately.
+    drop(Owned::<Payload, R>::new(Payload::new(1, &drops)));
+    assert_eq!(drops.load(Ordering::Relaxed), 1, "{}: Owned drop must free", R::NAME);
+
+    // 2. Publish → protect → read through the branded Shared.
+    let cell: Atomic<Payload, R> = Atomic::new(Owned::new(Payload::new(2, &drops)));
+    let mut g: Guard<Payload, R> = h.guard();
+    let old = {
+        let s = g.protect(&cell).expect("non-null");
+        assert_eq!(s.read(), 2);
+        assert_eq!(s.mark(), 0);
+        s.as_marked()
+    };
+
+    // 3. Swap in a replacement; the loser is retired through the guard.
+    let replacement = Owned::new(Payload::new(3, &drops));
+    assert!(cell.cas_publish(old, replacement, Ordering::AcqRel, Ordering::Acquire).is_ok());
+    // SAFETY: the CAS above unlinked the node `g` protects; we are the
+    // sole retirer, and its readers are protected through this domain.
+    unsafe { g.retire() };
+    // Region-based schemes hold their critical region until the shield
+    // drops — release it so the retired node becomes reclaimable.
+    drop(g);
+    flush_until(&h, || drops.load(Ordering::Relaxed) == 2);
+    assert_eq!(drops.load(Ordering::Relaxed), 2, "{}: guard-retire leak", R::NAME);
+
+    // 4. retire_owned: the safe retire path for unpublished nodes.
+    h.retire_owned(Owned::<Payload, R>::new(Payload::new(4, &drops)));
+    flush_until(&h, || drops.load(Ordering::Relaxed) == 3);
+    assert_eq!(drops.load(Ordering::Relaxed), 3, "{}: retire_owned leak", R::NAME);
+
+    // 5. Drain the cell so the owned domain shuts down clean.
+    let last = cell.load(Ordering::Acquire);
+    cell.store(MarkedPtr::null(), Ordering::Release);
+    // SAFETY: unlinked above; sole retirer; no shield protects it.
+    unsafe { h.retire(last.get()) };
+    flush_until(&h, || drops.load(Ordering::Relaxed) == 4);
+    assert_eq!(drops.load(Ordering::Relaxed), 4, "{}: final drain leak", R::NAME);
 }
 
 /// Multi-threaded swap storm over one shared cell: all nodes funneled
@@ -151,7 +202,7 @@ pub fn exercise_concurrent_smoke<R: Reclaimer>(threads: usize, iters: usize) {
     let domain = DomainRef::<R>::new_owned();
     let drops = Arc::new(AtomicUsize::new(0));
     let allocated = Arc::new(AtomicUsize::new(0));
-    let cell: Arc<ConcurrentPtr<Payload, R>> = Arc::new(ConcurrentPtr::null());
+    let cell: Arc<Atomic<Payload, R>> = Arc::new(Atomic::null());
 
     let handles: Vec<_> = (0..threads)
         .map(|t| {
@@ -161,34 +212,33 @@ pub fn exercise_concurrent_smoke<R: Reclaimer>(threads: usize, iters: usize) {
             let cell = cell.clone();
             std::thread::spawn(move || {
                 let h = domain.register();
-                let mut g: GuardPtr<Payload, R> = h.guard();
+                let mut g: Guard<Payload, R> = h.guard();
                 for i in 0..iters {
                     let value = (t * iters + i) as u64;
-                    let node = alloc_node::<Payload, R>(Payload::new(value, &drops));
+                    let mut node = Owned::new(Payload::new(value, &drops));
                     allocated.fetch_add(1, Ordering::Relaxed);
                     loop {
-                        let old = g.acquire(&cell);
-                        if !old.is_null() {
-                            // Reading validates the guard: must not be
-                            // poisoned.
-                            unsafe { old.deref_data().read() };
-                        }
-                        if cell
-                            .compare_exchange(
-                                old,
-                                MarkedPtr::new(node, 0),
-                                Ordering::AcqRel,
-                                Ordering::Acquire,
-                            )
-                            .is_ok()
-                        {
-                            g.reset();
-                            if !old.is_null() {
-                                // SAFETY: we unlinked `old` with the CAS;
-                                // only the successful CASer retires it.
-                                unsafe { h.retire(old.get()) };
+                        let old = match g.protect(&cell) {
+                            Some(s) => {
+                                // Reading validates the guard: must not be
+                                // poisoned.
+                                s.read();
+                                s.as_marked()
                             }
-                            break;
+                            None => MarkedPtr::null(),
+                        };
+                        match cell.cas_publish(old, node, Ordering::AcqRel, Ordering::Acquire) {
+                            Ok(_) => {
+                                g.reset();
+                                if !old.is_null() {
+                                    // SAFETY: we unlinked `old` with the
+                                    // CAS; only the successful CASer
+                                    // retires it.
+                                    unsafe { h.retire(old.get()) };
+                                }
+                                break;
+                            }
+                            Err((_, n)) => node = n,
                         }
                         if i % 16 == 0 {
                             std::thread::yield_now();
@@ -233,22 +283,20 @@ pub fn exercise_domain_isolation<R: Reclaimer>() {
     let drops_b = Arc::new(AtomicUsize::new(0));
 
     // Domain A: guard a node, then retire it — protected by A only.
-    let node_a = alloc_node::<Payload, R>(Payload::new(0xA, &drops_a));
-    let cell_a: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node_a, 0));
-    let mut guard_a: GuardPtr<Payload, R> = ha.guard();
-    guard_a.acquire(&cell_a);
+    let cell_a: Atomic<Payload, R> = Atomic::new(Owned::new(Payload::new(0xA, &drops_a)));
+    let node_a = cell_a.load(Ordering::Relaxed);
+    let mut guard_a: Guard<Payload, R> = ha.guard();
+    assert!(guard_a.protect(&cell_a).is_some());
     cell_a.store(MarkedPtr::null(), Ordering::Release);
     // SAFETY: unlinked; retired once, into the domain whose guard holds it.
-    unsafe { ha.retire(node_a) };
+    unsafe { ha.retire(node_a.get()) };
 
     // Domain B: churn hard — lots of retires, lots of flushes. None of
     // B's activity (epoch advances, stamp cycles, hazard scans) may free
     // A's node.
     const N: usize = 128;
     for i in 0..N {
-        let node = alloc_node::<Payload, R>(Payload::new(i as u64, &drops_b));
-        // SAFETY: never published.
-        unsafe { hb.retire(node) };
+        hb.retire_owned(Owned::<Payload, R>::new(Payload::new(i as u64, &drops_b)));
         if i % 8 == 0 {
             hb.flush();
         }
@@ -261,7 +309,7 @@ pub fn exercise_domain_isolation<R: Reclaimer>() {
         "{}: domain B's reclamation defeated domain A's guard",
         R::NAME
     );
-    assert_eq!(guard_a.as_ref().unwrap().read(), 0xA);
+    assert_eq!(guard_a.shared().expect("still guarded").read(), 0xA);
 
     // Release A's guard: now A (and only A) reclaims its node.
     drop(guard_a);

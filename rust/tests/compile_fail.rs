@@ -1,0 +1,209 @@
+//! Compile-fail suite for the lifetime-branded facade: proves at the type
+//! level that `Shared<'g, T>` cannot escape the `Guard` that protects it,
+//! that a guard cannot outlive its `LocalHandle`, and that a `Shared`
+//! cannot escape the scope of its handle's domain resolution.
+//!
+//! The crate is deliberately std-only (no `trybuild`), so this is a
+//! minimal harness: each fixture is compiled with `rustc --emit=metadata`
+//! against the already-built `libemr` rlib next to the test binary, and
+//! must fail with a borrow-check/lifetime error (and must NOT fail with a
+//! resolution error, which would mean the harness is wired wrong). A
+//! positive control proves the wiring compiles valid facade code.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn rustc() -> String {
+    std::env::var("RUSTC").unwrap_or_else(|_| "rustc".into())
+}
+
+/// The deps dir the test binary was linked from (contains libemr-*.rlib).
+fn deps_dir() -> PathBuf {
+    std::env::current_exe()
+        .expect("current_exe")
+        .parent()
+        .expect("deps dir")
+        .to_path_buf()
+}
+
+/// Newest libemr rlib in the deps dir.
+fn emr_rlib() -> PathBuf {
+    let mut best: Option<(std::time::SystemTime, PathBuf)> = None;
+    let dir = deps_dir();
+    for entry in std::fs::read_dir(&dir).expect("read deps dir").flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with("libemr-") && name.ends_with(".rlib") {
+            if let Ok(mtime) = entry.metadata().and_then(|m| m.modified()) {
+                let newer = match &best {
+                    None => true,
+                    Some((t, _)) => mtime > *t,
+                };
+                if newer {
+                    best = Some((mtime, entry.path()));
+                }
+            }
+        }
+    }
+    best.map(|(_, p)| p).unwrap_or_else(|| panic!("no libemr-*.rlib in {dir:?}"))
+}
+
+/// Compile `source` as a lib crate; returns (succeeded, stderr).
+fn compile(name: &str, source: &str) -> (bool, String) {
+    let tmp = PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(&tmp).expect("tmpdir");
+    let src = tmp.join(format!("{name}.rs"));
+    std::fs::write(&src, source).expect("write fixture");
+    let out = Command::new(rustc())
+        .arg("--edition=2021")
+        .arg("--crate-type=lib")
+        .arg("--emit=metadata")
+        .arg("-o")
+        .arg(tmp.join(format!("lib{name}.rmeta")))
+        .arg("--extern")
+        .arg(format!("emr={}", emr_rlib().display()))
+        .arg("-L")
+        .arg(format!("dependency={}", deps_dir().display()))
+        .arg(&src)
+        .output()
+        .expect("spawn rustc");
+    (out.status.success(), String::from_utf8_lossy(&out.stderr).into_owned())
+}
+
+/// The fixture must fail to compile, with one of `expect_any` in stderr,
+/// and with no resolution errors (those would mean a broken harness, not
+/// a proven property).
+fn assert_compile_fail(name: &str, source: &str, expect_any: &[&str]) {
+    let (ok, stderr) = compile(name, source);
+    assert!(!ok, "{name}: expected a borrow/lifetime error, but the fixture compiled");
+    for wrong in ["E0432", "E0433", "E0463", "E0460", "E0461", "E0514"] {
+        assert!(
+            !stderr.contains(wrong),
+            "{name}: failed for the wrong reason ({wrong} — harness wiring):\n{stderr}"
+        );
+    }
+    assert!(
+        expect_any.iter().any(|pat| stderr.contains(pat)),
+        "{name}: expected one of {expect_any:?} in rustc stderr:\n{stderr}"
+    );
+}
+
+const PRELUDE: &str = "use emr::reclaim::{ebr::Ebr, Atomic, Guard, LocalHandle};\n";
+
+#[test]
+fn positive_control_compiles() {
+    let src = format!(
+        "{PRELUDE}
+use emr::reclaim::MarkedPtr;
+
+pub fn reuse_shield(h: &LocalHandle<Ebr>, cell: &Atomic<u64, Ebr>) -> Option<u64> {{
+    let mut g: Guard<u64, Ebr> = Guard::new(h);
+    let v = g.protect(cell).map(|s| *s.get());
+    g.reset(); // fine: the Shared above is already dead
+    let mut walk: Guard<u64, Ebr> = Guard::new(h);
+    std::mem::swap(&mut g, &mut walk); // shields move freely when unborrowed
+    let _ = walk.try_protect(cell, MarkedPtr::null());
+    v
+}}
+"
+    );
+    let (ok, stderr) = compile("cf_positive_control", &src);
+    assert!(ok, "positive control must compile (harness wiring broken?):\n{stderr}");
+}
+
+#[test]
+fn shared_cannot_be_returned_past_its_guard() {
+    let src = format!(
+        "{PRELUDE}
+pub fn escape<'h>(h: &'h LocalHandle<Ebr>, cell: &Atomic<u64, Ebr>) -> &'h u64 {{
+    let mut g: Guard<'h, u64, Ebr> = Guard::new(h);
+    let s = g.protect(cell).unwrap();
+    s.get() // Shared is branded by the borrow of `g`, a local
+}}
+"
+    );
+    assert_compile_fail("cf_escape_guard", &src, &["E0515", "E0597", "E0505"]);
+}
+
+#[test]
+fn shared_dies_on_guard_reset() {
+    let src = format!(
+        "{PRELUDE}
+pub fn use_after_reset(h: &LocalHandle<Ebr>, cell: &Atomic<u64, Ebr>) -> u64 {{
+    let mut g: Guard<u64, Ebr> = Guard::new(h);
+    let s = g.protect(cell).unwrap();
+    g.reset(); // would drop the protection s relies on
+    *s.get()
+}}
+"
+    );
+    assert_compile_fail("cf_use_after_reset", &src, &["E0499", "E0502", "E0503"]);
+}
+
+#[test]
+fn shared_dies_on_reprotect() {
+    let src = format!(
+        "{PRELUDE}
+pub fn reaim(h: &LocalHandle<Ebr>, a: &Atomic<u64, Ebr>, b: &Atomic<u64, Ebr>) -> u64 {{
+    let mut g: Guard<u64, Ebr> = Guard::new(h);
+    let s = g.protect(a).unwrap();
+    let _t = g.protect(b); // re-aiming releases the protection on `s`
+    *s.get()
+}}
+"
+    );
+    assert_compile_fail("cf_reprotect", &src, &["E0499", "E0502", "E0503"]);
+}
+
+#[test]
+fn shared_blocks_retire() {
+    let src = format!(
+        "{PRELUDE}
+pub unsafe fn retire_under_shared(h: &LocalHandle<Ebr>, cell: &Atomic<u64, Ebr>) -> u64 {{
+    let mut g: Guard<u64, Ebr> = Guard::new(h);
+    let s = g.protect(cell).unwrap();
+    g.retire(); // cannot drop protection while `s` is alive
+    *s.get()
+}}
+"
+    );
+    assert_compile_fail("cf_retire_under_shared", &src, &["E0499", "E0502", "E0503"]);
+}
+
+#[test]
+fn guard_cannot_outlive_its_handle() {
+    let src = format!(
+        "{PRELUDE}
+pub fn outlive() {{
+    let g;
+    {{
+        let domain = emr::reclaim::DomainRef::<Ebr>::new_owned();
+        let h = domain.register();
+        g = Guard::<u64, Ebr>::new(&h); // `'h` brand ties g to h
+    }}
+    drop(g);
+}}
+"
+    );
+    assert_compile_fail("cf_guard_outlives_handle", &src, &["E0597", "E0716", "E0505"]);
+}
+
+#[test]
+fn shared_cannot_escape_domain_resolution_scope() {
+    let src = format!(
+        "{PRELUDE}
+pub fn escape_domain(cell: &Atomic<u64, Ebr>) -> u64 {{
+    let domain = emr::reclaim::DomainRef::<Ebr>::new_owned();
+    let out = domain.with_handle(|h| {{
+        let mut g: Guard<u64, Ebr> = Guard::new(h);
+        g.protect(cell).unwrap() // Shared cannot leave the closure
+    }});
+    *out.get()
+}}
+"
+    );
+    assert_compile_fail(
+        "cf_escape_domain",
+        &src,
+        &["E0515", "E0597", "lifetime may not live long enough", "E0521"],
+    );
+}

@@ -1,10 +1,12 @@
 //! Reclamation-domain isolation under concurrency: independent domains of
 //! the same scheme must never observe each other's retired nodes, even
-//! while both churn from multiple threads at once.
+//! while both churn from multiple threads at once. Plus the TLS
+//! handle-cache eviction policy (dead owned domains must not stay pinned
+//! by long-lived threads).
 
 use emr::ds::queue::Queue;
 use emr::reclaim::tests_common::{flush_until, Payload};
-use emr::reclaim::{ConcurrentPtr, DomainRef, MarkedPtr, Reclaimer};
+use emr::reclaim::{Atomic, DomainRef, Guard, MarkedPtr, Owned, Reclaimer};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -17,13 +19,13 @@ fn concurrent_domains_do_not_cross_reclaim<R: Reclaimer>() {
 
     // Domain A, main thread: guard a retired node.
     let ha = domain_a.register();
-    let node_a = emr::reclaim::alloc_node::<Payload, R>(Payload::new(0xAA, &drops_a));
-    let cell_a: ConcurrentPtr<Payload, R> = ConcurrentPtr::new(MarkedPtr::new(node_a, 0));
-    let mut guard_a = ha.guard();
-    guard_a.acquire(&cell_a);
+    let cell_a: Atomic<Payload, R> = Atomic::new(Owned::new(Payload::new(0xAA, &drops_a)));
+    let node_a = cell_a.load(Ordering::Relaxed);
+    let mut guard_a: Guard<Payload, R> = ha.guard();
+    assert!(guard_a.protect(&cell_a).is_some());
     cell_a.store(MarkedPtr::null(), Ordering::Release);
     // SAFETY: unlinked; retired once, into the guarding domain.
-    unsafe { ha.retire(node_a) };
+    unsafe { ha.retire(node_a.get()) };
 
     // Domain B: 4 threads churn a queue (steady retire stream) and flush
     // aggressively the whole time.
@@ -34,8 +36,8 @@ fn concurrent_domains_do_not_cross_reclaim<R: Reclaimer>() {
             std::thread::spawn(move || {
                 let h = q.domain().register();
                 for i in 0..2000u64 {
-                    q.enqueue_with(&h, t * 10_000 + i);
-                    q.dequeue_with(&h);
+                    q.enqueue(&h, t * 10_000 + i);
+                    q.dequeue(&h);
                     if i % 64 == 0 {
                         h.flush();
                     }
@@ -50,7 +52,7 @@ fn concurrent_domains_do_not_cross_reclaim<R: Reclaimer>() {
 
     // Everything domain B did must leave domain A's guarded node alone.
     assert_eq!(drops_a.load(Ordering::Relaxed), 0, "{}: cross-domain reclamation", R::NAME);
-    assert_eq!(guard_a.as_ref().unwrap().read(), 0xAA);
+    assert_eq!(guard_a.shared().expect("still guarded").read(), 0xAA);
 
     drop(guard_a);
     flush_until(&ha, || drops_a.load(Ordering::Relaxed) == 1);
@@ -71,10 +73,9 @@ fn shared_owned_domain_reclaims<R: Reclaimer>() {
             std::thread::spawn(move || {
                 let h = domain.register();
                 for i in 0..500u64 {
-                    let node = emr::reclaim::alloc_node::<Payload, R>(Payload::new(i, &drops));
+                    // Safe retire path: Owned nodes are trivially unlinked.
+                    h.retire_owned(Owned::<Payload, R>::new(Payload::new(i, &drops)));
                     allocs.fetch_add(1, Ordering::Relaxed);
-                    // SAFETY: never published.
-                    unsafe { h.retire(node) };
                     if i % 50 == 0 {
                         h.flush();
                     }
@@ -96,6 +97,101 @@ fn shared_owned_domain_reclaims<R: Reclaimer>() {
     );
 }
 
+/// The TLS handle cache must evict cached handles whose owned domain is
+/// otherwise dead, draining whatever the dead domain still parked.
+fn handle_cache_evicts_dead_domain<R: Reclaimer>() {
+    let drops = Arc::new(AtomicUsize::new(0));
+    {
+        let domain = DomainRef::<R>::new_owned();
+        // Resolve (and cache) this thread's handle, and park a retired
+        // node in its local retire list without any reclamation trigger.
+        domain.with_handle(|h| {
+            h.retire_owned(Owned::<Payload, R>::new(Payload::new(1, &drops)));
+        });
+        // `domain` drops here: the TLS cache entry is now the sole owner.
+    }
+    // Any later cached-handle resolution on this thread sweeps the cache:
+    // the dead domain's handle unregisters and the domain drains.
+    let other = DomainRef::<R>::new_owned();
+    other.with_handle(|_| ());
+    assert_eq!(
+        drops.load(Ordering::Relaxed),
+        1,
+        "{}: evicted domain must drain its parked nodes",
+        R::NAME
+    );
+}
+
+/// Multi-thread pinning: two long-lived threads cache handles to the same
+/// owned domain; once every external reference is gone, sweeps on the
+/// (still running) threads must drain it — cache entries on *other*
+/// threads must not count as keeping the domain alive.
+fn handle_cache_evicts_across_threads<R: Reclaimer>() {
+    use std::sync::Barrier;
+    let drops = Arc::new(AtomicUsize::new(0));
+    let domain = DomainRef::<R>::new_owned();
+    let gate = Arc::new(Barrier::new(3));
+    let spawn_worker = |domain: DomainRef<R>, drops: Arc<AtomicUsize>, gate: Arc<Barrier>| {
+        std::thread::spawn(move || {
+            let sweep = || {
+                // Resolving any domain on this thread sweeps its cache.
+                let other = DomainRef::<R>::new_owned();
+                other.with_handle(|_| ());
+            };
+            domain.with_handle(|h| {
+                h.retire_owned(Owned::<Payload, R>::new(Payload::new(1, &drops)));
+            });
+            drop(domain); // this thread now holds the domain only via TLS
+            gate.wait(); // A: caches populated, worker externals dropped
+            gate.wait(); // B: main dropped its reference too
+            sweep();
+            gate.wait(); // C: first sweep round done (may defer on races)
+            sweep();
+            gate.wait(); // D: second round done — eviction has cascaded
+            gate.wait(); // E: main asserted; thread may exit
+        })
+    };
+    let t1 = spawn_worker(domain.clone(), drops.clone(), gate.clone());
+    let t2 = spawn_worker(domain.clone(), drops.clone(), gate.clone());
+    gate.wait(); // A
+    drop(domain);
+    gate.wait(); // B
+    gate.wait(); // C
+    gate.wait(); // D
+    assert_eq!(
+        drops.load(Ordering::Relaxed),
+        2,
+        "{}: cache pins on live threads must not leak a dead domain",
+        R::NAME
+    );
+    gate.wait(); // E
+    t1.join().unwrap();
+    t2.join().unwrap();
+}
+
+/// Eviction must never fire while any outside `DomainRef` is still alive:
+/// a cached handle stays cached across repeated resolutions.
+fn handle_cache_keeps_live_domains<R: Reclaimer>() {
+    let drops = Arc::new(AtomicUsize::new(0));
+    let domain = DomainRef::<R>::new_owned();
+    domain.with_handle(|h| {
+        h.retire_owned(Owned::<Payload, R>::new(Payload::new(7, &drops)));
+    });
+    // Resolutions for *other* domains sweep the cache; this domain is
+    // still externally owned, so its entry (and parked node) must stay.
+    for _ in 0..3 {
+        let other = DomainRef::<R>::new_owned();
+        other.with_handle(|_| ());
+    }
+    // The node may only have been reclaimed by the scheme's own normal
+    // operation, never by an eviction-triggered drain of a live domain:
+    // the domain must still function through the cached handle.
+    domain.with_handle(|h| h.flush());
+    let h = domain.register();
+    flush_until(&h, || drops.load(Ordering::Relaxed) == 1);
+    assert_eq!(drops.load(Ordering::Relaxed), 1, "{}: parked node lost", R::NAME);
+}
+
 macro_rules! domain_tests {
     ($mod_name:ident, $scheme:ty) => {
         mod $mod_name {
@@ -109,6 +205,21 @@ macro_rules! domain_tests {
             #[test]
             fn shared_owned_domain() {
                 shared_owned_domain_reclaims::<$scheme>();
+            }
+
+            #[test]
+            fn cache_evicts_dead_domain() {
+                handle_cache_evicts_dead_domain::<$scheme>();
+            }
+
+            #[test]
+            fn cache_evicts_across_threads() {
+                handle_cache_evicts_across_threads::<$scheme>();
+            }
+
+            #[test]
+            fn cache_keeps_live_domains() {
+                handle_cache_keeps_live_domains::<$scheme>();
             }
         }
     };

@@ -4,6 +4,7 @@
 //! step.
 
 use emr::reclaim::leaky::Leaky;
+use emr::reclaim::Cached;
 use emr::reclaim::stamp::pool::{StampPool, NOT_IN_LIST, PENDING_PUSH, STAMP_INC};
 use emr::util::prop::{check, check_ops, default_cases};
 use emr::util::rng::Xoshiro256;
@@ -31,11 +32,11 @@ fn prop_queue_matches_vecdeque_model() {
             for op in ops {
                 match op {
                     QOp::Enq(v) => {
-                        q.enqueue(*v);
+                        q.enqueue(Cached, *v);
                         model.push_back(*v);
                     }
                     QOp::Deq => {
-                        let got = q.dequeue();
+                        let got = q.dequeue(Cached);
                         let want = model.pop_front();
                         if got != want {
                             return Err(format!("dequeue: got {got:?}, model {want:?}"));
@@ -43,7 +44,7 @@ fn prop_queue_matches_vecdeque_model() {
                     }
                 }
             }
-            if q.is_empty() != model.is_empty() {
+            if q.is_empty(Cached) != model.is_empty() {
                 return Err("emptiness disagrees".into());
             }
             Ok(())
@@ -81,16 +82,16 @@ fn prop_list_matches_btreeset_model() {
             let mut model = BTreeSet::new();
             for op in ops {
                 let (got, want) = match op {
-                    SOp::Insert(k) => (l.insert(*k, ()), model.insert(*k)),
-                    SOp::Remove(k) => (l.remove(k), model.remove(k)),
-                    SOp::Contains(k) => (l.contains(k), model.contains(k)),
+                    SOp::Insert(k) => (l.insert(Cached, *k, ()), model.insert(*k)),
+                    SOp::Remove(k) => (l.remove(Cached, k), model.remove(k)),
+                    SOp::Contains(k) => (l.contains(Cached, k), model.contains(k)),
                 };
                 if got != want {
                     return Err(format!("{op:?}: got {got}, model {want}"));
                 }
             }
-            if l.len() != model.len() {
-                return Err(format!("len: {} vs model {}", l.len(), model.len()));
+            if l.len(Cached) != model.len() {
+                return Err(format!("len: {} vs model {}", l.len(Cached), model.len()));
             }
             Ok(())
         },
@@ -129,7 +130,7 @@ fn prop_hashmap_matches_btreemap_model() {
             for op in ops {
                 match op {
                     MOp::Insert(k, v) => {
-                        let got = m.insert(*k, *v);
+                        let got = m.insert(Cached, *k, *v);
                         let want = !model.contains_key(k);
                         if want {
                             model.insert(*k, *v);
@@ -139,14 +140,14 @@ fn prop_hashmap_matches_btreemap_model() {
                         }
                     }
                     MOp::Remove(k) => {
-                        let got = m.remove(k);
+                        let got = m.remove(Cached, k);
                         let want = model.remove(k).is_some();
                         if got != want {
                             return Err(format!("remove {k}: got {got}, model {want}"));
                         }
                     }
                     MOp::Get(k) => {
-                        let got = m.get_with(k, |v| *v);
+                        let got = m.get(Cached, k, |v| *v);
                         let want = model.get(k).copied();
                         if got != want {
                             return Err(format!("get {k}: got {got:?}, model {want:?}"));
@@ -175,7 +176,7 @@ fn prop_fifo_cache_evicts_in_insertion_order() {
         let n = 1 + rng.below_usize(64);
         for _ in 0..n {
             let k = rng.below(48) as u32;
-            let inserted = cache.insert(k, k);
+            let inserted = cache.insert(Cached, k, k);
             let model_inserted = !fifo.contains(&k);
             if inserted != model_inserted {
                 return Err(format!("insert {k}: {inserted} vs model {model_inserted}"));
@@ -189,7 +190,7 @@ fn prop_fifo_cache_evicts_in_insertion_order() {
         }
         // Exact FIFO containment: single-threaded, so the model is exact.
         for &k in &fifo {
-            if !cache.contains(&k) {
+            if !cache.contains(Cached, &k) {
                 return Err(format!("cache lost live key {k} (cap {cap})"));
             }
         }

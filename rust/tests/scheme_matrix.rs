@@ -2,49 +2,53 @@
 //! structure. A new scheme only has to pass this file to be trusted by the
 //! benchmarks.
 //!
-//! Structure roundtrips run twice: once on the **global** domain (the
-//! quickstart TLS path) and once in an **owned** domain (the isolated
-//! fast path) — both plumbing variants must behave identically.
+//! Everything here runs through the **safe facade** (`Atomic` / `Guard` /
+//! `Shared` / `Owned`, and the `HandleSource`-generic ds entry points):
+//! structure roundtrips run twice — once with `Cached` on the **global**
+//! domain (the quickstart TLS path) and once with an explicit handle in
+//! an **owned** domain (the isolated, TLS-free fast path) — and the
+//! `facade_roundtrip` exercise drives `Owned` disposal, CAS publication,
+//! branded `Shared` reads and both retire paths for all 8 schemes.
 
 use emr::ds::hashmap::FifoCache;
 use emr::ds::list::List;
 use emr::ds::queue::Queue;
 use emr::reclaim::tests_common::*;
-use emr::reclaim::{DomainRef, Reclaimer, Region};
+use emr::reclaim::{Cached, DomainRef, HandleSource, Reclaimer, Region};
 
-fn queue_roundtrip<R: Reclaimer>(q: Queue<u64, R>) {
+fn queue_roundtrip<R: Reclaimer>(q: Queue<u64, R>, h: impl HandleSource<R>) {
     for i in 0..1000 {
-        q.enqueue(i);
+        q.enqueue(h, i);
     }
     for i in 0..1000 {
-        assert_eq!(q.dequeue(), Some(i), "{}: FIFO order broken", R::NAME);
+        assert_eq!(q.dequeue(h), Some(i), "{}: FIFO order broken", R::NAME);
     }
-    assert_eq!(q.dequeue(), None);
+    assert_eq!(q.dequeue(h), None);
 }
 
-fn list_roundtrip<R: Reclaimer>(l: List<u64, u64, R>) {
+fn list_roundtrip<R: Reclaimer>(l: List<u64, u64, R>, h: impl HandleSource<R>) {
     for k in 0..200u64 {
-        assert!(l.insert(k, k * 3));
+        assert!(l.insert(h, k, k * 3));
     }
-    assert_eq!(l.len(), 200);
+    assert_eq!(l.len(h), 200);
     for k in 0..200u64 {
-        assert_eq!(l.get_with(&k, |v| *v), Some(k * 3), "{}", R::NAME);
+        assert_eq!(l.get(h, &k, |v| *v), Some(k * 3), "{}", R::NAME);
     }
     for k in (0..200u64).step_by(2) {
-        assert!(l.remove(&k));
+        assert!(l.remove(h, &k));
     }
-    assert_eq!(l.len(), 100);
-    assert!(!l.contains(&0));
-    assert!(l.contains(&1));
+    assert_eq!(l.len(h), 100);
+    assert!(!l.contains(h, &0));
+    assert!(l.contains(h, &1));
 }
 
-fn cache_roundtrip<R: Reclaimer>(c: FifoCache<u64, [u8; 128], R>) {
+fn cache_roundtrip<R: Reclaimer>(c: FifoCache<u64, [u8; 128], R>, h: impl HandleSource<R>) {
     for k in 0..200u64 {
-        c.insert(k, [k as u8; 128]);
+        c.insert(h, k, [k as u8; 128]);
     }
     assert!(c.len() <= 50, "{}: capacity violated ({})", R::NAME, c.len());
-    assert!(c.contains(&199));
-    assert!(!c.contains(&0));
+    assert!(c.contains(h, &199));
+    assert!(!c.contains(h, &0));
 }
 
 fn region_nesting<R: Reclaimer>() {
@@ -82,6 +86,11 @@ macro_rules! matrix {
             }
 
             #[test]
+            fn facade_roundtrip() {
+                exercise_facade::<$scheme>();
+            }
+
+            #[test]
             fn domain_isolation() {
                 exercise_domain_isolation::<$scheme>();
             }
@@ -93,32 +102,42 @@ macro_rules! matrix {
 
             #[test]
             fn queue_global_domain() {
-                queue_roundtrip::<$scheme>(Queue::new());
+                let q: Queue<u64, $scheme> = Queue::new();
+                queue_roundtrip(q, Cached);
             }
 
             #[test]
             fn queue_owned_domain() {
-                queue_roundtrip::<$scheme>(Queue::new_in(DomainRef::new_owned()));
+                let q: Queue<u64, $scheme> = Queue::new_in(DomainRef::new_owned());
+                let h = q.domain().register();
+                queue_roundtrip(q, &h);
             }
 
             #[test]
             fn list_global_domain() {
-                list_roundtrip::<$scheme>(List::new());
+                let l: List<u64, u64, $scheme> = List::new();
+                list_roundtrip(l, Cached);
             }
 
             #[test]
             fn list_owned_domain() {
-                list_roundtrip::<$scheme>(List::new_in(DomainRef::new_owned()));
+                let l: List<u64, u64, $scheme> = List::new_in(DomainRef::new_owned());
+                let h = l.domain().register();
+                list_roundtrip(l, &h);
             }
 
             #[test]
             fn cache_global_domain() {
-                cache_roundtrip::<$scheme>(FifoCache::new(32, 50));
+                let c: FifoCache<u64, [u8; 128], $scheme> = FifoCache::new(32, 50);
+                cache_roundtrip(c, Cached);
             }
 
             #[test]
             fn cache_owned_domain() {
-                cache_roundtrip::<$scheme>(FifoCache::new_in(DomainRef::new_owned(), 32, 50));
+                let c: FifoCache<u64, [u8; 128], $scheme> =
+                    FifoCache::new_in(DomainRef::new_owned(), 32, 50);
+                let h = c.domain().register();
+                cache_roundtrip(c, &h);
             }
 
             #[test]
@@ -130,29 +149,61 @@ macro_rules! matrix {
 }
 
 // Leaky never reclaims by design — it only has to pass the structural
-// tests, not the reclamation exercises.
+// tests (including the structural half of the facade surface), not the
+// reclamation exercises.
 mod leaky {
     use super::*;
+    use emr::reclaim::{Atomic, Guard, MarkedPtr, Owned};
     type Leaky = emr::reclaim::leaky::Leaky;
 
     #[test]
     fn queue() {
-        queue_roundtrip::<Leaky>(Queue::new());
+        let q: Queue<u64, Leaky> = Queue::new();
+        queue_roundtrip(q, Cached);
     }
 
     #[test]
     fn list() {
-        list_roundtrip::<Leaky>(List::new());
+        let l: List<u64, u64, Leaky> = List::new();
+        list_roundtrip(l, Cached);
     }
 
     #[test]
     fn cache() {
-        cache_roundtrip::<Leaky>(FifoCache::new(32, 50));
+        let c: FifoCache<u64, [u8; 128], Leaky> = FifoCache::new(32, 50);
+        cache_roundtrip(c, Cached);
     }
 
     #[test]
     fn regions_nest() {
         region_nesting::<Leaky>();
+    }
+
+    #[test]
+    fn facade_structural() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let domain = DomainRef::<Leaky>::new_owned();
+        let h = domain.register();
+        let drops = Arc::new(AtomicUsize::new(0));
+        // Owned drop frees even under the never-reclaiming baseline (the
+        // node was never published, so no reclamation protocol runs).
+        drop(Owned::<Payload, Leaky>::new(Payload::new(1, &drops)));
+        assert_eq!(drops.load(Ordering::Relaxed), 1);
+        // Publish → protect → branded read; CAS publication returns the
+        // loser on failure.
+        let cell: Atomic<Payload, Leaky> = Atomic::new(Owned::new(Payload::new(2, &drops)));
+        let occupant = cell.load(Ordering::Relaxed);
+        let loser = Owned::new(Payload::new(3, &drops));
+        let (witness, loser) = cell
+            .cas_publish(MarkedPtr::null(), loser, Ordering::AcqRel, Ordering::Acquire)
+            .expect_err("cell occupied");
+        assert!(witness == occupant);
+        drop(loser); // frees node 3
+        assert_eq!(drops.load(Ordering::Relaxed), 2);
+        let mut g: Guard<Payload, Leaky> = h.guard();
+        assert_eq!(g.protect(&cell).expect("non-null").read(), 2);
+        // Leaky leaks node 2 by design; the counters record it honestly.
     }
 }
 

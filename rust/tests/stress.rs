@@ -7,7 +7,7 @@ use emr::ds::hashmap::FifoCache;
 use emr::ds::list::List;
 use emr::ds::queue::Queue;
 use emr::reclaim::tests_common::{flush_until, Payload};
-use emr::reclaim::{DomainRef, Reclaimer};
+use emr::reclaim::{Cached, DomainRef, Reclaimer};
 use emr::util::rng::Xoshiro256;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -30,7 +30,7 @@ fn queue_conservation<R: Reclaimer>(threads: usize, per_thread: usize) {
                 let h = q.domain().register();
                 for i in 0..per_thread {
                     let v = (t * per_thread + i) as u64;
-                    q.enqueue_with(&h, Payload::new(v, drops));
+                    q.enqueue(&h, Payload::new(v, drops));
                     if i % 97 == 0 {
                         std::thread::yield_now();
                     }
@@ -48,7 +48,7 @@ fn queue_conservation<R: Reclaimer>(threads: usize, per_thread: usize) {
                     if dequeued_count.load(Ordering::Relaxed) >= total {
                         break;
                     }
-                    match q.dequeue_with(&h) {
+                    match q.dequeue(&h) {
                         Some(p) => {
                             dequeued_sum.fetch_add(p.read(), Ordering::Relaxed);
                             dequeued_count.fetch_add(1, Ordering::Relaxed);
@@ -102,14 +102,14 @@ fn list_poison_detection<R: Reclaimer>(threads: usize, iters: usize) {
                             // dropped — either via reclamation or, for a
                             // rejected duplicate, immediately by insert.
                             allocs.fetch_add(1, Ordering::Relaxed);
-                            list.insert_with(&h, k, Payload::new(k, drops));
+                            list.insert(&h, k, Payload::new(k, drops));
                         }
                         4..=6 => {
-                            list.remove_with(&h, &k);
+                            list.remove(&h, &k);
                         }
                         _ => {
                             // read() panics on poisoned (reclaimed) payloads.
-                            list.get_with_handle(&h, &k, |p| assert_eq!(p.read(), k));
+                            list.get(&h, &k, |p| assert_eq!(p.read(), k));
                         }
                     }
                     if i % 128 == 0 {
@@ -120,7 +120,7 @@ fn list_poison_detection<R: Reclaimer>(threads: usize, iters: usize) {
         }
     });
 
-    let live = list.len();
+    let live = list.len(Cached);
     drop(list);
     let h = domain.register();
     flush_until(&h, || drops.load(Ordering::Relaxed) == allocs.load(Ordering::Relaxed));
@@ -146,7 +146,7 @@ fn cache_bounded_integrity<R: Reclaimer>(threads: usize, iters: usize) {
                 let mut rng = Xoshiro256::new(0xCAC4E + t as u64);
                 for i in 0..iters {
                     let k = rng.below(2_000);
-                    match cache.get_with_handle(&h, &k, |v| {
+                    match cache.get(&h, &k, |v| {
                         // Payload self-describes its key: catches
                         // cross-node corruption from bad reclamation.
                         assert_eq!(v[0], k);
@@ -157,7 +157,7 @@ fn cache_bounded_integrity<R: Reclaimer>(threads: usize, iters: usize) {
                             let mut payload = [0u64; 128];
                             payload[0] = k;
                             payload[127] = k ^ 0xFFFF;
-                            cache.insert_with(&h, k, payload);
+                            cache.insert(&h, k, payload);
                         }
                     }
                     if i % 256 == 0 {

@@ -31,11 +31,11 @@ fn orphan_handoff<R: Reclaimer>(waves: usize, threads_per_wave: usize) {
                     let h = q.domain().register();
                     for i in 0..200u64 {
                         let v = (wave * 1000 + t * 200) as u64 + i;
-                        q.enqueue_with(&h, Payload::new(v, &drops));
+                        q.enqueue(&h, Payload::new(v, &drops));
                         allocs.fetch_add(1, Ordering::Relaxed);
                         // Dequeue retires the old dummy through the scheme;
                         // exiting right after leaves orphans.
-                        if let Some(p) = q.dequeue_with(&h) {
+                        if let Some(p) = q.dequeue(&h) {
                             p.read();
                         }
                     }
@@ -53,7 +53,7 @@ fn orphan_handoff<R: Reclaimer>(waves: usize, threads_per_wave: usize) {
     // Main thread drains what is left and flushes until every payload is
     // accounted for.
     let h = domain.register();
-    while let Some(p) = q.dequeue_with(&h) {
+    while let Some(p) = q.dequeue(&h) {
         p.read();
     }
     drop(Arc::try_unwrap(q).ok());
@@ -79,8 +79,8 @@ fn churn_storm<R: Reclaimer>(iterations: usize) {
                 std::thread::spawn(move || {
                     let h = q.domain().register();
                     for i in 0..50u64 {
-                        q.enqueue_with(&h, round as u64 * 100 + t as u64 * 50 + i);
-                        q.dequeue_with(&h);
+                        q.enqueue(&h, round as u64 * 100 + t as u64 * 50 + i);
+                        q.dequeue(&h);
                     }
                 })
             })
@@ -156,15 +156,16 @@ fn hp_slots_recycle_across_threads() {
     let warm = |domain: &DomainRef<Hp>| {
         let domain = domain.clone();
         std::thread::spawn(move || {
-            use emr::reclaim::{ConcurrentPtr, GuardPtr, MarkedPtr};
+            use emr::reclaim::{Atomic, Guard, MarkedPtr, Owned};
             let h = domain.register();
-            let node = emr::reclaim::alloc_node::<u64, Hp>(7);
-            let cell: ConcurrentPtr<u64, Hp> = ConcurrentPtr::new(MarkedPtr::new(node, 0));
-            let mut g: GuardPtr<u64, Hp> = h.guard();
-            g.acquire(&cell);
+            let cell: Atomic<u64, Hp> = Atomic::new(Owned::new(7));
+            let node = cell.load(std::sync::atomic::Ordering::Relaxed);
+            let mut g: Guard<u64, Hp> = h.guard();
+            assert!(g.protect(&cell).is_some());
             drop(g);
             cell.store(MarkedPtr::null(), std::sync::atomic::Ordering::Release);
-            unsafe { h.retire(node) };
+            // SAFETY: unlinked above; retired exactly once, in-domain.
+            unsafe { h.retire(node.get()) };
         })
         .join()
         .unwrap();
@@ -200,9 +201,8 @@ fn recycled_entries_have_reset_epoch_state() {
         let drops = drops.clone();
         std::thread::spawn(move || {
             let h = domain.register();
-            let node = emr::reclaim::alloc_node::<Payload, Qsr>(Payload::new(1, &drops));
-            // SAFETY: never published.
-            unsafe { h.retire(node) };
+            // Safe retire path: the Owned node is trivially unlinked.
+            h.retire_owned(emr::reclaim::Owned::<Payload, Qsr>::new(Payload::new(1, &drops)));
         })
         .join()
         .unwrap();
