@@ -6,52 +6,72 @@
 //! ```bash
 //! make artifacts && cargo run --release --example compute_cache -- \
 //!     --scheme stamp --clients 4 --requests 2000
+//! # sharded fleet, artifact-free:
+//! cargo run --release --example compute_cache -- \
+//!     --backend synthetic --shards 4 --clients 8
 //! ```
 //!
 //! Reports throughput, latency percentiles (hit vs computed), cache hit
-//! rate, and the paper's reclamation-efficiency metric. Recorded in
-//! EXPERIMENTS.md §E15.
+//! rate, and the paper's reclamation-efficiency metric — rolled up and,
+//! when `--shards N > 1`, per shard. `--shared-domain` switches the fleet
+//! from domain-per-shard to one shared reclamation domain. Recorded in
+//! EXPERIMENTS.md §E15/§E16.
 
-use emr::coordinator::{CacheServer, ServerConfig};
+use emr::coordinator::{Backend, CacheServer, ServerConfig};
 use emr::dispatch_scheme;
 use emr::reclaim::{Reclaimer, SchemeId};
 use emr::util::cli::Args;
 use emr::util::rng::Xoshiro256;
 use emr::util::stats::{fmt_ns, percentile_sorted};
 
-fn main() {
-    let args = Args::parse();
-    let scheme = SchemeId::parse(args.get_or("scheme", "stamp")).expect("unknown --scheme");
-    let clients = args.usize_or("clients", 4);
-    let requests = args.usize_or("requests", 2000);
-    let key_space = args.u64_or("keys", 30_000);
-    let capacity = args.usize_or("capacity", 10_000);
-    let zipf_hot = args.usize_or("hot-pct", 80); // % of requests on a hot set
-    dispatch_scheme!(scheme, run, clients, requests, key_space, capacity, zipf_hot);
-}
-
-fn run<R: Reclaimer>(
+struct Opts {
     clients: usize,
     requests: usize,
     key_space: u64,
-    capacity: usize,
     hot_pct: usize,
-) {
-    if !emr::runtime::artifacts_available() {
-        eprintln!("no artifacts — run `make artifacts` first");
-        std::process::exit(1);
-    }
-    let server = CacheServer::<R>::start(ServerConfig {
-        capacity,
+    cfg: ServerConfig,
+}
+
+fn main() {
+    let args = Args::parse();
+    let scheme = SchemeId::parse(args.get_or("scheme", "stamp")).expect("unknown --scheme");
+    let cfg = ServerConfig {
+        capacity: args.usize_or("capacity", 10_000),
         workers: 2,
         ..ServerConfig::default()
-    })
-    .expect("server start");
+    }
+    .with_shards(args.usize_or("shards", 1))
+    .with_shared_domain(args.flag("shared-domain"))
+    .with_backend(
+        Backend::parse(args.get_or("backend", "pjrt")).expect("unknown --backend"),
+    );
+    let opts = Opts {
+        clients: args.usize_or("clients", 4),
+        requests: args.usize_or("requests", 2000),
+        key_space: args.u64_or("keys", 30_000),
+        hot_pct: args.usize_or("hot-pct", 80), // % of requests on a hot set
+        cfg,
+    };
+    dispatch_scheme!(scheme, run, opts);
+}
+
+fn run<R: Reclaimer>(opts: Opts) {
+    let Opts { clients, requests, key_space, hot_pct, cfg } = opts;
+    if cfg.backend == Backend::Pjrt && !emr::runtime::artifacts_available() {
+        eprintln!("no artifacts — run `make artifacts` first (or --backend synthetic)");
+        std::process::exit(1);
+    }
+    let shards = cfg.shards;
+    let shared_domain = cfg.shared_domain;
+    let capacity = cfg.capacity;
+    let server = CacheServer::<R>::start(cfg).expect("server start");
 
     println!(
         "E15 compute-cache: scheme={} clients={clients} requests/client={requests} \
-         keys={key_space} capacity={capacity} hot={hot_pct}%",
-        R::NAME
+         keys={key_space} capacity={capacity} hot={hot_pct}% shards={shards} \
+         domains={}",
+        R::NAME,
+        if shared_domain { "shared".to_string() } else { format!("{shards} (per shard)") }
     );
     let alloc_before = emr::alloc::snapshot();
     let t0 = emr::util::monotonic_ns();
@@ -113,6 +133,11 @@ fn run<R: Reclaimer>(
     }
     let m = server.metrics();
     println!("server          : {m}");
+    if server.shard_count() > 1 {
+        for (i, sm) in server.shard_metrics().iter().enumerate() {
+            println!("  shard {i}       : {sm}");
+        }
+    }
     println!("cache entries   : {}", server.cache_len());
     server.shutdown();
     // The server owns its reclamation domain; dropping the last reference

@@ -1,0 +1,23 @@
+//! E16: shard-scaling — Router throughput and reclamation robustness vs
+//! shard count (1/2/4/8), domain-per-shard vs one-shared-domain, on the
+//! coordinator's HashMap serving path with a skewed key stream. Runs on
+//! the synthetic backend, so no PJRT artifacts are needed.
+//!
+//! ```bash
+//! cargo bench --bench shard_scaling -- --schemes stamp,ebr,hp --secs 1
+//! ```
+use emr::bench_fw::figures::fig_shard_scaling;
+use emr::bench_fw::BenchParams;
+use emr::reclaim::SchemeId;
+use emr::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let mut p = BenchParams::from_args(&args);
+    if args.get("schemes").is_none() {
+        // Default to the three families the sharding story contrasts:
+        // stamp (the paper), one epoch scheme, hazard pointers.
+        p.schemes = vec![SchemeId::Stamp, SchemeId::Ebr, SchemeId::Hp];
+    }
+    fig_shard_scaling(&p);
+}

@@ -17,6 +17,7 @@ use super::workload::*;
 use super::BenchParams;
 use crate::dispatch_scheme;
 use crate::reclaim::{DomainRef, Reclaimer};
+use crate::util::rng::Xoshiro256;
 use crate::util::stats::fmt_ns;
 
 /// Which benchmark workload a figure runs.
@@ -320,6 +321,151 @@ pub fn micro_stamp_pool(p: &BenchParams) {
     println!(
         "(expected: roughly flat in p — the paper's 'expected average runtime … is constant')"
     );
+}
+
+/// One shard-scaling measurement cell.
+struct ShardCell {
+    ops_per_sec: f64,
+    hit_rate: f64,
+    unreclaimed: u64,
+    shard_requests: Vec<u64>,
+    shard_unreclaimed: Vec<u64>,
+}
+
+/// Run one (scheme, shard count, domain mode) cell of the shard-scaling
+/// figure: the **full Router stack** (shards, worker pools, shared
+/// batcher) on the synthetic backend — artifact-free — under a skewed
+/// client load (80% of requests on a hot set, so per-shard load is uneven:
+/// the reclamation-robustness axis of the Hyaline comparison).
+fn shard_scaling_cell<R: Reclaimer>(
+    p: &BenchParams,
+    shards: usize,
+    shared_domain: bool,
+) -> ShardCell {
+    use crate::coordinator::{Backend, Router, ServerConfig};
+    let shards = shards.max(1); // tolerate a 0 in --shards like with_shards does
+    let clients = *p.threads.iter().max().unwrap_or(&4);
+    let server = Router::<R>::start(
+        ServerConfig {
+            // One worker per shard: the sweep varies shard count, not total
+            // thread budget per shard. Capacity/buckets are split so the
+            // fleet-wide cache stays comparable across shard counts.
+            workers: 1,
+            buckets: (p.map_buckets / shards).max(64),
+            capacity: (p.map_capacity / shards).max(64),
+            ..ServerConfig::default()
+        }
+        .with_shards(shards)
+        .with_shared_domain(shared_domain)
+        .with_backend(Backend::synthetic()),
+    )
+    .expect("router start (synthetic backend)");
+    let mut cfg = ConfigResult::default();
+    for trial in 0..p.trials {
+        let server = &server;
+        cfg.push(&run_trial(clients, p.duration(), |tid, stop| {
+            let mut rng = Xoshiro256::new(0x5CA1E ^ ((trial as u64) << 32) ^ tid as u64);
+            let hot_set = (p.key_space / 100).max(16);
+            let mut ops = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                let key = if rng.percent(80) {
+                    rng.below(hot_set) as u32
+                } else {
+                    rng.below(p.key_space) as u32
+                };
+                let _ = server.request(key).expect("router request");
+                ops += 1;
+            }
+            ops
+        }));
+    }
+    let agg = server.metrics();
+    let per_shard = server.shard_metrics();
+    let cell = ShardCell {
+        ops_per_sec: cfg.mean_ops_per_sec(),
+        hit_rate: agg.hit_rate(),
+        unreclaimed: agg.unreclaimed_nodes,
+        shard_requests: per_shard.iter().map(|m| m.requests).collect(),
+        shard_unreclaimed: per_shard.iter().map(|m| m.unreclaimed_nodes).collect(),
+    };
+    server.shutdown();
+    cell
+}
+
+/// E16: shard-scaling figure (ROADMAP "sharded coordinator"): Router
+/// throughput and unreclaimed-node population vs shard count (1/2/4/8 by
+/// default), **domain-per-shard vs one-shared-domain**, per scheme. See
+/// EXPERIMENTS.md §E16 for the recipe and expected shapes.
+pub fn fig_shard_scaling(p: &BenchParams) {
+    let clients = *p.threads.iter().max().unwrap_or(&4);
+    println!(
+        "\n== shard scaling — Router on synthetic backend \
+         ({clients} clients, 1 worker/shard, 80% hot-set traffic) =="
+    );
+    let mut csv = String::from(
+        "scheme,mode,shards,req_per_s,hit_pct,unreclaimed,\
+         per_shard_requests,per_shard_unreclaimed\n",
+    );
+    let mut rows: Vec<(String, Vec<ShardCell>)> = Vec::new();
+    for &scheme in &p.schemes {
+        for shared in [false, true] {
+            let mode = if shared { "shared-dom" } else { "dom/shard" };
+            let label = format!("{} {mode}", scheme.name());
+            let mut cells = Vec::new();
+            for &s in &p.shards {
+                let cell = dispatch_scheme!(scheme, shard_scaling_cell, p, s, shared);
+                println!(
+                    "  {label:<22} shards={s}: {:>9.0} req/s  hit {:>5.1}%  \
+                     unreclaimed {:>8}  per-shard req {:?}  unreclaimed {:?}",
+                    cell.ops_per_sec,
+                    cell.hit_rate * 100.0,
+                    cell.unreclaimed,
+                    cell.shard_requests,
+                    cell.shard_unreclaimed,
+                );
+                csv.push_str(&format!(
+                    "{},{mode},{s},{:.0},{:.2},{},{},{}\n",
+                    scheme.name(),
+                    cell.ops_per_sec,
+                    cell.hit_rate * 100.0,
+                    cell.unreclaimed,
+                    join_u64(&cell.shard_requests),
+                    join_u64(&cell.shard_unreclaimed),
+                ));
+                cells.push(cell);
+            }
+            rows.push((label, cells));
+        }
+    }
+    // Summary tables: throughput and end-of-run unreclaimed vs shard count.
+    for (what, pick) in [
+        ("router throughput [req/s]", 0usize),
+        ("end-of-run unreclaimed nodes", 1usize),
+    ] {
+        println!("\n== {what} (columns are shard counts) ==");
+        print!("{:<22}", "scheme/mode");
+        for s in &p.shards {
+            print!("{:>12}", format!("shards={s}"));
+        }
+        println!();
+        for (label, cells) in &rows {
+            print!("{label:<22}");
+            for c in cells {
+                if pick == 0 {
+                    print!("{:>12.0}", c.ops_per_sec);
+                } else {
+                    print!("{:>12}", c.unreclaimed);
+                }
+            }
+            println!();
+        }
+    }
+    maybe_write_csv(&p.csv, &csv);
+}
+
+/// Join counts with `;` (CSV cell of a per-shard breakdown).
+fn join_u64(v: &[u64]) -> String {
+    v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(";")
 }
 
 /// ns/op of `f` over ~`secs` of wall time (batched to amortize the clock).
@@ -629,6 +775,16 @@ mod tests {
         let p = tiny();
         micro_region(&p);
         micro_stamp_pool(&p);
+    }
+
+    #[test]
+    fn shard_scaling_figure_runs() {
+        // Artifact-free: the Router runs on the synthetic backend.
+        let mut p = tiny();
+        p.schemes = vec![SchemeId::Stamp];
+        p.shards = vec![1, 2];
+        p.secs = 0.05;
+        fig_shard_scaling(&p);
     }
 
     #[test]

@@ -52,6 +52,8 @@ pub struct BenchParams {
     pub key_space: u64,
     /// Samples per trial in efficiency plots (paper: 50).
     pub samples: usize,
+    /// Shard counts to sweep in the `shard_scaling` figure.
+    pub shards: Vec<usize>,
     /// Write a CSV next to the human-readable table.
     pub csv: Option<String>,
 }
@@ -71,6 +73,7 @@ impl Default for BenchParams {
             map_capacity: 10_000,
             key_space: 30_000,
             samples: 50,
+            shards: vec![1, 2, 4, 8],
             csv: None,
         }
     }
@@ -109,6 +112,7 @@ impl BenchParams {
         p.map_capacity = args.usize_or("capacity", p.map_capacity);
         p.key_space = args.u64_or("keys", p.key_space);
         p.samples = args.usize_or("samples", p.samples);
+        p.shards = args.list_or("shards", &p.shards);
         p.csv = args.get("csv").map(String::from);
         p
     }

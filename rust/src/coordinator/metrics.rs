@@ -1,5 +1,12 @@
 //! Coordinator metrics: request counters, batch shape, and the paper's
 //! reclamation-efficiency signal (unreclaimed nodes) sampled per snapshot.
+//!
+//! Since the router refactor the counters live at two levels: each
+//! [`super::Shard`] owns a [`Metrics`] for its request/hit/miss/eviction
+//! counters (snapshotted with its *own domain's* unreclaimed count via
+//! [`Metrics::snapshot_with`]), and the [`super::Router`] owns one for the
+//! fleet-wide batch counters, rolling shard snapshots up with
+//! [`MetricsSnapshot::add_counters`].
 
 use crate::util::cache_pad::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,19 +34,39 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Snapshot with the **process-wide** unreclaimed count (the pre-shard
+    /// behaviour; diagnostics that don't care about domain scoping).
     pub fn snapshot(&self) -> MetricsSnapshot {
+        self.snapshot_with(crate::alloc::unreclaimed())
+    }
+
+    /// Snapshot with an explicitly scoped unreclaimed count (a shard passes
+    /// its own domain's, the router an aggregate over distinct domains).
+    pub fn snapshot_with(&self, unreclaimed_nodes: u64) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_keys: self.batched_keys.load(Ordering::Relaxed),
-            unreclaimed_nodes: crate::alloc::unreclaimed(),
+            unreclaimed_nodes,
         }
     }
 }
 
 impl MetricsSnapshot {
+    /// Sum another snapshot's **counters** into this one (requests, hits,
+    /// misses, batches, batched_keys). `unreclaimed_nodes` is deliberately
+    /// left untouched: domains may be shared between shards, so the caller
+    /// must aggregate it over *distinct* domains (see `Router::metrics`).
+    pub fn add_counters(&mut self, other: &MetricsSnapshot) {
+        self.requests += other.requests;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.batches += other.batches;
+        self.batched_keys += other.batched_keys;
+    }
+
     /// Cache hit rate in [0, 1].
     pub fn hit_rate(&self) -> f64 {
         if self.requests == 0 {
@@ -99,5 +126,20 @@ mod tests {
         let s = MetricsSnapshot::default();
         assert_eq!(s.hit_rate(), 0.0);
         assert_eq!(s.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn rollup_sums_counters_but_not_unreclaimed() {
+        let m = Metrics::default();
+        m.requests.store(5, Ordering::Relaxed);
+        m.hits.store(2, Ordering::Relaxed);
+        let a = m.snapshot_with(100);
+        assert_eq!(a.unreclaimed_nodes, 100, "scoped count passes through");
+        let mut agg = MetricsSnapshot::default();
+        agg.add_counters(&a);
+        agg.add_counters(&a);
+        assert_eq!(agg.requests, 10);
+        assert_eq!(agg.hits, 4);
+        assert_eq!(agg.unreclaimed_nodes, 0, "caller owns unreclaimed aggregation");
     }
 }

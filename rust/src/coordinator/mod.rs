@@ -1,51 +1,104 @@
-//! The compute-cache coordinator: the paper's HashMap benchmark made real.
+//! The compute-cache coordinator: the paper's HashMap benchmark made real,
+//! and scaled out into a fleet.
 //!
 //! The paper motivates its HashMap workload as "the calculation in a
 //! complex simulation where partial results are stored in a hash-map for
 //! later reuse" (§4.1). This module *is* that system, in the vLLM-router
-//! shape: clients submit keyed compute requests; worker threads route them
-//! through a bounded, FIFO-evicting, lock-free cache; misses are gathered
-//! by a dynamic batcher and dispatched to the AOT-compiled JAX/Pallas
-//! computation on the PJRT engine thread; results are inserted (evicting
-//! old 1024-byte payload nodes through the reclamation scheme) and fanned
-//! back out to the waiting requests.
+//! shape, split into two layers (DESIGN.md §coordinator-sharding):
 //!
-//! Everything on the request path is Rust; the hot structures (request
-//! queue **and** cache) are this crate's own lock-free data structures,
-//! reclaimed by the scheme `R` — the coordinator dogfoods the library.
+//! * [`Shard`] — one serving unit: its own reclamation domain (by
+//!   default), bounded FIFO-evicting lock-free cache, lock-free request
+//!   queue and worker pool. Everything on the request path is this
+//!   crate's own lock-free data structures, reclaimed by the scheme `R` —
+//!   the coordinator dogfoods the library.
+//! * [`Router`] — the front-end: owns N shards, routes `submit(key)` by a
+//!   deterministic key hash ([`router::shard_for_key`]), and fans **one**
+//!   shared batcher/engine thread over every shard's misses (`PjRtClient`
+//!   is not `Send`, so the engine thread stays unique). `shards = 1`
+//!   reproduces the old single-server behaviour exactly.
 //!
-//! Every server instance (= one shard of the ROADMAP's sharded north-star)
-//! owns its **own reclamation domain**: two servers in one process never
-//! share retire lists, epochs or hazard registries, and worker threads use
-//! explicit per-thread handles on the hot path (no TLS per operation).
+//! Two domain modes ([`ServerConfig::shared_domain`]): **domain-per-shard**
+//! (default) keeps shards fully isolated — two shards never share retire
+//! lists, epochs or hazard registries, so reclamation overhead scales with
+//! per-shard thread count, not fleet size; **shared-domain** runs the whole
+//! fleet on one domain, the single-domain baseline the `shard_scaling`
+//! bench compares against.
+//!
+//! The batcher's compute side is a [`Backend`]: real PJRT artifacts
+//! ([`Backend::Pjrt`]) or a deterministic in-process stand-in
+//! ([`Backend::Synthetic`]) so benches, CI smokes and tests exercise the
+//! full fleet without artifacts.
 
 pub mod metrics;
+pub mod router;
+pub mod shard;
 
-use crate::ds::hashmap::FifoCache;
-use crate::ds::queue::Queue;
-use crate::reclaim::{Cached, DomainRef, Reclaimer};
-use crate::runtime::{Engine, DIM};
-use crate::util::error::{Context, Result};
-use crate::util::monotonic_ns;
-use metrics::{Metrics, MetricsSnapshot};
-use std::collections::HashMap as StdHashMap;
+pub use router::Router;
+pub use shard::Shard;
+
+use crate::runtime::DIM;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
+
+/// The historical single-server name; since the router refactor a
+/// `CacheServer` *is* a router (of one shard, unless configured larger).
+pub type CacheServer<R> = Router<R>;
 
 /// A computed partial result: 256 f32 = 1024 bytes, the paper's payload.
 pub type Payload = [f32; DIM];
 
-/// Server configuration (defaults = the paper's HashMap parameters).
+/// Which compute engine the router's batcher drives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled PJRT artifacts from [`ServerConfig::artifact_dir`]
+    /// (fails fast when missing; requires the `pjrt` feature).
+    Pjrt,
+    /// Deterministic in-process compute
+    /// ([`crate::bench_fw::workload::compute_payload`]) — the artifact-free
+    /// path for benches, CI smokes and tests.
+    Synthetic {
+        /// Cap on distinct keys per dispatched batch (the role the largest
+        /// compiled executable plays for [`Backend::Pjrt`]).
+        max_batch: usize,
+    },
+}
+
+impl Backend {
+    /// Default batch bound for the synthetic engine (mirrors the largest
+    /// AOT-compiled batch size).
+    pub const SYNTHETIC_MAX_BATCH: usize = 32;
+
+    /// A synthetic backend with the default batch bound.
+    pub fn synthetic() -> Self {
+        Backend::Synthetic { max_batch: Self::SYNTHETIC_MAX_BATCH }
+    }
+
+    /// Parse a CLI name: `pjrt` | `synthetic`.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" => Some(Backend::Pjrt),
+            "synthetic" | "syn" => Some(Backend::synthetic()),
+            _ => None,
+        }
+    }
+}
+
+/// Server configuration (defaults = the paper's HashMap parameters, one
+/// shard — the old single-server shape).
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Hash buckets (paper: 2048).
+    /// Hash buckets per shard (paper: 2048).
     pub buckets: usize,
-    /// Max cached entries (paper: 10000).
+    /// Max cached entries per shard (paper: 10000).
     pub capacity: usize,
-    /// Worker threads serving the request queue.
+    /// Worker threads per shard serving its request queue.
     pub workers: usize,
+    /// Number of shards the router fans out over (min 1).
+    pub shards: usize,
+    /// One fleet-wide reclamation domain instead of one per shard.
+    pub shared_domain: bool,
+    /// The batcher's compute engine.
+    pub backend: Backend,
     /// How long the batcher waits to fill a batch after the first miss.
     pub batch_wait: Duration,
     /// Artifact directory for the PJRT engine.
@@ -58,9 +111,32 @@ impl Default for ServerConfig {
             buckets: 2048,
             capacity: 10_000,
             workers: 2,
+            shards: 1,
+            shared_domain: false,
+            backend: Backend::Pjrt,
             batch_wait: Duration::from_micros(200),
             artifact_dir: crate::runtime::default_artifact_dir(),
         }
+    }
+}
+
+impl ServerConfig {
+    /// Builder: set the shard count (min 1).
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.shards = n.max(1);
+        self
+    }
+
+    /// Builder: one shared fleet-wide domain instead of domain-per-shard.
+    pub fn with_shared_domain(mut self, yes: bool) -> Self {
+        self.shared_domain = yes;
+        self
+    }
+
+    /// Builder: select the compute backend.
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
     }
 }
 
@@ -75,268 +151,22 @@ pub struct Response {
     pub latency_ns: u64,
 }
 
-struct Request {
-    key: u32,
-    t0: u64,
-    reply: mpsc::Sender<Response>,
-}
-
-struct Shared<R: Reclaimer> {
-    /// This server's private reclamation domain (domain-per-shard).
-    domain: DomainRef<R>,
-    cache: FifoCache<u32, Payload, R>,
-    queue: Queue<Request, R>,
-    queued: AtomicUsize,
-    shutdown: AtomicBool,
-    metrics: Metrics,
-}
-
-/// The compute-cache server (paper HashMap benchmark, serving shape).
-pub struct CacheServer<R: Reclaimer> {
-    shared: Arc<Shared<R>>,
-    miss_tx: Mutex<Option<mpsc::Sender<Request>>>,
-    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
-}
-
-impl<R: Reclaimer> CacheServer<R> {
-    /// Start workers + batcher + engine in a fresh reclamation domain.
-    /// Fails if artifacts are missing.
-    pub fn start(cfg: ServerConfig) -> Result<Arc<Self>> {
-        Self::start_in(cfg, DomainRef::new_owned())
-    }
-
-    /// [`Self::start`] with an explicit domain (shared-shard setups).
-    pub fn start_in(cfg: ServerConfig, domain: DomainRef<R>) -> Result<Arc<Self>> {
-        let shared = Arc::new(Shared {
-            cache: FifoCache::new_in(domain.clone(), cfg.buckets, cfg.capacity),
-            queue: Queue::new_in(domain.clone()),
-            domain,
-            queued: AtomicUsize::new(0),
-            shutdown: AtomicBool::new(false),
-            metrics: Metrics::default(),
-        });
-        let (miss_tx, miss_rx) = mpsc::channel::<Request>();
-
-        let mut threads = Vec::new();
-        // Batcher thread owns the PJRT engine (PjRtClient is not Send, so
-        // it is created on this thread). Readiness is confirmed through a
-        // channel so start() fails fast on missing artifacts.
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        {
-            let shared = shared.clone();
-            let dir = cfg.artifact_dir.clone();
-            let wait = cfg.batch_wait;
-            threads.push(
-                std::thread::Builder::new().name("emr-batcher".into()).spawn(move || {
-                    let engine = match Engine::load(&dir) {
-                        Ok(e) => {
-                            let _ = ready_tx.send(Ok(()));
-                            e
-                        }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                            return;
-                        }
-                    };
-                    batcher_loop(&shared, &engine, miss_rx, wait);
-                })?,
-            );
-        }
-        ready_rx.recv().context("batcher thread died")??;
-
-        let server = Arc::new(Self {
-            shared: shared.clone(),
-            miss_tx: Mutex::new(Some(miss_tx)),
-            threads: Mutex::new(threads),
-        });
-        for w in 0..cfg.workers {
-            let shared = shared.clone();
-            let miss_tx = server.miss_tx.lock().unwrap().as_ref().unwrap().clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("emr-worker-{w}"))
-                .spawn(move || worker_loop(&shared, miss_tx))?;
-            server.threads.lock().unwrap().push(handle);
-        }
-        Ok(server)
-    }
-
-    /// Submit a request; the receiver yields the [`Response`].
-    pub fn submit(&self, key: u32) -> mpsc::Receiver<Response> {
-        let (tx, rx) = mpsc::channel();
-        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.shared.queue.enqueue(Cached, Request { key, t0: monotonic_ns(), reply: tx });
-        self.shared.queued.fetch_add(1, Ordering::Release);
-        rx
-    }
-
-    /// Blocking convenience: submit + wait.
-    pub fn request(&self, key: u32) -> Result<Response> {
-        self.submit(key).recv().context("server dropped request")
-    }
-
-    /// Current metrics (+ global unreclaimed-node count).
-    pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
-    }
-
-    /// Entries currently cached.
-    pub fn cache_len(&self) -> usize {
-        self.shared.cache.len()
-    }
-
-    /// Stop all threads; pending requests are drained first.
-    pub fn shutdown(&self) {
-        self.shared.shutdown.store(true, Ordering::Release);
-        // Dropping the miss sender unblocks the batcher once workers exit.
-        let mut threads = std::mem::take(&mut *self.threads.lock().unwrap());
-        // Workers exit on the flag; join them first so no more misses are
-        // produced, then close the miss channel for the batcher.
-        let batcher = if threads.is_empty() { None } else { Some(threads.remove(0)) };
-        for t in threads {
-            let _ = t.join();
-        }
-        *self.miss_tx.lock().unwrap() = None;
-        if let Some(b) = batcher {
-            let _ = b.join();
-        }
-    }
-}
-
-impl<R: Reclaimer> Drop for CacheServer<R> {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-fn worker_loop<R: Reclaimer>(shared: &Shared<R>, miss_tx: mpsc::Sender<Request>) {
-    // One registration for the worker's lifetime: every queue/cache
-    // operation below runs TLS-free through this handle.
-    let handle = shared.domain.register();
-    let mut idle_spins = 0u32;
-    loop {
-        match shared.queue.dequeue(&handle) {
-            Some(req) => {
-                idle_spins = 0;
-                shared.queued.fetch_sub(1, Ordering::Release);
-                // Guarded cache read: the payload is copied out under the
-                // guard (the "reuse" path of the paper's simulation).
-                let hit = shared.cache.get(&handle, &req.key, |v| Box::new(*v));
-                match hit {
-                    Some(data) => {
-                        shared.metrics.hits.fetch_add(1, Ordering::Relaxed);
-                        let _ = req.reply.send(Response {
-                            data,
-                            hit: true,
-                            latency_ns: monotonic_ns() - req.t0,
-                        });
-                    }
-                    None => {
-                        shared.metrics.misses.fetch_add(1, Ordering::Relaxed);
-                        if miss_tx.send(req).is_err() {
-                            return; // batcher gone: shutting down
-                        }
-                    }
-                }
-            }
-            None => {
-                if shared.shutdown.load(Ordering::Acquire)
-                    && shared.queued.load(Ordering::Acquire) == 0
-                {
-                    return;
-                }
-                // Lock-free queues cannot block; back off politely.
-                idle_spins += 1;
-                if idle_spins < 32 {
-                    std::thread::yield_now();
-                } else {
-                    std::thread::sleep(Duration::from_micros(100));
-                }
-            }
-        }
-    }
-}
-
-fn batcher_loop<R: Reclaimer>(
-    shared: &Shared<R>,
-    engine: &Engine,
-    miss_rx: mpsc::Receiver<Request>,
-    batch_wait: Duration,
-) {
-    let max_batch = engine.max_batch();
-    let handle = shared.domain.register();
-    let mut waiting: StdHashMap<u32, Vec<Request>> = StdHashMap::new();
-    loop {
-        // Block for the first miss (with a timeout to notice shutdown).
-        match miss_rx.recv_timeout(Duration::from_millis(5)) {
-            Ok(req) => {
-                waiting.entry(req.key).or_default().push(req);
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                if waiting.is_empty() {
-                    continue;
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                if waiting.is_empty() {
-                    return;
-                }
-            }
-        }
-        // Accumulate until the batch is full or the wait window closes.
-        let deadline = std::time::Instant::now() + batch_wait;
-        while waiting.len() < max_batch {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match miss_rx.recv_timeout(deadline - now) {
-                Ok(req) => {
-                    waiting.entry(req.key).or_default().push(req);
-                }
-                Err(_) => break,
-            }
-        }
-
-        // Dispatch one batch of distinct keys.
-        let keys: Vec<u32> = waiting.keys().copied().take(max_batch).collect();
-        let seeds: Vec<i32> = keys.iter().map(|&k| k as i32).collect();
-        match engine.execute(&seeds) {
-            Ok(results) => {
-                shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
-                shared.metrics.batched_keys.fetch_add(keys.len() as u64, Ordering::Relaxed);
-                for (key, row) in keys.iter().zip(results) {
-                    let mut payload: Payload = [0.0; DIM];
-                    payload.copy_from_slice(&row);
-                    // Insert evicts FIFO-oldest beyond capacity — retiring
-                    // 1 KiB nodes through the reclamation scheme.
-                    if !shared.cache.insert(&handle, *key, payload) {
-                        shared.metrics.evictions_observed.fetch_add(1, Ordering::Relaxed);
-                    }
-                    for req in waiting.remove(key).unwrap_or_default() {
-                        let _ = req.reply.send(Response {
-                            data: Box::new(payload),
-                            hit: false,
-                            latency_ns: monotonic_ns() - req.t0,
-                        });
-                    }
-                }
-            }
-            Err(e) => {
-                // Engine failure: drop the affected requests (receivers see
-                // a closed channel) and keep serving.
-                eprintln!("[batcher] execute failed: {e:#}");
-                for key in keys {
-                    waiting.remove(&key);
-                }
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench_fw::workload::compute_payload;
+    use crate::reclaim::ebr::Ebr;
     use crate::reclaim::stamp::StampIt;
+
+    fn tiny_synthetic() -> ServerConfig {
+        ServerConfig {
+            workers: 2,
+            capacity: 64,
+            buckets: 32,
+            ..ServerConfig::default()
+        }
+        .with_backend(Backend::synthetic())
+    }
 
     #[test]
     fn server_basic_roundtrip() {
@@ -395,5 +225,80 @@ mod tests {
             server.cache_len()
         );
         server.shutdown();
+    }
+
+    #[test]
+    fn synthetic_backend_serves_without_artifacts() {
+        // The artifact-free path: full router + shard + batcher stack, with
+        // responses matching the deterministic compute function exactly.
+        let server = Router::<StampIt>::start(tiny_synthetic()).unwrap();
+        let r1 = server.request(7).unwrap();
+        assert!(!r1.hit);
+        let want = compute_payload(7);
+        assert_eq!(r1.data[..], want[..], "synthetic result must be compute_payload(key)");
+        let r2 = server.request(7).unwrap();
+        assert!(r2.hit);
+        assert_eq!(r2.data[..], want[..]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        // Regression (satellite): submits onto a stopped server must error
+        // out instead of blocking forever on workers that have exited.
+        let server = Router::<Ebr>::start(tiny_synthetic()).unwrap();
+        let _ = server.request(1).unwrap();
+        server.shutdown();
+        let err = server.request(2);
+        assert!(err.is_err(), "request on a stopped server must fail, not hang");
+        // And the raw submit receiver is already closed.
+        let rx = server.submit(3);
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn single_shard_router_matches_cache_server_shape() {
+        // `with_shards(1)` is the old server: everything lands on shard 0.
+        let server = Router::<StampIt>::start(tiny_synthetic().with_shards(1)).unwrap();
+        assert_eq!(server.shard_count(), 1);
+        for key in [0u32, 1, 7, 0xFFFF_FFFF] {
+            assert_eq!(server.shard_of(key), 0);
+        }
+        let _ = server.request(11).unwrap();
+        let per_shard = server.shard_metrics();
+        assert_eq!(per_shard.len(), 1);
+        assert_eq!(per_shard[0].requests, 1);
+        assert_eq!(server.metrics().requests, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_shard_router_spreads_and_aggregates() {
+        let server = Router::<StampIt>::start(tiny_synthetic().with_shards(4)).unwrap();
+        let n = 256u32;
+        for key in 0..n {
+            let r = server.request(key).unwrap();
+            assert_eq!(r.data[..], compute_payload(key as u64)[..]);
+        }
+        let agg = server.metrics();
+        assert_eq!(agg.requests, n as u64);
+        assert_eq!(agg.hits + agg.misses, n as u64);
+        let per_shard = server.shard_metrics();
+        assert_eq!(per_shard.len(), 4);
+        assert_eq!(per_shard.iter().map(|m| m.requests).sum::<u64>(), n as u64);
+        // The key hash must actually spread load.
+        assert!(
+            per_shard.iter().all(|m| m.requests > 0),
+            "every shard should see traffic: {:?}",
+            per_shard.iter().map(|m| m.requests).collect::<Vec<_>>()
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("pjrt"), Some(Backend::Pjrt));
+        assert_eq!(Backend::parse("synthetic"), Some(Backend::synthetic()));
+        assert_eq!(Backend::parse("bogus"), None);
     }
 }

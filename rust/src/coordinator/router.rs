@@ -1,0 +1,360 @@
+//! The **router**: key-hash front-end over N [`Shard`]s.
+//!
+//! * `submit(key)` routes by [`shard_for_key`] — a pure function of the key
+//!   and the shard count, so the same key lands on the same shard across
+//!   restarts and processes.
+//! * One **shared batcher + engine thread** serves every shard's misses:
+//!   `PjRtClient` is not `Send`, so the engine stays unique regardless of
+//!   shard count; misses arrive tagged with their shard and results are
+//!   inserted back through a per-shard registered handle.
+//! * With `shards = 1` the router is exactly the old single `CacheServer`:
+//!   one domain, one worker pool, one queue, same batcher loop.
+//! * Domain modes: **domain-per-shard** (default — shards never share
+//!   retire lists, epochs or hazard registries; reclamation overhead stays
+//!   per-shard-thread-count) vs **shared-domain**
+//!   ([`ServerConfig::shared_domain`] — one fleet-wide domain, the
+//!   single-domain baseline the Stamp-it comparison study assumes). The
+//!   `shard_scaling` bench measures the two against each other.
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::shard::{Miss, Request, Shard, ShardShared};
+use super::{Backend, Payload, Response, ServerConfig};
+use crate::reclaim::{DomainRef, LocalHandle, Reclaimer};
+use crate::runtime::{Engine, DIM};
+use crate::util::error::{Context, Result};
+use crate::util::monotonic_ns;
+use crate::util::rng::mix64;
+use std::collections::HashMap as StdHashMap;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Deterministic key→shard routing: a pure function of `(key, shards)`,
+/// stable across restarts and processes. `shards = 1` always maps to 0.
+pub fn shard_for_key(key: u32, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    if shards == 1 {
+        return 0;
+    }
+    // mix64 avalanches the key over the full word; use the top half so the
+    // low-bit structure of small keys cannot skew the modulo.
+    ((mix64(key as u64) >> 32) as usize) % shards
+}
+
+/// The sharded compute-cache front-end (the paper's HashMap benchmark,
+/// serving shape, scaled out). See the module docs for the layering.
+pub struct Router<R: Reclaimer> {
+    shards: Vec<Shard<R>>,
+    /// The *distinct* reclamation domains backing the fleet: one per shard
+    /// in domain-per-shard mode, exactly one in shared-domain mode. Used
+    /// for double-count-free unreclaimed aggregation.
+    domains: Vec<DomainRef<R>>,
+    /// Router-level counters (engine batch dispatches span shards).
+    metrics: Arc<Metrics>,
+    miss_tx: Mutex<Option<mpsc::Sender<Miss>>>,
+    batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl<R: Reclaimer> Router<R> {
+    /// Start the fleet: `cfg.shards` shards — each with its own worker
+    /// pool and (unless `cfg.shared_domain`) its own reclamation domain —
+    /// plus the single shared batcher/engine thread. Fails fast (and tears
+    /// the fleet down again) if the engine cannot load.
+    pub fn start(cfg: ServerConfig) -> Result<Arc<Self>> {
+        let domains: Vec<DomainRef<R>> = if cfg.shared_domain {
+            vec![DomainRef::new_owned()]
+        } else {
+            (0..cfg.shards.max(1)).map(|_| DomainRef::new_owned()).collect()
+        };
+        Self::start_with_domains(cfg, domains)
+    }
+
+    /// [`Self::start`] with an explicit domain shared by every shard (the
+    /// old `CacheServer::start_in` shape; shared-shard setups and tests).
+    pub fn start_in(cfg: ServerConfig, domain: DomainRef<R>) -> Result<Arc<Self>> {
+        Self::start_with_domains(cfg, vec![domain])
+    }
+
+    fn start_with_domains(cfg: ServerConfig, domains: Vec<DomainRef<R>>) -> Result<Arc<Self>> {
+        let n = cfg.shards.max(1);
+        let (miss_tx, miss_rx) = mpsc::channel::<Miss>();
+        let mut shards: Vec<Shard<R>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let domain = domains[i % domains.len()].clone();
+            match Shard::start(i, &cfg, domain, miss_tx.clone()) {
+                Ok(s) => shards.push(s),
+                Err(e) => {
+                    for s in &shards {
+                        s.shutdown();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+
+        // Batcher thread owns the compute engine (PjRtClient is not Send,
+        // so it is created on this thread — the one engine thread of the
+        // whole fleet). Readiness is confirmed through a channel so
+        // start() fails fast on missing artifacts.
+        let metrics = Arc::new(Metrics::default());
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let batcher = {
+            let shareds: Vec<Arc<ShardShared<R>>> =
+                shards.iter().map(|s| s.shared().clone()).collect();
+            let metrics = metrics.clone();
+            let backend = cfg.backend.clone();
+            let dir = cfg.artifact_dir.clone();
+            let wait = cfg.batch_wait;
+            let spawned = std::thread::Builder::new().name("emr-batcher".into()).spawn(move || {
+                let engine = match BatchEngine::load(&backend, &dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                batcher_loop(&shareds, &metrics, &engine, miss_rx, wait);
+            });
+            match spawned {
+                Ok(b) => b,
+                Err(e) => {
+                    for s in &shards {
+                        s.shutdown();
+                    }
+                    return Err(e.into());
+                }
+            }
+        };
+        if let Err(e) = ready_rx.recv().context("batcher thread died").and_then(|r| r) {
+            // Engine failed to load: stop the worker pools we already
+            // started before surfacing the error.
+            for s in &shards {
+                s.shutdown();
+            }
+            drop(miss_tx);
+            let _ = batcher.join();
+            return Err(e);
+        }
+
+        Ok(Arc::new(Self {
+            shards,
+            domains,
+            metrics,
+            miss_tx: Mutex::new(Some(miss_tx)),
+            batcher: Mutex::new(Some(batcher)),
+        }))
+    }
+
+    /// Number of shards in the fleet.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard `key` routes to.
+    pub fn shard_of(&self, key: u32) -> usize {
+        shard_for_key(key, self.shards.len())
+    }
+
+    /// The shards themselves (per-shard metrics, cache sizes, domains).
+    pub fn shards(&self) -> &[Shard<R>] {
+        &self.shards
+    }
+
+    /// Submit a request; the receiver yields the [`Response`]. Routes by
+    /// key hash. On a stopped router the receiver is already closed.
+    pub fn submit(&self, key: u32) -> mpsc::Receiver<Response> {
+        self.shards[self.shard_of(key)].submit(key)
+    }
+
+    /// Blocking convenience: submit + wait.
+    pub fn request(&self, key: u32) -> Result<Response> {
+        self.submit(key).recv().context("server dropped request")
+    }
+
+    /// Rolled-up metrics: shard counters summed, plus the fleet-wide batch
+    /// counters and the unreclaimed-node population across the *distinct*
+    /// backing domains (no double counting in shared-domain mode).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut agg = MetricsSnapshot::default();
+        for s in &self.shards {
+            agg.add_counters(&s.shared().metrics.snapshot_with(0));
+        }
+        agg.batches = self.metrics.batches.load(Ordering::Relaxed);
+        agg.unreclaimed_nodes = self.domains.iter().map(|d| d.domain().unreclaimed()).sum();
+        agg
+    }
+
+    /// Per-shard snapshots, index-aligned with [`Self::shards`]. Each
+    /// carries its own domain's unreclaimed count; `batches` is a fleet
+    /// metric and stays 0 here (see [`Self::metrics`]).
+    pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(|s| s.metrics()).collect()
+    }
+
+    /// Entries currently cached across all shards.
+    pub fn cache_len(&self) -> usize {
+        self.shards.iter().map(|s| s.cache_len()).sum()
+    }
+
+    /// Stop the fleet: each shard drains and joins its workers (queued
+    /// stragglers are rejected, not leaked — see [`Shard`]), then the miss
+    /// channel closes and the batcher answers what it already holds and
+    /// exits.
+    pub fn shutdown(&self) {
+        for s in &self.shards {
+            s.shutdown();
+        }
+        *self.miss_tx.lock().unwrap() = None;
+        if let Some(b) = self.batcher.lock().unwrap().take() {
+            let _ = b.join();
+        }
+    }
+}
+
+impl<R: Reclaimer> Drop for Router<R> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The batcher's compute engine: real PJRT artifacts or the deterministic
+/// in-process fallback (the artifact-free path benches/CI smokes use).
+enum BatchEngine {
+    Pjrt(Engine),
+    Synthetic { max_batch: usize },
+}
+
+impl BatchEngine {
+    fn load(backend: &Backend, dir: &Path) -> Result<Self> {
+        match backend {
+            Backend::Pjrt => Ok(Self::Pjrt(Engine::load(dir)?)),
+            Backend::Synthetic { max_batch } => {
+                Ok(Self::Synthetic { max_batch: (*max_batch).max(1) })
+            }
+        }
+    }
+
+    fn max_batch(&self) -> usize {
+        match self {
+            Self::Pjrt(e) => e.max_batch(),
+            Self::Synthetic { max_batch } => *max_batch,
+        }
+    }
+
+    fn execute(&self, seeds: &[i32]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Self::Pjrt(e) => e.execute(seeds),
+            // Same deterministic function the bench workloads "calculate"
+            // with; keys are u32, so the i32 round-trip is lossless.
+            Self::Synthetic { .. } => Ok(seeds
+                .iter()
+                .map(|&s| crate::bench_fw::workload::compute_payload(s as u32 as u64).to_vec())
+                .collect()),
+        }
+    }
+}
+
+fn batcher_loop<R: Reclaimer>(
+    shards: &[Arc<ShardShared<R>>],
+    router_metrics: &Metrics,
+    engine: &BatchEngine,
+    miss_rx: mpsc::Receiver<Miss>,
+    batch_wait: Duration,
+) {
+    let max_batch = engine.max_batch();
+    // One registered handle per *distinct* shard domain (shards share the
+    // registration in shared-domain mode — no redundant registry entries
+    // inflating every scan): every cache insert below is TLS-free, and a
+    // key's whole answer path runs through the handle of the shard that
+    // owns it (the facade's HandleSource plumbing).
+    let mut by_domain: Vec<(usize, LocalHandle<R>)> = Vec::new();
+    let handles: Vec<LocalHandle<R>> = shards
+        .iter()
+        .map(|s| {
+            let key = s.domain.key();
+            match by_domain.iter().find(|(k, _)| *k == key) {
+                Some((_, h)) => h.clone(),
+                None => {
+                    let h = s.domain.register();
+                    by_domain.push((key, h.clone()));
+                    h
+                }
+            }
+        })
+        .collect();
+    // key → (owning shard, requests waiting for it). Key-hash routing means
+    // a key belongs to exactly one shard, so the tag is a scalar.
+    let mut waiting: StdHashMap<u32, (usize, Vec<Request>)> = StdHashMap::new();
+    loop {
+        // Block for the first miss (with a timeout to notice shutdown).
+        match miss_rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(m) => {
+                waiting.entry(m.req.key).or_insert((m.shard, Vec::new())).1.push(m.req);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if waiting.is_empty() {
+                    continue;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if waiting.is_empty() {
+                    return;
+                }
+            }
+        }
+        // Accumulate until the batch is full or the wait window closes.
+        let deadline = std::time::Instant::now() + batch_wait;
+        while waiting.len() < max_batch {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match miss_rx.recv_timeout(deadline - now) {
+                Ok(m) => {
+                    waiting.entry(m.req.key).or_insert((m.shard, Vec::new())).1.push(m.req);
+                }
+                Err(_) => break,
+            }
+        }
+
+        // Dispatch one batch of distinct keys (possibly spanning shards).
+        let keys: Vec<u32> = waiting.keys().copied().take(max_batch).collect();
+        let seeds: Vec<i32> = keys.iter().map(|&k| k as i32).collect();
+        match engine.execute(&seeds) {
+            Ok(results) => {
+                router_metrics.batches.fetch_add(1, Ordering::Relaxed);
+                for (key, row) in keys.iter().zip(results) {
+                    let Some((shard_idx, reqs)) = waiting.remove(key) else { continue };
+                    let shard = &shards[shard_idx];
+                    shard.metrics.batched_keys.fetch_add(1, Ordering::Relaxed);
+                    let mut payload: Payload = [0.0; DIM];
+                    payload.copy_from_slice(&row);
+                    // Insert evicts FIFO-oldest beyond capacity — retiring
+                    // 1 KiB nodes through the shard's reclamation domain.
+                    if !shard.cache.insert(&handles[shard_idx], *key, payload) {
+                        shard.metrics.evictions_observed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    for req in reqs {
+                        let _ = req.reply.send(Response {
+                            data: Box::new(payload),
+                            hit: false,
+                            latency_ns: monotonic_ns() - req.t0,
+                        });
+                    }
+                }
+            }
+            Err(e) => {
+                // Engine failure: drop the affected requests (receivers see
+                // a closed channel) and keep serving.
+                eprintln!("[batcher] execute failed: {e:#}");
+                for key in keys {
+                    waiting.remove(&key);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! One **shard** of the compute-cache fleet: today's server body — its own
+//! reclamation domain (unless the router shares one), FIFO-evicting
+//! lock-free cache, lock-free request queue and worker pool. Shards know
+//! nothing about routing: the [`super::Router`] hashes keys onto them and
+//! fans one shared batcher over their miss channels.
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::{Payload, Response, ServerConfig};
+use crate::ds::hashmap::FifoCache;
+use crate::ds::queue::Queue;
+use crate::reclaim::{Cached, DomainRef, Reclaimer};
+use crate::util::error::Result;
+use crate::util::monotonic_ns;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// One queued compute request (crate-internal: shards and the router's
+/// batcher exchange these).
+pub(crate) struct Request {
+    pub(crate) key: u32,
+    pub(crate) t0: u64,
+    pub(crate) reply: mpsc::Sender<Response>,
+}
+
+/// A cache miss traveling from a shard's worker to the router's shared
+/// batcher, tagged with the shard it must be answered into.
+pub(crate) struct Miss {
+    pub(crate) shard: usize,
+    pub(crate) req: Request,
+}
+
+/// State shared between a shard's workers, the router's batcher, and the
+/// front-end handle.
+pub(crate) struct ShardShared<R: Reclaimer> {
+    /// This shard's reclamation domain (private in domain-per-shard mode,
+    /// a clone of the fleet-wide one in shared-domain mode).
+    pub(crate) domain: DomainRef<R>,
+    pub(crate) cache: FifoCache<u32, Payload, R>,
+    pub(crate) queue: Queue<Request, R>,
+    queued: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Submits currently between their shutdown-flag check and their
+    /// enqueue. `shutdown()` quiesces on this (Dekker-style pairing with
+    /// the flag, see [`Shard::submit`]) so no enqueue can land after the
+    /// post-join drain.
+    active_submits: AtomicUsize,
+    pub(crate) metrics: Metrics,
+}
+
+/// One shard: worker pool + cache + queue over one reclamation domain.
+/// Started and stopped by its owning [`super::Router`].
+pub struct Shard<R: Reclaimer> {
+    index: usize,
+    shared: Arc<ShardShared<R>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl<R: Reclaimer> Shard<R> {
+    /// Spawn this shard's worker pool. Misses flow into `miss_tx` (the
+    /// router's single shared batcher).
+    pub(crate) fn start(
+        index: usize,
+        cfg: &ServerConfig,
+        domain: DomainRef<R>,
+        miss_tx: mpsc::Sender<Miss>,
+    ) -> Result<Self> {
+        let shared = Arc::new(ShardShared {
+            cache: FifoCache::new_in(domain.clone(), cfg.buckets, cfg.capacity),
+            queue: Queue::new_in(domain.clone()),
+            domain,
+            queued: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            active_submits: AtomicUsize::new(0),
+            metrics: Metrics::default(),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let worker_shared = shared.clone();
+            let miss_tx = miss_tx.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("emr-s{index}-w{w}"))
+                .spawn(move || worker_loop(index, &worker_shared, miss_tx));
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // Stop the workers already running before bailing.
+                    shared.shutdown.store(true, Ordering::Release);
+                    for t in workers {
+                        let _ = t.join();
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+        Ok(Self { index, shared, workers: Mutex::new(workers) })
+    }
+
+    /// This shard's position in the router's fleet.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Submit a request to this shard; the receiver yields the [`Response`].
+    ///
+    /// After [`shutdown`](Self::shutdown) the receiver comes back already
+    /// closed (`recv` errors immediately) instead of blocking forever on
+    /// workers that have exited — the stopped-server fix.
+    pub fn submit(&self, key: u32) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        // Dekker-style pairing with shutdown(): mark this submit in-flight
+        // *before* checking the flag (both SeqCst). Either we observe the
+        // flag and reject, or shutdown()'s quiesce loop observes our
+        // marker and waits for the enqueue below — so an enqueue can never
+        // land after the post-join drain and leave its receiver hanging.
+        self.shared.active_submits.fetch_add(1, Ordering::SeqCst);
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            self.shared.active_submits.fetch_sub(1, Ordering::Release);
+            // Stopped: reject by dropping the sender (closed channel).
+            return rx;
+        }
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.shared.queue.enqueue(Cached, Request { key, t0: monotonic_ns(), reply: tx });
+        self.shared.queued.fetch_add(1, Ordering::Release);
+        // Release: the enqueue happens-before shutdown() sees the count
+        // drop, hence before the workers are joined and the queue drained.
+        self.shared.active_submits.fetch_sub(1, Ordering::Release);
+        rx
+    }
+
+    pub(crate) fn shared(&self) -> &Arc<ShardShared<R>> {
+        &self.shared
+    }
+
+    /// This shard's reclamation domain.
+    pub fn domain(&self) -> &DomainRef<R> {
+        &self.shared.domain
+    }
+
+    /// Entries currently cached in this shard.
+    pub fn cache_len(&self) -> usize {
+        self.shared.cache.len()
+    }
+
+    /// This shard's counters, with the unreclaimed-node count scoped to
+    /// its own domain (in shared-domain mode every shard reports the same
+    /// fleet-wide domain count).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot_with(self.shared.domain.domain().unreclaimed())
+    }
+
+    /// Stop this shard's workers. Requests already queued are drained and
+    /// served first; anything that raced past the shutdown flag afterwards
+    /// is rejected (its reply sender is dropped, so the receiver observes
+    /// a closed channel instead of blocking forever).
+    pub(crate) fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Quiesce submits that raced past the flag check (see submit()):
+        // once this count reads 0 after the SeqCst flag store, every later
+        // submit rejects, so no new enqueue can appear below. The load must
+        // be SeqCst to close the store-buffering outcome (an Acquire load
+        // is outside the SC order and could miss a SeqCst fetch_add); it
+        // still carries Acquire, so the Release decrement's enqueue
+        // happens-before the drain.
+        while self.shared.active_submits.load(Ordering::SeqCst) != 0 {
+            std::thread::yield_now();
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for t in workers {
+            let _ = t.join();
+        }
+        // Workers are gone; nothing will answer what is still queued.
+        let handle = self.shared.domain.register();
+        while let Some(req) = self.shared.queue.dequeue(&handle) {
+            self.shared.queued.fetch_sub(1, Ordering::Release);
+            drop(req); // dropping the reply sender closes the channel
+        }
+    }
+}
+
+fn worker_loop<R: Reclaimer>(index: usize, shared: &ShardShared<R>, miss_tx: mpsc::Sender<Miss>) {
+    // One registration for the worker's lifetime: every queue/cache
+    // operation below runs TLS-free through this handle — one registered
+    // handle serves a request's whole cache/queue path.
+    let handle = shared.domain.register();
+    let mut idle_spins = 0u32;
+    loop {
+        match shared.queue.dequeue(&handle) {
+            Some(req) => {
+                idle_spins = 0;
+                shared.queued.fetch_sub(1, Ordering::Release);
+                // Guarded cache read: the payload is copied out under the
+                // guard (the "reuse" path of the paper's simulation).
+                let hit = shared.cache.get(&handle, &req.key, |v| Box::new(*v));
+                match hit {
+                    Some(data) => {
+                        shared.metrics.hits.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.reply.send(Response {
+                            data,
+                            hit: true,
+                            latency_ns: monotonic_ns() - req.t0,
+                        });
+                    }
+                    None => {
+                        shared.metrics.misses.fetch_add(1, Ordering::Relaxed);
+                        if miss_tx.send(Miss { shard: index, req }).is_err() {
+                            return; // batcher gone: shutting down
+                        }
+                    }
+                }
+            }
+            None => {
+                if shared.shutdown.load(Ordering::Acquire)
+                    && shared.queued.load(Ordering::Acquire) == 0
+                {
+                    return;
+                }
+                // Lock-free queues cannot block; back off politely.
+                idle_spins += 1;
+                if idle_spins < 32 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            }
+        }
+    }
+}

@@ -61,12 +61,15 @@
 //! * [`bench_fw`] — the benchmark harness regenerating every figure of the
 //!   paper's evaluation (throughput sweeps, reclamation-efficiency time
 //!   series, warm-up trials), one fresh domain per configuration.
-//! * [`coordinator`] + [`runtime`] — a compute-cache server that makes the
-//!   paper's HashMap workload real: worker threads serve batched compute
-//!   requests through the reclaimed hash-map (one domain per server =
-//!   domain-per-shard), dispatching misses to an AOT-compiled JAX/Pallas
-//!   computation via PJRT (behind the `pjrt` cargo feature; stubbed
-//!   otherwise so the crate builds std-only and offline).
+//! * [`coordinator`] + [`runtime`] — a **sharded** compute-cache fleet
+//!   that makes the paper's HashMap workload real: a
+//!   [`coordinator::Router`] key-hashes requests onto N
+//!   [`coordinator::Shard`]s (each its own worker pool + reclaimed
+//!   hash-map + — by default — its own reclamation domain), while one
+//!   shared batcher thread dispatches misses to an AOT-compiled
+//!   JAX/Pallas computation via PJRT (behind the `pjrt` cargo feature) or
+//!   to a deterministic synthetic backend (artifact-free; what benches
+//!   and CI smokes run).
 //! * [`util`] — std-only stand-ins for `rand`/`clap`/`criterion`/
 //!   `proptest`/`anyhow`/`crossbeam_utils::CachePadded`.
 //!

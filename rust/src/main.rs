@@ -9,6 +9,8 @@
 //! repro micro region|stamp-pool [opts]        # E13/E14
 //! repro ablation threshold|hp|epoch [opts]    # A1/A2/A3
 //! repro serve [--scheme stamp] [--requests N] # coordinator (E15)
+//!             [--shards N] [--shared-domain] [--backend pjrt|synthetic]
+//! repro shard-scaling [opts]                  # E16 (artifact-free)
 //!
 //! common options:
 //!   --threads 1,2,4   --trials N   --secs S   --schemes all|ebr,stamp,...
@@ -17,7 +19,7 @@
 
 use emr::bench_fw::figures::{self, Workload};
 use emr::bench_fw::{report, BenchParams};
-use emr::coordinator::{CacheServer, ServerConfig};
+use emr::coordinator::{Backend, CacheServer, ServerConfig};
 use emr::dispatch_scheme;
 use emr::reclaim::{Reclaimer, SchemeId};
 use emr::util::cli::Args;
@@ -55,6 +57,7 @@ fn main() {
             other => usage(&format!("ablation {:?}", other)),
         },
         Some("serve") => serve(&args),
+        Some("shard-scaling") => figures::fig_shard_scaling(&params),
         _ => usage(""),
     }
 }
@@ -71,18 +74,28 @@ fn serve(args: &Args) {
     let requests = args.usize_or("requests", 2000);
     let key_space = args.u64_or("keys", 30_000);
     let capacity = args.usize_or("capacity", 10_000);
+    let shards = args.usize_or("shards", 1);
+    let shared_domain = args.flag("shared-domain");
+    let backend = Backend::parse(args.get_or("backend", "pjrt")).unwrap_or_else(|| {
+        eprintln!("unknown --backend (pjrt|synthetic)");
+        std::process::exit(2);
+    });
 
-    fn run<R: Reclaimer>(clients: usize, requests: usize, key_space: u64, capacity: usize) {
-        let server = CacheServer::<R>::start(ServerConfig {
-            capacity,
-            workers: 2,
-            ..ServerConfig::default()
-        })
-        .unwrap_or_else(|e| {
+    struct ServeOpts {
+        clients: usize,
+        requests: usize,
+        key_space: u64,
+        cfg: ServerConfig,
+    }
+
+    fn run<R: Reclaimer>(o: ServeOpts) {
+        let ServeOpts { clients, requests, key_space, cfg } = o;
+        let shards = cfg.shards;
+        let server = CacheServer::<R>::start(cfg).unwrap_or_else(|e| {
             eprintln!("server start failed: {e:#}");
             std::process::exit(1);
         });
-        println!("serving with scheme {} …", R::NAME);
+        println!("serving with scheme {} ({} shard(s)) …", R::NAME, shards);
         let t0 = emr::util::monotonic_ns();
         let latencies: Vec<Vec<f64>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..clients)
@@ -118,10 +131,20 @@ fn serve(args: &Args) {
             emr::util::stats::fmt_ns(s.max),
         );
         println!("{m}");
+        if server.shard_count() > 1 {
+            for (i, sm) in server.shard_metrics().iter().enumerate() {
+                println!("  shard {i}: {sm}");
+            }
+        }
         println!("cache entries at end: {}", server.cache_len());
         server.shutdown();
     }
-    dispatch_scheme!(scheme, run, clients, requests, key_space, capacity);
+    let cfg = ServerConfig { capacity, workers: 2, ..ServerConfig::default() }
+        .with_shards(shards)
+        .with_shared_domain(shared_domain)
+        .with_backend(backend);
+    let opts = ServeOpts { clients, requests, key_space, cfg };
+    dispatch_scheme!(scheme, run, opts);
 }
 
 fn usage(context: &str) -> ! {
@@ -139,6 +162,8 @@ fn usage(context: &str) -> ! {
          \x20 micro region|stamp-pool              microbenchmarks (E13/E14)\n\
          \x20 ablation threshold|hp|epoch          design-choice ablations (A1-A3)\n\
          \x20 serve                                compute-cache coordinator (E15)\n\
+         \x20   [--shards N] [--shared-domain] [--backend pjrt|synthetic]\n\
+         \x20 shard-scaling                        router shard sweep, artifact-free (E16)\n\
          \n\
          common options: --threads 1,2,4 --trials N --secs S --schemes all\n\
          \x20               --alloc pool|system --workload PCT --csv FILE --paper"

@@ -40,6 +40,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::facade::{Guard, Owned};
+use super::retire::AsRetireHeader;
 use super::{Node, Reclaimer};
 
 /// Debug-checked, zero-release-cost exclusive access to per-thread scheme
@@ -108,12 +109,25 @@ pub struct Domain<R: Reclaimer> {
     /// cache entry, each thread's next sweep drops its own (see
     /// `impl_domain_statics!`).
     cache_pins: AtomicUsize,
+    /// Nodes retired into this domain and not yet reclaimed — the paper's
+    /// reclamation-efficiency metric, **per domain** (the process-wide
+    /// analogue is [`crate::alloc::unreclaimed`]). Incremented by the
+    /// handle/guard retire wrappers; decremented by
+    /// [`super::retire::reclaim_one`] through the counter pointer stamped
+    /// into each retired node's header.
+    pending_retires: crate::util::cache_pad::CachePadded<std::sync::atomic::AtomicU64>,
 }
 
 impl<R: Reclaimer> Domain<R> {
     /// A fresh, empty domain.
     pub fn new() -> Self {
-        Self { state: R::new_domain_state(), cache_pins: AtomicUsize::new(0) }
+        Self {
+            state: R::new_domain_state(),
+            cache_pins: AtomicUsize::new(0),
+            pending_retires: crate::util::cache_pad::CachePadded::new(
+                std::sync::atomic::AtomicU64::new(0),
+            ),
+        }
     }
 
     /// The process-wide default domain (what `Queue::new()` &c. use).
@@ -124,6 +138,26 @@ impl<R: Reclaimer> Domain<R> {
     /// The scheme's state (stamp pool / epoch domain / hazard registry).
     pub fn state(&self) -> &R::DomainState {
         &self.state
+    }
+
+    /// Nodes retired into this domain that have not been reclaimed yet.
+    ///
+    /// Per-domain view of the paper's reclamation-efficiency metric: with N
+    /// isolated domains in one process (one per shard), each reports only
+    /// its own parked population, while [`crate::alloc::unreclaimed`] keeps
+    /// the process-wide total (which additionally counts live, never-retired
+    /// nodes).
+    pub fn unreclaimed(&self) -> u64 {
+        self.pending_retires.load(Ordering::Relaxed)
+    }
+
+    /// Account one retire into this domain and stamp the node's header with
+    /// the pending counter so the eventual reclaim decrements it. Called by
+    /// the wrapper retire sites ([`LocalHandle::retire`], `GuardPtr::reclaim`)
+    /// right before the scheme's `retire` runs.
+    pub(crate) fn track_retire(&self, hdr: &super::retire::RetireHeader) {
+        hdr.set_pending_counter(&self.pending_retires);
+        self.pending_retires.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -345,6 +379,9 @@ impl<R: Reclaimer> LocalHandle<R> {
     /// See [`Reclaimer::retire`]: the node must be unlinked, retired exactly
     /// once, and have been allocated by [`super::alloc_node`] for `R`.
     pub unsafe fn retire<T: Send + Sync + 'static>(&self, node: *mut Node<T, R>) {
+        // Per-domain accounting (incl. stamping the node with the pending
+        // counter) must precede the scheme retire: LFRC may free inline.
+        self.domain().track_retire((*node).header().retire_header());
         R::retire(self.domain_state(), self.local(), node)
     }
 
@@ -354,7 +391,7 @@ impl<R: Reclaimer> LocalHandle<R> {
     pub fn retire_owned<T: Send + Sync + 'static>(&self, node: Owned<T, R>) {
         // SAFETY: see above — every obligation of `Reclaimer::retire` is
         // discharged by the `Owned` invariants.
-        unsafe { R::retire(self.domain_state(), self.local(), node.into_raw()) }
+        unsafe { self.retire(node.into_raw()) }
     }
 
     /// Is this handle's owned domain kept alive only by TLS cache entries

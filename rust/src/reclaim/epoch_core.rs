@@ -41,7 +41,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::domain::LocalCell;
-use super::registry::{ThreadEntry, ThreadList};
+use super::registry::{EntryRef, ThreadList};
 use super::retire::{prepare_retire, GlobalRetireList, RetireList};
 use super::{Node, Reclaimer};
 use crate::util::cache_pad::CachePadded;
@@ -161,7 +161,7 @@ impl EpochDomain {
 
 /// Thread-local epoch state (the `LocalState` cached by a handle).
 pub struct LocalEpoch {
-    entry: &'static ThreadEntry<EpochSlot>,
+    entry: EntryRef<EpochSlot>,
     retired: RetireList,
     nesting: u32,
     /// Outermost entries since the last advance attempt / DEBRA check.
@@ -180,8 +180,9 @@ enum Deferred {
 
 impl LocalEpoch {
     /// Register the calling thread with `domain` (recycling an inactive
-    /// registry entry when one exists; entries are immortal, so the
-    /// `'static` borrow survives any domain lifetime).
+    /// registry entry when one exists; the [`EntryRef`] stays valid because
+    /// the handle holding this state keeps the domain — and hence its
+    /// entry arena — alive).
     pub fn register(domain: &EpochDomain) -> Self {
         let entry = domain.threads.acquire(EpochSlot::default, |slot| {
             slot.announce(0, false, Ordering::Release);
@@ -396,7 +397,7 @@ pub fn unregister(domain: &EpochDomain, local: &mut LocalEpoch) {
     let (chain, _) = local.retired.take_chain();
     domain.orphans.push_sublist(chain);
     local.entry.data().announce(0, false, Ordering::Release);
-    domain.threads.release(local.entry);
+    domain.threads.release(&local.entry);
 }
 
 /// Domain teardown: reclaim every parked orphan. Exclusive access — no

@@ -4,8 +4,10 @@
 //! as explained by Michael").
 //!
 //! * Each thread owns a registry entry with `K_STATIC` inline hazard slots
-//!   plus a chain of overflow chunks, allocated on demand and never freed
-//!   (immortal, like the registry entries themselves).
+//!   plus a chain of overflow chunks, allocated on demand and owned by the
+//!   entry (the domain's registry arena frees entries and chunks together
+//!   when the domain drops; while the domain lives they are recycled, never
+//!   freed).
 //! * `protect` publishes the candidate pointer in a slot and re-validates
 //!   the source — the publish/validate handshake is ordered by a SeqCst
 //!   fence that pairs with the SeqCst fence in `scan`.
@@ -25,7 +27,7 @@ use std::ptr;
 use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
 
 use super::domain::LocalCell;
-use super::registry::{ThreadEntry, ThreadList};
+use super::registry::{EntryRef, ThreadList};
 use super::retire::{
     prepare_retire, AsRetireHeader, GlobalRetireList, Retired, RetireHeader, RetireList,
 };
@@ -53,7 +55,9 @@ impl AsRetireHeader for HpHeader {
     }
 }
 
-/// Dynamically added block of hazard slots (immortal once published).
+/// Dynamically added block of hazard slots. Owned by the registry entry it
+/// is chained from (freed when the entry — i.e. the domain's registry
+/// arena — drops).
 struct SlotChunk {
     slots: [AtomicUsize; CHUNK_SLOTS],
     next: AtomicPtr<SlotChunk>,
@@ -71,6 +75,49 @@ impl Default for HpSlots {
             inline: [const { AtomicUsize::new(0) }; K_STATIC],
             extra: AtomicPtr::new(ptr::null_mut()),
         }
+    }
+}
+
+impl Drop for HpSlots {
+    fn drop(&mut self) {
+        // Runs only when the registry arena drops with its domain: no
+        // thread can still publish into (or hold a SlotRef to) these
+        // chunks — holders keep the domain alive.
+        let mut chunk = *self.extra.get_mut();
+        while !chunk.is_null() {
+            // SAFETY: chunks were allocated via Box::into_raw in
+            // acquire_slot and are exclusively ours now.
+            let mut c = unsafe { Box::from_raw(chunk) };
+            chunk = *c.next.get_mut();
+        }
+    }
+}
+
+/// Copyable reference to one hazard slot (inline in a registry entry or in
+/// a [`SlotChunk`]). Valid while the owning domain is alive — every holder
+/// (an [`HpLocal`] free-list or a guard's [`HpGuardState`]) sits behind a
+/// `LocalHandle` that keeps the domain, hence the slot arena, alive.
+#[derive(Clone, Copy)]
+pub struct SlotRef(std::ptr::NonNull<AtomicUsize>);
+
+// SAFETY: a SlotRef is a shared reference to an AtomicUsize in disguise
+// (see validity above); AtomicUsize is Send + Sync.
+unsafe impl Send for SlotRef {}
+unsafe impl Sync for SlotRef {}
+
+impl SlotRef {
+    fn new(slot: &AtomicUsize) -> Self {
+        Self(std::ptr::NonNull::from(slot))
+    }
+}
+
+impl std::ops::Deref for SlotRef {
+    type Target = AtomicUsize;
+
+    #[inline]
+    fn deref(&self) -> &AtomicUsize {
+        // SAFETY: validity contract in the type docs.
+        unsafe { self.0.as_ref() }
     }
 }
 
@@ -115,9 +162,9 @@ impl HpDomain {
 
 /// Thread-local hazard-pointer state (the `LocalState` cached by a handle).
 pub struct HpLocal {
-    entry: &'static ThreadEntry<HpSlots>,
+    entry: EntryRef<HpSlots>,
     /// Currently unpublished slots available to guards.
-    free_slots: Vec<&'static AtomicUsize>,
+    free_slots: Vec<SlotRef>,
     retired: RetireList,
 }
 
@@ -137,19 +184,18 @@ impl HpLocal {
         // Collect every slot of the entry (inline + previously grown
         // chunks) — all must be unpublished (previous owner's guards are
         // dropped before its handle is).
-        let mut free_slots: Vec<&'static AtomicUsize> = Vec::with_capacity(K_STATIC);
+        let mut free_slots: Vec<SlotRef> = Vec::with_capacity(K_STATIC);
         for s in &entry.data().inline {
             debug_assert_eq!(s.load(Ordering::Relaxed), 0);
-            // SAFETY: registry entries are immortal.
-            free_slots.push(unsafe { &*(s as *const AtomicUsize) });
+            free_slots.push(SlotRef::new(s));
         }
         let mut chunk = entry.data().extra.load(Ordering::Acquire);
         while !chunk.is_null() {
-            // SAFETY: chunks are immortal.
+            // SAFETY: chunks live as long as their entry, i.e. the domain.
             let c = unsafe { &*chunk };
             for s in &c.slots {
                 debug_assert_eq!(s.load(Ordering::Relaxed), 0);
-                free_slots.push(unsafe { &*(s as *const AtomicUsize) });
+                free_slots.push(SlotRef::new(s));
             }
             chunk = c.next.load(Ordering::Acquire);
         }
@@ -158,24 +204,28 @@ impl HpLocal {
 
     /// Take a free slot, growing the dynamic chunk chain if needed
     /// (Michael's extended scheme).
-    fn acquire_slot(&mut self, domain: &HpDomain) -> &'static AtomicUsize {
+    fn acquire_slot(&mut self, domain: &HpDomain) -> SlotRef {
         if let Some(s) = self.free_slots.pop() {
             return s;
         }
-        let chunk = Box::leak(Box::new(SlotChunk {
+        let chunk = Box::into_raw(Box::new(SlotChunk {
             slots: [const { AtomicUsize::new(0) }; CHUNK_SLOTS],
             next: AtomicPtr::new(ptr::null_mut()),
         }));
         domain.total_slots.fetch_add(CHUNK_SLOTS as u64, Ordering::Relaxed);
         // Prepend to the entry's chunk chain (publish with Release so
-        // scanners see initialized slots).
+        // scanners see initialized slots). The entry owns the chunk from
+        // the moment the CAS succeeds (freed in HpSlots::drop).
+        // SAFETY: `chunk` is ours until published, then lives as long as
+        // the entry.
+        let chunk = unsafe { &*chunk };
         let extra = &self.entry.data().extra;
         let mut head = extra.load(Ordering::Relaxed);
         loop {
             chunk.next.store(head, Ordering::Relaxed);
             match extra.compare_exchange_weak(
                 head,
-                chunk as *mut _,
+                chunk as *const SlotChunk as *mut SlotChunk,
                 Ordering::Release,
                 Ordering::Relaxed,
             ) {
@@ -184,9 +234,9 @@ impl HpLocal {
             }
         }
         for s in chunk.slots.iter().skip(1) {
-            self.free_slots.push(unsafe { &*(s as *const AtomicUsize) });
+            self.free_slots.push(SlotRef::new(s));
         }
-        unsafe { &*(&chunk.slots[0] as *const AtomicUsize) }
+        SlotRef::new(&chunk.slots[0])
     }
 }
 
@@ -275,11 +325,11 @@ fn flush_impl(domain: &HpDomain, local: &LocalCell<HpLocal>) {
 /// on guard drop).
 #[derive(Default)]
 pub struct HpGuardState {
-    slot: Option<&'static AtomicUsize>,
+    slot: Option<SlotRef>,
 }
 
 impl HpGuardState {
-    fn slot(&mut self, domain: &HpDomain, local: &LocalCell<HpLocal>) -> &'static AtomicUsize {
+    fn slot(&mut self, domain: &HpDomain, local: &LocalCell<HpLocal>) -> SlotRef {
         if let Some(s) = self.slot {
             return s;
         }
@@ -317,7 +367,7 @@ unsafe impl Reclaimer for Hp {
         scan_with(domain, &mut local.retired);
         let (chain, _) = local.retired.take_chain();
         domain.orphans.push_sublist(chain);
-        domain.threads.release(local.entry);
+        domain.threads.release(&local.entry);
     }
 
     fn protect<T: Send + Sync + 'static>(

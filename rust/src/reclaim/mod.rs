@@ -363,7 +363,9 @@ impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
         debug_assert!(!self.ptr.is_null());
         let node = self.ptr.get();
         self.reset();
-        R::retire(self.handle.domain_state(), self.handle.local(), node);
+        // Route through the handle wrapper so the domain's pending-retire
+        // accounting always runs (one funnel for every retire path).
+        self.handle.retire(node);
     }
 }
 

@@ -1,21 +1,27 @@
 //! Per-domain thread registries.
 //!
 //! Every reclamation domain keeps a lock-free list of per-thread entries
-//! (hazard-pointer records, epoch records, ...). Entries are never freed —
-//! they are marked inactive when a thread's handle drops and recycled by
-//! later threads, so the list length is bounded by the *peak* number of
-//! concurrently registered threads
-//! (the paper's schemes reuse their `thread_control_block`s the same way,
-//! and the implementation "works with arbitrary numbers of threads that can
-//! be started and stopped arbitrarily").
+//! (hazard-pointer records, epoch records, ...). Entries are **arena-owned
+//! by the list**: they are never freed while the list lives — they are
+//! marked inactive when a thread's handle drops and recycled by later
+//! threads, so the list length is bounded by the *peak* number of
+//! concurrently registered threads (the paper's schemes reuse their
+//! `thread_control_block`s the same way, and the implementation "works with
+//! arbitrary numbers of threads that can be started and stopped
+//! arbitrarily"). When the list itself drops — which happens exactly when
+//! its owning [`crate::reclaim::Domain`] drops — every entry is returned to
+//! the allocator, so per-domain registries no longer cost `domains × peak
+//! threads` leaked entries (the ROADMAP's "registry entry reclamation"
+//! item).
 //!
-//! Iteration is wait-free and never observes dangling entries (entries are
-//! immortal); schemes must tolerate entries flipping between active and
-//! inactive concurrently with a scan.
+//! Iteration is wait-free and never observes dangling entries (entries live
+//! as long as the list being iterated); schemes must tolerate entries
+//! flipping between active and inactive concurrently with a scan.
 
+use std::ptr::NonNull;
 use std::sync::atomic::{AtomicBool, AtomicPtr, Ordering};
 
-/// One immortal per-thread entry carrying scheme state `E`.
+/// One arena-owned per-thread entry carrying scheme state `E`.
 pub struct ThreadEntry<E> {
     next: *const ThreadEntry<E>,
     active: AtomicBool,
@@ -35,7 +41,48 @@ impl<E> ThreadEntry<E> {
     }
 }
 
-/// Global lock-free list of [`ThreadEntry`]s with inactive-entry reuse.
+/// A copyable reference to a [`ThreadEntry`] owned by some [`ThreadList`]
+/// arena. This is what per-thread scheme state ([`crate::reclaim::Domain`]
+/// local states) stores instead of a lifetime-infected borrow.
+///
+/// # Validity
+///
+/// An `EntryRef` is valid for exactly as long as its owning `ThreadList`
+/// (i.e. the domain that owns the list) is alive. Every holder upholds
+/// this structurally: local states live inside a
+/// [`crate::reclaim::LocalHandle`], which owns a `DomainRef` that keeps the
+/// domain — and hence the list and all its entries — alive; `Domain::drop`
+/// (which frees the entries) cannot run while any handle exists.
+pub struct EntryRef<E>(NonNull<ThreadEntry<E>>);
+
+impl<E> Clone for EntryRef<E> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<E> Copy for EntryRef<E> {}
+
+impl<E> EntryRef<E> {
+    /// Identity of the underlying entry (tests / diagnostics).
+    pub fn as_ptr(&self) -> *const ThreadEntry<E> {
+        self.0.as_ptr()
+    }
+}
+
+impl<E> std::ops::Deref for EntryRef<E> {
+    type Target = ThreadEntry<E>;
+
+    #[inline]
+    fn deref(&self) -> &ThreadEntry<E> {
+        // SAFETY: the validity contract in the type docs — the holder keeps
+        // the owning list (domain) alive, and entries are never freed
+        // individually.
+        unsafe { self.0.as_ref() }
+    }
+}
+
+/// Lock-free list of [`ThreadEntry`]s with inactive-entry reuse. The list
+/// owns its entries (arena): they are freed in `Drop`, not before.
 pub struct ThreadList<E: Send + Sync + 'static> {
     head: AtomicPtr<ThreadEntry<E>>,
 }
@@ -48,15 +95,11 @@ impl<E: Send + Sync + 'static> ThreadList<E> {
     /// Acquire an entry for the calling thread: recycle an inactive one or
     /// allocate and publish a new one. `fresh` builds the state for a brand
     /// new entry; `recycle` resets the state of a reused entry.
-    pub fn acquire(
-        &self,
-        fresh: impl FnOnce() -> E,
-        recycle: impl FnOnce(&E),
-    ) -> &'static ThreadEntry<E> {
+    pub fn acquire(&self, fresh: impl FnOnce() -> E, recycle: impl FnOnce(&E)) -> EntryRef<E> {
         // Try to recycle an inactive entry.
         let mut cur = self.head.load(Ordering::Acquire);
         while !cur.is_null() {
-            // SAFETY: entries are immortal.
+            // SAFETY: published entries live as long as the list.
             let entry = unsafe { &*cur };
             if !entry.is_active()
                 && entry
@@ -65,24 +108,26 @@ impl<E: Send + Sync + 'static> ThreadList<E> {
                     .is_ok()
             {
                 recycle(&entry.data);
-                // SAFETY: immortal entry — 'static is accurate.
-                return unsafe { &*(entry as *const ThreadEntry<E>) };
+                // SAFETY: cur is non-null (loop invariant).
+                return EntryRef(unsafe { NonNull::new_unchecked(cur) });
             }
             cur = entry.next as *mut ThreadEntry<E>;
         }
-        // Allocate a new entry and push it (entries are immortal; the leak
-        // is intentional and bounded by the peak thread count).
-        let entry = Box::leak(Box::new(ThreadEntry {
+        // Allocate a new entry and push it. The list owns it from the
+        // moment the publishing CAS succeeds; it is freed when the list
+        // (its domain) drops.
+        let entry = Box::into_raw(Box::new(ThreadEntry {
             next: std::ptr::null(),
             active: AtomicBool::new(true),
             data: fresh(),
         }));
         let mut head = self.head.load(Ordering::Relaxed);
         loop {
-            entry.next = head;
+            // SAFETY: we exclusively own the unpublished entry.
+            unsafe { (*entry).next = head };
             match self.head.compare_exchange_weak(
                 head,
-                entry as *mut _,
+                entry,
                 Ordering::Release,
                 Ordering::Relaxed,
             ) {
@@ -90,7 +135,8 @@ impl<E: Send + Sync + 'static> ThreadList<E> {
                 Err(h) => head = h,
             }
         }
-        entry
+        // SAFETY: Box::into_raw never returns null.
+        EntryRef(unsafe { NonNull::new_unchecked(entry) })
     }
 
     /// Mark an entry reusable (thread exit). The caller must have flushed
@@ -114,6 +160,21 @@ impl<E: Send + Sync + 'static> ThreadList<E> {
     }
 }
 
+impl<E: Send + Sync + 'static> Drop for ThreadList<E> {
+    fn drop(&mut self) {
+        // Exclusive access: no thread can hold an `EntryRef` into this list
+        // anymore (holders keep the owning domain — and hence this list —
+        // alive). Return every arena entry to the allocator.
+        let mut cur = *self.head.get_mut();
+        while !cur.is_null() {
+            // SAFETY: entries were allocated via Box::into_raw in acquire()
+            // and are exclusively ours now.
+            let entry = unsafe { Box::from_raw(cur) };
+            cur = entry.next as *mut ThreadEntry<E>;
+        }
+    }
+}
+
 /// Iterator over thread entries.
 pub struct ThreadIter<'a, E: Send + Sync + 'static> {
     cur: *const ThreadEntry<E>,
@@ -127,7 +188,8 @@ impl<'a, E: Send + Sync + 'static> Iterator for ThreadIter<'a, E> {
         if self.cur.is_null() {
             return None;
         }
-        // SAFETY: entries are immortal and published with Release.
+        // SAFETY: entries live as long as the list borrowed by `'a` and are
+        // published with Release.
         let entry = unsafe { &*self.cur };
         self.cur = entry.next;
         Some(entry)
@@ -144,9 +206,9 @@ mod tests {
     fn acquire_release_recycles() {
         static LIST: ThreadList<AtomicUsize> = ThreadList::new();
         let a = LIST.acquire(|| AtomicUsize::new(1), |_| {});
-        let a_ptr = a as *const _;
+        let a_ptr = a.as_ptr();
         assert!(a.is_active());
-        LIST.release(a);
+        LIST.release(&a);
         assert!(!a.is_active());
         let recycled = Arc::new(AtomicUsize::new(0));
         let r2 = recycled.clone();
@@ -156,9 +218,9 @@ mod tests {
                 r2.fetch_add(1, Ordering::Relaxed);
             },
         );
-        assert_eq!(b as *const _, a_ptr, "inactive entry must be recycled");
+        assert_eq!(b.as_ptr(), a_ptr, "inactive entry must be recycled");
         assert_eq!(recycled.load(Ordering::Relaxed), 1);
-        LIST.release(b);
+        LIST.release(&b);
     }
 
     #[test]
@@ -172,9 +234,9 @@ mod tests {
                 std::thread::spawn(move || {
                     barrier.wait();
                     let e = LIST.acquire(|| i, |_| {});
-                    let p = e as *const _ as usize;
+                    let p = e.as_ptr() as usize;
                     std::thread::yield_now();
-                    LIST.release(e);
+                    LIST.release(&e);
                     p
                 })
             })
@@ -196,15 +258,15 @@ mod tests {
         static LIST: ThreadList<AtomicUsize> = ThreadList::new();
         let a = LIST.acquire(|| AtomicUsize::new(0), |_| {});
         a.data().store(0xDEAD, Ordering::Relaxed); // previous owner's residue
-        LIST.release(a);
+        LIST.release(&a);
         let b = LIST.acquire(
             || AtomicUsize::new(0),
             |slot| slot.store(0, Ordering::Relaxed),
         );
-        assert_eq!(b as *const _, a as *const _, "must recycle, not grow");
+        assert_eq!(b.as_ptr(), a.as_ptr(), "must recycle, not grow");
         assert_eq!(b.data().load(Ordering::Relaxed), 0, "residue must be reset");
         assert!(b.is_active());
-        LIST.release(b);
+        LIST.release(&b);
     }
 
     #[test]
@@ -234,7 +296,7 @@ mod tests {
                         e.data().store(0xBAD, Ordering::Relaxed);
                         std::thread::yield_now();
                         e.data().store(0xBAD, Ordering::Relaxed);
-                        LIST.release(e);
+                        LIST.release(&e);
                     })
                 })
                 .collect();
@@ -253,7 +315,32 @@ mod tests {
         let e2 = LIST.acquire(|| 20, |_| {});
         let values: Vec<u32> = LIST.iter().map(|e| *e.data()).collect();
         assert!(values.contains(&10) && values.contains(&20));
-        LIST.release(e1);
-        LIST.release(e2);
+        LIST.release(&e1);
+        LIST.release(&e2);
+    }
+
+    #[test]
+    fn dropping_the_list_frees_every_entry() {
+        // The arena property (ROADMAP "registry entry reclamation"): entry
+        // state drops — and its memory returns — when the list drops, not
+        // at process exit.
+        struct CountsDrop(Arc<AtomicUsize>);
+        impl Drop for CountsDrop {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // SAFETY-of-test: no EntryRef outlives the list below.
+        let drops = Arc::new(AtomicUsize::new(0));
+        {
+            let list: ThreadList<CountsDrop> = ThreadList::new();
+            for _ in 0..3 {
+                // Fresh entries each time: previous ones stay active.
+                let _ = list.acquire(|| CountsDrop(drops.clone()), |_| {});
+            }
+            assert_eq!(list.len(), 3);
+            assert_eq!(drops.load(Ordering::Relaxed), 0, "alive while the list is");
+        }
+        assert_eq!(drops.load(Ordering::Relaxed), 3, "arena freed on list drop");
     }
 }

@@ -41,6 +41,13 @@ pub struct RetireHeader {
     node: AtomicUsize,
     /// `unsafe fn(*mut ())` that drops the payload and frees the node.
     drop_fn: AtomicUsize,
+    /// `*const AtomicU64` to the owning domain's pending-retire counter
+    /// (null for nodes freed without retiring). Written by the domain
+    /// wrapper layer *before* the scheme's `retire` runs; decremented by
+    /// [`reclaim_one`]. The counter outlives the node: nodes are reclaimed
+    /// either by handles (which pin the domain) or by `Domain::drop`'s
+    /// drain (the domain is still alive while dropping).
+    pending: AtomicUsize,
     /// [`FROM_POOL`] etc.; written at allocation.
     flags: AtomicU32,
 }
@@ -102,6 +109,14 @@ impl RetireHeader {
     pub(crate) fn set_next_list(&self, n: Retired) {
         self.next_list.store(n as usize, Ordering::Relaxed);
     }
+
+    /// Tag this node with its domain's pending-retire counter (called by the
+    /// domain wrapper before the scheme's `retire`; see field docs). Visibility
+    /// rides the same mechanism as `drop_fn`: every path to [`reclaim_one`]
+    /// passes through an atomic that orders the retire-time header stores.
+    pub(crate) fn set_pending_counter(&self, counter: &AtomicU64) {
+        self.pending.store(counter as *const AtomicU64 as usize, Ordering::Relaxed);
+    }
 }
 
 /// Erased destructor for `Node<T, R>`: drop the payload, free the memory.
@@ -141,7 +156,14 @@ pub unsafe fn reclaim_one(r: Retired) {
     let node = hdr.node.load(Ordering::Relaxed) as *mut ();
     let drop_fn: unsafe fn(*mut ()) =
         std::mem::transmute(hdr.drop_fn.load(Ordering::Relaxed));
+    // Read the domain counter *before* drop_fn frees the header's memory.
+    let pending = hdr.pending.load(Ordering::Relaxed) as *const AtomicU64;
     drop_fn(node);
+    if !pending.is_null() {
+        // SAFETY: the counter lives in the node's domain, which is alive for
+        // the duration of any reclaim (see the `pending` field docs).
+        (*pending).fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Thread-private FIFO retire list, append-ordered by stamp (appending with

@@ -1,8 +1,14 @@
-//! End-to-end coordinator tests (skipped when `make artifacts` has not
-//! run): the three-layer stack must return numerically correct, cache-
-//! consistent results under concurrent load, for several schemes.
+//! End-to-end coordinator tests: the three-layer stack must return
+//! numerically correct, cache-consistent results under concurrent load,
+//! for several schemes.
+//!
+//! The PJRT tests are skipped when `make artifacts` has not run; since the
+//! router refactor the sharded tests run on the synthetic backend, so the
+//! fleet path (routing, shared batcher, per-shard domains, shutdown
+//! semantics) is exercised artifact-free.
 
-use emr::coordinator::{CacheServer, ServerConfig};
+use emr::bench_fw::workload::compute_payload;
+use emr::coordinator::{Backend, CacheServer, Router, ServerConfig};
 use emr::reclaim::Reclaimer;
 use emr::util::rng::Xoshiro256;
 use std::sync::Arc;
@@ -17,12 +23,17 @@ fn have_artifacts() -> bool {
 }
 
 fn concurrent_consistency<R: Reclaimer>() {
-    let server = CacheServer::<R>::start(ServerConfig {
-        workers: 2,
-        capacity: 500,
-        buckets: 64,
-        ..ServerConfig::default()
-    })
+    // `with_shards(1)` — the router front-end must reproduce the old
+    // single-server behaviour on the unchanged suite.
+    let server = Router::<R>::start(
+        ServerConfig {
+            workers: 2,
+            capacity: 500,
+            buckets: 64,
+            ..ServerConfig::default()
+        }
+        .with_shards(1),
+    )
     .unwrap();
     let server = Arc::new(server);
 
@@ -142,5 +153,138 @@ fn eviction_keeps_serving_correctly() {
         assert!((a - b).abs() < 1e-5, "recomputed result differs: {a} vs {b}");
     }
     assert!(server.cache_len() <= 12);
+    server.shutdown();
+}
+
+// ---- Sharded-router suite (synthetic backend: runs without artifacts) ----
+
+fn synthetic_cfg() -> ServerConfig {
+    ServerConfig {
+        workers: 2,
+        capacity: 128,
+        buckets: 32,
+        ..ServerConfig::default()
+    }
+    .with_backend(Backend::synthetic())
+}
+
+fn sharded_consistency<R: Reclaimer>(shards: usize, shared_domain: bool) {
+    let server = Router::<R>::start(
+        synthetic_cfg().with_shards(shards).with_shared_domain(shared_domain),
+    )
+    .unwrap();
+    std::thread::scope(|s| {
+        for c in 0..4u64 {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = Xoshiro256::new(0x5A4D + c);
+                for _ in 0..300 {
+                    let key = rng.below(100) as u32;
+                    let resp = server.request(key).expect("request");
+                    // Synthetic results are exactly reproducible.
+                    assert_eq!(
+                        resp.data[..],
+                        compute_payload(key as u64)[..],
+                        "{}: wrong payload for key {key}",
+                        R::NAME
+                    );
+                }
+            });
+        }
+    });
+    let m = server.metrics();
+    assert_eq!(m.requests, 4 * 300);
+    assert_eq!(m.hits + m.misses, 4 * 300);
+    assert!(m.batches > 0);
+    let per_shard = server.shard_metrics();
+    assert_eq!(per_shard.len(), shards);
+    assert_eq!(per_shard.iter().map(|s| s.requests).sum::<u64>(), 4 * 300);
+    server.shutdown();
+}
+
+#[test]
+fn sharded_router_serves_consistently_stamp() {
+    sharded_consistency::<emr::reclaim::stamp::StampIt>(4, false);
+}
+
+#[test]
+fn sharded_router_serves_consistently_shared_domain() {
+    sharded_consistency::<emr::reclaim::ebr::Ebr>(4, true);
+}
+
+#[test]
+fn sharded_router_serves_consistently_hp() {
+    sharded_consistency::<emr::reclaim::hp::Hp>(2, false);
+}
+
+#[test]
+fn routing_is_deterministic_across_restarts() {
+    // Same key → same shard, across two independent router instances (the
+    // hash is a pure function of key and shard count — nothing per-process
+    // seeds it).
+    let keys: Vec<u32> = (0..512u32).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+    let a = Router::<emr::reclaim::stamp::StampIt>::start(synthetic_cfg().with_shards(4)).unwrap();
+    let map_a: Vec<usize> = keys.iter().map(|&k| a.shard_of(k)).collect();
+    a.shutdown();
+    drop(a);
+    let b = Router::<emr::reclaim::stamp::StampIt>::start(synthetic_cfg().with_shards(4)).unwrap();
+    let map_b: Vec<usize> = keys.iter().map(|&k| b.shard_of(k)).collect();
+    assert_eq!(map_a, map_b, "routing must be deterministic across restarts");
+    // And the hash actually spreads: every shard owns some keys.
+    for shard in 0..4 {
+        assert!(map_a.contains(&shard), "shard {shard} owns no keys");
+    }
+    b.shutdown();
+}
+
+#[test]
+fn cross_shard_domains_never_share_retire_lists() {
+    // Satellite: drive eviction churn onto shard 0 only (keys filtered by
+    // the router's own mapping) and verify shard 1's domain never observes
+    // a retire. Tiny capacity forces constant eviction → constant retiring
+    // through shard 0's domain.
+    let server = Router::<emr::reclaim::stamp::StampIt>::start(
+        ServerConfig {
+            workers: 1,
+            capacity: 8,
+            buckets: 4,
+            ..ServerConfig::default()
+        }
+        .with_backend(Backend::synthetic())
+        .with_shards(2),
+    )
+    .unwrap();
+    let shard0_keys: Vec<u32> = (0..4096u32).filter(|&k| server.shard_of(k) == 0).collect();
+    assert!(shard0_keys.len() > 64, "need enough shard-0 keys to churn");
+    for &key in shard0_keys.iter().take(256) {
+        let _ = server.request(key).unwrap();
+    }
+    let per_shard = server.shard_metrics();
+    assert_eq!(per_shard[0].requests, 256);
+    assert_eq!(per_shard[1].requests, 0, "no traffic may leak to shard 1");
+    assert!(
+        per_shard[0].misses > 8,
+        "churn must miss (evicting through shard 0's domain)"
+    );
+    // Shard 1's domain never saw a retire: its unreclaimed count is 0 no
+    // matter how many nodes shard 0 parked.
+    assert_eq!(
+        per_shard[1].unreclaimed_nodes, 0,
+        "shard 1's domain must be unaffected by shard 0's retires"
+    );
+    assert_eq!(server.shards()[1].cache_len(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_rejects_straggler_submits() {
+    // Regression (satellite): a request submitted after shutdown must see
+    // a closed reply channel, not block forever.
+    let server = Router::<emr::reclaim::ebr::Ebr>::start(synthetic_cfg()).unwrap();
+    let _ = server.request(9).unwrap();
+    server.shutdown();
+    assert!(server.request(10).is_err());
+    assert!(server.submit(11).recv().is_err());
+    // Idempotent shutdown stays safe.
     server.shutdown();
 }

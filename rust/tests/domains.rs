@@ -192,6 +192,38 @@ fn handle_cache_keeps_live_domains<R: Reclaimer>() {
     assert_eq!(drops.load(Ordering::Relaxed), 1, "{}: parked node lost", R::NAME);
 }
 
+/// Per-domain unreclaimed counters (the sharded coordinator's per-shard
+/// robustness metric): a retire in domain A moves only A's counter, B's
+/// stays at 0 — "two shards never share retire lists" made observable —
+/// and the counter returns to 0 once the node is reclaimed.
+fn unreclaimed_is_per_domain<R: Reclaimer>() {
+    let domain_a = DomainRef::<R>::new_owned();
+    let domain_b = DomainRef::<R>::new_owned();
+    assert_eq!(domain_a.domain().unreclaimed(), 0);
+    assert_eq!(domain_b.domain().unreclaimed(), 0);
+
+    let drops = Arc::new(AtomicUsize::new(0));
+    let ha = domain_a.register();
+    let _hb = domain_b.register(); // B is live, just never retires
+    let cell: Atomic<Payload, R> = Atomic::new(Owned::new(Payload::new(1, &drops)));
+    let node = cell.load(Ordering::Relaxed);
+    let mut guard: Guard<Payload, R> = ha.guard();
+    assert!(guard.protect(&cell).is_some());
+    cell.store(MarkedPtr::null(), Ordering::Release);
+    // SAFETY: unlinked; retired once, into the guarding domain.
+    unsafe { ha.retire(node.get()) };
+
+    // The guard pins the node (Proposition 1), so it is retired-not-
+    // reclaimed: exactly A's counter shows it.
+    assert_eq!(domain_a.domain().unreclaimed(), 1, "{}: retire must count in A", R::NAME);
+    assert_eq!(domain_b.domain().unreclaimed(), 0, "{}: B must be unaffected", R::NAME);
+
+    drop(guard);
+    flush_until(&ha, || drops.load(Ordering::Relaxed) == 1);
+    assert_eq!(domain_a.domain().unreclaimed(), 0, "{}: reclaim must un-count", R::NAME);
+    assert_eq!(domain_b.domain().unreclaimed(), 0);
+}
+
 macro_rules! domain_tests {
     ($mod_name:ident, $scheme:ty) => {
         mod $mod_name {
@@ -200,6 +232,11 @@ macro_rules! domain_tests {
             #[test]
             fn concurrent_isolation() {
                 concurrent_domains_do_not_cross_reclaim::<$scheme>();
+            }
+
+            #[test]
+            fn unreclaimed_counter_is_per_domain() {
+                unreclaimed_is_per_domain::<$scheme>();
             }
 
             #[test]
