@@ -9,17 +9,25 @@
 //! # sharded fleet, artifact-free:
 //! cargo run --release --example compute_cache -- \
 //!     --backend synthetic --shards 4 --clients 8
+//! # async front-end: 10k logical clients multiplexed on 8 executor threads
+//! cargo run --release --example compute_cache -- \
+//!     --backend synthetic --shards 4 --frontend async --clients 10000 --requests 10
 //! ```
 //!
 //! Reports throughput, latency percentiles (hit vs computed), cache hit
 //! rate, and the paper's reclamation-efficiency metric — rolled up and,
 //! when `--shards N > 1`, per shard. `--shared-domain` switches the fleet
-//! from domain-per-shard to one shared reclamation domain. Recorded in
-//! EXPERIMENTS.md §E15/§E16.
+//! from domain-per-shard to one shared reclamation domain. `--frontend
+//! async` drives the same load as logical tasks over the completion-driven
+//! submission path (DESIGN.md §6) instead of one OS thread per client.
+//! Recorded in EXPERIMENTS.md §E15/§E16/§E17.
 
+use emr::coordinator::frontend::mux::{self, MuxConfig};
+use emr::coordinator::frontend::Frontend;
 use emr::coordinator::{Backend, CacheServer, ServerConfig};
 use emr::dispatch_scheme;
 use emr::reclaim::{Reclaimer, SchemeId};
+use emr::runtime::exec::Executor;
 use emr::util::cli::Args;
 use emr::util::rng::Xoshiro256;
 use emr::util::stats::{fmt_ns, percentile_sorted};
@@ -29,6 +37,9 @@ struct Opts {
     requests: usize,
     key_space: u64,
     hot_pct: usize,
+    /// Which front-end drives the load: client threads or the async mux.
+    frontend: Frontend,
+    exec_threads: usize,
     cfg: ServerConfig,
 }
 
@@ -50,13 +61,19 @@ fn main() {
         requests: args.usize_or("requests", 2000),
         key_space: args.u64_or("keys", 30_000),
         hot_pct: args.usize_or("hot-pct", 80), // % of requests on a hot set
+        frontend: Frontend::parse(args.get_or("frontend", "thread")).unwrap_or_else(|| {
+            eprintln!("unknown --frontend (thread|async)");
+            std::process::exit(2);
+        }),
+        exec_threads: args.usize_or("exec-threads", 8),
         cfg,
     };
     dispatch_scheme!(scheme, run, opts);
 }
 
 fn run<R: Reclaimer>(opts: Opts) {
-    let Opts { clients, requests, key_space, hot_pct, cfg } = opts;
+    let Opts { clients, requests, key_space, hot_pct, frontend, exec_threads, cfg } = opts;
+    let async_frontend = frontend == Frontend::Async;
     if cfg.backend == Backend::Pjrt && !emr::runtime::artifacts_available() {
         eprintln!("no artifacts — run `make artifacts` first (or --backend synthetic)");
         std::process::exit(1);
@@ -66,51 +83,76 @@ fn run<R: Reclaimer>(opts: Opts) {
     let capacity = cfg.capacity;
     let server = CacheServer::<R>::start(cfg).expect("server start");
 
+    let frontend_desc = if async_frontend {
+        format!("async ({exec_threads} executor threads)")
+    } else {
+        "thread".to_string()
+    };
     println!(
         "E15 compute-cache: scheme={} clients={clients} requests/client={requests} \
          keys={key_space} capacity={capacity} hot={hot_pct}% shards={shards} \
-         domains={}",
+         domains={} frontend={frontend_desc}",
         R::NAME,
-        if shared_domain { "shared".to_string() } else { format!("{shards} (per shard)") }
+        if shared_domain { "shared".to_string() } else { format!("{shards} (per shard)") },
     );
     let alloc_before = emr::alloc::snapshot();
     let t0 = emr::util::monotonic_ns();
 
     // Client load: hot_pct% of requests hit a small hot set (cache-friendly,
     // like reused partial results), the rest are uniform over the key space.
-    let per_client: Vec<(Vec<f64>, Vec<f64>)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..clients)
-            .map(|c| {
-                let server = &server;
-                scope.spawn(move || {
-                    let mut rng = Xoshiro256::new(0xE15 ^ c as u64);
-                    let hot_set = (key_space / 100).max(16);
-                    let mut hit_lat = Vec::new();
-                    let mut miss_lat = Vec::new();
-                    for _ in 0..requests {
-                        let key = if rng.percent(hot_pct as u32) {
-                            rng.below(hot_set) as u32
-                        } else {
-                            rng.below(key_space) as u32
-                        };
-                        let resp = server.request(key).expect("request");
-                        assert!(resp.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
-                        if resp.hit {
-                            hit_lat.push(resp.latency_ns as f64);
-                        } else {
-                            miss_lat.push(resp.latency_ns as f64);
+    // `--frontend async` issues the identical load as logical tasks
+    // multiplexed over the completion-driven submission path.
+    let (mut hits, mut misses): (Vec<f64>, Vec<f64>) = if async_frontend {
+        let exec = Executor::new(exec_threads);
+        let report = mux::drive(
+            &exec,
+            server.clone(),
+            &MuxConfig {
+                clients,
+                requests_per_client: requests,
+                key_space,
+                hot_pct: hot_pct as u32,
+                shard_in_flight: 256,
+                seed: 0xE15,
+            },
+        );
+        assert_eq!(report.errors, 0, "no request may be dropped");
+        (
+            report.hit_ns.iter().map(|&n| n as f64).collect(),
+            report.miss_ns.iter().map(|&n| n as f64).collect(),
+        )
+    } else {
+        let per_client: Vec<(Vec<f64>, Vec<f64>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let server = &server;
+                    scope.spawn(move || {
+                        let mut rng = Xoshiro256::new(0xE15 ^ c as u64);
+                        let mut hit_lat = Vec::new();
+                        let mut miss_lat = Vec::new();
+                        for _ in 0..requests {
+                            let key = rng.skewed_key(key_space, hot_pct as u32);
+                            let resp = server.request(key).expect("request");
+                            assert!(resp.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+                            if resp.hit {
+                                hit_lat.push(resp.latency_ns as f64);
+                            } else {
+                                miss_lat.push(resp.latency_ns as f64);
+                            }
                         }
-                    }
-                    (hit_lat, miss_lat)
+                        (hit_lat, miss_lat)
+                    })
                 })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        (
+            per_client.iter().flat_map(|(h, _)| h.iter().copied()).collect(),
+            per_client.iter().flat_map(|(_, m)| m.iter().copied()).collect(),
+        )
+    };
     let wall_s = (emr::util::monotonic_ns() - t0) as f64 / 1e9;
 
-    let mut hits: Vec<f64> = per_client.iter().flat_map(|(h, _)| h.iter().copied()).collect();
-    let mut misses: Vec<f64> = per_client.iter().flat_map(|(_, m)| m.iter().copied()).collect();
     hits.sort_by(|a, b| a.partial_cmp(b).unwrap());
     misses.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
@@ -139,6 +181,18 @@ fn run<R: Reclaimer>(opts: Opts) {
         }
     }
     println!("cache entries   : {}", server.cache_len());
+    if async_frontend {
+        // The mux reports latencies, not payloads — spot-check data
+        // validity through the same async path the load just exercised
+        // (the thread branch asserts this per response). After the timed
+        // window AND the metric printouts, so neither the async-vs-thread
+        // throughput comparison nor the reported counters are skewed.
+        for key in 0..8u32 {
+            let resp =
+                emr::runtime::exec::block_on(server.submit_async(key)).expect("post-run probe");
+            assert!(resp.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+        }
+    }
     server.shutdown();
     // The server owns its reclamation domain; dropping the last reference
     // drains every node still parked there (worker handles already released

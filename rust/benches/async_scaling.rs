@@ -1,0 +1,25 @@
+//! E17: async scaling — thread-per-request vs the async multiplexed
+//! front-end (`coordinator::frontend`) as logical-client concurrency grows
+//! (1k/10k by default; add 100k with `--clients 1000,10000,100000` or
+//! `--paper`). Measures throughput, p50/p99 latency, end-of-run
+//! unreclaimed nodes and the peak queue-depth / in-flight gauges, per
+//! scheme. Runs on the synthetic backend, so no PJRT artifacts are needed.
+//!
+//! ```bash
+//! cargo bench --bench async_scaling -- --clients 1000,10000 --exec-threads 8
+//! ```
+use emr::bench_fw::figures::fig_async_scaling;
+use emr::bench_fw::BenchParams;
+use emr::reclaim::SchemeId;
+use emr::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let mut p = BenchParams::from_args(&args);
+    if args.get("schemes").is_none() {
+        // The ISSUE's comparison set: the paper's scheme, one epoch
+        // scheme, hazard pointers.
+        p.schemes = vec![SchemeId::Stamp, SchemeId::Ebr, SchemeId::Hp];
+    }
+    fig_async_scaling(&p);
+}

@@ -365,14 +365,9 @@ fn shard_scaling_cell<R: Reclaimer>(
         let server = &server;
         cfg.push(&run_trial(clients, p.duration(), |tid, stop| {
             let mut rng = Xoshiro256::new(0x5CA1E ^ ((trial as u64) << 32) ^ tid as u64);
-            let hot_set = (p.key_space / 100).max(16);
             let mut ops = 0u64;
             while !stop.load(std::sync::atomic::Ordering::Acquire) {
-                let key = if rng.percent(80) {
-                    rng.below(hot_set) as u32
-                } else {
-                    rng.below(p.key_space) as u32
-                };
+                let key = rng.skewed_key(p.key_space, 80);
                 let _ = server.request(key).expect("router request");
                 ops += 1;
             }
@@ -466,6 +461,215 @@ pub fn fig_shard_scaling(p: &BenchParams) {
 /// Join counts with `;` (CSV cell of a per-shard breakdown).
 fn join_u64(v: &[u64]) -> String {
     v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(";")
+}
+
+/// One async-scaling measurement cell (E17).
+struct AsyncCell {
+    /// OS threads actually driving clients (executor threads on the mux,
+    /// client threads — possibly capped — on thread-per-request).
+    threads_used: usize,
+    req_per_s: f64,
+    p50_ns: f64,
+    p99_ns: f64,
+    errors: u64,
+    /// End-of-run pending-retire population across the fleet's domains.
+    unreclaimed: u64,
+    /// Peak of the fleet-wide `queue_depth` gauge, sampled during the run.
+    peak_queue_depth: u64,
+    /// Peak of the fleet-wide `in_flight` gauge (open completion slots).
+    peak_in_flight: u64,
+}
+
+/// E17 fixes the fleet shape (the sweep varies *client* concurrency):
+/// 4 shards × 1 worker, so the front-end — not the shard pool — is what
+/// scales.
+const E17_SHARDS: usize = 4;
+/// Requests each logical client issues, sequentially.
+const E17_REQS_PER_CLIENT: usize = 10;
+/// Thread-per-request cannot reach 100k OS threads; beyond this cap the
+/// same *total* request count is spread over capped threads (and the cell
+/// reports the cap — no silent truncation, see the figure output).
+const E17_THREAD_CAP: usize = 256;
+/// Per-shard in-flight budget the mux runs under (the back-pressure bound
+/// `peak_in_flight` is plotted against).
+const E17_IN_FLIGHT_BUDGET: usize = 256;
+
+/// Run one (scheme, client count, front-end mode) cell of the E17 figure:
+/// the full Router stack on the synthetic backend under the same skewed
+/// load as E16 (80% of requests on a 1% hot set), driven either by
+/// `clients` logical tasks multiplexed on `p.exec_threads` executor
+/// threads (`asynchronous`) or by one OS thread per client (capped at
+/// [`E17_THREAD_CAP`]).
+fn async_scaling_cell<R: Reclaimer>(
+    p: &BenchParams,
+    clients: usize,
+    asynchronous: bool,
+) -> AsyncCell {
+    use crate::coordinator::frontend::mux::{self, MuxConfig};
+    use crate::coordinator::{Backend, Router, ServerConfig};
+    use crate::runtime::exec::Executor;
+    use crate::util::monotonic_ns;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let server = Router::<R>::start(
+        ServerConfig {
+            workers: 1,
+            buckets: (p.map_buckets / E17_SHARDS).max(64),
+            capacity: (p.map_capacity / E17_SHARDS).max(64),
+            ..ServerConfig::default()
+        }
+        .with_shards(E17_SHARDS)
+        .with_backend(Backend::synthetic()),
+    )
+    .expect("router start (synthetic backend)");
+
+    // Gauge sampler: the back-pressure signal E17 plots. Polls the rolled-up
+    // metrics while the load runs and keeps the peaks.
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let server = server.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let (mut peak_q, mut peak_if) = (0u64, 0u64);
+            while !stop.load(Ordering::Acquire) {
+                let m = server.metrics();
+                peak_q = peak_q.max(m.queue_depth);
+                peak_if = peak_if.max(m.in_flight);
+                std::thread::sleep(std::time::Duration::from_micros(500));
+            }
+            (peak_q, peak_if)
+        })
+    };
+
+    let (threads_used, issued, errors, lat, wall_ns) = if asynchronous {
+        let exec = Executor::new(p.exec_threads);
+        let report = mux::drive(
+            &exec,
+            server.clone(),
+            &MuxConfig {
+                clients,
+                requests_per_client: E17_REQS_PER_CLIENT,
+                key_space: p.key_space,
+                hot_pct: 80,
+                shard_in_flight: E17_IN_FLIGHT_BUDGET,
+                seed: 0xE17,
+            },
+        );
+        let lat = report.sorted_latencies();
+        (exec.threads(), report.served() + report.errors, report.errors, lat, report.wall_ns)
+    } else {
+        // Thread-per-request: `clients` OS threads (capped), EXACTLY the
+        // same total request count as the mux cell (the first
+        // `total % threads` threads issue one extra), same skewed stream.
+        let threads = clients.clamp(1, E17_THREAD_CAP);
+        let total = clients * E17_REQS_PER_CLIENT;
+        let t0 = monotonic_ns();
+        let per_client: Vec<(Vec<u64>, u64)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|c| {
+                    let server = &server;
+                    let quota = total / threads + usize::from(c < total % threads);
+                    scope.spawn(move || {
+                        let mut rng = Xoshiro256::new(0xE17 ^ crate::util::rng::mix64(c as u64));
+                        let mut lat = Vec::with_capacity(quota);
+                        let mut errors = 0u64;
+                        for _ in 0..quota {
+                            let key = rng.skewed_key(p.key_space, 80);
+                            match server.request(key) {
+                                Ok(resp) => lat.push(resp.latency_ns),
+                                Err(_) => errors += 1,
+                            }
+                        }
+                        (lat, errors)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall_ns = monotonic_ns() - t0;
+        let errors: u64 = per_client.iter().map(|(_, e)| e).sum();
+        let mut lat: Vec<f64> =
+            per_client.iter().flat_map(|(l, _)| l.iter().map(|&n| n as f64)).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (threads, total as u64, errors, lat, wall_ns)
+    };
+
+    stop.store(true, Ordering::Release);
+    let (peak_queue_depth, peak_in_flight) = sampler.join().unwrap();
+    let unreclaimed = server.metrics().unreclaimed_nodes;
+    server.shutdown();
+
+    AsyncCell {
+        threads_used,
+        req_per_s: (issued - errors) as f64 / (wall_ns as f64 / 1e9),
+        p50_ns: crate::util::stats::percentile_sorted(&lat, 50.0),
+        p99_ns: crate::util::stats::percentile_sorted(&lat, 99.0),
+        errors,
+        unreclaimed,
+        peak_queue_depth,
+        peak_in_flight,
+    }
+}
+
+/// E17: async-scaling figure (ROADMAP "async front-end"): throughput,
+/// latency and reclamation gauges of **thread-per-request vs the async
+/// multiplexed front-end** as logical-client concurrency grows
+/// (1k/10k/100k), per scheme, on the synthetic backend — artifact-free.
+/// See EXPERIMENTS.md §E17 for the recipe and expected shapes.
+pub fn fig_async_scaling(p: &BenchParams) {
+    println!(
+        "\n== async scaling — {} shard(s) × 1 worker, synthetic backend, \
+         {} req/client, 80% hot-set traffic ==\n\
+         modes: mux = async front-end on {} executor threads \
+         (per-shard budget {}); thread = one OS thread per client \
+         (capped at {})",
+        E17_SHARDS, E17_REQS_PER_CLIENT, p.exec_threads, E17_IN_FLIGHT_BUDGET, E17_THREAD_CAP
+    );
+    let mut csv = String::from(
+        "scheme,mode,clients,os_threads,req_per_s,p50_ns,p99_ns,errors,\
+         unreclaimed,peak_queue_depth,peak_in_flight\n",
+    );
+    for &scheme in &p.schemes {
+        for &clients in &p.mux_clients {
+            for asynchronous in [false, true] {
+                let mode = if asynchronous { "mux" } else { "thread" };
+                let cell = dispatch_scheme!(scheme, async_scaling_cell, p, clients, asynchronous);
+                println!(
+                    "  {:<10} {mode:<7} clients={clients:<7} threads={:<4} \
+                     {:>9.0} req/s  p50={:<9} p99={:<9} errors={:<3} \
+                     unreclaimed={:<7} peak_q={:<6} peak_inflight={}",
+                    scheme.name(),
+                    cell.threads_used,
+                    cell.req_per_s,
+                    fmt_ns(cell.p50_ns),
+                    fmt_ns(cell.p99_ns),
+                    cell.errors,
+                    cell.unreclaimed,
+                    cell.peak_queue_depth,
+                    cell.peak_in_flight,
+                );
+                csv.push_str(&format!(
+                    "{},{mode},{clients},{},{:.0},{:.0},{:.0},{},{},{},{}\n",
+                    scheme.name(),
+                    cell.threads_used,
+                    cell.req_per_s,
+                    cell.p50_ns,
+                    cell.p99_ns,
+                    cell.errors,
+                    cell.unreclaimed,
+                    cell.peak_queue_depth,
+                    cell.peak_in_flight,
+                ));
+            }
+        }
+    }
+    maybe_write_csv(&p.csv, &csv);
+    println!(
+        "(expected: mux throughput holds as clients grow — parked tasks are heap \
+         allocations, not OS threads — while thread-per-request saturates at the \
+         thread cap; peak_in_flight stays within shards × budget on the mux)"
+    );
 }
 
 /// ns/op of `f` over ~`secs` of wall time (batched to amortize the clock).

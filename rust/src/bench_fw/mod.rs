@@ -54,6 +54,10 @@ pub struct BenchParams {
     pub samples: usize,
     /// Shard counts to sweep in the `shard_scaling` figure.
     pub shards: Vec<usize>,
+    /// Logical-client counts swept by the E17 `async_scaling` figure.
+    pub mux_clients: Vec<usize>,
+    /// Executor threads the async front-end runs on (E17).
+    pub exec_threads: usize,
     /// Write a CSV next to the human-readable table.
     pub csv: Option<String>,
 }
@@ -74,6 +78,8 @@ impl Default for BenchParams {
             key_space: 30_000,
             samples: 50,
             shards: vec![1, 2, 4, 8],
+            mux_clients: vec![1_000, 10_000],
+            exec_threads: 8,
             csv: None,
         }
     }
@@ -89,6 +95,8 @@ impl BenchParams {
             p.trials = 30;
             p.secs = 8.0;
             p.threads = vec![1, 2, 4, 8, 16, 32, 48];
+            // Full E17 sweep: up to 100k logical clients on the mux.
+            p.mux_clients = vec![1_000, 10_000, 100_000];
         }
         p.threads = args.list_or("threads", &p.threads);
         p.trials = args.usize_or("trials", p.trials);
@@ -113,6 +121,8 @@ impl BenchParams {
         p.key_space = args.u64_or("keys", p.key_space);
         p.samples = args.usize_or("samples", p.samples);
         p.shards = args.list_or("shards", &p.shards);
+        p.mux_clients = args.list_or("clients", &p.mux_clients);
+        p.exec_threads = args.usize_or("exec-threads", p.exec_threads);
         p.csv = args.get("csv").map(String::from);
         p
     }

@@ -1,0 +1,306 @@
+//! The **async submission front-end** (DESIGN.md §6): the completion-slot
+//! handshake between a submitter and the shard that answers it, plus the
+//! connection multiplexer ([`mux`]) that drives thousands of logical
+//! clients per executor thread.
+//!
+//! ## The completion handshake
+//!
+//! Every submitted request owns one **completion slot** shared between two
+//! sides:
+//!
+//! * the **fulfiller** ([`CompletionSender`], crate-internal) travels
+//!   inside the queued `Request` through the shard worker and — on a miss —
+//!   the router's batcher. Exactly one of two things happens to it:
+//!   [`CompletionSender::send`] publishes the [`Response`] and wakes the
+//!   waiting task, or it is dropped (shutdown drain, engine failure,
+//!   batcher gone) which **closes** the slot so the waiter resolves with an
+//!   error instead of hanging. This replaces the seed's one-shot
+//!   `mpsc::Receiver` per request.
+//! * the **waiter** is either a [`SubmitFuture`] (parked on a
+//!   [`std::task::Waker`], driven by [`crate::runtime::exec`]) or its
+//!   blocking wrapper [`SubmitHandle`] (`recv_timeout` over the same
+//!   future, so `Router::submit` is literally `submit_async` + block-on).
+//!
+//! The population of open slots per shard — its *completion queue* — is
+//! observable as the `in_flight` gauge in
+//! [`crate::coordinator::metrics::MetricsSnapshot`]; E17 plots it as the
+//! back-pressure signal.
+//!
+//! ## Cancellation
+//!
+//! Dropping a [`SubmitFuture`] mid-flight is safe and cheap: the slot is
+//! reference-counted, so the shard worker simply fulfils a slot nobody
+//! reads and the memory is freed when the fulfiller side drops. Nothing is
+//! leaked and the shard worker never blocks on an abandoned waiter (see
+//! `rust/tests/async_frontend.rs` for the churn test).
+
+pub mod mux;
+
+use super::Response;
+use crate::anyhow;
+use crate::runtime::exec;
+use crate::util::error::Result;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
+use std::time::{Duration, Instant};
+
+/// How long [`SubmitHandle::recv`] waits before declaring the reply lost.
+/// Generous: a healthy fleet answers in microseconds-to-milliseconds; only
+/// a wedged shard or a dropped reply ever reaches this.
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Which request front-end drives a serving load (`repro serve` and the
+/// `compute_cache` example share this, so the accepted CLI names — and any
+/// future variant, e.g. a network listener — live in one place).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Frontend {
+    /// One blocking OS thread per client (the seed's shape).
+    Thread,
+    /// Logical clients multiplexed as tasks over [`mux`] (DESIGN.md §6).
+    Async,
+}
+
+impl Frontend {
+    /// Parse a CLI `--frontend` value: `thread` (default) | `async`.
+    pub fn parse(s: &str) -> Option<Frontend> {
+        match s.to_ascii_lowercase().as_str() {
+            "thread" | "threads" => Some(Frontend::Thread),
+            "async" | "mux" => Some(Frontend::Async),
+            _ => None,
+        }
+    }
+}
+
+struct SlotState {
+    response: Option<Response>,
+    waker: Option<Waker>,
+    /// Set when the fulfiller dropped without answering (or the response
+    /// was already consumed): the waiter resolves with an error.
+    closed: bool,
+}
+
+/// One request's completion slot (shared, reference-counted).
+struct Slot {
+    state: Mutex<SlotState>,
+}
+
+impl Slot {
+    fn fulfil(&self, response: Option<Response>) {
+        let waker = {
+            let mut s = self.state.lock().unwrap();
+            match response {
+                Some(r) => s.response = Some(r),
+                None => s.closed = true,
+            }
+            s.waker.take()
+        };
+        // Wake outside the slot lock: the waker may push onto an executor
+        // run queue or unpark a thread.
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+}
+
+/// Fulfiller side of a completion slot; lives inside the queued `Request`.
+/// Dropping it without [`send`](Self::send) closes the slot (the waiter
+/// observes "server dropped request" instead of blocking forever).
+pub(crate) struct CompletionSender {
+    slot: Arc<Slot>,
+    sent: bool,
+}
+
+impl CompletionSender {
+    /// Publish the response and wake the waiting task.
+    pub(crate) fn send(mut self, response: Response) {
+        self.sent = true;
+        self.slot.fulfil(Some(response));
+    }
+}
+
+impl Drop for CompletionSender {
+    fn drop(&mut self) {
+        if !self.sent {
+            self.slot.fulfil(None);
+        }
+    }
+}
+
+/// Create a linked (fulfiller, waiter) pair for one request.
+pub(crate) fn completion_pair() -> (CompletionSender, SubmitFuture) {
+    let slot = Arc::new(Slot {
+        state: Mutex::new(SlotState { response: None, waker: None, closed: false }),
+    });
+    (CompletionSender { slot: slot.clone(), sent: false }, SubmitFuture { slot })
+}
+
+/// Waiter side of a submitted request: resolves to the [`Response`] when a
+/// shard worker (hit) or the batcher (computed miss) fulfils the slot, or
+/// to an error when the server drops the request (shutdown, engine
+/// failure). Returned by `Router::submit_async`; safe to drop mid-flight
+/// (see the module docs on cancellation).
+pub struct SubmitFuture {
+    slot: Arc<Slot>,
+}
+
+impl SubmitFuture {
+    /// A future that is already closed (submit raced a shutdown): polling
+    /// or `recv`-ing it errors immediately instead of waiting.
+    pub(crate) fn rejected() -> Self {
+        Self {
+            slot: Arc::new(Slot {
+                state: Mutex::new(SlotState { response: None, waker: None, closed: true }),
+            }),
+        }
+    }
+
+    /// Non-blocking probe: `Some` once the slot has been fulfilled or
+    /// closed. Consumes the response on success.
+    pub fn try_take(&mut self) -> Option<Result<Response>> {
+        let mut s = self.slot.state.lock().unwrap();
+        if let Some(r) = s.response.take() {
+            s.closed = true; // fused: a second take errors rather than hangs
+            return Some(Ok(r));
+        }
+        if s.closed {
+            return Some(Err(anyhow!("server dropped request")));
+        }
+        None
+    }
+}
+
+impl Future for SubmitFuture {
+    type Output = Result<Response>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut s = self.slot.state.lock().unwrap();
+        if let Some(r) = s.response.take() {
+            s.closed = true; // fused: polling after Ready errors, never hangs
+            return Poll::Ready(Ok(r));
+        }
+        if s.closed {
+            return Poll::Ready(Err(anyhow!("server dropped request")));
+        }
+        // Register/refresh the waker (the task may migrate between polls).
+        s.waker = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+/// Blocking wrapper over a [`SubmitFuture`] — what `Router::submit`
+/// returns. Unlike the seed's bare `mpsc::Receiver`, every wait is
+/// deadline-bounded: a lost reply surfaces as a timeout error, never an
+/// eternal block.
+pub struct SubmitHandle {
+    fut: SubmitFuture,
+}
+
+impl SubmitHandle {
+    pub(crate) fn new(fut: SubmitFuture) -> Self {
+        Self { fut }
+    }
+
+    /// Wait for the response with the [`DEFAULT_RECV_TIMEOUT`].
+    pub fn recv(self) -> Result<Response> {
+        self.recv_timeout(DEFAULT_RECV_TIMEOUT)
+    }
+
+    /// Wait for the response, giving up after `timeout`. On timeout the
+    /// in-flight request is abandoned (the shard still answers its slot;
+    /// nothing leaks — module docs on cancellation).
+    pub fn recv_timeout(self, timeout: Duration) -> Result<Response> {
+        match exec::block_on_deadline(self.fut, Instant::now() + timeout) {
+            Some(r) => r,
+            None => {
+                Err(anyhow!("request timed out after {timeout:?} (reply lost or shard wedged)"))
+            }
+        }
+    }
+
+    /// Non-blocking probe: `Some` once the response (or the drop error) is
+    /// available.
+    pub fn try_recv(&mut self) -> Option<Result<Response>> {
+        self.fut.try_take()
+    }
+
+    /// The underlying future, for callers that started blocking and want
+    /// to finish async.
+    pub fn into_future(self) -> SubmitFuture {
+        self.fut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::DIM;
+
+    fn resp() -> Response {
+        Response { data: Box::new([0.5; DIM]), hit: true, latency_ns: 1 }
+    }
+
+    #[test]
+    fn send_then_recv() {
+        let (tx, fut) = completion_pair();
+        tx.send(resp());
+        let got = SubmitHandle::new(fut).recv().unwrap();
+        assert!(got.hit);
+        assert_eq!(got.data[0], 0.5);
+    }
+
+    #[test]
+    fn dropped_sender_closes_the_slot() {
+        let (tx, fut) = completion_pair();
+        drop(tx);
+        assert!(SubmitHandle::new(fut).recv().is_err());
+    }
+
+    #[test]
+    fn recv_timeout_bounds_a_lost_reply() {
+        let (_tx, fut) = completion_pair(); // sender alive but never sends
+        let t0 = Instant::now();
+        let err = SubmitHandle::new(fut).recv_timeout(Duration::from_millis(30));
+        assert!(err.is_err());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert!(err.unwrap_err().to_string().contains("timed out"));
+    }
+
+    #[test]
+    fn fulfil_from_another_thread_wakes_the_waiter() {
+        let (tx, fut) = completion_pair();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(resp());
+        });
+        let got = SubmitHandle::new(fut).recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(got.hit);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn try_recv_probes_without_blocking() {
+        let (tx, fut) = completion_pair();
+        let mut h = SubmitHandle::new(fut);
+        assert!(h.try_recv().is_none());
+        tx.send(resp());
+        assert!(matches!(h.try_recv(), Some(Ok(_))));
+        // Fused: a second take errors instead of hanging.
+        assert!(matches!(h.try_recv(), Some(Err(_))));
+    }
+
+    #[test]
+    fn rejected_future_errors_immediately() {
+        let t0 = Instant::now();
+        assert!(SubmitHandle::new(SubmitFuture::rejected()).recv().is_err());
+        assert!(t0.elapsed() < Duration::from_secs(1), "rejection must not wait the timeout");
+    }
+
+    #[test]
+    fn dropping_the_future_midflight_is_harmless() {
+        let (tx, fut) = completion_pair();
+        drop(fut);
+        tx.send(resp()); // fulfilling an abandoned slot is a no-op
+    }
+}

@@ -1,0 +1,143 @@
+//! The **connection multiplexer**: drives N logical clients — thousands
+//! per executor thread — against a [`Router`], entirely on the async
+//! submission path (DESIGN.md §6).
+//!
+//! Each logical client is one spawned task: pick a key (hot-set-skewed,
+//! like E15/E16), acquire its target shard's **in-flight budget** (an async
+//! [`Semaphore`] — the back-pressure bound that keeps a hot shard's queue
+//! from growing without limit), `submit_async`, await the completion, record
+//! the latency, repeat. A parked client costs one heap allocation, not an
+//! OS thread — this is the many-lightweight-tasks-on-few-threads regime
+//! that thread-per-request cannot reach (ISSUE: the Hyaline comparison
+//! axis), and E17 measures how each reclamation scheme behaves under it.
+
+use crate::coordinator::{Response, Router};
+use crate::reclaim::Reclaimer;
+use crate::runtime::exec::{Executor, JoinHandle, Semaphore};
+use crate::util::monotonic_ns;
+use crate::util::rng::{mix64, Xoshiro256};
+use std::sync::Arc;
+
+/// Mux workload shape. Defaults mirror E15's serving load (30k keys, 80%
+/// of traffic on a 1% hot set) with a 256-deep per-shard budget.
+#[derive(Clone, Debug)]
+pub struct MuxConfig {
+    /// Logical clients (concurrent tasks).
+    pub clients: usize,
+    /// Requests each client issues, sequentially.
+    pub requests_per_client: usize,
+    /// Key space the clients draw from.
+    pub key_space: u64,
+    /// Percent of requests aimed at the hot set (1% of the key space).
+    pub hot_pct: u32,
+    /// In-flight budget per shard: a client stalls (asynchronously) until
+    /// its target shard has a free slot. Min 1.
+    pub shard_in_flight: usize,
+    /// Base RNG seed (client c uses `seed ^ mix64(c)`).
+    pub seed: u64,
+}
+
+impl Default for MuxConfig {
+    fn default() -> Self {
+        Self {
+            clients: 1000,
+            requests_per_client: 10,
+            key_space: 30_000,
+            hot_pct: 80,
+            shard_in_flight: 256,
+            seed: 0xE17,
+        }
+    }
+}
+
+/// What one mux run observed.
+#[derive(Clone, Debug, Default)]
+pub struct MuxReport {
+    /// Latencies of cache-hit responses (submit → reply, ns).
+    pub hit_ns: Vec<u64>,
+    /// Latencies of computed (miss) responses.
+    pub miss_ns: Vec<u64>,
+    /// Requests that resolved with an error (dropped by the server), plus
+    /// the FULL per-client quota for any client task that died without
+    /// reporting (its tally is lost with the task, so all of its requests
+    /// count as errors — `served() + errors` always equals
+    /// `clients × requests_per_client`).
+    pub errors: u64,
+    /// Wall time of the whole run.
+    pub wall_ns: u64,
+}
+
+impl MuxReport {
+    /// Responses successfully served.
+    pub fn served(&self) -> u64 {
+        (self.hit_ns.len() + self.miss_ns.len()) as u64
+    }
+
+    /// All latencies, sorted ascending (for percentiles).
+    pub fn sorted_latencies(&self) -> Vec<f64> {
+        let mut all: Vec<f64> =
+            self.hit_ns.iter().chain(self.miss_ns.iter()).map(|&n| n as f64).collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        all
+    }
+}
+
+/// Per-client tally: (hit latencies, miss latencies, errors).
+type ClientStats = (Vec<u64>, Vec<u64>, u64);
+
+/// Drive `cfg.clients` logical clients over `exec` against `router`,
+/// blocking the calling thread until every client finished its requests.
+///
+/// The call owns no threads of its own: all concurrency lives on the
+/// executor, and the caller just joins the client tasks.
+pub fn drive<R: Reclaimer>(exec: &Executor, router: Arc<Router<R>>, cfg: &MuxConfig) -> MuxReport {
+    let budgets: Arc<Vec<Semaphore>> = Arc::new(
+        (0..router.shard_count()).map(|_| Semaphore::new(cfg.shard_in_flight.max(1))).collect(),
+    );
+    let key_space = cfg.key_space.max(1);
+    let t0 = monotonic_ns();
+    let handles: Vec<JoinHandle<ClientStats>> = (0..cfg.clients)
+        .map(|c| {
+            let router = router.clone();
+            let budgets = budgets.clone();
+            let requests = cfg.requests_per_client;
+            let hot_pct = cfg.hot_pct;
+            let seed = cfg.seed ^ mix64(c as u64);
+            exec.spawn(async move {
+                let mut rng = Xoshiro256::new(seed);
+                let mut hit_ns = Vec::new();
+                let mut miss_ns = Vec::new();
+                let mut errors = 0u64;
+                for _ in 0..requests {
+                    let key = rng.skewed_key(key_space, hot_pct);
+                    // Back-pressure: hold a budget slot of the shard this
+                    // key routes to for the whole submit → reply window.
+                    let _permit = budgets[router.shard_of(key)].acquire().await;
+                    match router.submit_async(key).await {
+                        Ok(Response { hit: true, latency_ns, .. }) => hit_ns.push(latency_ns),
+                        Ok(Response { latency_ns, .. }) => miss_ns.push(latency_ns),
+                        Err(_) => errors += 1,
+                    }
+                }
+                (hit_ns, miss_ns, errors)
+            })
+        })
+        .collect();
+
+    let mut report = MuxReport::default();
+    for h in handles {
+        match h.join() {
+            Some((hit, miss, errors)) => {
+                report.hit_ns.extend(hit);
+                report.miss_ns.extend(miss);
+                report.errors += errors;
+            }
+            // A client task died (cancelled/panicked): its tally is lost,
+            // so its whole quota counts as errors — `served() + errors`
+            // stays exactly `clients × requests_per_client`.
+            None => report.errors += cfg.requests_per_client as u64,
+        }
+    }
+    report.wall_ns = monotonic_ns() - t0;
+    report
+}

@@ -10,8 +10,20 @@
 
 use crate::util::cache_pad::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-/// Live counters (relaxed; exact at quiescence).
+/// Live counters (relaxed; exact at quiescence), plus two **gauges** the
+/// async front-end exposes for back-pressure plots (E17):
+///
+/// * `queue_depth` — requests sitting in the shard's queue right now
+///   (submitted, not yet dequeued by a worker);
+/// * `in_flight` — open completion slots: requests submitted and not yet
+///   answered or dropped. Tracked by RAII tokens riding inside each
+///   request, so every exit path (hit, computed, shutdown drain, engine
+///   failure) decrements exactly once. A cancelled `SubmitFuture` does
+///   *not* decrement — its abandoned request still occupies the pipeline
+///   until a worker answers it, which is exactly what back-pressure
+///   should see.
 #[derive(Default)]
 pub struct Metrics {
     pub requests: CachePadded<AtomicU64>,
@@ -20,6 +32,32 @@ pub struct Metrics {
     pub batches: CachePadded<AtomicU64>,
     pub batched_keys: CachePadded<AtomicU64>,
     pub evictions_observed: CachePadded<AtomicU64>,
+    pub queue_depth: CachePadded<AtomicU64>,
+    in_flight: Arc<CachePadded<AtomicU64>>,
+}
+
+impl Metrics {
+    /// Open an in-flight token: the gauge rises now and falls when the
+    /// token drops (wherever the request dies).
+    pub(crate) fn in_flight_token(&self) -> InFlightToken {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        InFlightToken(self.in_flight.clone())
+    }
+
+    /// Requests currently in flight (submitted, unanswered).
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII leg of the `in_flight` gauge (see [`Metrics`]); carried by each
+/// queued request.
+pub(crate) struct InFlightToken(Arc<CachePadded<AtomicU64>>);
+
+impl Drop for InFlightToken {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Point-in-time view of the [`Metrics`].
@@ -31,6 +69,10 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub batched_keys: u64,
     pub unreclaimed_nodes: u64,
+    /// Gauge: requests queued, not yet picked up by a worker.
+    pub queue_depth: u64,
+    /// Gauge: requests submitted, not yet answered (open completion slots).
+    pub in_flight: u64,
 }
 
 impl Metrics {
@@ -50,21 +92,27 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             batched_keys: self.batched_keys.load(Ordering::Relaxed),
             unreclaimed_nodes,
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
         }
     }
 }
 
 impl MetricsSnapshot {
-    /// Sum another snapshot's **counters** into this one (requests, hits,
-    /// misses, batches, batched_keys). `unreclaimed_nodes` is deliberately
-    /// left untouched: domains may be shared between shards, so the caller
-    /// must aggregate it over *distinct* domains (see `Router::metrics`).
+    /// Sum another snapshot's **counters and gauges** into this one
+    /// (requests, hits, misses, batches, batched_keys, queue_depth,
+    /// in_flight — per-shard gauges sum to the fleet gauge).
+    /// `unreclaimed_nodes` is deliberately left untouched: domains may be
+    /// shared between shards, so the caller must aggregate it over
+    /// *distinct* domains (see `Router::metrics`).
     pub fn add_counters(&mut self, other: &MetricsSnapshot) {
         self.requests += other.requests;
         self.hits += other.hits;
         self.misses += other.misses;
         self.batches += other.batches;
         self.batched_keys += other.batched_keys;
+        self.queue_depth += other.queue_depth;
+        self.in_flight += other.in_flight;
     }
 
     /// Cache hit rate in [0, 1].
@@ -90,7 +138,8 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "requests={} hits={} ({:.1}%) misses={} batches={} (mean size {:.1}) unreclaimed={}",
+            "requests={} hits={} ({:.1}%) misses={} batches={} (mean size {:.1}) \
+             unreclaimed={} queued={} in_flight={}",
             self.requests,
             self.hits,
             self.hit_rate() * 100.0,
@@ -98,6 +147,8 @@ impl std::fmt::Display for MetricsSnapshot {
             self.batches,
             self.mean_batch(),
             self.unreclaimed_nodes,
+            self.queue_depth,
+            self.in_flight,
         )
     }
 }
@@ -126,6 +177,19 @@ mod tests {
         let s = MetricsSnapshot::default();
         assert_eq!(s.hit_rate(), 0.0);
         assert_eq!(s.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn in_flight_token_is_raii() {
+        let m = Metrics::default();
+        assert_eq!(m.in_flight(), 0);
+        let t1 = m.in_flight_token();
+        let t2 = m.in_flight_token();
+        assert_eq!(m.in_flight(), 2);
+        drop(t1);
+        assert_eq!(m.in_flight(), 1);
+        drop(t2);
+        assert_eq!(m.in_flight(), 0);
     }
 
     #[test]

@@ -28,11 +28,21 @@
 //! ([`Backend::Pjrt`]) or a deterministic in-process stand-in
 //! ([`Backend::Synthetic`]) so benches, CI smokes and tests exercise the
 //! full fleet without artifacts.
+//!
+//! Requests enter through the **async submission front-end** ([`frontend`],
+//! DESIGN.md §6): `submit_async(key)` returns a [`SubmitFuture`] fulfilled
+//! through a per-request completion slot, `submit(key)` is its blocking
+//! [`SubmitHandle`] wrapper (deadline-bounded `recv`), and
+//! [`frontend::mux`] multiplexes thousands of logical clients per executor
+//! thread over the same path — the many-tasks-on-few-threads regime the
+//! E17 `async_scaling` figure measures.
 
+pub mod frontend;
 pub mod metrics;
 pub mod router;
 pub mod shard;
 
+pub use frontend::{SubmitFuture, SubmitHandle};
 pub use router::Router;
 pub use shard::Shard;
 
@@ -251,9 +261,18 @@ mod tests {
         server.shutdown();
         let err = server.request(2);
         assert!(err.is_err(), "request on a stopped server must fail, not hang");
-        // And the raw submit receiver is already closed.
-        let rx = server.submit(3);
-        assert!(rx.recv().is_err());
+        // And a raw submit handle is already closed (errors immediately,
+        // without waiting out the recv timeout).
+        let t0 = std::time::Instant::now();
+        assert!(server.submit(3).recv().is_err());
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+        // Same on the async path: the future is born rejected.
+        assert!(emr_block_on(server.submit_async(4)).is_err());
+    }
+
+    /// Local alias so the test reads naturally.
+    fn emr_block_on<F: std::future::Future>(f: F) -> F::Output {
+        crate::runtime::exec::block_on(f)
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //!   single-domain baseline the Stamp-it comparison study assumes). The
 //!   `shard_scaling` bench measures the two against each other.
 
+use super::frontend::{SubmitFuture, SubmitHandle};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::shard::{Miss, Request, Shard, ShardShared};
 use super::{Backend, Payload, Response, ServerConfig};
@@ -164,13 +165,25 @@ impl<R: Reclaimer> Router<R> {
         &self.shards
     }
 
-    /// Submit a request; the receiver yields the [`Response`]. Routes by
-    /// key hash. On a stopped router the receiver is already closed.
-    pub fn submit(&self, key: u32) -> mpsc::Receiver<Response> {
+    /// Submit a request on the async path (routes by key hash): the
+    /// returned [`SubmitFuture`] resolves when a shard worker (hit) or the
+    /// batcher (computed miss) fulfils its completion slot. On a stopped
+    /// router the future is already closed. Safe to drop mid-flight —
+    /// cancellation neither leaks the slot nor wedges the shard worker.
+    pub fn submit_async(&self, key: u32) -> SubmitFuture {
+        self.shards[self.shard_of(key)].submit_async(key)
+    }
+
+    /// Submit a request; the returned [`SubmitHandle`] yields the
+    /// [`Response`] with a bounded wait — a blocking wrapper over
+    /// [`Self::submit_async`]. On a stopped router the handle errors
+    /// immediately.
+    pub fn submit(&self, key: u32) -> SubmitHandle {
         self.shards[self.shard_of(key)].submit(key)
     }
 
-    /// Blocking convenience: submit + wait.
+    /// Blocking convenience: submit + wait (bounded by
+    /// [`frontend::DEFAULT_RECV_TIMEOUT`](super::frontend::DEFAULT_RECV_TIMEOUT)).
     pub fn request(&self, key: u32) -> Result<Response> {
         self.submit(key).recv().context("server dropped request")
     }
@@ -339,17 +352,24 @@ fn batcher_loop<R: Reclaimer>(
                         shard.metrics.evictions_observed.fetch_add(1, Ordering::Relaxed);
                     }
                     for req in reqs {
-                        let _ = req.reply.send(Response {
+                        let Request { t0, reply, _in_flight: token, .. } = req;
+                        // Gauge closes before the send wakes the waiter —
+                        // same ordering as the shard worker's hit path (the
+                        // waiter's freed budget permit may admit the next
+                        // request immediately).
+                        drop(token);
+                        reply.send(Response {
                             data: Box::new(payload),
                             hit: false,
-                            latency_ns: monotonic_ns() - req.t0,
+                            latency_ns: monotonic_ns() - t0,
                         });
                     }
                 }
             }
             Err(e) => {
-                // Engine failure: drop the affected requests (receivers see
-                // a closed channel) and keep serving.
+                // Engine failure: drop the affected requests (their
+                // completion slots close, so waiters error out) and keep
+                // serving.
                 eprintln!("[batcher] execute failed: {e:#}");
                 for key in keys {
                     waiting.remove(&key);

@@ -3,8 +3,17 @@
 //! lock-free cache, lock-free request queue and worker pool. Shards know
 //! nothing about routing: the [`super::Router`] hashes keys onto them and
 //! fans one shared batcher over their miss channels.
+//!
+//! Since the async front-end (DESIGN.md §6) the native submission path is
+//! [`Shard::submit_async`]: every queued [`Request`] carries the fulfiller
+//! half of a completion slot ([`CompletionSender`]) instead of an
+//! `mpsc::Sender`, so the waiter can be a parked task on the executor just
+//! as well as a blocked OS thread — and dropping the request *anywhere*
+//! (shutdown drain, engine failure) closes the slot instead of leaking a
+//! receiver that blocks forever.
 
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::frontend::{completion_pair, CompletionSender, SubmitFuture, SubmitHandle};
+use super::metrics::{InFlightToken, Metrics, MetricsSnapshot};
 use super::{Payload, Response, ServerConfig};
 use crate::ds::hashmap::FifoCache;
 use crate::ds::queue::Queue;
@@ -20,7 +29,17 @@ use std::time::Duration;
 pub(crate) struct Request {
     pub(crate) key: u32,
     pub(crate) t0: u64,
-    pub(crate) reply: mpsc::Sender<Response>,
+    /// RAII leg of the shard's `in_flight` gauge: rides with the request
+    /// through every path (hit, batcher, drain) and drops exactly once.
+    /// Declared BEFORE `reply` deliberately: struct fields drop in
+    /// declaration order, so on every plain `drop(req)` path (shutdown
+    /// drain, engine failure) the gauge closes before the slot-close wakes
+    /// the waiter — the same ordering the answer paths enforce by hand,
+    /// preserving the `in_flight ≤ shards × budget` invariant.
+    pub(crate) _in_flight: InFlightToken,
+    /// Fulfiller half of the submitter's completion slot; dropping it
+    /// unanswered closes the slot (the waiter errors instead of hanging).
+    pub(crate) reply: CompletionSender,
 }
 
 /// A cache miss traveling from a shard's worker to the router's shared
@@ -37,8 +56,11 @@ pub(crate) struct ShardShared<R: Reclaimer> {
     /// a clone of the fleet-wide one in shared-domain mode).
     pub(crate) domain: DomainRef<R>,
     pub(crate) cache: FifoCache<u32, Payload, R>,
+    /// The request queue. Its population is tracked in ONE place — the
+    /// `metrics.queue_depth` gauge (incremented before enqueue, decremented
+    /// after dequeue) — which both the workers' exit condition and the E17
+    /// back-pressure plots read; no parallel counter to keep in sync.
     pub(crate) queue: Queue<Request, R>,
-    queued: AtomicUsize,
     shutdown: AtomicBool,
     /// Submits currently between their shutdown-flag check and their
     /// enqueue. `shutdown()` quiesces on this (Dekker-style pairing with
@@ -69,7 +91,6 @@ impl<R: Reclaimer> Shard<R> {
             cache: FifoCache::new_in(domain.clone(), cfg.buckets, cfg.capacity),
             queue: Queue::new_in(domain.clone()),
             domain,
-            queued: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             active_submits: AtomicUsize::new(0),
             metrics: Metrics::default(),
@@ -101,31 +122,52 @@ impl<R: Reclaimer> Shard<R> {
         self.index
     }
 
-    /// Submit a request to this shard; the receiver yields the [`Response`].
+    /// Submit a request on the async path: the returned [`SubmitFuture`]
+    /// resolves when a worker (hit) or the router's batcher (computed miss)
+    /// fulfils the completion slot. Safe to drop mid-flight (cancellation —
+    /// the shard fulfils a slot nobody reads; nothing leaks or wedges).
     ///
-    /// After [`shutdown`](Self::shutdown) the receiver comes back already
-    /// closed (`recv` errors immediately) instead of blocking forever on
+    /// After [`shutdown`](Self::shutdown) the future comes back already
+    /// closed (polling it errors immediately) instead of waiting forever on
     /// workers that have exited — the stopped-server fix.
-    pub fn submit(&self, key: u32) -> mpsc::Receiver<Response> {
-        let (tx, rx) = mpsc::channel();
+    pub fn submit_async(&self, key: u32) -> SubmitFuture {
         // Dekker-style pairing with shutdown(): mark this submit in-flight
         // *before* checking the flag (both SeqCst). Either we observe the
         // flag and reject, or shutdown()'s quiesce loop observes our
         // marker and waits for the enqueue below — so an enqueue can never
-        // land after the post-join drain and leave its receiver hanging.
+        // land after the post-join drain and leave its waiter hanging.
         self.shared.active_submits.fetch_add(1, Ordering::SeqCst);
         if self.shared.shutdown.load(Ordering::SeqCst) {
             self.shared.active_submits.fetch_sub(1, Ordering::Release);
-            // Stopped: reject by dropping the sender (closed channel).
-            return rx;
+            // Stopped: reject with an already-closed slot.
+            return SubmitFuture::rejected();
         }
+        let (tx, fut) = completion_pair();
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.shared.queue.enqueue(Cached, Request { key, t0: monotonic_ns(), reply: tx });
-        self.shared.queued.fetch_add(1, Ordering::Release);
+        // Incremented BEFORE the enqueue: a dequeuing worker's decrement is
+        // then always preceded by its matching increment, so the u64 gauge
+        // can never transiently underflow in a snapshot.
+        self.shared.metrics.queue_depth.fetch_add(1, Ordering::Release);
+        self.shared.queue.enqueue(
+            Cached,
+            Request {
+                key,
+                t0: monotonic_ns(),
+                reply: tx,
+                _in_flight: self.shared.metrics.in_flight_token(),
+            },
+        );
         // Release: the enqueue happens-before shutdown() sees the count
         // drop, hence before the workers are joined and the queue drained.
         self.shared.active_submits.fetch_sub(1, Ordering::Release);
-        rx
+        fut
+    }
+
+    /// Blocking wrapper over [`Self::submit_async`]: the returned
+    /// [`SubmitHandle`] waits with a deadline (`recv_timeout`), so a lost
+    /// reply surfaces as an error instead of an eternal block.
+    pub fn submit(&self, key: u32) -> SubmitHandle {
+        SubmitHandle::new(self.submit_async(key))
     }
 
     pub(crate) fn shared(&self) -> &Arc<ShardShared<R>> {
@@ -151,8 +193,8 @@ impl<R: Reclaimer> Shard<R> {
 
     /// Stop this shard's workers. Requests already queued are drained and
     /// served first; anything that raced past the shutdown flag afterwards
-    /// is rejected (its reply sender is dropped, so the receiver observes
-    /// a closed channel instead of blocking forever).
+    /// is rejected (its completion-slot fulfiller is dropped, so the waiter
+    /// observes a closed slot instead of blocking forever).
     pub(crate) fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         // Quiesce submits that raced past the flag check (see submit()):
@@ -172,8 +214,8 @@ impl<R: Reclaimer> Shard<R> {
         // Workers are gone; nothing will answer what is still queued.
         let handle = self.shared.domain.register();
         while let Some(req) = self.shared.queue.dequeue(&handle) {
-            self.shared.queued.fetch_sub(1, Ordering::Release);
-            drop(req); // dropping the reply sender closes the channel
+            self.shared.metrics.queue_depth.fetch_sub(1, Ordering::Release);
+            drop(req); // dropping the fulfiller closes the completion slot
         }
     }
 }
@@ -188,17 +230,24 @@ fn worker_loop<R: Reclaimer>(index: usize, shared: &ShardShared<R>, miss_tx: mps
         match shared.queue.dequeue(&handle) {
             Some(req) => {
                 idle_spins = 0;
-                shared.queued.fetch_sub(1, Ordering::Release);
+                shared.metrics.queue_depth.fetch_sub(1, Ordering::Release);
                 // Guarded cache read: the payload is copied out under the
                 // guard (the "reuse" path of the paper's simulation).
                 let hit = shared.cache.get(&handle, &req.key, |v| Box::new(*v));
                 match hit {
                     Some(data) => {
                         shared.metrics.hits.fetch_add(1, Ordering::Relaxed);
-                        let _ = req.reply.send(Response {
+                        let Request { t0, reply, _in_flight: token, .. } = req;
+                        // Close the in-flight gauge BEFORE the send wakes
+                        // the waiter: the waiter may release a budget permit
+                        // that admits the next request, and the gauge must
+                        // never read above shards × budget (the bound the
+                        // back-pressure test asserts).
+                        drop(token);
+                        reply.send(Response {
                             data,
                             hit: true,
-                            latency_ns: monotonic_ns() - req.t0,
+                            latency_ns: monotonic_ns() - t0,
                         });
                     }
                     None => {
@@ -211,7 +260,7 @@ fn worker_loop<R: Reclaimer>(index: usize, shared: &ShardShared<R>, miss_tx: mps
             }
             None => {
                 if shared.shutdown.load(Ordering::Acquire)
-                    && shared.queued.load(Ordering::Acquire) == 0
+                    && shared.metrics.queue_depth.load(Ordering::Acquire) == 0
                 {
                     return;
                 }

@@ -69,7 +69,12 @@
 //!   shared batcher thread dispatches misses to an AOT-compiled
 //!   JAX/Pallas computation via PJRT (behind the `pjrt` cargo feature) or
 //!   to a deterministic synthetic backend (artifact-free; what benches
-//!   and CI smokes run).
+//!   and CI smokes run). Requests enter through the completion-driven
+//!   **async front-end** ([`coordinator::frontend`] over the std-only
+//!   executor in [`runtime::exec`]): `submit_async` parks a task on a
+//!   per-request completion slot, `submit` is its deadline-bounded
+//!   blocking wrapper, and the connection mux drives tens of thousands
+//!   of logical clients on a handful of executor threads (E17).
 //! * [`util`] — std-only stand-ins for `rand`/`clap`/`criterion`/
 //!   `proptest`/`anyhow`/`crossbeam_utils::CachePadded`.
 //!

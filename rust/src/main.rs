@@ -10,7 +10,9 @@
 //! repro ablation threshold|hp|epoch [opts]    # A1/A2/A3
 //! repro serve [--scheme stamp] [--requests N] # coordinator (E15)
 //!             [--shards N] [--shared-domain] [--backend pjrt|synthetic]
+//!             [--frontend thread|async] [--clients N] [--exec-threads T]
 //! repro shard-scaling [opts]                  # E16 (artifact-free)
+//! repro async-scaling [opts]                  # E17 (artifact-free)
 //!
 //! common options:
 //!   --threads 1,2,4   --trials N   --secs S   --schemes all|ebr,stamp,...
@@ -19,9 +21,12 @@
 
 use emr::bench_fw::figures::{self, Workload};
 use emr::bench_fw::{report, BenchParams};
+use emr::coordinator::frontend::mux::{self, MuxConfig};
+use emr::coordinator::frontend::Frontend;
 use emr::coordinator::{Backend, CacheServer, ServerConfig};
 use emr::dispatch_scheme;
 use emr::reclaim::{Reclaimer, SchemeId};
+use emr::runtime::exec::Executor;
 use emr::util::cli::Args;
 use emr::util::rng::Xoshiro256;
 use emr::util::stats::{percentile_sorted, Summary};
@@ -58,16 +63,26 @@ fn main() {
         },
         Some("serve") => serve(&args),
         Some("shard-scaling") => figures::fig_shard_scaling(&params),
+        Some("async-scaling") => figures::fig_async_scaling(&params),
         _ => usage(""),
     }
 }
 
-/// E15: run the coordinator on a synthetic client load and report
+/// E15/E17: run the coordinator on a synthetic client load and report
 /// latency/throughput (the end-to-end driver; also see
 /// `examples/compute_cache.rs`).
+///
+/// `--frontend thread` (default) is the seed's shape: one blocking OS
+/// thread per client. `--frontend async` multiplexes `--clients N` logical
+/// clients as tasks on `--exec-threads T` executor threads over
+/// `Router::submit_async` — the regime the async front-end exists for.
 fn serve(args: &Args) {
     let scheme = SchemeId::parse(args.get_or("scheme", "stamp")).unwrap_or_else(|| {
         eprintln!("unknown --scheme");
+        std::process::exit(2);
+    });
+    let frontend = Frontend::parse(args.get_or("frontend", "thread")).unwrap_or_else(|| {
+        eprintln!("unknown --frontend (thread|async)");
         std::process::exit(2);
     });
     let clients = args.usize_or("clients", 4);
@@ -82,55 +97,35 @@ fn serve(args: &Args) {
     });
 
     struct ServeOpts {
+        frontend: Frontend,
+        exec_threads: usize,
+        in_flight: usize,
         clients: usize,
         requests: usize,
         key_space: u64,
         cfg: ServerConfig,
     }
 
-    fn run<R: Reclaimer>(o: ServeOpts) {
-        let ServeOpts { clients, requests, key_space, cfg } = o;
-        let shards = cfg.shards;
-        let server = CacheServer::<R>::start(cfg).unwrap_or_else(|e| {
-            eprintln!("server start failed: {e:#}");
-            std::process::exit(1);
-        });
-        println!("serving with scheme {} ({} shard(s)) …", R::NAME, shards);
-        let t0 = emr::util::monotonic_ns();
-        let latencies: Vec<Vec<f64>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..clients)
-                .map(|c| {
-                    let server = &server;
-                    scope.spawn(move || {
-                        let mut rng = Xoshiro256::new(0xE2E ^ c as u64);
-                        let mut lat = Vec::with_capacity(requests);
-                        for _ in 0..requests {
-                            let key = rng.below(key_space) as u32;
-                            let resp = server.request(key).expect("request failed");
-                            lat.push(resp.latency_ns as f64);
-                        }
-                        lat
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        let wall_s = (emr::util::monotonic_ns() - t0) as f64 / 1e9;
-        let mut all: Vec<f64> = latencies.into_iter().flatten().collect();
-        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let s = Summary::of(&all);
-        let m = server.metrics();
+    fn finish<R: Reclaimer>(
+        server: &CacheServer<R>,
+        clients: usize,
+        requests: usize,
+        served: usize,
+        wall_s: f64,
+        all: &[f64],
+    ) {
+        let s = Summary::of(all);
         println!("\n== compute-cache serve ({}) ==", R::NAME);
         println!("clients={clients} requests/client={requests} wall={wall_s:.2}s");
         println!(
             "throughput: {:.0} req/s   latency p50={} p95={} p99={} max={}",
-            (clients * requests) as f64 / wall_s,
-            emr::util::stats::fmt_ns(percentile_sorted(&all, 50.0)),
-            emr::util::stats::fmt_ns(percentile_sorted(&all, 95.0)),
-            emr::util::stats::fmt_ns(percentile_sorted(&all, 99.0)),
+            served as f64 / wall_s,
+            emr::util::stats::fmt_ns(percentile_sorted(all, 50.0)),
+            emr::util::stats::fmt_ns(percentile_sorted(all, 95.0)),
+            emr::util::stats::fmt_ns(percentile_sorted(all, 99.0)),
             emr::util::stats::fmt_ns(s.max),
         );
-        println!("{m}");
+        println!("{}", server.metrics());
         if server.shard_count() > 1 {
             for (i, sm) in server.shard_metrics().iter().enumerate() {
                 println!("  shard {i}: {sm}");
@@ -139,11 +134,91 @@ fn serve(args: &Args) {
         println!("cache entries at end: {}", server.cache_len());
         server.shutdown();
     }
+
+    fn run<R: Reclaimer>(o: ServeOpts) {
+        let ServeOpts { frontend, exec_threads, in_flight, clients, requests, key_space, cfg } = o;
+        let shards = cfg.shards;
+        let server = CacheServer::<R>::start(cfg).unwrap_or_else(|e| {
+            eprintln!("server start failed: {e:#}");
+            std::process::exit(1);
+        });
+        match frontend {
+            Frontend::Thread => {
+                println!(
+                    "serving with scheme {} ({} shard(s), thread-per-client) …",
+                    R::NAME,
+                    shards
+                );
+                let t0 = emr::util::monotonic_ns();
+                let latencies: Vec<Vec<f64>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..clients)
+                        .map(|c| {
+                            let server = &server;
+                            scope.spawn(move || {
+                                let mut rng = Xoshiro256::new(0xE2E ^ c as u64);
+                                let mut lat = Vec::with_capacity(requests);
+                                for _ in 0..requests {
+                                    let key = rng.below(key_space) as u32;
+                                    let resp = server.request(key).expect("request failed");
+                                    lat.push(resp.latency_ns as f64);
+                                }
+                                lat
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                let wall_s = (emr::util::monotonic_ns() - t0) as f64 / 1e9;
+                let mut all: Vec<f64> = latencies.into_iter().flatten().collect();
+                all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                finish(&server, clients, requests, clients * requests, wall_s, &all);
+            }
+            Frontend::Async => {
+                println!(
+                    "serving with scheme {} ({} shard(s), async mux: {} logical clients \
+                     on {} executor threads) …",
+                    R::NAME,
+                    shards,
+                    clients,
+                    exec_threads
+                );
+                let exec = Executor::new(exec_threads);
+                let report = mux::drive(
+                    &exec,
+                    server.clone(),
+                    &MuxConfig {
+                        clients,
+                        requests_per_client: requests,
+                        key_space,
+                        // Uniform draw, like the thread front-end above (the
+                        // E17 figure is the one that skews traffic).
+                        hot_pct: 0,
+                        shard_in_flight: in_flight,
+                        seed: 0xE2E,
+                    },
+                );
+                let wall_s = report.wall_ns as f64 / 1e9;
+                if report.errors > 0 {
+                    eprintln!("warning: {} request(s) errored", report.errors);
+                }
+                let all = report.sorted_latencies();
+                finish(&server, clients, requests, report.served() as usize, wall_s, &all);
+            }
+        }
+    }
     let cfg = ServerConfig { capacity, workers: 2, ..ServerConfig::default() }
         .with_shards(shards)
         .with_shared_domain(shared_domain)
         .with_backend(backend);
-    let opts = ServeOpts { clients, requests, key_space, cfg };
+    let opts = ServeOpts {
+        frontend,
+        exec_threads: args.usize_or("exec-threads", 8),
+        in_flight: args.usize_or("in-flight", 256),
+        clients,
+        requests,
+        key_space,
+        cfg,
+    };
     dispatch_scheme!(scheme, run, opts);
 }
 
@@ -163,7 +238,9 @@ fn usage(context: &str) -> ! {
          \x20 ablation threshold|hp|epoch          design-choice ablations (A1-A3)\n\
          \x20 serve                                compute-cache coordinator (E15)\n\
          \x20   [--shards N] [--shared-domain] [--backend pjrt|synthetic]\n\
+         \x20   [--frontend thread|async] [--clients N] [--exec-threads T] [--in-flight B]\n\
          \x20 shard-scaling                        router shard sweep, artifact-free (E16)\n\
+         \x20 async-scaling                        async-mux vs thread-per-request, artifact-free (E17)\n\
          \n\
          common options: --threads 1,2,4 --trials N --secs S --schemes all\n\
          \x20               --alloc pool|system --workload PCT --csv FILE --paper"

@@ -15,6 +15,8 @@
 //! wraps it behind an mpsc channel for the coordinator (which is exactly
 //! one dispatch thread anyway — the batcher).
 
+pub mod exec;
+
 use crate::util::error::{Context, Result};
 use crate::{anyhow, bail};
 use std::path::{Path, PathBuf};

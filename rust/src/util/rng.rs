@@ -77,6 +77,23 @@ impl Xoshiro256 {
     pub fn percent(&mut self, pct: u32) -> bool {
         self.below(100) < pct as u64
     }
+
+    /// One key from the serving benchmarks' skewed stream: `hot_pct`% of
+    /// draws land on a hot set of 1% of the key space (min 16 keys), the
+    /// rest are uniform. The E15/E16/E17 load shape, defined once — the
+    /// coordinator figures stay comparable because they all draw from here.
+    #[inline]
+    pub fn skewed_key(&mut self, key_space: u64, hot_pct: u32) -> u32 {
+        let key_space = key_space.max(1);
+        // min(max(ks/100, 16), ks) without a max-min chain: the hot set is
+        // 1% of the key space, at least 16 keys, never beyond the space.
+        let hot_set = (key_space / 100).max(16.min(key_space));
+        if self.percent(hot_pct) {
+            self.below(hot_set) as u32
+        } else {
+            self.below(key_space) as u32
+        }
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +122,21 @@ mod tests {
         let mut r = Xoshiro256::new(7);
         for _ in 0..10_000 {
             assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn skewed_key_stays_in_range() {
+        let mut r = Xoshiro256::new(7);
+        for ks in [1u64, 4, 100, 30_000] {
+            for _ in 0..1000 {
+                assert!((r.skewed_key(ks, 80) as u64) < ks);
+            }
+        }
+        // The skew is real: at 100% hot, every key lands in the hot set.
+        let mut r = Xoshiro256::new(8);
+        for _ in 0..1000 {
+            assert!((r.skewed_key(30_000, 100) as u64) < 300);
         }
     }
 

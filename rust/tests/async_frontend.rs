@@ -1,0 +1,213 @@
+//! End-to-end tests of the async submission front-end (DESIGN.md §6):
+//! `Router::submit_async` + completion slots + the std-only executor +
+//! the connection mux — all on the synthetic backend, artifact-free.
+//!
+//! The cancellation-churn suite is the satellite the ISSUE calls out:
+//! dropping a `SubmitFuture` mid-flight must neither leak its completion
+//! slot nor wedge the shard worker, under Stamp-it, HP and EBR alike. The
+//! `in_flight` gauge is the leak detector — every abandoned request must
+//! still be answered (and its RAII token dropped) by the fleet.
+
+use emr::bench_fw::workload::compute_payload;
+use emr::coordinator::frontend::mux::{self, MuxConfig};
+use emr::coordinator::{Backend, Router, ServerConfig};
+use emr::reclaim::ebr::Ebr;
+use emr::reclaim::hp::Hp;
+use emr::reclaim::stamp::StampIt;
+use emr::reclaim::Reclaimer;
+use emr::runtime::exec::{block_on, block_on_deadline, Executor};
+use std::time::{Duration, Instant};
+
+fn synthetic_cfg() -> ServerConfig {
+    ServerConfig {
+        workers: 2,
+        capacity: 128,
+        buckets: 32,
+        ..ServerConfig::default()
+    }
+    .with_backend(Backend::synthetic())
+}
+
+/// Wait (bounded) for the fleet-wide `in_flight` gauge to drain to zero.
+fn wait_in_flight_zero<R: Reclaimer>(server: &Router<R>, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if server.metrics().in_flight == 0 {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    server.metrics().in_flight == 0
+}
+
+#[test]
+fn async_roundtrip_matches_synthetic_compute() {
+    let server = Router::<StampIt>::start(synthetic_cfg()).unwrap();
+    // Miss, then hit — both through the async path.
+    let r1 = block_on(server.submit_async(7)).expect("first submit");
+    assert!(!r1.hit);
+    assert_eq!(r1.data[..], compute_payload(7)[..]);
+    let r2 = block_on(server.submit_async(7)).expect("second submit");
+    assert!(r2.hit, "second request must be served from cache");
+    assert_eq!(r2.data[..], compute_payload(7)[..]);
+    server.shutdown();
+}
+
+#[test]
+fn blocking_submit_is_a_wrapper_over_async() {
+    // The blocking API must behave exactly like submit_async + block-on:
+    // same payloads, same metrics accounting.
+    let server = Router::<Ebr>::start(synthetic_cfg()).unwrap();
+    let blocking = server.submit(11).recv().expect("blocking submit");
+    let asynced = block_on(server.submit_async(11)).expect("async submit");
+    assert_eq!(blocking.data[..], asynced.data[..]);
+    let m = server.metrics();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.hits + m.misses, 2);
+    server.shutdown();
+    // Stopped router: both paths reject immediately (no timeout wait).
+    let t0 = Instant::now();
+    assert!(server.submit(12).recv().is_err());
+    assert!(block_on(server.submit_async(13)).is_err());
+    assert!(t0.elapsed() < Duration::from_secs(5));
+}
+
+#[test]
+fn mux_drives_thousands_of_logical_clients() {
+    // 2000 logical clients on 4 executor threads — far beyond
+    // thread-per-request territory for a test — must all be served.
+    let server = Router::<StampIt>::start(synthetic_cfg().with_shards(4)).unwrap();
+    let exec = Executor::new(4);
+    let cfg = MuxConfig {
+        clients: 2000,
+        requests_per_client: 5,
+        key_space: 2_000,
+        hot_pct: 80,
+        shard_in_flight: 64,
+        seed: 0xA57,
+    };
+    let report = mux::drive(&exec, server.clone(), &cfg);
+    assert_eq!(report.errors, 0, "no request may be dropped");
+    assert_eq!(report.served(), 2000 * 5);
+    let m = server.metrics();
+    assert_eq!(m.requests, 2000 * 5);
+    assert_eq!(m.hits + m.misses, 2000 * 5);
+    assert!(
+        wait_in_flight_zero(&server, Duration::from_secs(10)),
+        "in_flight must drain once every client is answered: {}",
+        server.metrics().in_flight
+    );
+    server.shutdown();
+    assert_eq!(server.metrics().queue_depth, 0, "shutdown must drain the queues");
+}
+
+#[test]
+fn mux_back_pressure_bounds_open_slots() {
+    // The per-shard budget is the invariant: a client only submits while
+    // holding a budget permit, and the in-flight token's lifetime sits
+    // inside the permit's — so the fleet-wide gauge can never exceed
+    // shards × budget, at any sampled instant.
+    let server = Router::<Ebr>::start(synthetic_cfg().with_shards(2)).unwrap();
+    let exec = Executor::new(4);
+    let cfg = MuxConfig {
+        clients: 400,
+        requests_per_client: 3,
+        key_space: 1_000,
+        hot_pct: 80,
+        shard_in_flight: 8,
+        seed: 0xBB,
+    };
+    let bound = 2 * 8;
+    let done = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let sampler = {
+        let server = server.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut peak = 0u64;
+            while !done.load(std::sync::atomic::Ordering::Acquire) {
+                peak = peak.max(server.metrics().in_flight);
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            peak
+        })
+    };
+    let report = mux::drive(&exec, server.clone(), &cfg);
+    done.store(true, std::sync::atomic::Ordering::Release);
+    let peak = sampler.join().unwrap();
+    assert_eq!(report.errors, 0);
+    assert!(
+        peak <= bound as u64,
+        "in_flight gauge ({peak}) exceeded the back-pressure bound ({bound})"
+    );
+    server.shutdown();
+}
+
+/// The churn satellite: spawn and drop 10k `SubmitFuture`s mid-flight —
+/// half never polled, half cancelled after their first poll (waker
+/// registered) — then verify nothing leaked and nothing wedged.
+fn cancellation_churn<R: Reclaimer>() {
+    let server = Router::<R>::start(
+        ServerConfig {
+            workers: 2,
+            capacity: 64, // tiny: constant eviction churn under the load
+            buckets: 16,
+            ..ServerConfig::default()
+        }
+        .with_backend(Backend::synthetic())
+        .with_shards(2),
+    )
+    .unwrap();
+    const N: u32 = 10_000;
+    for key in 0..N {
+        let fut = server.submit_async(key % 512);
+        if key % 2 == 0 {
+            // Dropped unpolled: no waker was ever registered.
+            drop(fut);
+        } else {
+            // Polled once (waker registered), then cancelled: the shard
+            // fulfils a slot nobody reads.
+            let _ = block_on_deadline(fut, Instant::now());
+        }
+    }
+    // Every abandoned request must still be answered: the in-flight gauge
+    // (RAII tokens riding the requests) drains to exactly zero.
+    assert!(
+        wait_in_flight_zero(&server, Duration::from_secs(30)),
+        "{}: abandoned requests leaked in_flight slots: {}",
+        R::NAME,
+        server.metrics().in_flight
+    );
+    let m = server.metrics();
+    assert_eq!(m.requests, N as u64, "{}: every submit must be counted", R::NAME);
+    // And the workers are not wedged: a fresh request round-trips.
+    let r = block_on(server.submit_async(3)).expect("post-churn request");
+    assert_eq!(r.data[..], compute_payload(3)[..]);
+    server.shutdown();
+    assert_eq!(server.metrics().queue_depth, 0);
+}
+
+#[test]
+fn cancellation_churn_stamp() {
+    cancellation_churn::<StampIt>();
+}
+
+#[test]
+fn cancellation_churn_hp() {
+    cancellation_churn::<Hp>();
+}
+
+#[test]
+fn cancellation_churn_ebr() {
+    cancellation_churn::<Ebr>();
+}
+
+#[test]
+fn submit_handle_timeout_is_bounded_not_eternal() {
+    // Satellite regression: the old API returned a bare mpsc::Receiver a
+    // caller could block on forever. SubmitHandle::recv_timeout bounds it.
+    let server = Router::<StampIt>::start(synthetic_cfg()).unwrap();
+    // A healthy request completes well inside the timeout.
+    let ok = server.submit(1).recv_timeout(Duration::from_secs(10));
+    assert!(ok.is_ok());
+    server.shutdown();
+}

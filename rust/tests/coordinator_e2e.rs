@@ -279,12 +279,14 @@ fn cross_shard_domains_never_share_retire_lists() {
 #[test]
 fn shutdown_rejects_straggler_submits() {
     // Regression (satellite): a request submitted after shutdown must see
-    // a closed reply channel, not block forever.
+    // a closed completion slot, not block forever — on the blocking handle
+    // and on the raw future alike.
     let server = Router::<emr::reclaim::ebr::Ebr>::start(synthetic_cfg()).unwrap();
     let _ = server.request(9).unwrap();
     server.shutdown();
     assert!(server.request(10).is_err());
     assert!(server.submit(11).recv().is_err());
+    assert!(emr::runtime::exec::block_on(server.submit_async(12)).is_err());
     // Idempotent shutdown stays safe.
     server.shutdown();
 }
