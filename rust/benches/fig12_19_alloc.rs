@@ -2,17 +2,115 @@
 //! (libc) allocator instead of the jemalloc-like pool. The paper's finding
 //! — "the impact of the memory manager is equally big/small for all
 //! schemes" — shows as both sweeps preserving the scheme ordering.
+//!
+//! Since E20 the pool pass is itself an ablation over the magazine layer
+//! (`--magazines on|off|<cap>` picks the "on" capacity; both arms always
+//! run), so one invocation yields three allocator configurations per
+//! workload: pool+magazines, pool bare, and system. Results are printed
+//! as tables *and* written as a machine-readable record to
+//! `BENCH_fig12_19_alloc.json` (override with `--json PATH`) for the CI
+//! artifact trail.
 use emr::alloc::Policy;
-use emr::bench_fw::figures::{fig_efficiency, fig_throughput, Workload};
+use emr::bench_fw::figures::{efficiency_table, throughput_table, Workload};
+use emr::bench_fw::report::{SeriesTable, SweepTable};
 use emr::bench_fw::BenchParams;
 use emr::util::cli::Args;
+use std::fmt::Write as _;
+
+/// One (workload, alloc-config) throughput sweep flattened to JSON cells.
+fn push_throughput_cells(
+    out: &mut String,
+    first: &mut bool,
+    workload: &str,
+    alloc: &str,
+    magazines: usize,
+    table: &SweepTable,
+) {
+    for (scheme, row) in &table.rows {
+        for (&threads, &ns_per_op) in table.threads.iter().zip(row) {
+            if !*first {
+                out.push_str(",\n");
+            }
+            *first = false;
+            let _ = write!(
+                out,
+                "    {{\"kind\": \"throughput\", \"workload\": \"{workload}\", \
+                 \"alloc\": \"{alloc}\", \"magazines\": {magazines}, \
+                 \"scheme\": \"{scheme}\", \"threads\": {threads}, \
+                 \"ns_per_op\": {ns_per_op:.3}}}"
+            );
+        }
+    }
+}
+
+/// One efficiency series summarised to (peak, end) unreclaimed nodes.
+fn push_efficiency_cells(
+    out: &mut String,
+    first: &mut bool,
+    workload: &str,
+    alloc: &str,
+    magazines: usize,
+    table: &SeriesTable,
+) {
+    for (scheme, series) in &table.rows {
+        let peak = series.iter().map(|&(_, v)| v).fold(0.0f64, f64::max);
+        let end = series.last().map_or(0.0, |&(_, v)| v);
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        let _ = write!(
+            out,
+            "    {{\"kind\": \"efficiency\", \"workload\": \"{workload}\", \
+             \"alloc\": \"{alloc}\", \"magazines\": {magazines}, \
+             \"scheme\": \"{scheme}\", \"peak_unreclaimed\": {peak:.1}, \
+             \"end_unreclaimed\": {end:.1}}}"
+        );
+    }
+}
 
 fn main() {
-    let mut p = BenchParams::from_args(&Args::parse());
-    for alloc in [Policy::Pool, Policy::System] {
+    let args = Args::parse();
+    let mut p = BenchParams::from_args(&args);
+    let on_cap = if p.magazine_cap == 0 {
+        emr::alloc::DEFAULT_MAGAZINE_CAP
+    } else {
+        p.magazine_cap
+    };
+    // (policy, magazine cap) configurations: the pool arm is the magazine
+    // ablation; System bypasses the pool entirely, so the cap is moot there.
+    let configs = [
+        (Policy::Pool, on_cap),
+        (Policy::Pool, 0usize),
+        (Policy::System, 0usize),
+    ];
+
+    let mut cells = String::new();
+    let mut first = true;
+    for (alloc, cap) in configs {
         p.alloc = alloc;
-        fig_throughput(&p, Workload::Queue);    // Fig 3 vs 12
-        fig_throughput(&p, Workload::List);     // Fig 4 vs 13
-        fig_efficiency(&p, Workload::Queue);    // Fig 8 vs 16
+        p.magazine_cap = cap;
+        let label = alloc.name();
+        let queue = throughput_table(&p, Workload::Queue); // Fig 3 vs 12
+        queue.print();
+        push_throughput_cells(&mut cells, &mut first, "queue", label, cap, &queue);
+        let list = throughput_table(&p, Workload::List); // Fig 4 vs 13
+        list.print();
+        push_throughput_cells(&mut cells, &mut first, "list", label, cap, &list);
+        let eff = efficiency_table(&p, Workload::Queue); // Fig 8 vs 16
+        eff.print();
+        push_efficiency_cells(&mut cells, &mut first, "queue", label, cap, &eff);
+    }
+    // Restore the process default so nothing after us runs capless.
+    emr::alloc::set_magazine_cap(emr::alloc::DEFAULT_MAGAZINE_CAP);
+
+    let json = format!(
+        "{{\n  \"bench\": \"fig12_19_alloc\",\n  \"magazine_cap\": {on_cap},\n  \
+         \"cells\": [\n{cells}\n  ]\n}}\n"
+    );
+    let path = args.get_or("json", "BENCH_fig12_19_alloc.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
     }
 }

@@ -1,0 +1,35 @@
+//! E20: cost of a retire→reuse node cycle (Owned::new + retire_owned)
+//! with the magazine layer on vs off — the allocation-side win the
+//! magazines exist for.
+//!
+//! Plain run prints the per-scheme on/off thread sweep (the figure). Two
+//! extra modes drive the CI regression gate (EXPERIMENTS.md §E20):
+//!
+//! ```bash
+//! # gate: magazines-on must beat magazines-off under churn, and the
+//! # recorded per-scheme baseline must hold (exit 1 on regression):
+//! cargo bench --bench micro_alloc -- --gate ci/micro_alloc_baseline.csv
+//! # (re)record the baseline on this machine:
+//! cargo bench --bench micro_alloc -- --record ci/micro_alloc_baseline.csv
+//! ```
+use emr::bench_fw::figures::{micro_alloc, micro_alloc_gate};
+use emr::bench_fw::BenchParams;
+use emr::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let params = BenchParams::from_args(&args);
+    match (args.get("record"), args.get("gate")) {
+        (Some(path), _) => {
+            if !micro_alloc_gate(&params, None, Some(path)) {
+                std::process::exit(1);
+            }
+        }
+        (None, Some(path)) => {
+            if !micro_alloc_gate(&params, Some(path), None) {
+                std::process::exit(1);
+            }
+        }
+        (None, None) => micro_alloc(&params),
+    }
+}

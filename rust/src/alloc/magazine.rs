@@ -1,0 +1,405 @@
+//! Per-thread **magazine** (tcache) layer over the slot pool — ROADMAP
+//! item 4: close the reclamation→allocation loop so the paper's "reclaims
+//! earlier" property becomes an allocation-throughput win instead of a
+//! pile-up on one global Treiber head per size class.
+//!
+//! Layering (see also `DESIGN.md` §7):
+//!
+//! ```text
+//!   Owned::new / reclaim_one
+//!        │  alloc_raw / free_raw      (policy + efficiency counters)
+//!        ▼
+//!   pool::alloc / pool::free          (size-class routing)
+//!        │
+//!        ├─► magazine rack (this module) — non-atomic Vec push/pop in TLS
+//!        │        │  full/empty exchange: one tagged CAS per ~cap slots
+//!        │        ▼
+//!        │   per-class depot — Treiber stack of slot *chains*
+//!        ▼
+//!   SizeClass free-list / bump        (slot-granularity fallback)
+//! ```
+//!
+//! Each thread keeps a **rack**: one loaded/previous magazine pair per size
+//! class (Bonwick's two-magazine scheme — swapping instead of spilling makes
+//! the hot path immune to alloc/free phase flapping at a magazine boundary).
+//! The steady-state retire→reuse cycle — `reclaim_one` frees a node and the
+//! next `Owned::new` takes it straight back — touches no shared cache line:
+//! both ends are a plain `Vec` push/pop on the calling thread's rack.
+//!
+//! Cross-thread flow (one thread reclaims what another allocates, the E16
+//! coordinator shape) moves at magazine granularity: a full magazine is
+//! linked into one chain and pushed to the class depot with a single tagged
+//! CAS; a refill pops one chain the same way — 1/cap of the CAS traffic the
+//! raw free-list would see.
+//!
+//! **Type-stability / LFRC contract**: a cached slot's word 0 is never
+//! written (rack magazines store slot pointers in side `Vec`s; depot chain
+//! links live at slot offsets 8..16, the same scratch region as the global
+//! free-list link), so a stale Valois-style reader can still inspect the
+//! refcount word of a slot parked in any magazine or depot chain.
+//!
+//! **Placement**: magazines are *thread*-local rather than owned by a
+//! reclamation `LocalHandle`. `Owned::new` is deliberately
+//! domain-independent and slots are type-stable process-wide, so
+//! cross-domain reuse is sound — domains matter at retire time, not at
+//! allocation. Handle teardown still participates: dropping or evicting a
+//! `LocalHandle` calls [`flush_magazines`] so a thread that stops using a
+//! domain strands no slots (thread exit flushes too, via the rack's `Drop`).
+//!
+//! `Policy::System` never reaches this module (the policy check happens in
+//! `alloc_raw`/`free_raw` above the pool), and LFRC's force-pool traffic is
+//! served like any other pool traffic. A capacity of 0 disables the layer
+//! (`--magazines off`), leaving only one relaxed atomic load on each path.
+
+use super::pool::{self, NUM_CLASSES};
+use crate::util::cache_pad::CachePadded;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Default magazine capacity (slots per magazine, per class): one depot CAS
+/// amortizes ~64 slot hand-offs, the batch size the tentpole targets.
+pub const DEFAULT_MAGAZINE_CAP: usize = 64;
+
+/// Global capacity knob (0 = magazines off). Benchmarks toggle this per
+/// trial (`--magazines on|off|<cap>`); racks lazily re-shape on next use.
+static CAP: AtomicUsize = AtomicUsize::new(DEFAULT_MAGAZINE_CAP);
+
+/// Set the per-class magazine capacity; `0` disables the layer. Takes
+/// effect on each thread's next pool operation (existing rack contents are
+/// flushed to the depot on the re-shape, so no slot is stranded).
+pub fn set_magazine_cap(cap: usize) {
+    CAP.store(cap, Ordering::Relaxed);
+}
+
+/// Current magazine capacity (0 = disabled).
+pub fn magazine_cap() -> usize {
+    CAP.load(Ordering::Relaxed)
+}
+
+// Process-wide, monotonic event counters (relaxed; diagnostics only).
+static ALLOC_HITS: CachePadded<AtomicU64> = CachePadded::new(AtomicU64::new(0));
+static ALLOC_MISSES: CachePadded<AtomicU64> = CachePadded::new(AtomicU64::new(0));
+static FREE_HITS: CachePadded<AtomicU64> = CachePadded::new(AtomicU64::new(0));
+static DEPOT_FLUSHES: CachePadded<AtomicU64> = CachePadded::new(AtomicU64::new(0));
+static DEPOT_REFILLS: CachePadded<AtomicU64> = CachePadded::new(AtomicU64::new(0));
+
+/// Snapshot of the magazine event counters (monotonic since process start).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct MagazineStats {
+    /// Pool allocs served from the calling thread's rack (incl. after a
+    /// loaded↔prev swap or a depot refill) — the non-atomic fast path.
+    pub alloc_hits: u64,
+    /// Pool allocs that fell through to the class free-list / bump cursor.
+    pub alloc_misses: u64,
+    /// Pool frees absorbed by the calling thread's rack.
+    pub free_hits: u64,
+    /// Full magazines pushed to a depot as one chain (one CAS per ~cap
+    /// slots; includes handle-drop / thread-exit flushes).
+    pub depot_flushes: u64,
+    /// Chains popped from a depot to refill an empty rack.
+    pub depot_refills: u64,
+}
+
+impl MagazineStats {
+    /// Fraction of magazine-eligible allocs served without touching a
+    /// shared cache line.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.alloc_hits + self.alloc_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.alloc_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Read the magazine counters.
+pub fn magazine_stats() -> MagazineStats {
+    MagazineStats {
+        alloc_hits: ALLOC_HITS.load(Ordering::Relaxed),
+        alloc_misses: ALLOC_MISSES.load(Ordering::Relaxed),
+        free_hits: FREE_HITS.load(Ordering::Relaxed),
+        depot_flushes: DEPOT_FLUSHES.load(Ordering::Relaxed),
+        depot_refills: DEPOT_REFILLS.load(Ordering::Relaxed),
+    }
+}
+
+/// One size class's magazine pair (Bonwick: `loaded` serves the hot path,
+/// `prev` buffers one phase change before any depot traffic).
+struct ClassMags {
+    loaded: Vec<*mut u8>,
+    prev: Vec<*mut u8>,
+}
+
+/// A thread's full set of magazines, one pair per size class.
+struct Rack {
+    cap: usize,
+    mags: [ClassMags; NUM_CLASSES],
+}
+
+impl Rack {
+    fn new(cap: usize) -> Self {
+        Rack {
+            cap,
+            mags: std::array::from_fn(|_| ClassMags {
+                loaded: Vec::with_capacity(cap),
+                prev: Vec::with_capacity(cap),
+            }),
+        }
+    }
+
+    fn alloc(&mut self, ci: usize) -> Option<*mut u8> {
+        let m = &mut self.mags[ci];
+        if let Some(p) = m.loaded.pop() {
+            ALLOC_HITS.fetch_add(1, Ordering::Relaxed);
+            return Some(p);
+        }
+        if !m.prev.is_empty() {
+            std::mem::swap(&mut m.loaded, &mut m.prev);
+            ALLOC_HITS.fetch_add(1, Ordering::Relaxed);
+            return m.loaded.pop();
+        }
+        // Rack empty: refill one whole chain from the class depot.
+        let class = pool::class(ci);
+        if let Some(head) = class.pop_depot_chain() {
+            DEPOT_REFILLS.fetch_add(1, Ordering::Relaxed);
+            let mut cur = Some(head);
+            while let Some(p) = cur {
+                if m.loaded.len() == self.cap {
+                    // Chain longer than the current cap (cap was lowered
+                    // mid-run): park the remainder back in the depot —
+                    // links from p onward are still intact.
+                    // SAFETY: popped chain is exclusively ours.
+                    unsafe { class.push_depot_chain_raw(p) };
+                    break;
+                }
+                // SAFETY: popped chain is exclusively ours.
+                let next = unsafe { class.chain_next(p) };
+                m.loaded.push(p);
+                cur = next;
+            }
+            ALLOC_HITS.fetch_add(1, Ordering::Relaxed);
+            return m.loaded.pop();
+        }
+        ALLOC_MISSES.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    fn free(&mut self, ci: usize, p: *mut u8) {
+        let m = &mut self.mags[ci];
+        if m.loaded.len() < self.cap {
+            m.loaded.push(p);
+        } else if m.prev.is_empty() {
+            std::mem::swap(&mut m.loaded, &mut m.prev);
+            m.loaded.push(p);
+        } else {
+            // Both magazines full: return `prev` to the depot as one chain
+            // (a single tagged CAS for cap slots), rotate, keep going.
+            let class = pool::class(ci);
+            // SAFETY: rack slots are free and exclusively this thread's.
+            unsafe { class.push_depot_chain(&m.prev) };
+            DEPOT_FLUSHES.fetch_add(1, Ordering::Relaxed);
+            m.prev.clear();
+            std::mem::swap(&mut m.loaded, &mut m.prev);
+            m.loaded.push(p);
+        }
+        FREE_HITS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Push every cached slot to the depots and empty the rack.
+    fn flush_all(&mut self) {
+        for (ci, m) in self.mags.iter_mut().enumerate() {
+            let class = pool::class(ci);
+            for v in [&mut m.loaded, &mut m.prev] {
+                if !v.is_empty() {
+                    // SAFETY: rack slots are free and exclusively ours.
+                    unsafe { class.push_depot_chain(v) };
+                    DEPOT_FLUSHES.fetch_add(1, Ordering::Relaxed);
+                    v.clear();
+                }
+            }
+        }
+    }
+
+    fn cached(&self) -> usize {
+        self.mags.iter().map(|m| m.loaded.len() + m.prev.len()).sum()
+    }
+}
+
+impl Drop for Rack {
+    // Thread exit: hand every cached slot back via the depots.
+    fn drop(&mut self) {
+        self.flush_all();
+    }
+}
+
+thread_local! {
+    static RACK: RefCell<Option<Rack>> = const { RefCell::new(None) };
+}
+
+/// Get-or-reshape the rack for the current capacity. A cap change flushes
+/// the old rack first so no slot is stranded across the re-shape.
+fn ensure(slot: &mut Option<Rack>, cap: usize) -> &mut Rack {
+    if slot.as_ref().map_or(true, |r| r.cap != cap) {
+        if let Some(r) = slot.as_mut() {
+            r.flush_all();
+        }
+        *slot = Some(Rack::new(cap));
+    }
+    slot.as_mut().unwrap()
+}
+
+/// Magazine-path allocation for class `ci`; `None` falls through to the
+/// class free-list (magazines disabled, TLS tearing down, or rack + depot
+/// both empty).
+#[inline]
+pub(super) fn mag_alloc(ci: usize) -> Option<*mut u8> {
+    let cap = magazine_cap();
+    if cap == 0 {
+        return None;
+    }
+    RACK.try_with(|cell| {
+        // try_borrow guards against re-entrancy through TLS destructors
+        // (a handle cached in TLS may reclaim nodes while the rack is
+        // being dropped); the legacy path is always a correct fallback.
+        let mut r = cell.try_borrow_mut().ok()?;
+        ensure(&mut *r, cap).alloc(ci)
+    })
+    .ok()
+    .flatten()
+}
+
+/// Magazine-path free for class `ci`; `false` means the caller must use
+/// the class free-list.
+#[inline]
+pub(super) fn mag_free(ci: usize, p: *mut u8) -> bool {
+    let cap = magazine_cap();
+    if cap == 0 {
+        return false;
+    }
+    RACK.try_with(|cell| {
+        let Ok(mut r) = cell.try_borrow_mut() else { return false };
+        ensure(&mut *r, cap).free(ci, p);
+        true
+    })
+    .unwrap_or(false)
+}
+
+/// Flush the calling thread's rack to the depots. Called on reclamation
+/// handle drop/eviction (and implicitly at thread exit); also the test
+/// hook for the "no stranded slots" invariant.
+pub fn flush_magazines() {
+    let _ = RACK.try_with(|cell| {
+        if let Ok(mut r) = cell.try_borrow_mut() {
+            if let Some(rack) = r.as_mut() {
+                rack.flush_all();
+            }
+        }
+    });
+}
+
+/// Number of slots currently cached in *this thread's* rack (diagnostics /
+/// tests; other threads' racks are invisible by design).
+pub fn thread_cached_slots() -> usize {
+    RACK.try_with(|cell| cell.try_borrow().map_or(0, |r| r.as_ref().map_or(0, Rack::cached)))
+        .unwrap_or(0)
+}
+
+/// Serialize lib tests that toggle the process-global capacity knob (the
+/// magazine unit tests below and the `micro_alloc` figure smoke test).
+#[cfg(test)]
+pub(crate) fn test_cap_lock() -> std::sync::MutexGuard<'static, ()> {
+    static CAP_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    CAP_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::alloc::Layout;
+
+    // Unit tests share the process-global CAP with the rest of the lib test
+    // binary, so: (a) each test uses a size class no other lib test touches,
+    // (b) assertions on the global counters are `>=` deltas, and (c) tests
+    // that change CAP restore the default and serialize on a lock.
+    fn with_cap<T>(cap: usize, f: impl FnOnce() -> T) -> T {
+        let _g = test_cap_lock();
+        set_magazine_cap(cap);
+        let out = f();
+        flush_magazines();
+        set_magazine_cap(DEFAULT_MAGAZINE_CAP);
+        out
+    }
+
+    #[test]
+    fn rack_round_trip_is_lifo_and_counted() {
+        with_cap(8, || {
+            let layout = Layout::from_size_align(5000, 8).unwrap(); // class 8192
+            let before = magazine_stats();
+            let a = pool::alloc(layout);
+            unsafe { pool::free(a, layout) };
+            let b = pool::alloc(layout);
+            assert_eq!(a, b, "retire→reuse loop closes within the rack");
+            unsafe { pool::free(b, layout) };
+            let after = magazine_stats();
+            assert!(after.free_hits >= before.free_hits + 2);
+            assert!(after.alloc_hits >= before.alloc_hits + 1);
+        });
+    }
+
+    #[test]
+    fn cap_zero_bypasses_rack() {
+        with_cap(0, || {
+            let layout = Layout::from_size_align(40_000, 8).unwrap(); // class 65536
+            let before = thread_cached_slots();
+            let a = pool::alloc(layout);
+            unsafe { pool::free(a, layout) };
+            assert_eq!(thread_cached_slots(), before, "disabled layer caches nothing");
+            // Legacy LIFO still applies (global free-list).
+            let b = pool::alloc(layout);
+            assert_eq!(a, b);
+            unsafe { pool::free(b, layout) };
+        });
+    }
+
+    #[test]
+    fn flush_leaves_zero_cached_and_refill_recovers() {
+        with_cap(4, || {
+            let layout = Layout::from_size_align(12_000, 8).unwrap(); // class 16384
+            let ptrs: Vec<_> = (0..8).map(|_| pool::alloc(layout)).collect();
+            for &p in &ptrs {
+                unsafe { pool::free(p, layout) };
+            }
+            assert!(thread_cached_slots() > 0);
+            let before = magazine_stats();
+            flush_magazines();
+            assert_eq!(thread_cached_slots(), 0, "flush strands nothing");
+            // Refill pulls the flushed chains back out of the depot.
+            let again: Vec<_> = (0..8).map(|_| pool::alloc(layout)).collect();
+            let after = magazine_stats();
+            assert!(after.depot_flushes > before.depot_flushes);
+            assert!(after.depot_refills > before.depot_refills);
+            let set: std::collections::HashSet<_> = ptrs.iter().collect();
+            assert!(again.iter().all(|p| set.contains(p)), "same slots return via depot");
+            for p in again {
+                unsafe { pool::free(p, layout) };
+            }
+        });
+    }
+
+    #[test]
+    fn cap_change_reshapes_without_stranding() {
+        with_cap(4, || {
+            let layout = Layout::from_size_align(2100, 8).unwrap(); // class 4096
+            let a = pool::alloc(layout);
+            unsafe { pool::free(a, layout) };
+            assert!(thread_cached_slots() >= 1);
+            // Lower the cap: next op flushes + rebuilds the rack.
+            set_magazine_cap(2);
+            let b = pool::alloc(layout);
+            // The slot survived the re-shape (via the depot or the rack).
+            assert_eq!(a, b);
+            unsafe { pool::free(b, layout) };
+        });
+    }
+}

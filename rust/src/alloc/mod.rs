@@ -16,11 +16,23 @@
 //! reclaimed nodes cannot be returned to the memory manager, but are stored
 //! in a global free-list").
 //!
+//! The pool itself is fronted by a per-thread **magazine** layer
+//! ([`magazine`]) that closes the retire→reuse loop without touching the
+//! global free-list in steady state; `Policy::System` bypasses it entirely
+//! (the policy check happens here, above the pool), and LFRC's forced pool
+//! traffic flows through it like any other pool traffic.
+//!
 //! The counters are the measurement substrate for the paper's *reclamation
 //! efficiency* analysis (§4.4): `unreclaimed() = allocated − reclaimed` is
 //! exactly the quantity plotted in Figures 6 and 8–11.
 
+pub mod magazine;
 pub mod pool;
+
+pub use magazine::{
+    flush_magazines, magazine_cap, magazine_stats, set_magazine_cap, thread_cached_slots,
+    MagazineStats, DEFAULT_MAGAZINE_CAP,
+};
 
 use crate::util::cache_pad::CachePadded;
 use std::alloc::Layout;

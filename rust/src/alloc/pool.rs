@@ -9,14 +9,24 @@
 //!   version tag packed next to the index in one `AtomicU64` head —
 //!   the tag makes pop ABA-safe without double-word CAS (the same packing
 //!   discipline the paper applies to its Stamp Pool links).
-//! * The intrusive free-list link lives at byte offset 8 of a free slot.
+//! * The intrusive free-list link lives at byte offset 8 of a free slot and
+//!   the depot chain-of-chains link at byte offset 12 (see below).
 //!   **Offset 0 is never written by the pool**: LFRC keeps its refcount
 //!   word there, and Valois-style counting relies on that word staying
 //!   readable (and marked RETIRED) while the slot sits in the free-list.
+//!   Offsets 8..16 of a *free* slot are pool-owned scratch; everything else
+//!   is untouched.
 //! * Chunks are never unmapped — the type-stability guarantee.
+//! * A per-thread **magazine** layer ([`super::magazine`]) fronts the
+//!   Treiber head: [`alloc`]/[`free`] first try the calling thread's
+//!   magazine rack, and whole magazines are exchanged with the per-class
+//!   **depot** — a second tagged stack whose elements are *chains* of up to
+//!   a magazine's worth of slots linked through offset 8, so one CAS moves
+//!   ~64 slots instead of one.
 //!
 //! Fresh slots are handed out by a per-class bump cursor; the free-list is
-//! only populated by frees, so the fast path after warm-up is pop/push.
+//! only populated by frees, so the fast path after warm-up is pop/push —
+//! and with magazines enabled, a non-atomic `Vec` pop/push.
 
 use std::alloc::Layout;
 use std::ptr;
@@ -27,7 +37,7 @@ const CHUNK_BYTES: usize = 1 << 21; // 2 MiB, alignment == size
 const SLOT_ALIGN: usize = 64;
 const MIN_CLASS: usize = 64;
 const MAX_CLASS: usize = 64 * 1024;
-const NUM_CLASSES: usize = 11; // 64,128,...,65536
+pub(crate) const NUM_CLASSES: usize = 11; // 64,128,...,65536
 const MAX_CHUNKS: usize = 4096; // per class => 8 GiB per class, ample
 const NIL: u32 = u32::MAX;
 
@@ -43,11 +53,20 @@ struct ChunkHeader {
 /// Header space reserved at the chunk start (keeps slots 64-aligned).
 const HEADER_BYTES: usize = SLOT_ALIGN;
 
-struct SizeClass {
+/// One size class. The global pool holds a `'static` array of these; tests
+/// may construct private instances (class-level alloc/free sit *below* the
+/// magazine layer, so a private instance is magazine-free by construction
+/// and its LIFO behaviour is exact and unraced).
+pub(crate) struct SizeClass {
     slot_size: usize,
     slots_per_chunk: usize,
     /// Packed Treiber head: `(tag << 32) | index`, `NIL` index = empty.
     head: AtomicU64,
+    /// Depot of slot *chains* (magazine-granularity exchange): packed
+    /// `(tag << 32) | index` of the top chain's head slot. Chain-internal
+    /// links are the ordinary offset-8 links; the link from one chain's
+    /// head slot to the next chain's head lives at offset 12.
+    depot: AtomicU64,
     /// Next never-used global slot index.
     bump: AtomicU64,
     /// Number of published chunks; `capacity = count * slots_per_chunk`.
@@ -57,13 +76,14 @@ struct SizeClass {
 }
 
 impl SizeClass {
-    fn new(slot_size: usize) -> Self {
+    pub(crate) fn new(slot_size: usize) -> Self {
         let slots_per_chunk = (CHUNK_BYTES - HEADER_BYTES) / slot_size;
         let bases = (0..MAX_CHUNKS).map(|_| AtomicPtr::new(ptr::null_mut())).collect();
         Self {
             slot_size,
             slots_per_chunk,
             head: AtomicU64::new(NIL as u64),
+            depot: AtomicU64::new(NIL as u64),
             bump: AtomicU64::new(0),
             count: AtomicU32::new(0),
             bases,
@@ -81,15 +101,23 @@ impl SizeClass {
         unsafe { base.add(HEADER_BYTES + slot * self.slot_size) }
     }
 
-    /// The free-list link of a free slot (byte offset 8 — offset 0 is
-    /// reserved for scheme headers, see module docs).
+    /// The free-list / chain-internal link of a free slot (byte offset 8 —
+    /// offset 0 is reserved for scheme headers, see module docs).
     #[inline]
     fn link(&self, slot: *mut u8) -> *mut u32 {
         // SAFETY: every slot is at least 64 bytes.
         unsafe { slot.add(8) as *mut u32 }
     }
 
-    fn alloc(&self) -> *mut u8 {
+    /// The chain-of-chains link of a depot chain's head slot (byte offset
+    /// 12; only meaningful while the chain sits in the depot).
+    #[inline]
+    fn chain_link(&self, slot: *mut u8) -> *mut u32 {
+        // SAFETY: every slot is at least 64 bytes.
+        unsafe { slot.add(12) as *mut u32 }
+    }
+
+    pub(crate) fn alloc(&self) -> *mut u8 {
         loop {
             // Fast path: pop from the tagged free-list.
             let head = self.head.load(Ordering::Acquire);
@@ -110,6 +138,20 @@ impl SizeClass {
                     return slot;
                 }
                 continue;
+            }
+            // Free-list empty: salvage one slot from a cached depot chain
+            // before bumping fresh memory. This keeps depot slots live when
+            // magazines are disabled mid-run (`--magazines off` after a
+            // warm-up) — no slot is ever stranded in the depot.
+            if let Some(slot) = self.pop_depot_chain() {
+                // SAFETY: the chain was popped, so this thread owns it
+                // exclusively; the remainder stays well-formed.
+                unsafe {
+                    if let Some(rest) = self.chain_next(slot) {
+                        self.push_depot_chain_raw(rest);
+                    }
+                }
+                return slot;
             }
             // Slow path: bump-allocate a fresh slot, growing if needed.
             let i = self.bump.fetch_add(1, Ordering::Relaxed);
@@ -148,7 +190,7 @@ impl SizeClass {
         }
     }
 
-    fn free(&self, slot: *mut u8) {
+    pub(crate) fn free(&self, slot: *mut u8) {
         let index = self.index_of(slot);
         loop {
             let head = self.head.load(Ordering::Acquire);
@@ -165,6 +207,84 @@ impl SizeClass {
         }
     }
 
+    /// Link `slots` into a chain (offset-8 links, `NIL`-terminated) and
+    /// push the whole chain onto the depot with one tagged CAS — the
+    /// magazine-granularity exchange: ~cap slots per CAS instead of one.
+    ///
+    /// # Safety
+    /// Every pointer must be a free slot of this class owned exclusively by
+    /// the caller and must not be used afterwards.
+    pub(crate) unsafe fn push_depot_chain(&self, slots: &[*mut u8]) {
+        if slots.is_empty() {
+            return;
+        }
+        for w in slots.windows(2) {
+            self.link(w[0]).write_volatile(self.index_of(w[1]));
+        }
+        self.link(slots[slots.len() - 1]).write_volatile(NIL);
+        self.push_depot_chain_raw(slots[0]);
+    }
+
+    /// Push an already-linked chain (offset-8 links terminated by `NIL`)
+    /// onto the depot.
+    ///
+    /// # Safety
+    /// `head` must start a well-formed free chain of this class owned
+    /// exclusively by the caller.
+    pub(crate) unsafe fn push_depot_chain_raw(&self, head: *mut u8) {
+        let head_idx = self.index_of(head);
+        loop {
+            let cur = self.depot.load(Ordering::Acquire);
+            self.chain_link(head).write_volatile(cur as u32);
+            let new = ((cur >> 32).wrapping_add(1) << 32) | head_idx as u64;
+            if self
+                .depot
+                .compare_exchange_weak(cur, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    /// Pop one whole chain off the depot (one tagged CAS); returns the
+    /// chain's head slot, or `None` when the depot is empty. The caller
+    /// owns the entire chain afterwards and walks it with [`chain_next`].
+    ///
+    /// [`chain_next`]: SizeClass::chain_next
+    pub(crate) fn pop_depot_chain(&self) -> Option<*mut u8> {
+        loop {
+            let cur = self.depot.load(Ordering::Acquire);
+            let idx = cur as u32;
+            if idx == NIL {
+                return None;
+            }
+            let slot = self.slot_ptr(idx);
+            // Possibly stale if another thread pops concurrently — the
+            // tagged CAS detects that, same discipline as the free-list.
+            // SAFETY: slot memory is never unmapped (type-stable).
+            let next = unsafe { self.chain_link(slot).read_volatile() };
+            let new = ((cur >> 32).wrapping_add(1) << 32) | next as u64;
+            if self
+                .depot
+                .compare_exchange_weak(cur, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(slot);
+            }
+        }
+    }
+
+    /// Next slot of a privately-owned chain (`None` at the chain's end).
+    ///
+    /// # Safety
+    /// `slot` must belong to a chain this thread owns exclusively (popped
+    /// from the depot or built locally but not yet pushed).
+    pub(crate) unsafe fn chain_next(&self, slot: *mut u8) -> Option<*mut u8> {
+        let next = self.link(slot).read_volatile();
+        (next != NIL).then(|| self.slot_ptr(next))
+    }
+
     fn index_of(&self, slot: *mut u8) -> u32 {
         let base = (slot as usize & !(CHUNK_BYTES - 1)) as *mut u8;
         // SAFETY: slot came from this pool, so the masked base is a chunk
@@ -174,6 +294,22 @@ impl SizeClass {
         let offset = slot as usize - base as usize - HEADER_BYTES;
         debug_assert_eq!(offset % self.slot_size, 0);
         header.start_index + (offset / self.slot_size) as u32
+    }
+}
+
+impl Drop for SizeClass {
+    fn drop(&mut self) {
+        // Only private (test) instances are ever dropped — the global
+        // classes live in a `'static` OnceLock, preserving type stability.
+        // Dropping is sound only when no slot pointer outlives the instance.
+        let layout = Layout::from_size_align(CHUNK_BYTES, CHUNK_BYTES).unwrap();
+        for base in self.bases.iter() {
+            let p = base.load(Ordering::Acquire);
+            if !p.is_null() {
+                // SAFETY: p was returned by alloc_zeroed with this layout.
+                unsafe { std::alloc::dealloc(p, layout) };
+            }
+        }
     }
 }
 
@@ -189,27 +325,44 @@ fn classes() -> &'static [SizeClass; NUM_CLASSES] {
     })
 }
 
-fn class_index(size: usize) -> usize {
+/// The global size class at index `ci` (magazine layer / diagnostics).
+pub(crate) fn class(ci: usize) -> &'static SizeClass {
+    &classes()[ci]
+}
+
+pub(crate) fn class_index(size: usize) -> usize {
     let size = size.max(MIN_CLASS);
     assert!(size <= MAX_CLASS, "pool allocation of {size} B exceeds the {MAX_CLASS} B max class");
     (usize::BITS - (size - 1).leading_zeros()) as usize - MIN_CLASS.trailing_zeros() as usize
 }
 
 /// Allocate a slot large enough for `layout`. Aborts on OOM.
+///
+/// Tries the calling thread's magazine first (non-atomic pop); falls back
+/// to the class free-list / bump cursor when magazines are disabled or
+/// empty and the depot has no cached chain.
 pub fn alloc(layout: Layout) -> *mut u8 {
     assert!(layout.align() <= SLOT_ALIGN, "pool supports alignment up to {SLOT_ALIGN}");
-    classes()[class_index(layout.size())].alloc()
+    let ci = class_index(layout.size());
+    match super::magazine::mag_alloc(ci) {
+        Some(p) => p,
+        None => classes()[ci].alloc(),
+    }
 }
 
-/// Return a slot to its size class.
+/// Return a slot to its size class — into the calling thread's magazine
+/// when enabled (non-atomic push), else onto the global free-list.
 ///
 /// # Safety
 /// `ptr` must come from [`alloc`] with a layout of the same size class and
 /// must not be used afterwards. Byte offset 0 of the slot is preserved
-/// (LFRC's refcount word); offsets 8..12 are overwritten by the free-list
-/// link.
+/// (LFRC's refcount word); offsets 8..16 may be overwritten by free-list
+/// and depot chain links.
 pub unsafe fn free(ptr: *mut u8, layout: Layout) {
-    classes()[class_index(layout.size())].free(ptr);
+    let ci = class_index(layout.size());
+    if !super::magazine::mag_free(ci, ptr) {
+        classes()[ci].free(ptr);
+    }
 }
 
 /// Number of bytes currently held by the pool (for diagnostics).
@@ -240,19 +393,22 @@ mod tests {
 
     #[test]
     fn alloc_free_recycles_slots() {
-        // Size class chosen to be unused by other (parallel) tests so the
-        // LIFO assertion is not raced.
-        let layout = Layout::from_size_align(3000, 8).unwrap();
-        let a = alloc(layout);
-        unsafe { free(a, layout) };
-        let b = alloc(layout);
+        // Private instance: the LIFO assertion is exact — no other test
+        // shares the class, and class-level alloc/free sit below the
+        // magazine layer so no rack interposes.
+        let c = SizeClass::new(4096);
+        let a = c.alloc();
+        c.free(a);
+        let b = c.alloc();
         // LIFO free-list: the same slot comes back.
         assert_eq!(a, b);
-        unsafe { free(b, layout) };
+        c.free(b);
     }
 
     #[test]
     fn distinct_live_allocations_do_not_alias() {
+        // Global pool on purpose: with magazines on, this also checks the
+        // rack never hands the same slot out twice.
         let layout = Layout::from_size_align(64, 8).unwrap();
         let ptrs: Vec<_> = (0..1000).map(|_| alloc(layout)).collect();
         let set: HashSet<_> = ptrs.iter().collect();
@@ -264,18 +420,78 @@ mod tests {
 
     #[test]
     fn word0_is_preserved_across_free() {
-        // Class 32768 — unused elsewhere, keeps the LIFO assertion race-free.
-        let layout = Layout::from_size_align(20_000, 8).unwrap();
-        let p = alloc(layout);
+        let c = SizeClass::new(32768);
+        let p = c.alloc();
         unsafe {
             (p as *mut u64).write(0xDEAD_BEEF_CAFE_F00D);
-            free(p, layout);
+            c.free(p);
             // Slot is free but word 0 must be intact (LFRC contract).
             assert_eq!((p as *mut u64).read(), 0xDEAD_BEEF_CAFE_F00D);
         }
-        let q = alloc(layout);
+        let q = c.alloc();
         assert_eq!(p, q);
-        unsafe { free(q, layout) };
+        c.free(q);
+    }
+
+    #[test]
+    fn depot_chains_round_trip() {
+        let c = SizeClass::new(64);
+        let slots: Vec<_> = (0..5).map(|_| c.alloc()).collect();
+        // SAFETY: freshly allocated, exclusively ours.
+        unsafe { c.push_depot_chain(&slots) };
+        let head = c.pop_depot_chain().expect("depot has the chain");
+        assert_eq!(head, slots[0]);
+        let mut got = vec![head];
+        let mut cur = head;
+        while let Some(n) = unsafe { c.chain_next(cur) } {
+            got.push(n);
+            cur = n;
+        }
+        assert_eq!(got, slots, "chain preserves order and membership");
+        assert!(c.pop_depot_chain().is_none(), "depot drained");
+        for p in got {
+            c.free(p);
+        }
+    }
+
+    #[test]
+    fn depot_chains_preserve_word0() {
+        let c = SizeClass::new(128);
+        let slots: Vec<_> = (0..3).map(|_| c.alloc()).collect();
+        for (i, &p) in slots.iter().enumerate() {
+            unsafe { (p as *mut u64).write(0xA110C_000 + i as u64) };
+        }
+        // SAFETY: freshly allocated, exclusively ours.
+        unsafe { c.push_depot_chain(&slots) };
+        for (i, &p) in slots.iter().enumerate() {
+            // Chain links live at offsets 8..16; word 0 is untouched.
+            unsafe { assert_eq!((p as *mut u64).read(), 0xA110C_000 + i as u64) };
+        }
+        while let Some(head) = c.pop_depot_chain() {
+            let mut cur = Some(head);
+            while let Some(p) = cur {
+                cur = unsafe { c.chain_next(p) };
+                c.free(p);
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_alloc_salvages_depot_chains() {
+        let c = SizeClass::new(256);
+        let slots: Vec<_> = (0..3).map(|_| c.alloc()).collect();
+        // SAFETY: freshly allocated, exclusively ours.
+        unsafe { c.push_depot_chain(&slots) };
+        let bump = c.bump.load(Ordering::Relaxed);
+        // Free-list is empty, so alloc must split the depot chain (take
+        // its head, re-push the remainder) instead of bumping fresh memory.
+        assert_eq!(c.alloc(), slots[0]);
+        assert_eq!(c.alloc(), slots[1]);
+        assert_eq!(c.alloc(), slots[2]);
+        assert_eq!(c.bump.load(Ordering::Relaxed), bump, "no fresh memory while depot non-empty");
+        for p in slots {
+            c.free(p);
+        }
     }
 
     #[test]
@@ -313,5 +529,73 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+    }
+
+    #[test]
+    fn concurrent_depot_exchange_stress() {
+        // Producer/consumer chains racing on one private depot: every slot
+        // pushed must come back exactly once.
+        let c = std::sync::Arc::new(SizeClass::new(64));
+        let total = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let producers: Vec<_> = (0..2)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        let slots: Vec<_> = (0..8).map(|_| c.alloc()).collect();
+                        // SAFETY: freshly allocated, exclusively ours.
+                        unsafe { c.push_depot_chain(&slots) };
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let c = c.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    let mut seen = HashSet::new();
+                    let mut idle = 0;
+                    while idle < 1000 {
+                        match c.pop_depot_chain() {
+                            Some(head) => {
+                                idle = 0;
+                                let mut cur = Some(head);
+                                while let Some(p) = cur {
+                                    // SAFETY: popped chain is exclusively ours.
+                                    cur = unsafe { c.chain_next(p) };
+                                    assert!(seen.insert(p as usize), "slot delivered twice");
+                                }
+                            }
+                            None => {
+                                idle += 1;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                    total.fetch_add(seen.len(), std::sync::atomic::Ordering::Relaxed);
+                })
+            })
+            .collect();
+        for t in producers {
+            t.join().unwrap();
+        }
+        for t in consumers {
+            t.join().unwrap();
+        }
+        // Drain whatever the consumers' idle cutoff left behind.
+        let mut rest = 0;
+        while let Some(head) = c.pop_depot_chain() {
+            let mut cur = Some(head);
+            while let Some(p) = cur {
+                cur = unsafe { c.chain_next(p) };
+                rest += 1;
+            }
+        }
+        assert_eq!(
+            total.load(std::sync::atomic::Ordering::Relaxed) + rest,
+            2 * 100 * 8,
+            "every pushed slot came back exactly once"
+        );
     }
 }

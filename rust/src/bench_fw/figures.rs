@@ -43,6 +43,7 @@ impl Workload {
 /// domain (dropped — and drained — when the configuration ends).
 fn sweep_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<f64> {
     crate::alloc::set_policy(p.alloc);
+    crate::alloc::set_magazine_cap(p.magazine_cap);
     p.threads
         .iter()
         .map(|&threads| {
@@ -82,8 +83,11 @@ fn sweep_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<f64> {
         .collect()
 }
 
-/// Figures 3/4/5 (and 12/13/14 with `--alloc system`): throughput sweeps.
-pub fn fig_throughput(p: &BenchParams, workload: Workload) {
+/// Build the Figures 3/4/5 (12/13/14 with `--alloc system`) throughput
+/// sweep table without printing it — the JSON-recording bench target
+/// (`fig12_19_alloc`) consumes the rows directly; [`fig_throughput`] is
+/// the printing wrapper.
+pub fn throughput_table(p: &BenchParams, workload: Workload) -> SweepTable {
     let extra = match workload {
         Workload::List => format!(
             " ({} elements, {}% updates)",
@@ -110,6 +114,12 @@ pub fn fig_throughput(p: &BenchParams, workload: Workload) {
         let row = dispatch_scheme!(scheme, sweep_one, p, workload);
         table.rows.push((scheme.name().to_string(), row));
     }
+    table
+}
+
+/// Figures 3/4/5 (and 12/13/14 with `--alloc system`): throughput sweeps.
+pub fn fig_throughput(p: &BenchParams, workload: Workload) {
+    let table = throughput_table(p, workload);
     table.print();
     maybe_write_csv(&p.csv, &table.to_csv());
 }
@@ -119,6 +129,7 @@ pub fn fig_throughput(p: &BenchParams, workload: Workload) {
 /// the series of (sample index, unreclaimed-above-baseline).
 fn efficiency_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<(usize, f64)> {
     crate::alloc::set_policy(p.alloc);
+    crate::alloc::set_magazine_cap(p.magazine_cap);
     // Fresh domain per scheme run: baseline the global counter first.
     let baseline = crate::alloc::unreclaimed();
     let threads = *p.threads.iter().max().unwrap_or(&2);
@@ -180,9 +191,9 @@ fn efficiency_one<R: Reclaimer>(p: &BenchParams, workload: Workload) -> Vec<(usi
     series
 }
 
-/// Figures 6 and 8–11 (16–19 with `--alloc system`): unreclaimed nodes over
-/// time.
-pub fn fig_efficiency(p: &BenchParams, workload: Workload) {
+/// Build the Figures 6/8–11 (16–19 with `--alloc system`) efficiency
+/// series table without printing it (see [`throughput_table`] for why).
+pub fn efficiency_table(p: &BenchParams, workload: Workload) -> SeriesTable {
     let threads = *p.threads.iter().max().unwrap_or(&2);
     let mut table = SeriesTable {
         title: format!(
@@ -200,6 +211,13 @@ pub fn fig_efficiency(p: &BenchParams, workload: Workload) {
         let series = dispatch_scheme!(scheme, efficiency_one, p, workload);
         table.rows.push((scheme.name().to_string(), series));
     }
+    table
+}
+
+/// Figures 6 and 8–11 (16–19 with `--alloc system`): unreclaimed nodes over
+/// time.
+pub fn fig_efficiency(p: &BenchParams, workload: Workload) {
+    let table = efficiency_table(p, workload);
     table.print();
     maybe_write_csv(&p.csv, &table.to_csv());
 }
@@ -208,6 +226,7 @@ pub fn fig_efficiency(p: &BenchParams, workload: Workload) {
 /// (and its domain) retained across trials.
 fn trials_one<R: Reclaimer>(p: &BenchParams) -> Vec<f64> {
     crate::alloc::set_policy(p.alloc);
+    crate::alloc::set_magazine_cap(p.magazine_cap);
     let threads = *p.threads.iter().max().unwrap_or(&2);
     let cache = make_cache::<R>(p);
     let mut per_trial = Vec::with_capacity(p.trials);
@@ -321,6 +340,166 @@ pub fn micro_stamp_pool(p: &BenchParams) {
     println!(
         "(expected: roughly flat in p — the paper's 'expected average runtime … is constant')"
     );
+}
+
+/// One scheme's steady-state node-churn sweep with the magazine capacity
+/// pinned to `cap`: every op is an `Owned::new` + immediate `retire_owned`
+/// (the retire→reuse cycle the magazine layer closes), with a periodic
+/// `flush` so deferred schemes actually reclaim — and thereby refill the
+/// allocator — inside the loop. Mean ns per cycle, per thread count.
+fn churn_one<R: Reclaimer>(p: &BenchParams, cap: usize) -> Vec<f64> {
+    crate::alloc::set_policy(p.alloc);
+    crate::alloc::set_magazine_cap(cap);
+    p.threads
+        .iter()
+        .map(|&threads| {
+            let domain = DomainRef::<R>::new_owned();
+            let mut cfg = ConfigResult::default();
+            for _ in 0..p.trials {
+                let domain = &domain;
+                cfg.push(&run_trial(threads, p.duration(), |_tid, stop| {
+                    let h = domain.register();
+                    let mut ops = 0u64;
+                    while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                        h.retire_owned(crate::reclaim::Owned::<u64, R>::new(ops));
+                        ops += 1;
+                        if ops % 64 == 0 {
+                            h.flush();
+                        }
+                    }
+                    h.flush();
+                    ops
+                }));
+            }
+            cfg.mean_ns_per_op()
+        })
+        .collect()
+}
+
+/// The capacity `--magazines on` (and the gate's "on" arm) resolves to:
+/// the explicit `--magazines <cap>` value if one was given, else the
+/// default.
+fn resolved_mag_cap(p: &BenchParams) -> usize {
+    if p.magazine_cap == 0 {
+        crate::alloc::DEFAULT_MAGAZINE_CAP
+    } else {
+        p.magazine_cap
+    }
+}
+
+/// E20: steady-state node churn (alloc+retire cycle) per scheme, magazines
+/// **on vs off** — the ISSUE-6 win condition made visible: with the
+/// retire→reuse loop closed in TLS, per-op cost should drop and keep
+/// dropping relative to "off" as threads (and free-list contention) grow.
+pub fn micro_alloc(p: &BenchParams) {
+    let on_cap = resolved_mag_cap(p);
+    let mut table = SweepTable {
+        title: format!(
+            "node churn: Owned::new + retire_owned cycle — magazines on (cap {on_cap}) \
+             vs off [alloc={}]",
+            p.alloc.name()
+        ),
+        threads: p.threads.clone(),
+        rows: Vec::new(),
+    };
+    let before = crate::alloc::magazine_stats();
+    for &scheme in &p.schemes {
+        for (label, cap) in [("on", on_cap), ("off", 0usize)] {
+            let row = dispatch_scheme!(scheme, churn_one, p, cap);
+            table.rows.push((format!("{} mag={label}", scheme.name()), row));
+        }
+    }
+    crate::alloc::set_magazine_cap(crate::alloc::DEFAULT_MAGAZINE_CAP);
+    table.print();
+    let after = crate::alloc::magazine_stats();
+    println!(
+        "magazine traffic this figure: hits={} misses={} depot_flushes={} depot_refills={} \
+         (pool footprint {} KiB)",
+        after.alloc_hits - before.alloc_hits,
+        after.alloc_misses - before.alloc_misses,
+        after.depot_flushes - before.depot_flushes,
+        after.depot_refills - before.depot_refills,
+        crate::alloc::pool::footprint_bytes() / 1024,
+    );
+    maybe_write_csv(&p.csv, &table.to_csv());
+}
+
+/// E20 CI regression gate. Verifies, in order:
+///
+/// 1. **magazines pay for themselves** — on the ≥4-thread churn, the
+///    magazines-on cycle is not slower than magazines-off beyond 10%
+///    (relative, machine-independent; always enforced — the tentpole's
+///    acceptance criterion with slack for noisy shared runners);
+/// 2. **churn-cost regression** — per-scheme magazines-on cycle cost,
+///    normalized by [`calibration_ns`], has not regressed >20% against the
+///    runner-recorded baseline (`rust/ci/runner_alloc_baseline.csv`).
+///
+/// With `record`, (re)writes the baseline file instead of gating against
+/// it. Returns false when any gate fails.
+pub fn micro_alloc_gate(p: &BenchParams, baseline: Option<&str>, record: Option<&str>) -> bool {
+    // The win condition is contention relief, so gate at ≥4 threads even
+    // if the sweep list is smaller.
+    let threads = (*p.threads.iter().max().unwrap_or(&4)).max(4);
+    let gate_p = BenchParams { threads: vec![threads], ..p.clone() };
+    let on_cap = resolved_mag_cap(p);
+    let calib = calibration_ns();
+    println!("== micro_alloc gate (p={threads}, cap {on_cap}, calibration: {calib:.3} ns/mix64) ==");
+
+    let mut ok = true;
+    let mut measured: Vec<(String, f64)> = Vec::new();
+    println!("{:<10}{:>12}{:>12}{:>10}", "scheme", "on ns/op", "off ns/op", "speedup");
+    for &scheme in &p.schemes {
+        let on = dispatch_scheme!(scheme, churn_one, &gate_p, on_cap)[0];
+        let off = dispatch_scheme!(scheme, churn_one, &gate_p, 0usize)[0];
+        println!(
+            "{:<10}{:>12}{:>12}{:>9.2}x",
+            scheme.name(),
+            fmt_ns(on),
+            fmt_ns(off),
+            off / on.max(1e-9)
+        );
+        if on > off * 1.10 {
+            eprintln!(
+                "GATE FAIL: magazines-on churn slower than off for {} \
+                 ({on:.1} ns vs {off:.1} ns at p={threads})",
+                scheme.name()
+            );
+            ok = false;
+        }
+        measured.push((format!("alloc:{}", scheme.name()), on / calib));
+    }
+    crate::alloc::set_magazine_cap(crate::alloc::DEFAULT_MAGAZINE_CAP);
+
+    if let Some(path) = record {
+        let mut out = String::from(
+            "# micro_alloc baseline: magazines-on node-churn cycle cost per scheme,\n\
+             # in units of the calibration loop (ns per dependent mix64 step) so the\n\
+             # file transfers across hosts of different absolute speed.\n\
+             # Re-record: cargo bench --bench micro_alloc -- --record <this file>\n",
+        );
+        for (name, ratio) in &measured {
+            out.push_str(&format!("{name},{ratio:.2}\n"));
+        }
+        if let Err(e) = std::fs::write(path, out) {
+            eprintln!("cannot write baseline {path}: {e}");
+            return false;
+        }
+        println!("baseline recorded to {path}");
+        return ok;
+    }
+
+    if let Some(path) = baseline {
+        match std::fs::read_to_string(path) {
+            Ok(content) => {
+                ok &= check_baseline(&measured, &content);
+            }
+            Err(e) => {
+                eprintln!("cannot read baseline {path}: {e} — failing the gate");
+                ok = false;
+            }
+        }
+    }
+    ok
 }
 
 /// One shard-scaling measurement cell.
@@ -767,7 +946,7 @@ fn check_baseline(measured: &[(String, f64)], content: &str) -> bool {
             Some(base) => {
                 if *ratio > base * GATE_RATIO {
                     eprintln!(
-                        "GATE FAIL: {name} region cycle {ratio:.2}x calib exceeds \
+                        "GATE FAIL: {name} cycle cost {ratio:.2}x calib exceeds \
                          baseline {base:.2} by more than {:.0}%",
                         (GATE_RATIO - 1.0) * 100.0
                     );
@@ -979,6 +1158,21 @@ mod tests {
         let p = tiny();
         micro_region(&p);
         micro_stamp_pool(&p);
+    }
+
+    #[test]
+    fn micro_alloc_figure_runs() {
+        // Serialize against the magazine unit tests: micro_alloc toggles
+        // the process-global capacity knob per row.
+        let _g = crate::alloc::magazine::test_cap_lock();
+        let mut p = tiny();
+        p.threads = vec![1, 2];
+        micro_alloc(&p);
+        assert_eq!(
+            crate::alloc::magazine_cap(),
+            crate::alloc::DEFAULT_MAGAZINE_CAP,
+            "figure restores the default capacity"
+        );
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub struct BenchParams {
     pub schemes: Vec<SchemeId>,
     /// Node allocator (pool = jemalloc-like, system = libc; App. A.3).
     pub alloc: Policy,
+    /// Per-thread magazine capacity for pool allocations (`--magazines
+    /// on|off|<cap>`): 0 disables the layer, the default is
+    /// [`crate::alloc::DEFAULT_MAGAZINE_CAP`]. E20 ablation axis.
+    pub magazine_cap: usize,
     /// Operations spanned by one region_guard (paper: 100).
     pub region_ops: usize,
     /// List benchmark: initial size (paper: 10; key range = 2×size).
@@ -70,6 +74,7 @@ impl Default for BenchParams {
             secs: 0.4,
             schemes: SchemeId::PAPER_SET.to_vec(),
             alloc: Policy::Pool,
+            magazine_cap: crate::alloc::DEFAULT_MAGAZINE_CAP,
             region_ops: 100,
             list_size: 10,
             workload_pct: 20,
@@ -112,6 +117,16 @@ impl BenchParams {
                 eprintln!("unknown allocator {a} (pool|system)");
                 std::process::exit(2);
             });
+        }
+        if let Some(m) = args.get("magazines") {
+            p.magazine_cap = match m {
+                "on" | "true" => crate::alloc::DEFAULT_MAGAZINE_CAP,
+                "off" | "false" => 0,
+                n => n.parse().unwrap_or_else(|_| {
+                    eprintln!("invalid --magazines {n} (on|off|<cap>)");
+                    std::process::exit(2);
+                }),
+            };
         }
         p.region_ops = args.usize_or("region-ops", p.region_ops);
         p.list_size = args.u64_or("list-size", p.list_size);
@@ -167,5 +182,16 @@ mod tests {
         assert_eq!(p.schemes, vec![SchemeId::Ebr, SchemeId::Stamp]);
         assert_eq!(p.alloc, Policy::System);
         assert_eq!(p.workload_pct, 80);
+    }
+
+    #[test]
+    fn magazines_axis_parses() {
+        let parse = |s: &str| {
+            BenchParams::from_args(&Args::parse_from(s.split_whitespace().map(String::from)))
+        };
+        assert_eq!(parse("").magazine_cap, crate::alloc::DEFAULT_MAGAZINE_CAP);
+        assert_eq!(parse("--magazines on").magazine_cap, crate::alloc::DEFAULT_MAGAZINE_CAP);
+        assert_eq!(parse("--magazines off").magazine_cap, 0);
+        assert_eq!(parse("--magazines 16").magazine_cap, 16);
     }
 }

@@ -73,6 +73,15 @@ pub struct MetricsSnapshot {
     pub queue_depth: u64,
     /// Gauge: requests submitted, not yet answered (open completion slots).
     pub in_flight: u64,
+    /// Magazine-layer counters (process-wide, like `unreclaimed_nodes` —
+    /// set once by `Router::metrics`, never summed by [`Self::add_counters`]):
+    /// node allocations served from a thread-local magazine vs fallen
+    /// through to the global free-list, and depot chain exchanges
+    /// (each flush/refill moves ~cap slots with one CAS).
+    pub mag_alloc_hits: u64,
+    pub mag_alloc_misses: u64,
+    pub mag_depot_flushes: u64,
+    pub mag_depot_refills: u64,
 }
 
 impl Metrics {
@@ -94,6 +103,10 @@ impl Metrics {
             unreclaimed_nodes,
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             in_flight: self.in_flight.load(Ordering::Relaxed),
+            mag_alloc_hits: 0,
+            mag_alloc_misses: 0,
+            mag_depot_flushes: 0,
+            mag_depot_refills: 0,
         }
     }
 }
@@ -104,7 +117,10 @@ impl MetricsSnapshot {
     /// in_flight — per-shard gauges sum to the fleet gauge).
     /// `unreclaimed_nodes` is deliberately left untouched: domains may be
     /// shared between shards, so the caller must aggregate it over
-    /// *distinct* domains (see `Router::metrics`).
+    /// *distinct* domains (see `Router::metrics`). The `mag_*` counters are
+    /// likewise untouched — they are process-wide (threads serve many
+    /// shards), so `Router::metrics` sets them exactly once from
+    /// [`crate::alloc::magazine_stats`].
     pub fn add_counters(&mut self, other: &MetricsSnapshot) {
         self.requests += other.requests;
         self.hits += other.hits;
@@ -132,6 +148,26 @@ impl MetricsSnapshot {
             self.batched_keys as f64 / self.batches as f64
         }
     }
+
+    /// Copy the magazine-layer counters out of an allocator stats snapshot
+    /// (`Router::metrics` calls this once, post roll-up — the same single-set
+    /// discipline as `unreclaimed_nodes`).
+    pub fn set_magazine_stats(&mut self, s: &crate::alloc::MagazineStats) {
+        self.mag_alloc_hits = s.alloc_hits;
+        self.mag_alloc_misses = s.alloc_misses;
+        self.mag_depot_flushes = s.depot_flushes;
+        self.mag_depot_refills = s.depot_refills;
+    }
+
+    /// Magazine hit rate over node allocations, in [0, 1].
+    pub fn mag_hit_rate(&self) -> f64 {
+        let total = self.mag_alloc_hits + self.mag_alloc_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.mag_alloc_hits as f64 / total as f64
+        }
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -139,7 +175,8 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "requests={} hits={} ({:.1}%) misses={} batches={} (mean size {:.1}) \
-             unreclaimed={} queued={} in_flight={}",
+             unreclaimed={} queued={} in_flight={} \
+             mag_hits={} mag_misses={} ({:.1}%) depot_flushes={} depot_refills={}",
             self.requests,
             self.hits,
             self.hit_rate() * 100.0,
@@ -149,6 +186,11 @@ impl std::fmt::Display for MetricsSnapshot {
             self.unreclaimed_nodes,
             self.queue_depth,
             self.in_flight,
+            self.mag_alloc_hits,
+            self.mag_alloc_misses,
+            self.mag_hit_rate() * 100.0,
+            self.mag_depot_flushes,
+            self.mag_depot_refills,
         )
     }
 }
@@ -205,5 +247,28 @@ mod tests {
         assert_eq!(agg.requests, 10);
         assert_eq!(agg.hits, 4);
         assert_eq!(agg.unreclaimed_nodes, 0, "caller owns unreclaimed aggregation");
+    }
+
+    #[test]
+    fn magazine_counters_set_once_not_summed() {
+        let stats = crate::alloc::MagazineStats {
+            alloc_hits: 30,
+            alloc_misses: 10,
+            free_hits: 40,
+            depot_flushes: 2,
+            depot_refills: 1,
+        };
+        let mut s = MetricsSnapshot::default();
+        s.set_magazine_stats(&stats);
+        assert_eq!(s.mag_alloc_hits, 30);
+        assert!((s.mag_hit_rate() - 0.75).abs() < 1e-9);
+        // Roll-up must not double the process-wide magazine counters.
+        let mut agg = MetricsSnapshot::default();
+        agg.add_counters(&s);
+        agg.add_counters(&s);
+        assert_eq!(agg.mag_alloc_hits, 0, "router sets mag_* once, post roll-up");
+        let text = s.to_string();
+        assert!(text.contains("mag_hits=30"));
+        assert!(text.contains("depot_flushes=2"));
     }
 }

@@ -198,6 +198,10 @@ impl<R: Reclaimer> Router<R> {
         }
         agg.batches = self.metrics.batches.load(Ordering::Relaxed);
         agg.unreclaimed_nodes = self.domains.iter().map(|d| d.domain().unreclaimed()).sum();
+        // Magazine counters are process-wide (worker threads serve all
+        // shards), so — like unreclaimed_nodes — they are set once here
+        // rather than summed per shard.
+        agg.set_magazine_stats(&crate::alloc::magazine_stats());
         agg
     }
 

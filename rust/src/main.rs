@@ -6,7 +6,7 @@
 //! repro bench queue|list|hashmap [opts]       # Figures 3/4/5 (12/13/14)
 //! repro efficiency queue|list|hashmap [opts]  # Figures 6, 8-11 (16-19)
 //! repro trials [opts]                         # Figure 7 (15)
-//! repro micro region|stamp-pool [opts]        # E13/E14
+//! repro micro region|stamp-pool|alloc [opts]  # E13/E14/E20
 //! repro ablation threshold|hp|epoch [opts]    # A1/A2/A3
 //! repro serve [--scheme stamp] [--requests N] # coordinator (E15)
 //!             [--shards N] [--shared-domain] [--backend pjrt|synthetic]
@@ -16,7 +16,7 @@
 //!
 //! common options:
 //!   --threads 1,2,4   --trials N   --secs S   --schemes all|ebr,stamp,...
-//!   --alloc pool|system   --workload PCT   --csv out.csv   --paper
+//!   --alloc pool|system   --magazines on|off|CAP   --workload PCT   --csv out.csv   --paper
 //! ```
 
 use emr::bench_fw::figures::{self, Workload};
@@ -53,6 +53,7 @@ fn main() {
         Some("micro") => match positional.next() {
             Some("region") => figures::micro_region(&params),
             Some("stamp-pool") => figures::micro_stamp_pool(&params),
+            Some("alloc") => figures::micro_alloc(&params),
             other => usage(&format!("micro {:?}", other)),
         },
         Some("ablation") => match positional.next() {
@@ -234,7 +235,7 @@ fn usage(context: &str) -> ! {
          \x20 bench queue|list|hashmap             throughput sweeps (Figs 3-5, 12-14)\n\
          \x20 efficiency queue|list|hashmap        unreclaimed-node series (Figs 6, 8-11, 16-19)\n\
          \x20 trials                               warm-up over trials (Figs 7, 15)\n\
-         \x20 micro region|stamp-pool              microbenchmarks (E13/E14)\n\
+         \x20 micro region|stamp-pool|alloc        microbenchmarks (E13/E14/E20)\n\
          \x20 ablation threshold|hp|epoch          design-choice ablations (A1-A3)\n\
          \x20 serve                                compute-cache coordinator (E15)\n\
          \x20   [--shards N] [--shared-domain] [--backend pjrt|synthetic]\n\
@@ -243,7 +244,8 @@ fn usage(context: &str) -> ! {
          \x20 async-scaling                        async-mux vs thread-per-request, artifact-free (E17)\n\
          \n\
          common options: --threads 1,2,4 --trials N --secs S --schemes all\n\
-         \x20               --alloc pool|system --workload PCT --csv FILE --paper"
+         \x20               --alloc pool|system --magazines on|off|CAP\n\
+         \x20               --workload PCT --csv FILE --paper"
     );
     std::process::exit(2)
 }

@@ -323,6 +323,11 @@ impl<R: Reclaimer> Drop for HandleInner<R> {
         // nodes to the domain's shared lists and release the registry entry
         // for reuse. Disjoint field borrows: shared `domain`, `&mut local`.
         R::unregister(self.domain.domain().state(), self.local.get_mut());
+        // Unregister may have reclaimed nodes into this thread's magazine
+        // rack; push them to the shared depots so a thread that stops using
+        // reclamation (handle drop, cache eviction, thread exit) strands no
+        // slots. No-op when magazines are off or the rack is empty.
+        crate::alloc::flush_magazines();
     }
 }
 

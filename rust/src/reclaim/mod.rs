@@ -100,6 +100,11 @@ impl<T, R: Reclaimer> Node<T, R> {
 /// Allocation is domain-independent: the domain matters only at retire
 /// time, so a node must be retired into the domain whose regions/hazards
 /// protect its readers.
+///
+/// Pool-routed allocations are served from the calling thread's magazine
+/// rack first ([`crate::alloc::magazine`]): in steady-state churn the slot
+/// returned here is one this thread reclaimed moments ago, without any
+/// shared-cache-line traffic.
 pub fn alloc_node<T: Send + Sync + 'static, R: Reclaimer>(data: T) -> *mut Node<T, R> {
     let layout = Layout::new::<Node<T, R>>();
     // The node is tagged with the provenance `alloc_raw` *actually used*

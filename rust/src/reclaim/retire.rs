@@ -13,6 +13,14 @@
 //! "list of ordered sublists" (§3): sublists are chained through the head
 //! node's `next_list` link, so a scan touches each sublist only up to the
 //! first non-reclaimable node — the `O(n + m)` bound of §3.
+//!
+//! Reclamation closes the **retire→reuse loop**: [`reclaim_one`] frees the
+//! node through `free_raw` → `pool::free`, which lands pool-backed slots in
+//! the *reclaiming* thread's magazine ([`crate::alloc::magazine`]) — the
+//! next `Owned::new` on that thread takes the slot back with a non-atomic
+//! pop, turning the paper's "reclaims earlier" property into allocation
+//! throughput. The LFRC offset-0 contract is unaffected: magazines never
+//! write a cached slot's first word.
 
 use std::ptr;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
@@ -147,6 +155,10 @@ pub unsafe fn prepare_retire<T: Send + Sync + 'static, R: Reclaimer>(
 }
 
 /// Reclaim one retired node: run its erased destructor.
+///
+/// Pool-backed nodes return to the calling thread's magazine rack (see the
+/// module docs), so a thread that both reclaims and allocates reuses hot
+/// slots without touching the global free-list.
 ///
 /// # Safety
 /// The node must be safe to reclaim (no live references) and reclaimed

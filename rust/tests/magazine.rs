@@ -1,0 +1,222 @@
+//! End-to-end tests for the magazine (tcache) layer: the retire→reuse loop
+//! across threads, the handle-drop flush contract, and LFRC's word-0
+//! (type-stability) invariant surviving the full rack→depot→refill cycle.
+//!
+//! Every test here serialises on one lock: the magazine capacity is a
+//! process-wide knob and the assertions depend on the layer being on (the
+//! lib unit tests run in a different process, so only this binary's tests
+//! can race each other). Pool size classes are picked per test so no two
+//! tests (and none of the crate's own node traffic, which lands in the
+//! small classes) share a free-list or depot.
+
+use emr::alloc::{
+    flush_magazines, magazine_stats, pool, set_magazine_cap, thread_cached_slots,
+    DEFAULT_MAGAZINE_CAP,
+};
+use emr::reclaim::tests_common::{flush_until, Payload};
+use emr::reclaim::{DomainRef, Owned, Reclaimer};
+use std::alloc::Layout;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Serialises the whole file (see module docs) and pins the default cap.
+fn magazine_test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_magazine_cap(DEFAULT_MAGAZINE_CAP);
+    g
+}
+
+/// A thread frees a batch of slots and flushes; a *different* thread must
+/// get exactly those slots back, via depot chains — the cross-thread leg
+/// of the retire→reuse loop (nothing is stranded in the dead thread).
+#[test]
+fn cross_thread_reuse_via_depot() {
+    let _g = magazine_test_lock();
+    // 1 KiB class: exclusive to this test within this binary.
+    let layout = Layout::from_size_align(1024, 8).unwrap();
+    // More than one magazine, so the flush pushes multiple chains.
+    const N: usize = DEFAULT_MAGAZINE_CAP + DEFAULT_MAGAZINE_CAP / 2;
+
+    let before = magazine_stats();
+    let mut freed: Vec<usize> = std::thread::spawn(move || {
+        let ptrs: Vec<*mut u8> = (0..N).map(|_| pool::alloc(layout)).collect();
+        let addrs: Vec<usize> = ptrs.iter().map(|&p| p as usize).collect();
+        for p in ptrs {
+            // SAFETY: freshly allocated above with this exact layout.
+            unsafe { pool::free(p, layout) };
+        }
+        flush_magazines(); // rack → depot, at chain granularity
+        assert_eq!(thread_cached_slots(), 0);
+        addrs
+    })
+    .join()
+    .unwrap();
+    let mid = magazine_stats();
+    assert!(
+        mid.depot_flushes >= before.depot_flushes + 2,
+        "expected ≥2 chain flushes for {N} slots"
+    );
+
+    let mut reused: Vec<usize> = std::thread::spawn(move || {
+        let ptrs: Vec<*mut u8> = (0..N).map(|_| pool::alloc(layout)).collect();
+        let addrs: Vec<usize> = ptrs.iter().map(|&p| p as usize).collect();
+        for p in ptrs {
+            // SAFETY: freshly allocated above with this exact layout.
+            unsafe { pool::free(p, layout) };
+        }
+        flush_magazines();
+        addrs
+    })
+    .join()
+    .unwrap();
+    assert!(magazine_stats().depot_refills > mid.depot_refills);
+
+    freed.sort_unstable();
+    reused.sort_unstable();
+    assert_eq!(freed, reused, "second thread must drain exactly the first thread's slots");
+}
+
+/// Dropping the last handle on a thread flushes its rack: no slot may be
+/// stranded in a dead thread's TLS (they all become visible in the depot),
+/// and a later thread's allocations refill from there.
+#[test]
+fn handle_drop_flushes_thread_cache() {
+    use emr::reclaim::ebr::Ebr;
+    let _g = magazine_test_lock();
+    const N: usize = 256;
+
+    let domain = DomainRef::<Ebr>::new_owned();
+    let drops = Arc::new(AtomicUsize::new(0));
+    let before = magazine_stats();
+    {
+        let domain = domain.clone();
+        let drops = drops.clone();
+        std::thread::spawn(move || {
+            let h = domain.register();
+            for i in 0..N as u64 {
+                h.retire_owned(Owned::<Payload, Ebr>::new(Payload::new(i, &drops)));
+            }
+            // Reclaim on this thread: the freed node slots land in its rack.
+            assert!(flush_until(&h, || drops.load(Ordering::Relaxed) == N));
+            assert!(thread_cached_slots() > 0, "reclaimed slots should sit in the rack");
+            drop(h);
+            // flush_until's *cached* domain handle is still alive in TLS,
+            // but the rack flush on `h`'s drop is rack-wide: every slot
+            // cached up to this point must have reached the depot.
+            assert_eq!(
+                thread_cached_slots(),
+                0,
+                "handle drop left slots stranded in thread-local magazines"
+            );
+        })
+        .join()
+        .unwrap();
+    }
+    let mid = magazine_stats();
+    assert!(mid.depot_flushes > before.depot_flushes, "flush must hand chains to the depot");
+
+    // Refill leg: a fresh allocation of the same class on *this* thread
+    // (rack emptied first) must come from those depot chains.
+    flush_magazines();
+    let h = domain.register();
+    h.retire_owned(Owned::<Payload, Ebr>::new(Payload::new(0, &drops)));
+    assert!(flush_until(&h, || drops.load(Ordering::Relaxed) == N + 1));
+    assert!(
+        magazine_stats().depot_refills > mid.depot_refills,
+        "allocation after a flush must refill from the depot"
+    );
+}
+
+/// The slot's first word — LFRC's refcount word under the type-stability
+/// contract — must survive the complete magazine round trip: free into a
+/// rack, flush as a depot chain (links live at slot offsets 8/12), refill
+/// on another thread, re-allocate.
+#[test]
+fn word0_survives_full_magazine_round_trip() {
+    let _g = magazine_test_lock();
+    // 2 KiB class: exclusive to this test within this binary.
+    let layout = Layout::from_size_align(2048, 8).unwrap();
+    const SENTINEL: u64 = 0xFEED_FACE_CAFE_BEEF;
+
+    let p = pool::alloc(layout);
+    // SAFETY: p is a live, exclusively-owned 2 KiB slot.
+    unsafe { (p as *mut u64).write(SENTINEL) };
+    // SAFETY: allocated above with this exact layout.
+    unsafe { pool::free(p, layout) };
+    flush_magazines();
+    let addr = p as usize;
+
+    std::thread::spawn(move || {
+        let q = pool::alloc(layout);
+        assert_eq!(q as usize, addr, "single depot chain must yield the same slot");
+        // SAFETY: q is live and at least 8 bytes.
+        let word0 = unsafe { (q as *const u64).read() };
+        assert_eq!(word0, SENTINEL, "offset 0 was clobbered in the rack/depot cycle");
+        // SAFETY: allocated above with this exact layout.
+        unsafe { pool::free(q, layout) };
+        flush_magazines();
+    })
+    .join()
+    .unwrap();
+}
+
+/// Multi-thread node churn with magazines on, per scheme: drop-counting,
+/// self-poisoning payloads catch any aliasing or double-reclamation the
+/// magazine layer could introduce. LFRC's run additionally exercises its
+/// forced-pool (type-stable refcount) traffic through the racks.
+fn churn<R: Reclaimer>(threads: usize, per_thread: usize) {
+    let _g = magazine_test_lock();
+    let domain = DomainRef::<R>::new_owned();
+    let drops = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let domain = &domain;
+            let drops = drops.clone();
+            scope.spawn(move || {
+                let h = domain.register();
+                for i in 0..per_thread as u64 {
+                    let v = t as u64 * per_thread as u64 + i;
+                    h.retire_owned(Owned::<Payload, R>::new(Payload::new(v, &drops)));
+                    if i % 64 == 0 {
+                        h.flush();
+                    }
+                }
+                h.flush();
+            });
+        }
+    });
+    let h = domain.register();
+    let total = threads * per_thread;
+    let ok = flush_until(&h, || drops.load(Ordering::Relaxed) == total);
+    assert!(
+        ok,
+        "{}: churn leaked — {} of {} dropped",
+        R::NAME,
+        drops.load(Ordering::Relaxed),
+        total
+    );
+}
+
+macro_rules! churn_tests {
+    ($($mod_name:ident => $scheme:ty),* $(,)?) => {$(
+        mod $mod_name {
+            use super::*;
+
+            #[test]
+            fn multi_thread_churn_with_magazines() {
+                churn::<$scheme>(4, 300);
+            }
+        }
+    )*};
+}
+
+churn_tests!(
+    lfrc => emr::reclaim::lfrc::Lfrc,
+    hp => emr::reclaim::hp::Hp,
+    ebr => emr::reclaim::ebr::Ebr,
+    nebr => emr::reclaim::nebr::Nebr,
+    qsr => emr::reclaim::qsr::Qsr,
+    debra => emr::reclaim::debra::Debra,
+    stamp => emr::reclaim::stamp::StampIt,
+);
