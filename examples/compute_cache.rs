@@ -12,6 +12,9 @@
 //! # async front-end: 10k logical clients multiplexed on 8 executor threads
 //! cargo run --release --example compute_cache -- \
 //!     --backend synthetic --shards 4 --frontend async --clients 10000 --requests 10
+//! # TCP front-end: real loopback sockets through the net reactor
+//! cargo run --release --example compute_cache -- \
+//!     --backend synthetic --shards 4 --frontend net --clients 1000 --requests 10
 //! ```
 //!
 //! Reports throughput, latency percentiles (hit vs computed), cache hit
@@ -19,10 +22,14 @@
 //! when `--shards N > 1`, per shard. `--shared-domain` switches the fleet
 //! from domain-per-shard to one shared reclamation domain. `--frontend
 //! async` drives the same load as logical tasks over the completion-driven
-//! submission path (DESIGN.md §6) instead of one OS thread per client.
-//! Recorded in EXPERIMENTS.md §E15/§E16/§E17.
+//! submission path (DESIGN.md §6) instead of one OS thread per client;
+//! `--frontend net` drives it as framed requests over real TCP connections
+//! through the reactor (DESIGN.md §8, `--listen ADDR` to pin the address).
+//! Recorded in EXPERIMENTS.md §E15/§E16/§E17/§E18.
 
 use emr::coordinator::frontend::mux::{self, MuxConfig};
+use emr::coordinator::frontend::net::client::{storm, NetClient, StormConfig};
+use emr::coordinator::frontend::net::{NetConfig, NetServer};
 use emr::coordinator::frontend::Frontend;
 use emr::coordinator::{Backend, CacheServer, ServerConfig};
 use emr::dispatch_scheme;
@@ -37,9 +44,12 @@ struct Opts {
     requests: usize,
     key_space: u64,
     hot_pct: usize,
-    /// Which front-end drives the load: client threads or the async mux.
+    /// Which front-end drives the load: client threads, the async mux, or
+    /// real TCP connections through the net reactor.
     frontend: Frontend,
     exec_threads: usize,
+    /// Bind address for `--frontend net` (port 0 = ephemeral).
+    listen: std::net::SocketAddr,
     cfg: ServerConfig,
 }
 
@@ -62,18 +72,22 @@ fn main() {
         key_space: args.u64_or("keys", 30_000),
         hot_pct: args.usize_or("hot-pct", 80), // % of requests on a hot set
         frontend: Frontend::parse(args.get_or("frontend", "thread")).unwrap_or_else(|| {
-            eprintln!("unknown --frontend (thread|async)");
+            eprintln!("unknown --frontend ({})", Frontend::NAMES);
             std::process::exit(2);
         }),
         exec_threads: args.usize_or("exec-threads", 8),
+        listen: args.get_or("listen", "127.0.0.1:0").parse().unwrap_or_else(|e| {
+            eprintln!("bad --listen address: {e}");
+            std::process::exit(2);
+        }),
         cfg,
     };
     dispatch_scheme!(scheme, run, opts);
 }
 
 fn run<R: Reclaimer>(opts: Opts) {
-    let Opts { clients, requests, key_space, hot_pct, frontend, exec_threads, cfg } = opts;
-    let async_frontend = frontend == Frontend::Async;
+    let Opts { clients, requests, key_space, hot_pct, frontend, exec_threads, listen, cfg } =
+        opts;
     if cfg.backend == Backend::Pjrt && !emr::runtime::artifacts_available() {
         eprintln!("no artifacts — run `make artifacts` first (or --backend synthetic)");
         std::process::exit(1);
@@ -83,10 +97,10 @@ fn run<R: Reclaimer>(opts: Opts) {
     let capacity = cfg.capacity;
     let server = CacheServer::<R>::start(cfg).expect("server start");
 
-    let frontend_desc = if async_frontend {
-        format!("async ({exec_threads} executor threads)")
-    } else {
-        "thread".to_string()
+    let frontend_desc = match frontend {
+        Frontend::Thread => "thread".to_string(),
+        Frontend::Async => format!("async ({exec_threads} executor threads)"),
+        Frontend::Net => format!("net ({exec_threads} executor threads, TCP loopback)"),
     };
     println!(
         "E15 compute-cache: scheme={} clients={clients} requests/client={requests} \
@@ -101,55 +115,90 @@ fn run<R: Reclaimer>(opts: Opts) {
     // Client load: hot_pct% of requests hit a small hot set (cache-friendly,
     // like reused partial results), the rest are uniform over the key space.
     // `--frontend async` issues the identical load as logical tasks
-    // multiplexed over the completion-driven submission path.
-    let (mut hits, mut misses): (Vec<f64>, Vec<f64>) = if async_frontend {
-        let exec = Executor::new(exec_threads);
-        let report = mux::drive(
-            &exec,
-            server.clone(),
-            &MuxConfig {
-                clients,
-                requests_per_client: requests,
-                key_space,
-                hot_pct: hot_pct as u32,
-                shard_in_flight: 256,
-                seed: 0xE15,
-            },
-        );
-        assert_eq!(report.errors, 0, "no request may be dropped");
-        (
-            report.hit_ns.iter().map(|&n| n as f64).collect(),
-            report.miss_ns.iter().map(|&n| n as f64).collect(),
-        )
-    } else {
-        let per_client: Vec<(Vec<f64>, Vec<f64>)> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..clients)
-                .map(|c| {
-                    let server = &server;
-                    scope.spawn(move || {
-                        let mut rng = Xoshiro256::new(0xE15 ^ c as u64);
-                        let mut hit_lat = Vec::new();
-                        let mut miss_lat = Vec::new();
-                        for _ in 0..requests {
-                            let key = rng.skewed_key(key_space, hot_pct as u32);
-                            let resp = server.request(key).expect("request");
-                            assert!(resp.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
-                            if resp.hit {
-                                hit_lat.push(resp.latency_ns as f64);
-                            } else {
-                                miss_lat.push(resp.latency_ns as f64);
+    // multiplexed over the completion-driven submission path; `--frontend
+    // net` issues it as framed requests over real loopback TCP connections.
+    // The net server outlives the branch so its listener counters stay
+    // registered for the `server.metrics()` rollup printed below.
+    let mut net_server: Option<NetServer> = None;
+    let (mut hits, mut misses): (Vec<f64>, Vec<f64>) = match frontend {
+        Frontend::Async => {
+            let exec = Executor::new(exec_threads);
+            let report = mux::drive(
+                &exec,
+                server.clone(),
+                &MuxConfig {
+                    clients,
+                    requests_per_client: requests,
+                    key_space,
+                    hot_pct: hot_pct as u32,
+                    shard_in_flight: 256,
+                    seed: 0xE15,
+                },
+            );
+            assert_eq!(report.errors, 0, "no request may be dropped");
+            (
+                report.hit_ns.iter().map(|&n| n as f64).collect(),
+                report.miss_ns.iter().map(|&n| n as f64).collect(),
+            )
+        }
+        Frontend::Net => {
+            let net = NetServer::start(
+                server.clone(),
+                NetConfig { listen, exec_threads, ..NetConfig::default() },
+            )
+            .expect("net front start");
+            println!("listening on {}", net.local_addr());
+            let report = storm(
+                net.local_addr(),
+                &StormConfig {
+                    conns: clients,
+                    requests_per_conn: requests,
+                    key_space,
+                    hot_pct: hot_pct as u32,
+                    seed: 0xE15,
+                    ..StormConfig::default()
+                },
+            );
+            assert_eq!(report.errors, 0, "no request may be dropped");
+            net_server = Some(net);
+            (
+                report.hit_ns.iter().map(|&n| n as f64).collect(),
+                report.miss_ns.iter().map(|&n| n as f64).collect(),
+            )
+        }
+        Frontend::Thread => {
+            let per_client: Vec<(Vec<f64>, Vec<f64>)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let server = &server;
+                        scope.spawn(move || {
+                            let mut rng = Xoshiro256::new(0xE15 ^ c as u64);
+                            let mut hit_lat = Vec::new();
+                            let mut miss_lat = Vec::new();
+                            for _ in 0..requests {
+                                let key = rng.skewed_key(key_space, hot_pct as u32);
+                                let resp = server.request(key).expect("request");
+                                assert!(resp
+                                    .data
+                                    .iter()
+                                    .all(|v| v.is_finite() && v.abs() <= 1.0));
+                                if resp.hit {
+                                    hit_lat.push(resp.latency_ns as f64);
+                                } else {
+                                    miss_lat.push(resp.latency_ns as f64);
+                                }
                             }
-                        }
-                        (hit_lat, miss_lat)
+                            (hit_lat, miss_lat)
+                        })
                     })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        (
-            per_client.iter().flat_map(|(h, _)| h.iter().copied()).collect(),
-            per_client.iter().flat_map(|(_, m)| m.iter().copied()).collect(),
-        )
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            (
+                per_client.iter().flat_map(|(h, _)| h.iter().copied()).collect(),
+                per_client.iter().flat_map(|(_, m)| m.iter().copied()).collect(),
+            )
+        }
     };
     let wall_s = (emr::util::monotonic_ns() - t0) as f64 / 1e9;
 
@@ -181,17 +230,36 @@ fn run<R: Reclaimer>(opts: Opts) {
         }
     }
     println!("cache entries   : {}", server.cache_len());
-    if async_frontend {
-        // The mux reports latencies, not payloads — spot-check data
-        // validity through the same async path the load just exercised
-        // (the thread branch asserts this per response). After the timed
-        // window AND the metric printouts, so neither the async-vs-thread
-        // throughput comparison nor the reported counters are skewed.
-        for key in 0..8u32 {
-            let resp =
-                emr::runtime::exec::block_on(server.submit_async(key)).expect("post-run probe");
-            assert!(resp.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+    match frontend {
+        Frontend::Async => {
+            // The mux reports latencies, not payloads — spot-check data
+            // validity through the same async path the load just exercised
+            // (the thread branch asserts this per response). After the timed
+            // window AND the metric printouts, so neither the async-vs-thread
+            // throughput comparison nor the reported counters are skewed.
+            for key in 0..8u32 {
+                let resp = emr::runtime::exec::block_on(server.submit_async(key))
+                    .expect("post-run probe");
+                assert!(resp.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+            }
         }
+        Frontend::Net => {
+            // Same spot-check, but through the wire: a fresh connection
+            // round-trips a few keys so payload encode/decode is verified
+            // end-to-end before the listener goes away.
+            let net = net_server.as_ref().expect("net server alive");
+            let mut probe = NetClient::connect(net.local_addr()).expect("post-run connect");
+            for key in 0..8u32 {
+                let frame = probe.request(key).expect("post-run probe");
+                let data = frame.data.expect("ok response carries a payload");
+                assert!(data.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+            }
+        }
+        Frontend::Thread => {}
+    }
+    if let Some(mut net) = net_server.take() {
+        // Drain in-flight completions, flush outboxes, close the listener.
+        net.shutdown();
     }
     server.shutdown();
     // The server owns its reclamation domain; dropping the last reference

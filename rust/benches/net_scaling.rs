@@ -1,0 +1,67 @@
+//! E18: net scaling — the TCP front (`coordinator::frontend::net`) under
+//! a loopback connection storm as concurrency grows (100/1k by default;
+//! add 10k with `--conns 100,1000,10000` or `--paper`). Measures aggregate
+//! throughput, p50/p99 round-trip latency, client errors, server-side
+//! protocol errors, end-of-run unreclaimed nodes and the peak
+//! active-connection / in-flight gauges, per scheme. Runs on the synthetic
+//! backend, so no PJRT artifacts are needed.
+//!
+//! Besides the printed tables (and `--csv PATH`), the sweep is written as
+//! a machine-readable record to `BENCH_fig_net_scaling.json` (override
+//! with `--json PATH`) for the CI artifact trail.
+//!
+//! ```bash
+//! cargo bench --bench net_scaling -- --conns 100,1000,10000 --exec-threads 8
+//! ```
+use emr::bench_fw::figures::fig_net_scaling;
+use emr::bench_fw::BenchParams;
+use emr::reclaim::SchemeId;
+use emr::util::cli::Args;
+use std::fmt::Write as _;
+
+fn main() {
+    let args = Args::parse();
+    let mut p = BenchParams::from_args(&args);
+    if args.get("schemes").is_none() {
+        // The ISSUE's comparison set: the paper's scheme, one epoch
+        // scheme, hazard pointers.
+        p.schemes = vec![SchemeId::Stamp, SchemeId::Ebr, SchemeId::Hp];
+    }
+    let cells = fig_net_scaling(&p);
+
+    let mut body = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            body.push_str(",\n");
+        }
+        let _ = write!(
+            body,
+            "    {{\"scheme\": \"{}\", \"conns\": {}, \"req_per_s\": {:.1}, \
+             \"p50_ns\": {:.0}, \"p99_ns\": {:.0}, \"errors\": {}, \
+             \"protocol_errors\": {}, \"bytes_in\": {}, \"bytes_out\": {}, \
+             \"unreclaimed\": {}, \"peak_active\": {}, \"peak_in_flight\": {}}}",
+            c.scheme,
+            c.conns,
+            c.req_per_s,
+            c.p50_ns,
+            c.p99_ns,
+            c.errors,
+            c.protocol_errors,
+            c.bytes_in,
+            c.bytes_out,
+            c.unreclaimed,
+            c.peak_active,
+            c.peak_in_flight,
+        );
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"net_scaling\",\n  \"exec_threads\": {},\n  \
+         \"cells\": [\n{body}\n  ]\n}}\n",
+        p.exec_threads
+    );
+    let path = args.get_or("json", "BENCH_fig_net_scaling.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

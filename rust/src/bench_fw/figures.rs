@@ -851,6 +851,186 @@ pub fn fig_async_scaling(p: &BenchParams) {
     );
 }
 
+/// One net-scaling measurement cell (E18). Public so the `net_scaling`
+/// bench target can flatten the sweep into `BENCH_fig_net_scaling.json`.
+pub struct NetCell {
+    /// [`Reclaimer::NAME`] of the scheme under test.
+    pub scheme: &'static str,
+    pub conns: usize,
+    pub req_per_s: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Client-observed failures: connect errors, premature closes,
+    /// non-`Ok` statuses, unanswered requests at the progress deadline.
+    pub errors: u64,
+    /// Server-counted malformed/oversized frames (acceptance: 0).
+    pub protocol_errors: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// End-of-run pending-retire population across the fleet's domains.
+    pub unreclaimed: u64,
+    /// Peak of the `active_connections` listener gauge during the run.
+    pub peak_active: u64,
+    /// Peak of the fleet-wide `in_flight` gauge (open completion slots).
+    pub peak_in_flight: u64,
+}
+
+/// E18 fixes the fleet shape like E17 (4 shards × 1 worker): the sweep
+/// varies *connection* concurrency, so the reactor + completion bridge —
+/// not the shard pool — is what scales.
+const E18_SHARDS: usize = 4;
+/// Requests each connection issues (pipelined up to the storm window).
+const E18_REQS_PER_CONN: usize = 10;
+
+/// Run one (scheme, connection count) cell of the E18 figure: the full
+/// Router stack on the synthetic backend behind the TCP front
+/// (`frontend::net`), stormed over loopback by `conns` real connections
+/// pipelining [`E18_REQS_PER_CONN`] requests each under the same skewed
+/// load as E16/E17 (80% of requests on a 1% hot set).
+fn net_scaling_cell<R: Reclaimer>(p: &BenchParams, conns: usize) -> NetCell {
+    use crate::coordinator::frontend::net::client::{storm, StormConfig};
+    use crate::coordinator::frontend::net::{NetConfig, NetServer};
+    use crate::coordinator::{Backend, Router, ServerConfig};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let server = Router::<R>::start(
+        ServerConfig {
+            workers: 1,
+            buckets: (p.map_buckets / E18_SHARDS).max(64),
+            capacity: (p.map_capacity / E18_SHARDS).max(64),
+            ..ServerConfig::default()
+        }
+        .with_shards(E18_SHARDS)
+        .with_backend(Backend::synthetic()),
+    )
+    .expect("router start (synthetic backend)");
+    let mut net = NetServer::start(
+        server.clone(),
+        NetConfig { exec_threads: p.exec_threads, ..NetConfig::default() },
+    )
+    .expect("net front start (loopback)");
+
+    // Gauge sampler: connection population and open completion slots are
+    // the two back-pressure signals E18 plots against throughput.
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let server = server.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let (mut peak_active, mut peak_if) = (0u64, 0u64);
+            while !stop.load(Ordering::Acquire) {
+                let m = server.metrics();
+                peak_active = peak_active.max(m.net_active);
+                peak_if = peak_if.max(m.in_flight);
+                std::thread::sleep(std::time::Duration::from_micros(500));
+            }
+            (peak_active, peak_if)
+        })
+    };
+
+    let report = storm(
+        net.local_addr(),
+        &StormConfig {
+            conns,
+            requests_per_conn: E18_REQS_PER_CONN,
+            key_space: p.key_space,
+            hot_pct: 80,
+            seed: 0xE18,
+            ..StormConfig::default()
+        },
+    );
+
+    stop.store(true, Ordering::Release);
+    let (peak_active, peak_in_flight) = sampler.join().unwrap();
+    let listener = net.metrics();
+    // Drain in-flight completions and join the reactor before reading the
+    // end-of-run reclamation gauge, so bridge tasks are finished.
+    net.shutdown();
+    let unreclaimed = server.metrics().unreclaimed_nodes;
+    server.shutdown();
+
+    let lat = report.sorted_latencies();
+    NetCell {
+        scheme: R::NAME,
+        conns,
+        req_per_s: report.reqs_per_sec(),
+        p50_ns: crate::util::stats::percentile_sorted(&lat, 50.0),
+        p99_ns: crate::util::stats::percentile_sorted(&lat, 99.0),
+        errors: report.errors,
+        protocol_errors: listener.protocol_errors,
+        bytes_in: listener.bytes_in,
+        bytes_out: listener.bytes_out,
+        unreclaimed,
+        peak_active,
+        peak_in_flight,
+    }
+}
+
+/// E18: net-scaling figure (ROADMAP "network front"): throughput, latency,
+/// protocol health and reclamation gauges of the TCP front as **real
+/// loopback connection** concurrency grows, per scheme, on the synthetic
+/// backend — artifact-free. Returns the cells so the `net_scaling` bench
+/// target can write `BENCH_fig_net_scaling.json`. See EXPERIMENTS.md §E18
+/// for the recipe and expected shapes.
+pub fn fig_net_scaling(p: &BenchParams) -> Vec<NetCell> {
+    println!(
+        "\n== net scaling — {} shard(s) × 1 worker, synthetic backend, \
+         {} req/conn pipelined, 80% hot-set traffic ==\n\
+         front: TCP reactor over loopback, completions bridged on {} \
+         executor threads",
+        E18_SHARDS, E18_REQS_PER_CONN, p.exec_threads
+    );
+    let mut csv = String::from(
+        "scheme,conns,req_per_s,p50_ns,p99_ns,errors,protocol_errors,\
+         bytes_in,bytes_out,unreclaimed,peak_active,peak_in_flight\n",
+    );
+    let mut cells = Vec::new();
+    for &scheme in &p.schemes {
+        for &conns in &p.net_conns {
+            let cell = dispatch_scheme!(scheme, net_scaling_cell, p, conns);
+            println!(
+                "  {:<10} conns={conns:<7} {:>9.0} req/s  p50={:<9} p99={:<9} \
+                 errors={:<3} proto_errs={:<3} unreclaimed={:<7} peak_active={:<7} \
+                 peak_inflight={}",
+                scheme.name(),
+                cell.req_per_s,
+                fmt_ns(cell.p50_ns),
+                fmt_ns(cell.p99_ns),
+                cell.errors,
+                cell.protocol_errors,
+                cell.unreclaimed,
+                cell.peak_active,
+                cell.peak_in_flight,
+            );
+            csv.push_str(&format!(
+                "{},{conns},{:.0},{:.0},{:.0},{},{},{},{},{},{},{}\n",
+                scheme.name(),
+                cell.req_per_s,
+                cell.p50_ns,
+                cell.p99_ns,
+                cell.errors,
+                cell.protocol_errors,
+                cell.bytes_in,
+                cell.bytes_out,
+                cell.unreclaimed,
+                cell.peak_active,
+                cell.peak_in_flight,
+            ));
+            cells.push(cell);
+        }
+    }
+    maybe_write_csv(&p.csv, &csv);
+    println!(
+        "(expected: req/s roughly flat as connections grow — the reactor \
+         multiplexes sockets the way the mux multiplexes tasks — with p99 \
+         rising once outboxes start pausing reads; unreclaimed stays bounded \
+         for stamp/hp and grows with connection count for the epoch schemes \
+         when a stalled connection pins an epoch)"
+    );
+    cells
+}
+
 /// ns/op of `f` over ~`secs` of wall time (batched to amortize the clock).
 fn time_ns_per_op(secs: f64, mut f: impl FnMut()) -> f64 {
     use crate::util::monotonic_ns;

@@ -60,7 +60,10 @@ pub struct BenchParams {
     pub shards: Vec<usize>,
     /// Logical-client counts swept by the E17 `async_scaling` figure.
     pub mux_clients: Vec<usize>,
-    /// Executor threads the async front-end runs on (E17).
+    /// Concurrent TCP-connection counts swept by the E18 `net_scaling`
+    /// figure (`--conns`).
+    pub net_conns: Vec<usize>,
+    /// Executor threads the async/net front-ends run on (E17/E18).
     pub exec_threads: usize,
     /// Write a CSV next to the human-readable table.
     pub csv: Option<String>,
@@ -84,6 +87,7 @@ impl Default for BenchParams {
             samples: 50,
             shards: vec![1, 2, 4, 8],
             mux_clients: vec![1_000, 10_000],
+            net_conns: vec![100, 1_000],
             exec_threads: 8,
             csv: None,
         }
@@ -102,6 +106,8 @@ impl BenchParams {
             p.threads = vec![1, 2, 4, 8, 16, 32, 48];
             // Full E17 sweep: up to 100k logical clients on the mux.
             p.mux_clients = vec![1_000, 10_000, 100_000];
+            // Full E18 sweep: the 10k-connection acceptance point.
+            p.net_conns = vec![100, 1_000, 10_000];
         }
         p.threads = args.list_or("threads", &p.threads);
         p.trials = args.usize_or("trials", p.trials);
@@ -137,6 +143,7 @@ impl BenchParams {
         p.samples = args.usize_or("samples", p.samples);
         p.shards = args.list_or("shards", &p.shards);
         p.mux_clients = args.list_or("clients", &p.mux_clients);
+        p.net_conns = args.list_or("conns", &p.net_conns);
         p.exec_threads = args.usize_or("exec-threads", p.exec_threads);
         p.csv = args.get("csv").map(String::from);
         p

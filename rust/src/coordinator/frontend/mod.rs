@@ -35,6 +35,7 @@
 //! `rust/tests/async_frontend.rs` for the churn test).
 
 pub mod mux;
+pub mod net;
 
 use super::Response;
 use crate::anyhow;
@@ -60,14 +61,21 @@ pub enum Frontend {
     Thread,
     /// Logical clients multiplexed as tasks over [`mux`] (DESIGN.md §6).
     Async,
+    /// Real TCP connections through the [`net`] reactor (DESIGN.md §8).
+    Net,
 }
 
 impl Frontend {
-    /// Parse a CLI `--frontend` value: `thread` (default) | `async`.
+    /// The accepted `--frontend` names, for error messages — keep in sync
+    /// with [`parse`](Frontend::parse).
+    pub const NAMES: &'static str = "thread|async|net";
+
+    /// Parse a CLI `--frontend` value: `thread` (default) | `async` | `net`.
     pub fn parse(s: &str) -> Option<Frontend> {
         match s.to_ascii_lowercase().as_str() {
             "thread" | "threads" => Some(Frontend::Thread),
             "async" | "mux" => Some(Frontend::Async),
+            "net" | "tcp" | "socket" => Some(Frontend::Net),
             _ => None,
         }
     }
@@ -239,6 +247,30 @@ mod tests {
 
     fn resp() -> Response {
         Response { data: Box::new([0.5; DIM]), hit: true, latency_ns: 1 }
+    }
+
+    #[test]
+    fn frontend_parse_accepts_every_variant_and_rejects_junk() {
+        for (s, want) in [
+            ("thread", Frontend::Thread),
+            ("threads", Frontend::Thread),
+            ("THREAD", Frontend::Thread),
+            ("async", Frontend::Async),
+            ("mux", Frontend::Async),
+            ("net", Frontend::Net),
+            ("tcp", Frontend::Net),
+            ("socket", Frontend::Net),
+            ("Net", Frontend::Net),
+        ] {
+            assert_eq!(Frontend::parse(s), Some(want), "{s}");
+        }
+        for s in ["", "sync", "epoll", "thread ", "network"] {
+            assert_eq!(Frontend::parse(s), None, "{s:?}");
+        }
+        // The error-message listing names every canonical variant.
+        for name in Frontend::NAMES.split('|') {
+            assert!(Frontend::parse(name).is_some(), "NAMES entry {name:?} must parse");
+        }
     }
 
     #[test]

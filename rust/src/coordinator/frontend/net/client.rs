@@ -1,0 +1,405 @@
+//! Client-side drivers for the TCP front.
+//!
+//! Two shapes:
+//! - [`NetClient`] — a simple blocking one-connection client for tests and
+//!   examples (send a key, wait for the response).
+//! - [`storm`] — the loopback load generator behind E18, `serve --frontend
+//!   net` and the CI smoke: thousands of *multiplexed* nonblocking
+//!   connections driven by one thread over the same [`poll`] shim the
+//!   server uses. Thread-per-connection clients top out around the OS
+//!   thread budget; reaching the 10⁴-connection acceptance target needs
+//!   the client to be a reactor too.
+
+use super::poll::{fd_of, raise_nofile_limit, Poller};
+use super::proto::{self, FrameBuf, ProtoError, ResponseFrame, Status};
+use crate::util::monotonic_ns;
+use crate::util::rng::Xoshiro256;
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Blocking single-connection client
+// ---------------------------------------------------------------------------
+
+/// A blocking protocol client over one connection. Supports pipelining
+/// ([`send`](NetClient::send) many, then [`recv`](NetClient::recv)) or
+/// simple call-response ([`request`](NetClient::request)).
+pub struct NetClient {
+    stream: TcpStream,
+    fb: FrameBuf,
+    next_id: u64,
+}
+
+impl NetClient {
+    pub fn connect(addr: SocketAddr) -> io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream, fb: FrameBuf::for_responses(), next_id: 1 })
+    }
+
+    /// Bound subsequent `recv`s (and the reads inside `request`): a lost
+    /// reply errors with `WouldBlock`/`TimedOut` instead of blocking forever.
+    pub fn set_timeout(&mut self, t: Option<Duration>) -> io::Result<()> {
+        self.stream.set_read_timeout(t)
+    }
+
+    /// Pipelined send; returns the request id the response will carry.
+    pub fn send(&mut self, key: u32) -> io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut bytes = Vec::with_capacity(proto::LEN_PREFIX + proto::MAX_REQ_BODY);
+        proto::encode_request(&mut bytes, id, key);
+        self.stream.write_all(&bytes)?;
+        Ok(id)
+    }
+
+    /// Push raw bytes down the connection — test hook for malformed and
+    /// oversized frames.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.stream.write_all(bytes)
+    }
+
+    /// Next response frame (they may arrive out of submission order).
+    pub fn recv(&mut self) -> io::Result<ResponseFrame> {
+        let mut buf = [0u8; 4096];
+        loop {
+            // Scope the decode so the frame borrow ends before the read.
+            let parsed: Option<Result<ResponseFrame, ProtoError>> = match self.fb.next_frame() {
+                Ok(Some(body)) => Some(proto::parse_response(body)),
+                Ok(None) => None,
+                Err(e) => Some(Err(e)),
+            };
+            match parsed {
+                Some(Ok(frame)) => return Ok(frame),
+                Some(Err(e)) => {
+                    return Err(io::Error::new(ErrorKind::InvalidData, e.to_string()))
+                }
+                None => {}
+            }
+            let n = self.stream.read(&mut buf)?;
+            if n == 0 {
+                return Err(io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "server closed the connection",
+                ));
+            }
+            self.fb.extend(&buf[..n]);
+        }
+    }
+
+    /// Send one key and wait for its response.
+    pub fn request(&mut self, key: u32) -> io::Result<ResponseFrame> {
+        let id = self.send(key)?;
+        loop {
+            let frame = self.recv()?;
+            if frame.id == id {
+                return Ok(frame);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multiplexed client storm
+// ---------------------------------------------------------------------------
+
+/// Load-generator parameters.
+#[derive(Clone, Debug)]
+pub struct StormConfig {
+    /// Concurrent connections (all open simultaneously).
+    pub conns: usize,
+    /// Requests issued per connection.
+    pub requests_per_conn: usize,
+    /// Pipelined in-flight requests per connection.
+    pub window: usize,
+    /// Key space for the skewed (80%-hot by default) key stream.
+    pub key_space: u64,
+    pub hot_pct: u32,
+    pub seed: u64,
+    /// Abort (counting unfinished work as errors) if no response arrives
+    /// for this long — a wedged server fails fast instead of hanging.
+    pub progress_timeout: Duration,
+}
+
+impl Default for StormConfig {
+    fn default() -> Self {
+        StormConfig {
+            conns: 100,
+            requests_per_conn: 10,
+            window: 4,
+            key_space: 10_000,
+            hot_pct: 80,
+            seed: 42,
+            progress_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What the storm observed. `errors` counts everything that kept a request
+/// from a `Status::Ok` response: connect failures, mid-flight closes,
+/// protocol violations, `BadRequest`/`Dropped` statuses, and a progress
+/// timeout. A healthy server yields `errors == 0` and
+/// `received == conns * requests_per_conn`.
+#[derive(Clone, Debug, Default)]
+pub struct StormReport {
+    pub conns: usize,
+    pub sent: u64,
+    pub received: u64,
+    pub errors: u64,
+    /// Drive-phase wall time (connect phase excluded).
+    pub wall_ns: u64,
+    /// Client-observed encode-to-decode latency per OK response, split by
+    /// the response's cache-hit flag (the `MuxReport` shape).
+    pub hit_ns: Vec<u64>,
+    pub miss_ns: Vec<u64>,
+}
+
+impl StormReport {
+    pub fn reqs_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.received as f64 / (self.wall_ns as f64 / 1e9)
+    }
+
+    /// All latencies (hit + miss) in ns, sorted ascending, as f64 for the
+    /// percentile helpers.
+    pub fn sorted_latencies(&self) -> Vec<f64> {
+        let mut all: Vec<f64> = self
+            .hit_ns
+            .iter()
+            .chain(self.miss_ns.iter())
+            .map(|&n| n as f64)
+            .collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        all
+    }
+
+    /// (p50, p99) latency in ns over all responses; 0.0 when none completed.
+    pub fn latency_percentiles(&self) -> (f64, f64) {
+        let sorted = self.sorted_latencies();
+        if sorted.is_empty() {
+            return (0.0, 0.0);
+        }
+        (
+            crate::util::stats::percentile_sorted(&sorted, 50.0),
+            crate::util::stats::percentile_sorted(&sorted, 99.0),
+        )
+    }
+}
+
+struct StormConn {
+    stream: TcpStream,
+    fb: FrameBuf,
+    /// Encoded request bytes not yet accepted by the kernel.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// `(request id, encode timestamp)` — window-sized, linear scan is fine.
+    inflight: Vec<(u64, u64)>,
+    /// Requests not yet encoded.
+    remaining: usize,
+    done: bool,
+}
+
+impl StormConn {
+    /// Keep the pipeline full: encode fresh requests up to the window.
+    fn refill(&mut self, idx: usize, cfg: &StormConfig, rng: &mut Xoshiro256, sent: &mut u64) {
+        while self.remaining > 0 && self.inflight.len() < cfg.window {
+            self.remaining -= 1;
+            let seq = (cfg.requests_per_conn - self.remaining) as u64;
+            let id = ((idx as u64) << 32) | seq;
+            let key = rng.skewed_key(cfg.key_space, cfg.hot_pct);
+            proto::encode_request(&mut self.out, id, key);
+            self.inflight.push((id, monotonic_ns()));
+            *sent += 1;
+        }
+    }
+
+    fn take_inflight(&mut self, id: u64) -> Option<u64> {
+        let pos = self.inflight.iter().position(|&(i, _)| i == id)?;
+        Some(self.inflight.swap_remove(pos).1)
+    }
+}
+
+/// Drive `cfg.conns` simultaneous multiplexed connections against `addr`
+/// until every connection has sent and settled its quota (or progress
+/// stalls). Single-threaded; see the module docs for why.
+pub fn storm(addr: SocketAddr, cfg: &StormConfig) -> StormReport {
+    raise_nofile_limit();
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let mut report = StormReport { conns: cfg.conns, ..StormReport::default() };
+    let mut conns: Vec<StormConn> = Vec::with_capacity(cfg.conns);
+
+    // Connect phase: blocking connects (microseconds each on loopback, and
+    // the server's reactor keeps the accept queue drained), brief retries
+    // for transient backlog overflow.
+    for _ in 0..cfg.conns {
+        let mut attempt = 0;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break Some(s),
+                Err(_) if attempt < 3 => {
+                    attempt += 1;
+                    std::thread::sleep(Duration::from_millis(10 << attempt));
+                }
+                Err(_) => break None,
+            }
+        };
+        let Some(stream) = stream else {
+            report.errors += cfg.requests_per_conn as u64;
+            continue;
+        };
+        let _ = stream.set_nodelay(true);
+        if stream.set_nonblocking(true).is_err() {
+            report.errors += cfg.requests_per_conn as u64;
+            continue;
+        }
+        conns.push(StormConn {
+            stream,
+            fb: FrameBuf::for_responses(),
+            out: Vec::new(),
+            out_pos: 0,
+            inflight: Vec::new(),
+            remaining: cfg.requests_per_conn,
+            done: false,
+        });
+    }
+
+    // Prime every pipeline before the clock starts.
+    for (i, c) in conns.iter_mut().enumerate() {
+        c.refill(i, cfg, &mut rng, &mut report.sent);
+        // Zero-request storms (connection-count probes) finish immediately.
+        c.done = c.remaining == 0 && c.inflight.is_empty();
+    }
+
+    let t0 = Instant::now();
+    let mut last_progress = Instant::now();
+    let mut poller = Poller::new();
+    let mut order: Vec<usize> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut live = conns.iter().filter(|c| !c.done).count();
+
+    while live > 0 {
+        if last_progress.elapsed() >= cfg.progress_timeout {
+            // Wedged server (or dropped responses): fail fast.
+            for c in conns.iter_mut().filter(|c| !c.done) {
+                report.errors += (c.inflight.len() + c.remaining) as u64;
+                c.done = true;
+            }
+            break;
+        }
+
+        poller.clear();
+        order.clear();
+        for (i, c) in conns.iter().enumerate() {
+            if c.done {
+                continue;
+            }
+            let want_write = c.out_pos < c.out.len();
+            poller.push(fd_of(&c.stream), true, want_write);
+            order.push(i);
+        }
+        if poller.wait(Duration::from_millis(50)).is_err() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        for (slot, &i) in order.iter().enumerate() {
+            let ready = poller.ready(slot);
+            let c = &mut conns[i];
+            let mut failed = false;
+
+            if ready.writable && c.out_pos < c.out.len() {
+                loop {
+                    match c.stream.write(&c.out[c.out_pos..]) {
+                        Ok(0) => {
+                            failed = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            c.out_pos += n;
+                            if c.out_pos == c.out.len() {
+                                c.out.clear();
+                                c.out_pos = 0;
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+
+            if !failed && ready.readable {
+                'read: loop {
+                    match c.stream.read(&mut scratch) {
+                        Ok(0) => {
+                            failed = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            c.fb.extend(&scratch[..n]);
+                            loop {
+                                let parsed = match c.fb.next_frame() {
+                                    Ok(Some(body)) => Some(proto::parse_response(body)),
+                                    Ok(None) => None,
+                                    Err(e) => Some(Err(e)),
+                                };
+                                match parsed {
+                                    Some(Ok(frame)) => {
+                                        let t_enc = c.take_inflight(frame.id);
+                                        match (frame.status, t_enc) {
+                                            (Status::Ok, Some(t)) => {
+                                                report.received += 1;
+                                                let lat = monotonic_ns().saturating_sub(t);
+                                                if frame.hit {
+                                                    report.hit_ns.push(lat);
+                                                } else {
+                                                    report.miss_ns.push(lat);
+                                                }
+                                                last_progress = Instant::now();
+                                            }
+                                            _ => report.errors += 1,
+                                        }
+                                    }
+                                    Some(Err(_)) => {
+                                        report.errors += 1;
+                                        failed = true;
+                                        break 'read;
+                                    }
+                                    None => break,
+                                }
+                            }
+                            c.refill(i, cfg, &mut rng, &mut report.sent);
+                            if n < scratch.len() {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+
+            if failed {
+                report.errors += (c.inflight.len() + c.remaining) as u64;
+                c.done = true;
+                live -= 1;
+            } else if c.remaining == 0 && c.inflight.is_empty() && c.out_pos == c.out.len() {
+                c.done = true;
+                live -= 1;
+            }
+        }
+    }
+
+    report.wall_ns = t0.elapsed().as_nanos() as u64;
+    report
+}

@@ -1,0 +1,293 @@
+//! `frontend::net` — a real TCP serving front over the completion slots.
+//!
+//! The serving claim finally crosses a socket: a [`NetServer`] binds a
+//! listener, a single reactor thread ([`reactor`]) drives every nonblocking
+//! connection through the tiny length-prefixed protocol ([`proto`]), and
+//! each decoded request becomes one `Router::submit_async` bridge task on a
+//! small internal executor. When the shard worker (or batcher) fulfils the
+//! completion slot, the bridge task encodes the response, enqueues it on
+//! the owning connection's outbox, and wakes the reactor — the shard
+//! workers, executor, and mux layers are untouched, exactly the seam
+//! DESIGN.md §6 planned and §8 documents.
+//!
+//! Layering per request:
+//!
+//! ```text
+//! socket bytes ──reactor──▶ FrameBuf ──parse──▶ submit_async ─┐
+//!                                                   (executor task awaits)
+//! socket bytes ◀──reactor◀── outbox ◀── NetShared::complete ◀─┘
+//! ```
+//!
+//! Per-listener metrics (accepted/active/closed connections, protocol
+//! errors, bytes in/out, idle evictions) aggregate process-wide through
+//! [`net_stats`] and ride [`Router::metrics`]
+//! (`crate::coordinator::metrics::MetricsSnapshot`) like the magazine
+//! counters do — set once post-rollup, never summed per shard.
+
+pub mod client;
+pub(crate) mod poll;
+pub mod proto;
+mod reactor;
+
+pub use poll::raise_nofile_limit;
+
+use crate::coordinator::Router;
+use crate::reclaim::Reclaimer;
+use crate::runtime::exec::Executor;
+use poll::{NetWaker, WakePair};
+use reactor::Reactor;
+use std::io;
+use std::net::{Ipv4Addr, SocketAddr, SocketAddrV4, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::Duration;
+
+/// Listener configuration (defaults favor tests/benches: ephemeral
+/// loopback port, 8 bridge-executor threads — the E18 budget).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`NetServer::local_addr`]).
+    pub listen: SocketAddr,
+    /// Threads in the internal completion-bridge executor.
+    pub exec_threads: usize,
+    /// Accept gate: above this many live connections the listener is
+    /// deregistered until some close (backlog, then kernel, absorb the rest).
+    pub max_connections: usize,
+    /// Per-connection cap on decoded-but-unanswered requests; at the cap
+    /// the reactor stops reading that socket (TCP back-pressure).
+    pub max_pending_per_conn: usize,
+    /// Per-connection cap on buffered response bytes; same pause behavior.
+    /// In-flight completions may transiently overshoot — responses are
+    /// never dropped.
+    pub outbox_cap_bytes: usize,
+    /// Connections with no successful read/write for this long are evicted.
+    pub idle_timeout: Duration,
+    /// Graceful-shutdown bound: how long to wait for in-flight completions
+    /// to drain and outboxes to flush before closing anyway.
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: SocketAddr::V4(SocketAddrV4::new(Ipv4Addr::LOCALHOST, 0)),
+            exec_threads: 8,
+            max_connections: 65_536,
+            max_pending_per_conn: 128,
+            outbox_cap_bytes: 256 * 1024,
+            idle_timeout: Duration::from_secs(60),
+            drain_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Live per-listener counters (atomics shared between the reactor and
+/// metric readers).
+#[derive(Default)]
+pub struct NetMetrics {
+    pub accepted: AtomicU64,
+    /// Gauge: currently-open connections.
+    pub active: AtomicU64,
+    pub closed: AtomicU64,
+    pub protocol_errors: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub idle_evicted: AtomicU64,
+}
+
+/// Point-in-time copy of [`NetMetrics`], also the process-wide aggregate
+/// [`net_stats`] returns.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub accepted: u64,
+    pub active: u64,
+    pub closed: u64,
+    pub protocol_errors: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub idle_evicted: u64,
+}
+
+impl NetMetrics {
+    pub fn snapshot(&self) -> NetStats {
+        NetStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            closed: self.closed.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            idle_evicted: self.idle_evicted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl NetStats {
+    fn add(&mut self, other: NetStats) {
+        self.accepted += other.accepted;
+        self.active += other.active;
+        self.closed += other.closed;
+        self.protocol_errors += other.protocol_errors;
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+        self.idle_evicted += other.idle_evicted;
+    }
+}
+
+/// Every live listener's metrics, for the process-wide rollup. `Weak` so a
+/// dropped server unregisters itself implicitly (pruned on read).
+fn registry() -> &'static Mutex<Vec<Weak<NetMetrics>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Weak<NetMetrics>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Process-wide listener totals across all live [`NetServer`]s — consumed
+/// once per [`Router::metrics`] rollup (the `magazine_stats` pattern).
+pub fn net_stats() -> NetStats {
+    let mut total = NetStats::default();
+    let mut reg = registry().lock().unwrap();
+    reg.retain(|w| match w.upgrade() {
+        Some(m) => {
+            total.add(m.snapshot());
+            true
+        }
+        None => false,
+    });
+    total
+}
+
+/// Reactor → router bridge: `(connection id, request id, key)`.
+pub(crate) type Submit = Box<dyn Fn(u64, u64, u32) + Send>;
+
+/// State shared between the reactor thread and the bridge tasks.
+pub(crate) struct NetShared {
+    /// Encoded response frames awaiting routing: `(connection id, frame)`.
+    completed: Mutex<Vec<(u64, Vec<u8>)>>,
+    /// Requests submitted but not yet pushed to `completed`. Incremented by
+    /// the reactor at submit; decremented by [`complete`](Self::complete)
+    /// *after* the push, so `pending == 0` implies every frame is visible.
+    pub(crate) pending: AtomicU64,
+    pub(crate) shutdown: AtomicBool,
+    pub(crate) metrics: Arc<NetMetrics>,
+    waker: NetWaker,
+}
+
+impl NetShared {
+    /// Called by a bridge task when its completion slot fulfils.
+    pub(crate) fn complete(&self, conn: u64, frame: Vec<u8>) {
+        self.completed.lock().unwrap().push((conn, frame));
+        self.pending.fetch_sub(1, Ordering::SeqCst);
+        self.waker.wake();
+    }
+
+    pub(crate) fn take_completed(&self, into: &mut Vec<(u64, Vec<u8>)>) {
+        let mut q = self.completed.lock().unwrap();
+        into.append(&mut q);
+    }
+
+    pub(crate) fn completed_empty(&self) -> bool {
+        self.completed.lock().unwrap().is_empty()
+    }
+
+    fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.waker.wake();
+    }
+}
+
+/// A live TCP serving front over one [`Router`].
+///
+/// Owns the reactor thread and the completion-bridge executor; holds the
+/// router alive (via the submit closure) until shutdown. Dropping the
+/// server shuts it down gracefully: accepts stop, in-flight completions
+/// drain (bounded by [`NetConfig::drain_timeout`]), outboxes flush, then
+/// every connection and the listener close and both thread pools join.
+pub struct NetServer {
+    shared: Arc<NetShared>,
+    reactor: Option<std::thread::JoinHandle<()>>,
+    exec: Option<Arc<Executor>>,
+    local_addr: SocketAddr,
+    metrics: Arc<NetMetrics>,
+}
+
+impl NetServer {
+    /// Bind `cfg.listen` and start serving `router`.
+    pub fn start<R: Reclaimer>(router: Arc<Router<R>>, cfg: NetConfig) -> io::Result<NetServer> {
+        raise_nofile_limit();
+        let listener = TcpListener::bind(cfg.listen)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let wake = WakePair::new()?;
+        let metrics = Arc::new(NetMetrics::default());
+        registry().lock().unwrap().push(Arc::downgrade(&metrics));
+        let shared = Arc::new(NetShared {
+            completed: Mutex::new(Vec::new()),
+            pending: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            metrics: metrics.clone(),
+            waker: wake.waker(),
+        });
+        let exec = Arc::new(Executor::new(cfg.exec_threads));
+        let submit: Submit = {
+            let shared = shared.clone();
+            let exec = exec.clone();
+            Box::new(move |conn, rid, key| {
+                let fut = router.submit_async(key);
+                let shared = shared.clone();
+                // Fire-and-forget: dropping the JoinHandle detaches. The
+                // task is the completion slot's waiter; fulfilment (or
+                // router shutdown) resolves the future, the task encodes
+                // and hands the frame back to the reactor.
+                drop(exec.spawn(async move {
+                    let mut frame = Vec::new();
+                    match fut.await {
+                        Ok(resp) => proto::encode_response(&mut frame, rid, &resp),
+                        Err(_) => proto::encode_error(&mut frame, rid, proto::Status::Dropped),
+                    }
+                    shared.complete(conn, frame);
+                }));
+            })
+        };
+        let reactor = Reactor::new(listener, wake, shared.clone(), cfg, submit);
+        let handle = std::thread::Builder::new()
+            .name("emr-net-reactor".into())
+            .spawn(move || reactor.run())?;
+        Ok(NetServer {
+            shared,
+            reactor: Some(handle),
+            exec: Some(exec),
+            local_addr,
+            metrics,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// This listener's counters (process-wide totals: [`net_stats`]).
+    pub fn metrics(&self) -> NetStats {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown; idempotent, also run by `Drop`. Blocks until the
+    /// reactor has drained (or timed out) and both thread pools joined.
+    pub fn shutdown(&mut self) {
+        self.shared.request_shutdown();
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+        // The executor drops last: any bridge task that outlived the drain
+        // deadline is cancelled here (dropping a SubmitFuture mid-flight is
+        // safe — DESIGN.md §6), and its pool threads join.
+        self.exec = None;
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

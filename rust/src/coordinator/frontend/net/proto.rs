@@ -1,0 +1,558 @@
+//! Wire protocol for the TCP serving front: tiny length-prefixed frames.
+//!
+//! Both directions share one shape — a little-endian `u32` body length
+//! followed by the body — so one incremental [`FrameBuf`] serves client and
+//! server alike; only the body parsers differ.
+//!
+//! ```text
+//! request  body:  u64 request-id | key bytes (1..=4, LE, zero-extended u32)
+//! response body:  u64 request-id | u8 status | payload
+//!                   status 0 (Ok):  u8 hit | DIM × f32 (LE)
+//!                   status 1 (BadRequest), 2 (Dropped): empty payload
+//! ```
+//!
+//! Design points (DESIGN.md §8):
+//! - **Partial reads are the norm.** [`FrameBuf::extend`] buffers whatever a
+//!   nonblocking read produced; [`FrameBuf::next_frame`] yields complete
+//!   bodies as borrowed slices, or `None` until more bytes arrive. No frame
+//!   is ever allocated per-message — the buffer compacts in place.
+//! - **Malformed input never kills the process.** A body longer than the
+//!   direction's maximum is a [`ProtoError::Oversized`] *before* any
+//!   buffering of the body, so a hostile 4 GiB length prefix costs four
+//!   bytes, not an allocation. The connection is closed; the listener and
+//!   every other connection are untouched.
+//! - **Answerable vs fatal.** A zero-length key is a well-formed frame with
+//!   a recoverable semantic error: it parses to [`ParsedRequest::Invalid`]
+//!   and earns a [`Status::BadRequest`] response on the same connection.
+//!   A body too short to carry a request id is fatal — there is no id to
+//!   attach an error to — and closes the connection.
+
+use crate::coordinator::{Payload, Response};
+use crate::runtime::DIM;
+use std::fmt;
+
+/// Bytes of length prefix framing every message.
+pub const LEN_PREFIX: usize = 4;
+/// Bytes of request id leading every body.
+pub const ID_BYTES: usize = 8;
+/// Longest key encoding accepted (a little-endian `u32`, possibly trimmed).
+pub const MAX_KEY_BYTES: usize = 4;
+/// Largest request body the server will buffer.
+pub const MAX_REQ_BODY: usize = ID_BYTES + MAX_KEY_BYTES;
+/// Body length of an OK response: id, status, hit flag, DIM f32 values.
+pub const RESP_OK_BODY: usize = ID_BYTES + 1 + 1 + DIM * 4;
+/// Largest response body a client should accept.
+pub const MAX_RESP_BODY: usize = RESP_OK_BODY;
+
+/// Response status byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Request served; payload carries the hit flag and data.
+    Ok,
+    /// Well-formed frame, unusable request (e.g. zero-length key). The
+    /// connection stays open.
+    BadRequest,
+    /// The server dropped the request (router shutting down); the
+    /// connection stays open and may retry.
+    Dropped,
+}
+
+impl Status {
+    fn to_byte(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::BadRequest => 1,
+            Status::Dropped => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Option<Status> {
+        match b {
+            0 => Some(Status::Ok),
+            1 => Some(Status::BadRequest),
+            2 => Some(Status::Dropped),
+            _ => None,
+        }
+    }
+}
+
+/// A fatal framing error: the peer is not speaking the protocol and the
+/// connection should be closed. Never panics, never kills the listener.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Declared body length exceeds the direction's maximum.
+    Oversized { len: usize, max: usize },
+    /// Body too short for the fixed leading fields (no request id to
+    /// answer, so the error is unanswerable).
+    Truncated { len: usize },
+    /// Unknown status byte in a response body.
+    BadStatus { byte: u8 },
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            ProtoError::Oversized { len, max } => {
+                write!(f, "frame body {len} B exceeds max {max} B")
+            }
+            ProtoError::Truncated { len } => {
+                write!(f, "frame body {len} B too short for header")
+            }
+            ProtoError::BadStatus { byte } => write!(f, "unknown status byte {byte:#04x}"),
+        }
+    }
+}
+
+/// A decoded request body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParsedRequest {
+    /// Submit `key`, answer with `id`.
+    Valid { id: u64, key: u32 },
+    /// Answerable semantic error (zero-length key): reply
+    /// [`Status::BadRequest`] to `id`, keep the connection.
+    Invalid { id: u64 },
+}
+
+/// A decoded response body (client side).
+#[derive(Clone, Debug)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub status: Status,
+    /// Cache hit flag (only meaningful for [`Status::Ok`]).
+    pub hit: bool,
+    /// Payload data for [`Status::Ok`]; `None` for error statuses.
+    pub data: Option<Box<Payload>>,
+}
+
+// ---------------------------------------------------------------------------
+// Encoders
+// ---------------------------------------------------------------------------
+
+/// Append one encoded request frame to `buf`. The key is trimmed to its
+/// shortest little-endian encoding (at least one byte), exercising the
+/// variable-width path the decoder must accept.
+pub fn encode_request(buf: &mut Vec<u8>, id: u64, key: u32) {
+    let kb = key.to_le_bytes();
+    let klen = (4 - (key.leading_zeros() as usize / 8)).max(1);
+    buf.extend_from_slice(&((ID_BYTES + klen) as u32).to_le_bytes());
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.extend_from_slice(&kb[..klen]);
+}
+
+/// Append one encoded OK response frame to `buf`.
+pub fn encode_response(buf: &mut Vec<u8>, id: u64, resp: &Response) {
+    buf.reserve(LEN_PREFIX + RESP_OK_BODY);
+    buf.extend_from_slice(&(RESP_OK_BODY as u32).to_le_bytes());
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.push(Status::Ok.to_byte());
+    buf.push(resp.hit as u8);
+    for v in resp.data.iter() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Append one encoded error response frame (empty payload) to `buf`.
+pub fn encode_error(buf: &mut Vec<u8>, id: u64, status: Status) {
+    debug_assert!(status != Status::Ok, "error frames carry no payload");
+    buf.extend_from_slice(&((ID_BYTES + 1) as u32).to_le_bytes());
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.push(status.to_byte());
+}
+
+// ---------------------------------------------------------------------------
+// Incremental framer
+// ---------------------------------------------------------------------------
+
+/// Incremental, allocation-light frame accumulator.
+///
+/// Feed it raw socket bytes with [`extend`](FrameBuf::extend); pull complete
+/// bodies with [`next_frame`](FrameBuf::next_frame). Frames split across
+/// arbitrarily many reads, or coalesced many-per-read, decode identically
+/// (the round-trip property `fuzz_rechunked_roundtrip` asserts). The
+/// internal buffer grows to the high-water mark once and is reused;
+/// consumed prefixes are dropped by pointer bump and compacted lazily.
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf`.
+    pos: usize,
+    /// Largest acceptable body; longer declared lengths are fatal.
+    max_body: usize,
+}
+
+/// Compact once the dead prefix crosses this many bytes (keeps `memmove`
+/// traffic amortized while bounding buffer growth).
+const COMPACT_AT: usize = 16 * 1024;
+
+impl FrameBuf {
+    /// A framer for request bodies (server side).
+    pub fn for_requests() -> FrameBuf {
+        FrameBuf::with_max_body(MAX_REQ_BODY)
+    }
+
+    /// A framer for response bodies (client side).
+    pub fn for_responses() -> FrameBuf {
+        FrameBuf::with_max_body(MAX_RESP_BODY)
+    }
+
+    /// A framer accepting bodies up to `max_body` bytes.
+    pub fn with_max_body(max_body: usize) -> FrameBuf {
+        FrameBuf { buf: Vec::new(), pos: 0, max_body }
+    }
+
+    /// Buffer `bytes` (one nonblocking read's worth, any size incl. zero).
+    pub fn extend(&mut self, bytes: &[u8]) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= COMPACT_AT {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Unconsumed bytes currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Next complete body, if one is buffered.
+    ///
+    /// * `Ok(Some(body))` — a complete frame body; consumed from the buffer.
+    /// * `Ok(None)` — need more bytes.
+    /// * `Err(_)` — the declared length is unacceptable; the caller should
+    ///   drop the connection (the framer is poisoned at the bad prefix).
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>, ProtoError> {
+        let avail = self.buf.len() - self.pos;
+        if avail < LEN_PREFIX {
+            return Ok(None);
+        }
+        let p = self.pos;
+        let len =
+            u32::from_le_bytes([self.buf[p], self.buf[p + 1], self.buf[p + 2], self.buf[p + 3]])
+                as usize;
+        if len > self.max_body {
+            return Err(ProtoError::Oversized { len, max: self.max_body });
+        }
+        if avail < LEN_PREFIX + len {
+            return Ok(None);
+        }
+        self.pos = p + LEN_PREFIX + len;
+        Ok(Some(&self.buf[p + LEN_PREFIX..p + LEN_PREFIX + len]))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Body parsers
+// ---------------------------------------------------------------------------
+
+/// Parse a request body produced by [`FrameBuf::next_frame`].
+pub fn parse_request(body: &[u8]) -> Result<ParsedRequest, ProtoError> {
+    if body.len() < ID_BYTES {
+        return Err(ProtoError::Truncated { len: body.len() });
+    }
+    let id = u64::from_le_bytes(body[..ID_BYTES].try_into().unwrap());
+    let key_bytes = &body[ID_BYTES..];
+    if key_bytes.is_empty() {
+        return Ok(ParsedRequest::Invalid { id });
+    }
+    if key_bytes.len() > MAX_KEY_BYTES {
+        // Unreachable behind `for_requests()` (the framer bounds bodies at
+        // MAX_REQ_BODY) but kept for direct callers.
+        return Err(ProtoError::Oversized {
+            len: body.len(),
+            max: MAX_REQ_BODY,
+        });
+    }
+    let mut kb = [0u8; 4];
+    kb[..key_bytes.len()].copy_from_slice(key_bytes);
+    Ok(ParsedRequest::Valid { id, key: u32::from_le_bytes(kb) })
+}
+
+/// Parse a response body produced by [`FrameBuf::next_frame`] (client side).
+pub fn parse_response(body: &[u8]) -> Result<ResponseFrame, ProtoError> {
+    if body.len() < ID_BYTES + 1 {
+        return Err(ProtoError::Truncated { len: body.len() });
+    }
+    let id = u64::from_le_bytes(body[..ID_BYTES].try_into().unwrap());
+    let status =
+        Status::from_byte(body[ID_BYTES]).ok_or(ProtoError::BadStatus { byte: body[ID_BYTES] })?;
+    if status != Status::Ok {
+        return Ok(ResponseFrame { id, status, hit: false, data: None });
+    }
+    if body.len() != RESP_OK_BODY {
+        return Err(ProtoError::Truncated { len: body.len() });
+    }
+    let hit = body[ID_BYTES + 1] != 0;
+    let mut data: Box<Payload> = Box::new([0.0; DIM]);
+    for (slot, chunk) in data.iter_mut().zip(body[ID_BYTES + 2..].chunks_exact(4)) {
+        *slot = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(ResponseFrame { id, status, hit, data: Some(data) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn ok_response(seed: f32) -> Response {
+        let mut data = Box::new([0.0f32; DIM]);
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = seed + i as f32;
+        }
+        Response { data, hit: true, latency_ns: 7 }
+    }
+
+    fn drain_requests(fb: &mut FrameBuf) -> Vec<ParsedRequest> {
+        let mut out = Vec::new();
+        while let Some(body) = fb.next_frame().expect("well-formed stream") {
+            out.push(parse_request(body).expect("parseable body"));
+        }
+        out
+    }
+
+    #[test]
+    fn request_roundtrip_one_frame() {
+        let mut bytes = Vec::new();
+        encode_request(&mut bytes, 42, 0xdead_beef);
+        let mut fb = FrameBuf::for_requests();
+        fb.extend(&bytes);
+        assert_eq!(
+            drain_requests(&mut fb),
+            vec![ParsedRequest::Valid { id: 42, key: 0xdead_beef }]
+        );
+        assert_eq!(fb.buffered(), 0);
+    }
+
+    #[test]
+    fn short_keys_use_trimmed_encoding_and_roundtrip() {
+        // key 5 encodes in 1 byte, key 0 still needs 1 byte.
+        for key in [0u32, 5, 0x100, 0x10000, u32::MAX] {
+            let mut bytes = Vec::new();
+            encode_request(&mut bytes, 9, key);
+            let expected_len = LEN_PREFIX + ID_BYTES + ((32 - key.leading_zeros() as usize).div_ceil(8)).max(1);
+            assert_eq!(bytes.len(), expected_len, "key {key:#x}");
+            let mut fb = FrameBuf::for_requests();
+            fb.extend(&bytes);
+            assert_eq!(drain_requests(&mut fb), vec![ParsedRequest::Valid { id: 9, key }]);
+        }
+    }
+
+    #[test]
+    fn split_frame_decodes_across_byte_at_a_time_reads() {
+        let mut bytes = Vec::new();
+        encode_request(&mut bytes, 7, 123);
+        let mut fb = FrameBuf::for_requests();
+        for (i, b) in bytes.iter().enumerate() {
+            // Nothing decodes before the last byte lands.
+            if i + 1 < bytes.len() {
+                assert!(fb.next_frame().unwrap().is_none());
+            }
+            fb.extend(std::slice::from_ref(b));
+        }
+        assert_eq!(drain_requests(&mut fb), vec![ParsedRequest::Valid { id: 7, key: 123 }]);
+    }
+
+    #[test]
+    fn coalesced_frames_decode_from_one_read() {
+        let mut bytes = Vec::new();
+        for id in 0..50u64 {
+            encode_request(&mut bytes, id, id as u32 * 3);
+        }
+        let mut fb = FrameBuf::for_requests();
+        fb.extend(&bytes);
+        let got = drain_requests(&mut fb);
+        assert_eq!(got.len(), 50);
+        for (id, req) in got.into_iter().enumerate() {
+            assert_eq!(req, ParsedRequest::Valid { id: id as u64, key: id as u32 * 3 });
+        }
+    }
+
+    #[test]
+    fn zero_length_key_is_answerable_not_fatal() {
+        // Hand-build: len=8 (id only, no key bytes).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(ID_BYTES as u32).to_le_bytes());
+        bytes.extend_from_slice(&77u64.to_le_bytes());
+        let mut fb = FrameBuf::for_requests();
+        fb.extend(&bytes);
+        assert_eq!(drain_requests(&mut fb), vec![ParsedRequest::Invalid { id: 77 }]);
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_before_buffering_body() {
+        // Declared length of 4 GiB-ish: the framer must error on the four
+        // prefix bytes alone, without waiting for (or allocating) the body.
+        let mut fb = FrameBuf::for_requests();
+        fb.extend(&u32::MAX.to_le_bytes());
+        match fb.next_frame() {
+            Err(ProtoError::Oversized { len, max }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(max, MAX_REQ_BODY);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_by_one_is_rejected_max_is_accepted() {
+        let mut fb = FrameBuf::for_requests();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&((MAX_REQ_BODY + 1) as u32).to_le_bytes());
+        bytes.extend_from_slice(&[0u8; MAX_REQ_BODY + 1]);
+        fb.extend(&bytes);
+        assert!(matches!(fb.next_frame(), Err(ProtoError::Oversized { .. })));
+
+        let mut fb = FrameBuf::for_requests();
+        let mut bytes = Vec::new();
+        encode_request(&mut bytes, 1, u32::MAX); // max-width key = max body
+        assert_eq!(bytes.len(), LEN_PREFIX + MAX_REQ_BODY);
+        fb.extend(&bytes);
+        assert_eq!(drain_requests(&mut fb).len(), 1);
+    }
+
+    #[test]
+    fn truncated_body_has_no_answerable_id() {
+        // len=4: not enough for the u64 id — fatal.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&4u32.to_le_bytes());
+        bytes.extend_from_slice(&[1, 2, 3, 4]);
+        let mut fb = FrameBuf::for_requests();
+        fb.extend(&bytes);
+        let body = fb.next_frame().unwrap().expect("frame complete");
+        assert_eq!(parse_request(body), Err(ProtoError::Truncated { len: 4 }));
+    }
+
+    #[test]
+    fn response_roundtrip_ok_and_error() {
+        let resp = ok_response(0.5);
+        let mut bytes = Vec::new();
+        encode_response(&mut bytes, 31, &resp);
+        encode_error(&mut bytes, 32, Status::BadRequest);
+        encode_error(&mut bytes, 33, Status::Dropped);
+
+        let mut fb = FrameBuf::for_responses();
+        fb.extend(&bytes);
+
+        let f1 = parse_response(fb.next_frame().unwrap().unwrap()).unwrap();
+        assert_eq!(f1.id, 31);
+        assert_eq!(f1.status, Status::Ok);
+        assert!(f1.hit);
+        assert_eq!(f1.data.as_deref().unwrap()[..], resp.data[..]);
+
+        let f2 = parse_response(fb.next_frame().unwrap().unwrap()).unwrap();
+        assert_eq!((f2.id, f2.status), (32, Status::BadRequest));
+        assert!(f2.data.is_none());
+
+        let f3 = parse_response(fb.next_frame().unwrap().unwrap()).unwrap();
+        assert_eq!((f3.id, f3.status), (33, Status::Dropped));
+        assert!(fb.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn response_bad_status_byte_is_fatal() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&((ID_BYTES + 1) as u32).to_le_bytes());
+        bytes.extend_from_slice(&5u64.to_le_bytes());
+        bytes.push(0xEE);
+        let mut fb = FrameBuf::for_responses();
+        fb.extend(&bytes);
+        let body = fb.next_frame().unwrap().unwrap();
+        assert!(matches!(parse_response(body), Err(ProtoError::BadStatus { byte: 0xEE })));
+    }
+
+    #[test]
+    fn buffer_compacts_and_is_reused_across_frames() {
+        let mut fb = FrameBuf::for_requests();
+        let mut bytes = Vec::new();
+        encode_request(&mut bytes, 1, 2);
+        // Enough traffic to trip the COMPACT_AT path several times over.
+        for round in 0..(COMPACT_AT / bytes.len()) * 3 {
+            fb.extend(&bytes);
+            let got = drain_requests(&mut fb);
+            assert_eq!(got, vec![ParsedRequest::Valid { id: 1, key: 2 }], "round {round}");
+        }
+        // Fully-consumed buffer resets to the front: capacity stays bounded
+        // by one frame's worth, not the cumulative stream.
+        assert!(fb.buf.capacity() < COMPACT_AT, "capacity {}", fb.buf.capacity());
+    }
+
+    /// The satellite fuzz test: any re-chunking of an encoded stream decodes
+    /// to the same frame sequence. Randomized chunk boundaries via the
+    /// crate's own deterministic RNG — failures reproduce from the seed.
+    #[test]
+    fn fuzz_rechunked_roundtrip() {
+        let mut rng = Xoshiro256::new(0x9e37_79b9_7f4a_7c15);
+        for round in 0..50 {
+            // A mixed stream of valid, zero-key and error-free frames.
+            let mut want = Vec::new();
+            let mut bytes = Vec::new();
+            let n = 1 + rng.below(40) as usize;
+            for _ in 0..n {
+                let id = rng.below(u64::MAX);
+                if rng.below(10) == 0 {
+                    bytes.extend_from_slice(&(ID_BYTES as u32).to_le_bytes());
+                    bytes.extend_from_slice(&id.to_le_bytes());
+                    want.push(ParsedRequest::Invalid { id });
+                } else {
+                    let key = (rng.below(u32::MAX as u64 + 1)) as u32;
+                    encode_request(&mut bytes, id, key);
+                    want.push(ParsedRequest::Valid { id, key });
+                }
+            }
+
+            // Feed in random chunks (including empty ones) and decode as we go.
+            let mut fb = FrameBuf::for_requests();
+            let mut got = Vec::new();
+            let mut off = 0;
+            while off < bytes.len() {
+                let take = (rng.below(17) as usize).min(bytes.len() - off);
+                fb.extend(&bytes[off..off + take]);
+                off += take;
+                got.extend(drain_requests(&mut fb));
+            }
+            assert_eq!(got, want, "round {round}");
+            assert_eq!(fb.buffered(), 0, "round {round}");
+        }
+    }
+
+    /// Response frames survive re-chunking too (the client-side framer).
+    #[test]
+    fn fuzz_rechunked_response_roundtrip() {
+        let mut rng = Xoshiro256::new(42);
+        let mut bytes = Vec::new();
+        let mut want = Vec::new();
+        for id in 0..20u64 {
+            if rng.below(4) == 0 {
+                encode_error(&mut bytes, id, Status::Dropped);
+                want.push((id, Status::Dropped, None));
+            } else {
+                let resp = ok_response(id as f32);
+                encode_response(&mut bytes, id, &resp);
+                want.push((id, Status::Ok, Some(resp.data)));
+            }
+        }
+        let mut fb = FrameBuf::for_responses();
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < bytes.len() {
+            let take = (1 + rng.below(700) as usize).min(bytes.len() - off);
+            fb.extend(&bytes[off..off + take]);
+            off += take;
+            while let Some(body) = fb.next_frame().expect("clean stream") {
+                got.push(parse_response(body).expect("parseable"));
+            }
+        }
+        assert_eq!(got.len(), want.len());
+        for (frame, (id, status, data)) in got.iter().zip(want.iter()) {
+            assert_eq!(frame.id, *id);
+            assert_eq!(frame.status, *status);
+            match (frame.data.as_ref(), data.as_ref()) {
+                (Some(a), Some(b)) => assert_eq!(a[..], b[..]),
+                (None, None) => {}
+                other => panic!("payload mismatch: {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,438 @@
+//! The readiness reactor: one thread driving every nonblocking socket.
+//!
+//! Single-threaded by design — all connection state (frame buffers,
+//! outboxes, pending counts) is owned by this thread and touched without
+//! synchronization. The only cross-thread surfaces are the
+//! [`NetShared`] completed-frame queue (bridge tasks push, reactor
+//! drains), the wake pair, and the listener metrics.
+//!
+//! Per iteration, in order:
+//! 1. drain the wake socket and re-arm it (*before* looking at any queue,
+//!    so a racing wake always lands a fresh datagram for the next poll);
+//! 2. route completed response frames into their connections' outboxes and
+//!    opportunistically flush them;
+//! 3. dispatch socket readiness: accept, read → decode → submit, write;
+//! 4. resume decoding on connections that were paused by back-pressure and
+//!    now have slack (their buffered bytes got no new readiness event);
+//! 5. evict idle connections.
+//!
+//! Back-pressure is two simple caps per connection: decoded-but-unanswered
+//! requests (`max_pending_per_conn`) and buffered response bytes
+//! (`outbox_cap_bytes`). A connection at either cap is *paused* — the
+//! reactor stops pulling bytes off its socket, the kernel receive buffer
+//! fills, and TCP flow control pushes back on the client. Nothing is ever
+//! dropped server-side; responses already in flight may overshoot the
+//! outbox cap transiently, which is why the cap gates reading, not writing.
+
+use super::poll::{fd_of, Poller, WakePair};
+use super::proto::{self, ParsedRequest, Status};
+use super::{NetConfig, NetShared, Submit};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering::{Relaxed, SeqCst};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Read chunk size; large enough that even a coalesced burst of pipelined
+/// requests lands in one syscall.
+const READ_CHUNK: usize = 64 * 1024;
+/// Max full read chunks per connection per iteration (fairness bound —
+/// level-triggered poll re-reports whatever is left).
+const READ_ROUNDS: usize = 4;
+/// Upper bound on the poll timeout (idle sweeps and drain checks run at
+/// least this often even with no socket activity).
+const TICK: Duration = Duration::from_millis(250);
+
+struct Conn {
+    stream: TcpStream,
+    fb: proto::FrameBuf,
+    /// Encoded-but-unsent response bytes (frames are contiguous).
+    outbox: VecDeque<u8>,
+    /// Requests submitted to the router, response not yet routed back.
+    pending: usize,
+    last_activity: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, now: Instant) -> Conn {
+        Conn {
+            stream,
+            fb: proto::FrameBuf::for_requests(),
+            outbox: VecDeque::new(),
+            pending: 0,
+            last_activity: now,
+        }
+    }
+
+    /// At a back-pressure cap: stop pulling bytes off this socket.
+    fn paused(&self, cfg: &NetConfig) -> bool {
+        self.pending >= cfg.max_pending_per_conn || self.outbox.len() >= cfg.outbox_cap_bytes
+    }
+
+    fn push_frame(&mut self, frame: &[u8]) {
+        self.outbox.extend(frame.iter().copied());
+    }
+}
+
+/// What a poll slot refers to this iteration.
+#[derive(Clone, Copy)]
+enum Source {
+    Wake,
+    Listener,
+    Conn(u64),
+}
+
+pub(crate) struct Reactor {
+    /// `None` once shutdown begins (stop accepting) — or if accepts hit a
+    /// persistent non-`WouldBlock` error.
+    listener: Option<TcpListener>,
+    wake: WakePair,
+    shared: Arc<NetShared>,
+    cfg: NetConfig,
+    submit: Submit,
+    conns: HashMap<u64, Conn>,
+    poller: Poller,
+    order: Vec<Source>,
+    next_id: u64,
+    scratch: Box<[u8]>,
+    completed: Vec<(u64, Vec<u8>)>,
+    ids: Vec<u64>,
+    draining: bool,
+    drain_deadline: Option<Instant>,
+    last_sweep: Instant,
+}
+
+impl Reactor {
+    pub fn new(
+        listener: TcpListener,
+        wake: WakePair,
+        shared: Arc<NetShared>,
+        cfg: NetConfig,
+        submit: Submit,
+    ) -> Reactor {
+        Reactor {
+            listener: Some(listener),
+            wake,
+            shared,
+            cfg,
+            submit,
+            conns: HashMap::new(),
+            poller: Poller::new(),
+            order: Vec::new(),
+            next_id: 1,
+            scratch: vec![0u8; READ_CHUNK].into_boxed_slice(),
+            completed: Vec::new(),
+            ids: Vec::new(),
+            draining: false,
+            drain_deadline: None,
+            last_sweep: Instant::now(),
+        }
+    }
+
+    pub fn run(mut self) {
+        loop {
+            if !self.draining && self.shared.shutdown.load(SeqCst) {
+                // Graceful shutdown, phase 1: stop accepting and stop
+                // reading, keep fulfilling. In-flight submissions drain
+                // through the completed queue into outboxes below.
+                self.draining = true;
+                self.listener = None;
+                self.drain_deadline = Some(Instant::now() + self.cfg.drain_timeout);
+            }
+            if self.draining {
+                let deadline_hit =
+                    self.drain_deadline.is_some_and(|dl| Instant::now() >= dl);
+                if deadline_hit || self.drained() {
+                    break;
+                }
+            }
+
+            self.build_interest();
+            let timeout = if self.draining {
+                Duration::from_millis(5)
+            } else {
+                TICK.min(self.cfg.idle_timeout / 2).max(Duration::from_millis(1))
+            };
+            if self.poller.wait(timeout).is_err() {
+                // poll(2) itself failing (e.g. fd exhaustion mid-rebuild) is
+                // not actionable per-connection; briefly yield and retry.
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            self.wake.drain();
+
+            self.route_completed();
+
+            for idx in 0..self.order.len() {
+                let r = self.poller.ready(idx);
+                match self.order[idx] {
+                    Source::Wake => {}
+                    Source::Listener => {
+                        if r.readable {
+                            self.accept_ready();
+                        }
+                    }
+                    Source::Conn(id) => {
+                        if r.readable || r.writable {
+                            self.service_conn(id, r.readable, r.writable);
+                        }
+                    }
+                }
+            }
+
+            self.pump_unpaused();
+            self.sweep_idle();
+        }
+        // Phase 2: everything drained (or the deadline expired) — close.
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            if let Some(c) = self.conns.remove(&id) {
+                self.close_conn(c, false);
+            }
+        }
+    }
+
+    /// All responses delivered and flushed: safe to close.
+    fn drained(&self) -> bool {
+        self.shared.pending.load(SeqCst) == 0
+            && self.shared.completed_empty()
+            && self.conns.values().all(|c| c.outbox.is_empty())
+    }
+
+    fn build_interest(&mut self) {
+        self.poller.clear();
+        self.order.clear();
+        self.poller.push(fd_of(&self.wake.rx), true, false);
+        self.order.push(Source::Wake);
+        if let Some(l) = &self.listener {
+            if self.conns.len() < self.cfg.max_connections {
+                self.poller.push(fd_of(l), true, false);
+                self.order.push(Source::Listener);
+            }
+        }
+        let draining = self.draining;
+        for (&id, c) in &self.conns {
+            // Paused/draining connections still register (events = hangup
+            // only) so a dead peer is noticed without reading it.
+            let read = !draining && !c.paused(&self.cfg);
+            let write = !c.outbox.is_empty();
+            self.poller.push(fd_of(&c.stream), read, write);
+            self.order.push(Source::Conn(id));
+        }
+    }
+
+    /// Move completed response frames into their connections' outboxes and
+    /// flush opportunistically. Frames for connections that died mid-flight
+    /// are dropped here — the shard already fulfilled the slot, so gauges
+    /// drained; only the bytes are unwanted.
+    fn route_completed(&mut self) {
+        let mut frames = std::mem::take(&mut self.completed);
+        self.shared.take_completed(&mut frames);
+        if frames.is_empty() {
+            self.completed = frames;
+            return;
+        }
+        self.ids.clear();
+        for (cid, frame) in frames.drain(..) {
+            if let Some(c) = self.conns.get_mut(&cid) {
+                c.pending = c.pending.saturating_sub(1);
+                c.push_frame(&frame);
+                if self.ids.last() != Some(&cid) {
+                    self.ids.push(cid);
+                }
+            }
+        }
+        self.completed = frames;
+        let touched = std::mem::take(&mut self.ids);
+        for &cid in &touched {
+            self.service_conn(cid, false, true);
+        }
+        self.ids = touched;
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            if self.conns.len() >= self.cfg.max_connections {
+                return;
+            }
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    self.conns.insert(id, Conn::new(stream, Instant::now()));
+                    self.shared.metrics.accepted.fetch_add(1, Relaxed);
+                    self.shared.metrics.active.fetch_add(1, Relaxed);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                // Transient resource errors (EMFILE & friends): leave the
+                // backlog alone this iteration; poll re-reports.
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn service_conn(&mut self, id: u64, readable: bool, writable: bool) {
+        let Some(mut c) = self.conns.remove(&id) else { return };
+        let mut alive = true;
+        if writable && !c.outbox.is_empty() {
+            alive = self.flush_outbox(&mut c);
+        }
+        if alive && readable && !self.draining {
+            alive = self.read_conn(&mut c, id);
+        }
+        if alive {
+            self.conns.insert(id, c);
+        } else {
+            self.close_conn(c, false);
+        }
+    }
+
+    fn read_conn(&mut self, c: &mut Conn, id: u64) -> bool {
+        for _round in 0..READ_ROUNDS {
+            if c.paused(&self.cfg) {
+                return true;
+            }
+            match c.stream.read(&mut self.scratch) {
+                // EOF: the peer is gone; buffered requests and queued
+                // responses are moot. In-flight submissions still fulfil
+                // their slots — route_completed drops the orphan frames.
+                Ok(0) => return false,
+                Ok(n) => {
+                    self.shared.metrics.bytes_in.fetch_add(n as u64, Relaxed);
+                    c.last_activity = Instant::now();
+                    c.fb.extend(&self.scratch[..n]);
+                    if !self.pump(c, id) {
+                        return false;
+                    }
+                    if n < self.scratch.len() {
+                        return true;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        true
+    }
+
+    /// Decode buffered frames up to the back-pressure caps. Returns `false`
+    /// on a fatal protocol error (connection must close).
+    fn pump(&mut self, c: &mut Conn, id: u64) -> bool {
+        loop {
+            if c.paused(&self.cfg) {
+                return true;
+            }
+            let parsed = match c.fb.next_frame() {
+                Ok(Some(body)) => proto::parse_request(body),
+                Ok(None) => return true,
+                Err(_oversized) => {
+                    self.shared.metrics.protocol_errors.fetch_add(1, Relaxed);
+                    return false;
+                }
+            };
+            match parsed {
+                Ok(ParsedRequest::Valid { id: rid, key }) => {
+                    c.pending += 1;
+                    self.shared.pending.fetch_add(1, SeqCst);
+                    (self.submit)(id, rid, key);
+                }
+                Ok(ParsedRequest::Invalid { id: rid }) => {
+                    // Answerable: BadRequest on the same connection.
+                    self.shared.metrics.protocol_errors.fetch_add(1, Relaxed);
+                    let mut frame = Vec::new();
+                    proto::encode_error(&mut frame, rid, Status::BadRequest);
+                    c.push_frame(&frame);
+                }
+                Err(_truncated) => {
+                    self.shared.metrics.protocol_errors.fetch_add(1, Relaxed);
+                    return false;
+                }
+            }
+        }
+    }
+
+    fn flush_outbox(&mut self, c: &mut Conn) -> bool {
+        while !c.outbox.is_empty() {
+            let (head, tail) = c.outbox.as_slices();
+            let chunk = if head.is_empty() { tail } else { head };
+            match c.stream.write(chunk) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    c.outbox.drain(..n);
+                    self.shared.metrics.bytes_out.fetch_add(n as u64, Relaxed);
+                    c.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        true
+    }
+
+    /// Connections paused earlier may have gained slack from completions
+    /// without any new socket readiness; resume decoding their buffer.
+    fn pump_unpaused(&mut self) {
+        if self.draining {
+            return;
+        }
+        self.ids.clear();
+        for (&id, c) in &self.conns {
+            if c.fb.buffered() > 0 && !c.paused(&self.cfg) {
+                self.ids.push(id);
+            }
+        }
+        let ids = std::mem::take(&mut self.ids);
+        for &id in &ids {
+            if let Some(mut c) = self.conns.remove(&id) {
+                if self.pump(&mut c, id) {
+                    self.conns.insert(id, c);
+                } else {
+                    self.close_conn(c, false);
+                }
+            }
+        }
+        self.ids = ids;
+    }
+
+    fn sweep_idle(&mut self) {
+        let now = Instant::now();
+        let tick = (self.cfg.idle_timeout / 4).max(Duration::from_millis(10));
+        if now.duration_since(self.last_sweep) < tick {
+            return;
+        }
+        self.last_sweep = now;
+        self.ids.clear();
+        for (&id, c) in &self.conns {
+            if now.duration_since(c.last_activity) >= self.cfg.idle_timeout {
+                self.ids.push(id);
+            }
+        }
+        let ids = std::mem::take(&mut self.ids);
+        for &id in &ids {
+            if let Some(c) = self.conns.remove(&id) {
+                self.close_conn(c, true);
+            }
+        }
+        self.ids = ids;
+    }
+
+    fn close_conn(&mut self, c: Conn, evicted: bool) {
+        self.shared.metrics.active.fetch_sub(1, Relaxed);
+        self.shared.metrics.closed.fetch_add(1, Relaxed);
+        if evicted {
+            self.shared.metrics.idle_evicted.fetch_add(1, Relaxed);
+        }
+        drop(c);
+    }
+}

@@ -82,6 +82,18 @@ pub struct MetricsSnapshot {
     pub mag_alloc_misses: u64,
     pub mag_depot_flushes: u64,
     pub mag_depot_refills: u64,
+    /// Network-listener counters (process-wide across all live
+    /// `frontend::net` listeners — same single-set discipline as `mag_*`:
+    /// `Router::metrics` copies them once from
+    /// [`crate::coordinator::frontend::net::net_stats`], and
+    /// [`Self::add_counters`] never sums them).
+    pub net_accepted: u64,
+    /// Gauge: currently-open TCP connections.
+    pub net_active: u64,
+    pub net_closed: u64,
+    pub net_protocol_errors: u64,
+    pub net_bytes_in: u64,
+    pub net_bytes_out: u64,
 }
 
 impl Metrics {
@@ -107,6 +119,12 @@ impl Metrics {
             mag_alloc_misses: 0,
             mag_depot_flushes: 0,
             mag_depot_refills: 0,
+            net_accepted: 0,
+            net_active: 0,
+            net_closed: 0,
+            net_protocol_errors: 0,
+            net_bytes_in: 0,
+            net_bytes_out: 0,
         }
     }
 }
@@ -168,6 +186,20 @@ impl MetricsSnapshot {
             self.mag_alloc_hits as f64 / total as f64
         }
     }
+
+    /// Copy the listener counters out of a [`net_stats`] aggregate
+    /// (`Router::metrics` calls this once, post roll-up — the same
+    /// single-set discipline as `unreclaimed_nodes` and `mag_*`).
+    ///
+    /// [`net_stats`]: crate::coordinator::frontend::net::net_stats
+    pub fn set_net_stats(&mut self, s: &crate::coordinator::frontend::net::NetStats) {
+        self.net_accepted = s.accepted;
+        self.net_active = s.active;
+        self.net_closed = s.closed;
+        self.net_protocol_errors = s.protocol_errors;
+        self.net_bytes_in = s.bytes_in;
+        self.net_bytes_out = s.bytes_out;
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -191,7 +223,23 @@ impl std::fmt::Display for MetricsSnapshot {
             self.mag_hit_rate() * 100.0,
             self.mag_depot_flushes,
             self.mag_depot_refills,
-        )
+        )?;
+        // Listener block only when a net front has existed — keeps the
+        // common (socketless) snapshot line unchanged.
+        if self.net_accepted > 0 || self.net_active > 0 {
+            write!(
+                f,
+                " net_accepted={} net_active={} net_closed={} net_proto_errs={} \
+                 net_in={}B net_out={}B",
+                self.net_accepted,
+                self.net_active,
+                self.net_closed,
+                self.net_protocol_errors,
+                self.net_bytes_in,
+                self.net_bytes_out,
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -270,5 +318,33 @@ mod tests {
         let text = s.to_string();
         assert!(text.contains("mag_hits=30"));
         assert!(text.contains("depot_flushes=2"));
+    }
+
+    #[test]
+    fn net_counters_set_once_not_summed() {
+        let stats = crate::coordinator::frontend::net::NetStats {
+            accepted: 12,
+            active: 3,
+            closed: 9,
+            protocol_errors: 1,
+            bytes_in: 640,
+            bytes_out: 10_240,
+            idle_evicted: 2,
+        };
+        let mut s = MetricsSnapshot::default();
+        s.set_net_stats(&stats);
+        assert_eq!(s.net_accepted, 12);
+        assert_eq!(s.net_active, 3);
+        // Roll-up must not double the process-wide listener counters.
+        let mut agg = MetricsSnapshot::default();
+        agg.add_counters(&s);
+        agg.add_counters(&s);
+        assert_eq!(agg.net_accepted, 0, "router sets net_* once, post roll-up");
+        let text = s.to_string();
+        assert!(text.contains("net_accepted=12"));
+        assert!(text.contains("net_proto_errs=1"));
+        // A socketless snapshot keeps the historical line shape.
+        let plain = MetricsSnapshot::default().to_string();
+        assert!(!plain.contains("net_accepted"));
     }
 }

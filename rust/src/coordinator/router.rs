@@ -202,6 +202,9 @@ impl<R: Reclaimer> Router<R> {
         // shards), so — like unreclaimed_nodes — they are set once here
         // rather than summed per shard.
         agg.set_magazine_stats(&crate::alloc::magazine_stats());
+        // Listener counters likewise: one aggregate over every live
+        // `frontend::net` listener in the process, set once post roll-up.
+        agg.set_net_stats(&super::frontend::net::net_stats());
         agg
     }
 

@@ -74,7 +74,12 @@
 //!   executor in [`runtime::exec`]): `submit_async` parks a task on a
 //!   per-request completion slot, `submit` is its deadline-bounded
 //!   blocking wrapper, and the connection mux drives tens of thousands
-//!   of logical clients on a handful of executor threads (E17).
+//!   of logical clients on a handful of executor threads (E17). The
+//!   serving claim also crosses a real socket:
+//!   [`coordinator::frontend::net`] is a TCP front — a single readiness
+//!   reactor (std-only `poll(2)` shim) frames a length-prefixed wire
+//!   protocol and fulfils the same completion slots over thousands of
+//!   concurrent loopback connections (E18).
 //! * [`util`] — std-only stand-ins for `rand`/`clap`/`criterion`/
 //!   `proptest`/`anyhow`/`crossbeam_utils::CachePadded`.
 //!

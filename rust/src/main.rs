@@ -10,9 +10,11 @@
 //! repro ablation threshold|hp|epoch [opts]    # A1/A2/A3
 //! repro serve [--scheme stamp] [--requests N] # coordinator (E15)
 //!             [--shards N] [--shared-domain] [--backend pjrt|synthetic]
-//!             [--frontend thread|async] [--clients N] [--exec-threads T]
+//!             [--frontend thread|async|net] [--clients N] [--exec-threads T]
+//!             [--listen ADDR]
 //! repro shard-scaling [opts]                  # E16 (artifact-free)
 //! repro async-scaling [opts]                  # E17 (artifact-free)
+//! repro net-scaling [opts]                    # E18 (loopback TCP storm)
 //!
 //! common options:
 //!   --threads 1,2,4   --trials N   --secs S   --schemes all|ebr,stamp,...
@@ -22,6 +24,8 @@
 use emr::bench_fw::figures::{self, Workload};
 use emr::bench_fw::{report, BenchParams};
 use emr::coordinator::frontend::mux::{self, MuxConfig};
+use emr::coordinator::frontend::net::client::{storm, StormConfig};
+use emr::coordinator::frontend::net::{NetConfig, NetServer};
 use emr::coordinator::frontend::Frontend;
 use emr::coordinator::{Backend, CacheServer, ServerConfig};
 use emr::dispatch_scheme;
@@ -65,6 +69,11 @@ fn main() {
         Some("serve") => serve(&args),
         Some("shard-scaling") => figures::fig_shard_scaling(&params),
         Some("async-scaling") => figures::fig_async_scaling(&params),
+        Some("net-scaling") => {
+            // The returned cells feed `BENCH_fig_net_scaling.json` in the
+            // bench target; the CLI path just prints the tables.
+            figures::fig_net_scaling(&params);
+        }
         _ => usage(""),
     }
 }
@@ -77,13 +86,17 @@ fn main() {
 /// thread per client. `--frontend async` multiplexes `--clients N` logical
 /// clients as tasks on `--exec-threads T` executor threads over
 /// `Router::submit_async` — the regime the async front-end exists for.
+/// `--frontend net` binds `--listen ADDR` and drives `--clients N` real
+/// loopback TCP connections through the reactor (DESIGN.md §8); any
+/// client-observed error or protocol violation exits non-zero, which is
+/// the CI smoke contract.
 fn serve(args: &Args) {
     let scheme = SchemeId::parse(args.get_or("scheme", "stamp")).unwrap_or_else(|| {
         eprintln!("unknown --scheme");
         std::process::exit(2);
     });
     let frontend = Frontend::parse(args.get_or("frontend", "thread")).unwrap_or_else(|| {
-        eprintln!("unknown --frontend (thread|async)");
+        eprintln!("unknown --frontend ({})", Frontend::NAMES);
         std::process::exit(2);
     });
     let clients = args.usize_or("clients", 4);
@@ -104,6 +117,7 @@ fn serve(args: &Args) {
         clients: usize,
         requests: usize,
         key_space: u64,
+        listen: std::net::SocketAddr,
         cfg: ServerConfig,
     }
 
@@ -137,7 +151,16 @@ fn serve(args: &Args) {
     }
 
     fn run<R: Reclaimer>(o: ServeOpts) {
-        let ServeOpts { frontend, exec_threads, in_flight, clients, requests, key_space, cfg } = o;
+        let ServeOpts {
+            frontend,
+            exec_threads,
+            in_flight,
+            clients,
+            requests,
+            key_space,
+            listen,
+            cfg,
+        } = o;
         let shards = cfg.shards;
         let server = CacheServer::<R>::start(cfg).unwrap_or_else(|e| {
             eprintln!("server start failed: {e:#}");
@@ -205,12 +228,62 @@ fn serve(args: &Args) {
                 let all = report.sorted_latencies();
                 finish(&server, clients, requests, report.served() as usize, wall_s, &all);
             }
+            Frontend::Net => {
+                println!(
+                    "serving with scheme {} ({} shard(s), TCP front: {} connections \
+                     bridged on {} executor threads) …",
+                    R::NAME,
+                    shards,
+                    clients,
+                    exec_threads
+                );
+                let mut net = NetServer::start(
+                    server.clone(),
+                    NetConfig { listen, exec_threads, ..NetConfig::default() },
+                )
+                .unwrap_or_else(|e| {
+                    eprintln!("net front start failed: {e}");
+                    std::process::exit(1);
+                });
+                println!("listening on {}", net.local_addr());
+                let report = storm(
+                    net.local_addr(),
+                    &StormConfig {
+                        conns: clients,
+                        requests_per_conn: requests,
+                        key_space,
+                        // Uniform draw, like the other front-ends here (E18
+                        // is the figure that skews traffic).
+                        hot_pct: 0,
+                        seed: 0xE2E,
+                        ..StormConfig::default()
+                    },
+                );
+                // Drain in-flight completions and flush before reporting;
+                // keep `net` alive so its listener counters stay registered
+                // for the `server.metrics()` line inside `finish`.
+                net.shutdown();
+                let wall_s = report.wall_ns as f64 / 1e9;
+                let all = report.sorted_latencies();
+                finish(&server, clients, requests, report.received as usize, wall_s, &all);
+                // The CI smoke contract: every request answered, zero
+                // protocol errors.
+                if report.errors > 0 {
+                    eprintln!("error: {} request(s) failed or went unanswered", report.errors);
+                    std::process::exit(1);
+                }
+            }
         }
     }
     let cfg = ServerConfig { capacity, workers: 2, ..ServerConfig::default() }
         .with_shards(shards)
         .with_shared_domain(shared_domain)
         .with_backend(backend);
+    let listen: std::net::SocketAddr =
+        args.get_or("listen", "127.0.0.1:0").parse().unwrap_or_else(|_| {
+            eprintln!("bad --listen (expected ADDR:PORT, e.g. 127.0.0.1:7070)");
+            std::process::exit(2);
+        });
     let opts = ServeOpts {
         frontend,
         exec_threads: args.usize_or("exec-threads", 8),
@@ -218,6 +291,7 @@ fn serve(args: &Args) {
         clients,
         requests,
         key_space,
+        listen,
         cfg,
     };
     dispatch_scheme!(scheme, run, opts);
@@ -239,9 +313,11 @@ fn usage(context: &str) -> ! {
          \x20 ablation threshold|hp|epoch          design-choice ablations (A1-A3)\n\
          \x20 serve                                compute-cache coordinator (E15)\n\
          \x20   [--shards N] [--shared-domain] [--backend pjrt|synthetic]\n\
-         \x20   [--frontend thread|async] [--clients N] [--exec-threads T] [--in-flight B]\n\
+         \x20   [--frontend thread|async|net] [--clients N] [--exec-threads T] [--in-flight B]\n\
+         \x20   [--listen ADDR:PORT]               (net front; port 0 = ephemeral)\n\
          \x20 shard-scaling                        router shard sweep, artifact-free (E16)\n\
          \x20 async-scaling                        async-mux vs thread-per-request, artifact-free (E17)\n\
+         \x20 net-scaling                          TCP connection storm over loopback (E18)\n\
          \n\
          common options: --threads 1,2,4 --trials N --secs S --schemes all\n\
          \x20               --alloc pool|system --magazines on|off|CAP\n\
