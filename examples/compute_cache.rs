@@ -6,9 +6,9 @@
 //! ```bash
 //! make artifacts && cargo run --release --example compute_cache -- \
 //!     --scheme stamp --clients 4 --requests 2000
-//! # sharded fleet, artifact-free:
+//! # sharded fleet, artifact-free (2 engine groups — one batcher each):
 //! cargo run --release --example compute_cache -- \
-//!     --backend synthetic --shards 4 --clients 8
+//!     --backend synthetic --shards 4 --groups 2 --clients 8
 //! # async front-end: 10k logical clients multiplexed on 8 executor threads
 //! cargo run --release --example compute_cache -- \
 //!     --backend synthetic --shards 4 --frontend async --clients 10000 --requests 10
@@ -19,8 +19,10 @@
 //!
 //! Reports throughput, latency percentiles (hit vs computed), cache hit
 //! rate, and the paper's reclamation-efficiency metric — rolled up and,
-//! when `--shards N > 1`, per shard. `--shared-domain` switches the fleet
-//! from domain-per-shard to one shared reclamation domain. `--frontend
+//! when `--shards N > 1`, per shard. `--groups N` partitions the fleet into
+//! engine groups (one batcher/engine thread each, DESIGN.md §9; per-group
+//! batch counters are printed when N > 1). `--shared-domain` switches the
+//! fleet from domain-per-shard to one shared reclamation domain. `--frontend
 //! async` drives the same load as logical tasks over the completion-driven
 //! submission path (DESIGN.md §6) instead of one OS thread per client;
 //! `--frontend net` drives it as framed requests over real TCP connections
@@ -62,6 +64,7 @@ fn main() {
         ..ServerConfig::default()
     }
     .with_shards(args.usize_or("shards", 1))
+    .with_groups(args.usize_or("groups", 1))
     .with_shared_domain(args.flag("shared-domain"))
     .with_backend(
         Backend::parse(args.get_or("backend", "pjrt")).expect("unknown --backend"),
@@ -105,8 +108,9 @@ fn run<R: Reclaimer>(opts: Opts) {
     println!(
         "E15 compute-cache: scheme={} clients={clients} requests/client={requests} \
          keys={key_space} capacity={capacity} hot={hot_pct}% shards={shards} \
-         domains={} frontend={frontend_desc}",
+         groups={} domains={} frontend={frontend_desc}",
         R::NAME,
+        server.group_count(),
         if shared_domain { "shared".to_string() } else { format!("{shards} (per shard)") },
     );
     let alloc_before = emr::alloc::snapshot();
@@ -227,6 +231,11 @@ fn run<R: Reclaimer>(opts: Opts) {
     if server.shard_count() > 1 {
         for (i, sm) in server.shard_metrics().iter().enumerate() {
             println!("  shard {i}       : {sm}");
+        }
+    }
+    if server.group_count() > 1 {
+        for gm in server.group_metrics() {
+            println!("  {gm}");
         }
     }
     println!("cache entries   : {}", server.cache_len());

@@ -1,7 +1,8 @@
 //! E17: async scaling — thread-per-request vs the async multiplexed
 //! front-end (`coordinator::frontend`) as logical-client concurrency grows
 //! (1k/10k by default; add 100k with `--clients 1000,10000,100000` or
-//! `--paper`). Measures throughput, p50/p99 latency, end-of-run
+//! `--paper`). `--groups N[,M]` sweeps the engine-group count of the
+//! 4-shard fleet. Measures throughput, p50/p99 latency, end-of-run
 //! unreclaimed nodes and the peak queue-depth / in-flight gauges, per
 //! scheme. Runs on the synthetic backend, so no PJRT artifacts are needed.
 //!

@@ -1,6 +1,8 @@
 //! E18: net scaling — the TCP front (`coordinator::frontend::net`) under
 //! a loopback connection storm as concurrency grows (100/1k by default;
-//! add 10k with `--conns 100,1000,10000` or `--paper`). Measures aggregate
+//! add 10k with `--conns 100,1000,10000` or `--paper`). `--groups N[,M]`
+//! sweeps the engine-group count of the 4-shard fleet, lifting the old
+//! single-batcher asymptote the serving curve plateaued at. Measures aggregate
 //! throughput, p50/p99 round-trip latency, client errors, server-side
 //! protocol errors, end-of-run unreclaimed nodes and the peak
 //! active-connection / in-flight gauges, per scheme. Runs on the synthetic
@@ -36,12 +38,14 @@ fn main() {
         }
         let _ = write!(
             body,
-            "    {{\"scheme\": \"{}\", \"conns\": {}, \"req_per_s\": {:.1}, \
+            "    {{\"scheme\": \"{}\", \"conns\": {}, \"groups\": {}, \
+             \"req_per_s\": {:.1}, \
              \"p50_ns\": {:.0}, \"p99_ns\": {:.0}, \"errors\": {}, \
              \"protocol_errors\": {}, \"bytes_in\": {}, \"bytes_out\": {}, \
              \"unreclaimed\": {}, \"peak_active\": {}, \"peak_in_flight\": {}}}",
             c.scheme,
             c.conns,
+            c.groups,
             c.req_per_s,
             c.p50_ns,
             c.p99_ns,

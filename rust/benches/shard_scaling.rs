@@ -1,15 +1,29 @@
 //! E16: shard-scaling — Router throughput and reclamation robustness vs
 //! shard count (1/2/4/8), domain-per-shard vs one-shared-domain, on the
-//! coordinator's HashMap serving path with a skewed key stream. Runs on
-//! the synthetic backend, so no PJRT artifacts are needed.
+//! coordinator's HashMap serving path with a skewed key stream — and vs
+//! **engine-group count** (`--groups`, default 1,2,4): each group runs its
+//! own batcher/engine thread, so this axis is the miss-compute parallelism
+//! the single-batcher fleet never had. Runs on the synthetic backend, so
+//! no PJRT artifacts are needed.
+//!
+//! Besides the printed tables (and `--csv PATH`), the sweep is written as
+//! a machine-readable record to `BENCH_fig_shard_scaling.json` (override
+//! with `--json PATH`) for the CI artifact trail.
+//!
+//! `--gate-groups RATIO` turns the run into the CI groups gate: at the
+//! largest swept shard count, the highest group count must reach at least
+//! RATIO × the `groups=1` throughput for every (scheme, domain-mode) pair,
+//! or the process exits 1.
 //!
 //! ```bash
 //! cargo bench --bench shard_scaling -- --schemes stamp,ebr,hp --secs 1
+//! cargo bench --bench shard_scaling -- --shards 8 --groups 1,4 --gate-groups 1.5
 //! ```
-use emr::bench_fw::figures::fig_shard_scaling;
+use emr::bench_fw::figures::{fig_shard_scaling, ShardCell};
 use emr::bench_fw::BenchParams;
 use emr::reclaim::SchemeId;
 use emr::util::cli::Args;
+use std::fmt::Write as _;
 
 fn main() {
     let args = Args::parse();
@@ -19,5 +33,95 @@ fn main() {
         // stamp (the paper), one epoch scheme, hazard pointers.
         p.schemes = vec![SchemeId::Stamp, SchemeId::Ebr, SchemeId::Hp];
     }
-    fig_shard_scaling(&p);
+    if args.get("groups").is_none() {
+        // Default groups sweep: the old single-batcher fleet against the
+        // grouped ones (combos with groups > shards are skipped).
+        p.groups = vec![1, 2, 4];
+    }
+    let cells = fig_shard_scaling(&p);
+
+    let mut body = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            body.push_str(",\n");
+        }
+        let _ = write!(
+            body,
+            "    {{\"scheme\": \"{}\", \"mode\": \"{}\", \"shards\": {}, \
+             \"groups\": {}, \"req_per_s\": {:.1}, \"hit_rate\": {:.4}, \
+             \"batches\": {}, \"unreclaimed\": {}, \"per_group_batches\": {:?}}}",
+            c.scheme,
+            c.mode,
+            c.shards,
+            c.groups,
+            c.ops_per_sec,
+            c.hit_rate,
+            c.batches,
+            c.unreclaimed,
+            c.group_batches,
+        );
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"shard_scaling\",\n  \"cells\": [\n{body}\n  ]\n}}\n"
+    );
+    let path = args.get_or("json", "BENCH_fig_shard_scaling.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    if let Some(ratio) = args.get("gate-groups") {
+        let ratio: f64 = ratio.parse().unwrap_or_else(|_| {
+            eprintln!("--gate-groups wants a ratio, got {ratio:?}");
+            std::process::exit(2);
+        });
+        if !groups_gate(&cells, ratio) {
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The groups-axis CI gate: at the largest swept shard count, the highest
+/// group count must reach `ratio` × the single-batcher (`groups=1`)
+/// throughput for every (scheme, domain-mode) pair seen in `cells`.
+fn groups_gate(cells: &[ShardCell], ratio: f64) -> bool {
+    let Some(max_shards) = cells.iter().map(|c| c.shards).max() else {
+        eprintln!("groups gate: no cells measured");
+        return false;
+    };
+    let at_max: Vec<&ShardCell> = cells.iter().filter(|c| c.shards == max_shards).collect();
+    let mut ok = true;
+    let mut compared = 0usize;
+    for base in at_max.iter().filter(|c| c.groups == 1) {
+        let Some(best) = at_max
+            .iter()
+            .filter(|c| c.scheme == base.scheme && c.mode == base.mode)
+            .max_by_key(|c| c.groups)
+        else {
+            continue;
+        };
+        if best.groups == 1 {
+            continue; // nothing to compare — sweep had no grouped cell
+        }
+        compared += 1;
+        let speedup = best.ops_per_sec / base.ops_per_sec;
+        let verdict = if speedup >= ratio { "ok" } else { "FAIL" };
+        println!(
+            "groups gate [{verdict}]: {} {} shards={max_shards}: \
+             groups={} {:.0} req/s vs groups=1 {:.0} req/s — {speedup:.2}x \
+             (need {ratio:.2}x)",
+            base.scheme, base.mode, best.groups, best.ops_per_sec, base.ops_per_sec,
+        );
+        if speedup < ratio {
+            ok = false;
+        }
+    }
+    if compared == 0 {
+        eprintln!(
+            "groups gate: sweep had no groups>1 cell at shards={max_shards} \
+             (pass --groups 1,4 and --shards up to at least 4)"
+        );
+        return false;
+    }
+    ok
 }

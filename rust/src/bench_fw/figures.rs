@@ -502,23 +502,38 @@ pub fn micro_alloc_gate(p: &BenchParams, baseline: Option<&str>, record: Option<
     ok
 }
 
-/// One shard-scaling measurement cell.
-struct ShardCell {
-    ops_per_sec: f64,
-    hit_rate: f64,
-    unreclaimed: u64,
-    shard_requests: Vec<u64>,
-    shard_unreclaimed: Vec<u64>,
+/// One shard-scaling measurement cell. Public so the `shard_scaling`
+/// bench target can flatten the sweep into `BENCH_fig_shard_scaling.json`
+/// and gate the groups-axis speedup.
+pub struct ShardCell {
+    /// [`Reclaimer::NAME`] of the scheme under test.
+    pub scheme: &'static str,
+    /// Domain mode: `"dom/shard"` or `"shared-dom"`.
+    pub mode: &'static str,
+    pub shards: usize,
+    /// Engine groups the fleet actually ran (post-clamp).
+    pub groups: usize,
+    pub ops_per_sec: f64,
+    pub hit_rate: f64,
+    /// Batch dispatches summed over every group's engine.
+    pub batches: u64,
+    pub unreclaimed: u64,
+    pub shard_requests: Vec<u64>,
+    pub shard_unreclaimed: Vec<u64>,
+    /// Batch dispatches per engine group (index = group id): the direct
+    /// evidence every group's batcher carried load.
+    pub group_batches: Vec<u64>,
 }
 
-/// Run one (scheme, shard count, domain mode) cell of the shard-scaling
-/// figure: the **full Router stack** (shards, worker pools, shared
-/// batcher) on the synthetic backend — artifact-free — under a skewed
-/// client load (80% of requests on a hot set, so per-shard load is uneven:
-/// the reclamation-robustness axis of the Hyaline comparison).
+/// Run one (scheme, shard count, group count, domain mode) cell of the
+/// shard-scaling figure: the **full Router stack** (shards, worker pools,
+/// per-group batchers) on the synthetic backend — artifact-free — under a
+/// skewed client load (80% of requests on a hot set, so per-shard load is
+/// uneven: the reclamation-robustness axis of the Hyaline comparison).
 fn shard_scaling_cell<R: Reclaimer>(
     p: &BenchParams,
     shards: usize,
+    groups: usize,
     shared_domain: bool,
 ) -> ShardCell {
     use crate::coordinator::{Backend, Router, ServerConfig};
@@ -535,6 +550,7 @@ fn shard_scaling_cell<R: Reclaimer>(
             ..ServerConfig::default()
         }
         .with_shards(shards)
+        .with_groups(groups)
         .with_shared_domain(shared_domain)
         .with_backend(Backend::synthetic()),
     )
@@ -556,11 +572,17 @@ fn shard_scaling_cell<R: Reclaimer>(
     let agg = server.metrics();
     let per_shard = server.shard_metrics();
     let cell = ShardCell {
+        scheme: R::NAME,
+        mode: if shared_domain { "shared-dom" } else { "dom/shard" },
+        shards,
+        groups: server.group_count(),
         ops_per_sec: cfg.mean_ops_per_sec(),
         hit_rate: agg.hit_rate(),
+        batches: agg.batches,
         unreclaimed: agg.unreclaimed_nodes,
         shard_requests: per_shard.iter().map(|m| m.requests).collect(),
         shard_unreclaimed: per_shard.iter().map(|m| m.unreclaimed_nodes).collect(),
+        group_batches: server.group_metrics().iter().map(|g| g.batches).collect(),
     };
     server.shutdown();
     cell
@@ -568,47 +590,76 @@ fn shard_scaling_cell<R: Reclaimer>(
 
 /// E16: shard-scaling figure (ROADMAP "sharded coordinator"): Router
 /// throughput and unreclaimed-node population vs shard count (1/2/4/8 by
-/// default), **domain-per-shard vs one-shared-domain**, per scheme. See
+/// default), **domain-per-shard vs one-shared-domain**, per scheme — and,
+/// with `--groups`, vs engine-group count (the miss-compute parallelism
+/// axis; group counts exceeding a shard count are skipped, since the
+/// router would clamp them to a duplicate of the `groups = shards` cell).
+/// Returns the cells so the `shard_scaling` bench target can write
+/// `BENCH_fig_shard_scaling.json` and gate the groups speedup. See
 /// EXPERIMENTS.md §E16 for the recipe and expected shapes.
-pub fn fig_shard_scaling(p: &BenchParams) {
+pub fn fig_shard_scaling(p: &BenchParams) -> Vec<ShardCell> {
     let clients = *p.threads.iter().max().unwrap_or(&4);
     println!(
         "\n== shard scaling — Router on synthetic backend \
          ({clients} clients, 1 worker/shard, 80% hot-set traffic) =="
     );
+    let sweep_groups = p.groups != vec![1];
     let mut csv = String::from(
-        "scheme,mode,shards,req_per_s,hit_pct,unreclaimed,\
-         per_shard_requests,per_shard_unreclaimed\n",
+        "scheme,mode,shards,groups,req_per_s,hit_pct,batches,unreclaimed,\
+         per_shard_requests,per_shard_unreclaimed,per_group_batches\n",
     );
-    let mut rows: Vec<(String, Vec<ShardCell>)> = Vec::new();
+    let mut all: Vec<ShardCell> = Vec::new();
+    // Rows are (scheme, mode, groups); columns are shard counts. A `None`
+    // marks a skipped groups > shards combo.
+    let mut rows: Vec<(String, Vec<Option<usize>>)> = Vec::new();
     for &scheme in &p.schemes {
         for shared in [false, true] {
             let mode = if shared { "shared-dom" } else { "dom/shard" };
-            let label = format!("{} {mode}", scheme.name());
-            let mut cells = Vec::new();
-            for &s in &p.shards {
-                let cell = dispatch_scheme!(scheme, shard_scaling_cell, p, s, shared);
-                println!(
-                    "  {label:<22} shards={s}: {:>9.0} req/s  hit {:>5.1}%  \
-                     unreclaimed {:>8}  per-shard req {:?}  unreclaimed {:?}",
-                    cell.ops_per_sec,
-                    cell.hit_rate * 100.0,
-                    cell.unreclaimed,
-                    cell.shard_requests,
-                    cell.shard_unreclaimed,
-                );
-                csv.push_str(&format!(
-                    "{},{mode},{s},{:.0},{:.2},{},{},{}\n",
-                    scheme.name(),
-                    cell.ops_per_sec,
-                    cell.hit_rate * 100.0,
-                    cell.unreclaimed,
-                    join_u64(&cell.shard_requests),
-                    join_u64(&cell.shard_unreclaimed),
-                ));
-                cells.push(cell);
+            for &g in &p.groups {
+                let g = g.max(1);
+                let label = if sweep_groups {
+                    format!("{} {mode} g{g}", scheme.name())
+                } else {
+                    format!("{} {mode}", scheme.name())
+                };
+                let mut cells: Vec<Option<usize>> = Vec::new();
+                for &s in &p.shards {
+                    if g > s.max(1) {
+                        println!(
+                            "  {label:<22} shards={s}: skipped (groups {g} > shards, \
+                             would clamp to a duplicate cell)"
+                        );
+                        cells.push(None);
+                        continue;
+                    }
+                    let cell = dispatch_scheme!(scheme, shard_scaling_cell, p, s, g, shared);
+                    println!(
+                        "  {label:<22} shards={s}: {:>9.0} req/s  hit {:>5.1}%  \
+                         unreclaimed {:>8}  per-shard req {:?}  unreclaimed {:?}  \
+                         per-group batches {:?}",
+                        cell.ops_per_sec,
+                        cell.hit_rate * 100.0,
+                        cell.unreclaimed,
+                        cell.shard_requests,
+                        cell.shard_unreclaimed,
+                        cell.group_batches,
+                    );
+                    csv.push_str(&format!(
+                        "{},{mode},{s},{g},{:.0},{:.2},{},{},{},{},{}\n",
+                        scheme.name(),
+                        cell.ops_per_sec,
+                        cell.hit_rate * 100.0,
+                        cell.batches,
+                        cell.unreclaimed,
+                        join_u64(&cell.shard_requests),
+                        join_u64(&cell.shard_unreclaimed),
+                        join_u64(&cell.group_batches),
+                    ));
+                    cells.push(Some(all.len()));
+                    all.push(cell);
+                }
+                rows.push((label, cells));
             }
-            rows.push((label, cells));
         }
     }
     // Summary tables: throughput and end-of-run unreclaimed vs shard count.
@@ -625,16 +676,24 @@ pub fn fig_shard_scaling(p: &BenchParams) {
         for (label, cells) in &rows {
             print!("{label:<22}");
             for c in cells {
-                if pick == 0 {
-                    print!("{:>12.0}", c.ops_per_sec);
-                } else {
-                    print!("{:>12}", c.unreclaimed);
+                match c {
+                    Some(i) if pick == 0 => print!("{:>12.0}", all[*i].ops_per_sec),
+                    Some(i) => print!("{:>12}", all[*i].unreclaimed),
+                    None => print!("{:>12}", "-"),
                 }
             }
             println!();
         }
     }
     maybe_write_csv(&p.csv, &csv);
+    if sweep_groups {
+        println!(
+            "(expected: req/s grows with groups at fixed shards — each group's \
+             batcher dispatches its own engine in parallel — flattening once \
+             groups reach the miss-compute parallelism the load can use)"
+        );
+    }
+    all
 }
 
 /// Join counts with `;` (CSV cell of a per-shard breakdown).
@@ -683,6 +742,7 @@ fn async_scaling_cell<R: Reclaimer>(
     p: &BenchParams,
     clients: usize,
     asynchronous: bool,
+    groups: usize,
 ) -> AsyncCell {
     use crate::coordinator::frontend::mux::{self, MuxConfig};
     use crate::coordinator::{Backend, Router, ServerConfig};
@@ -699,6 +759,7 @@ fn async_scaling_cell<R: Reclaimer>(
             ..ServerConfig::default()
         }
         .with_shards(E17_SHARDS)
+        .with_groups(groups)
         .with_backend(Backend::synthetic()),
     )
     .expect("router start (synthetic backend)");
@@ -806,40 +867,52 @@ pub fn fig_async_scaling(p: &BenchParams) {
         E17_SHARDS, E17_REQS_PER_CLIENT, p.exec_threads, E17_IN_FLIGHT_BUDGET, E17_THREAD_CAP
     );
     let mut csv = String::from(
-        "scheme,mode,clients,os_threads,req_per_s,p50_ns,p99_ns,errors,\
+        "scheme,mode,clients,groups,os_threads,req_per_s,p50_ns,p99_ns,errors,\
          unreclaimed,peak_queue_depth,peak_in_flight\n",
     );
     for &scheme in &p.schemes {
-        for &clients in &p.mux_clients {
-            for asynchronous in [false, true] {
-                let mode = if asynchronous { "mux" } else { "thread" };
-                let cell = dispatch_scheme!(scheme, async_scaling_cell, p, clients, asynchronous);
+        for &g in &p.groups {
+            let g = g.max(1);
+            if g > E17_SHARDS {
                 println!(
-                    "  {:<10} {mode:<7} clients={clients:<7} threads={:<4} \
-                     {:>9.0} req/s  p50={:<9} p99={:<9} errors={:<3} \
-                     unreclaimed={:<7} peak_q={:<6} peak_inflight={}",
-                    scheme.name(),
-                    cell.threads_used,
-                    cell.req_per_s,
-                    fmt_ns(cell.p50_ns),
-                    fmt_ns(cell.p99_ns),
-                    cell.errors,
-                    cell.unreclaimed,
-                    cell.peak_queue_depth,
-                    cell.peak_in_flight,
+                    "  {:<10} groups={g}: skipped (fixed {E17_SHARDS}-shard fleet \
+                     would clamp it to a duplicate cell)",
+                    scheme.name()
                 );
-                csv.push_str(&format!(
-                    "{},{mode},{clients},{},{:.0},{:.0},{:.0},{},{},{},{}\n",
-                    scheme.name(),
-                    cell.threads_used,
-                    cell.req_per_s,
-                    cell.p50_ns,
-                    cell.p99_ns,
-                    cell.errors,
-                    cell.unreclaimed,
-                    cell.peak_queue_depth,
-                    cell.peak_in_flight,
-                ));
+                continue;
+            }
+            for &clients in &p.mux_clients {
+                for asynchronous in [false, true] {
+                    let mode = if asynchronous { "mux" } else { "thread" };
+                    let cell =
+                        dispatch_scheme!(scheme, async_scaling_cell, p, clients, asynchronous, g);
+                    println!(
+                        "  {:<10} {mode:<7} clients={clients:<7} groups={g} threads={:<4} \
+                         {:>9.0} req/s  p50={:<9} p99={:<9} errors={:<3} \
+                         unreclaimed={:<7} peak_q={:<6} peak_inflight={}",
+                        scheme.name(),
+                        cell.threads_used,
+                        cell.req_per_s,
+                        fmt_ns(cell.p50_ns),
+                        fmt_ns(cell.p99_ns),
+                        cell.errors,
+                        cell.unreclaimed,
+                        cell.peak_queue_depth,
+                        cell.peak_in_flight,
+                    );
+                    csv.push_str(&format!(
+                        "{},{mode},{clients},{g},{},{:.0},{:.0},{:.0},{},{},{},{}\n",
+                        scheme.name(),
+                        cell.threads_used,
+                        cell.req_per_s,
+                        cell.p50_ns,
+                        cell.p99_ns,
+                        cell.errors,
+                        cell.unreclaimed,
+                        cell.peak_queue_depth,
+                        cell.peak_in_flight,
+                    ));
+                }
             }
         }
     }
@@ -857,6 +930,8 @@ pub struct NetCell {
     /// [`Reclaimer::NAME`] of the scheme under test.
     pub scheme: &'static str,
     pub conns: usize,
+    /// Engine groups the fleet ran (post-clamp; the `--groups` axis).
+    pub groups: usize,
     pub req_per_s: f64,
     pub p50_ns: f64,
     pub p99_ns: f64,
@@ -887,7 +962,7 @@ const E18_REQS_PER_CONN: usize = 10;
 /// (`frontend::net`), stormed over loopback by `conns` real connections
 /// pipelining [`E18_REQS_PER_CONN`] requests each under the same skewed
 /// load as E16/E17 (80% of requests on a 1% hot set).
-fn net_scaling_cell<R: Reclaimer>(p: &BenchParams, conns: usize) -> NetCell {
+fn net_scaling_cell<R: Reclaimer>(p: &BenchParams, conns: usize, groups: usize) -> NetCell {
     use crate::coordinator::frontend::net::client::{storm, StormConfig};
     use crate::coordinator::frontend::net::{NetConfig, NetServer};
     use crate::coordinator::{Backend, Router, ServerConfig};
@@ -902,6 +977,7 @@ fn net_scaling_cell<R: Reclaimer>(p: &BenchParams, conns: usize) -> NetCell {
             ..ServerConfig::default()
         }
         .with_shards(E18_SHARDS)
+        .with_groups(groups)
         .with_backend(Backend::synthetic()),
     )
     .expect("router start (synthetic backend)");
@@ -954,6 +1030,7 @@ fn net_scaling_cell<R: Reclaimer>(p: &BenchParams, conns: usize) -> NetCell {
     NetCell {
         scheme: R::NAME,
         conns,
+        groups: server.group_count(),
         req_per_s: report.reqs_per_sec(),
         p50_ns: crate::util::stats::percentile_sorted(&lat, 50.0),
         p99_ns: crate::util::stats::percentile_sorted(&lat, 99.0),
@@ -982,42 +1059,53 @@ pub fn fig_net_scaling(p: &BenchParams) -> Vec<NetCell> {
         E18_SHARDS, E18_REQS_PER_CONN, p.exec_threads
     );
     let mut csv = String::from(
-        "scheme,conns,req_per_s,p50_ns,p99_ns,errors,protocol_errors,\
+        "scheme,conns,groups,req_per_s,p50_ns,p99_ns,errors,protocol_errors,\
          bytes_in,bytes_out,unreclaimed,peak_active,peak_in_flight\n",
     );
     let mut cells = Vec::new();
     for &scheme in &p.schemes {
-        for &conns in &p.net_conns {
-            let cell = dispatch_scheme!(scheme, net_scaling_cell, p, conns);
-            println!(
-                "  {:<10} conns={conns:<7} {:>9.0} req/s  p50={:<9} p99={:<9} \
-                 errors={:<3} proto_errs={:<3} unreclaimed={:<7} peak_active={:<7} \
-                 peak_inflight={}",
-                scheme.name(),
-                cell.req_per_s,
-                fmt_ns(cell.p50_ns),
-                fmt_ns(cell.p99_ns),
-                cell.errors,
-                cell.protocol_errors,
-                cell.unreclaimed,
-                cell.peak_active,
-                cell.peak_in_flight,
-            );
-            csv.push_str(&format!(
-                "{},{conns},{:.0},{:.0},{:.0},{},{},{},{},{},{},{}\n",
-                scheme.name(),
-                cell.req_per_s,
-                cell.p50_ns,
-                cell.p99_ns,
-                cell.errors,
-                cell.protocol_errors,
-                cell.bytes_in,
-                cell.bytes_out,
-                cell.unreclaimed,
-                cell.peak_active,
-                cell.peak_in_flight,
-            ));
-            cells.push(cell);
+        for &g in &p.groups {
+            let g = g.max(1);
+            if g > E18_SHARDS {
+                println!(
+                    "  {:<10} groups={g}: skipped (fixed {E18_SHARDS}-shard fleet \
+                     would clamp it to a duplicate cell)",
+                    scheme.name()
+                );
+                continue;
+            }
+            for &conns in &p.net_conns {
+                let cell = dispatch_scheme!(scheme, net_scaling_cell, p, conns, g);
+                println!(
+                    "  {:<10} conns={conns:<7} groups={g} {:>9.0} req/s  p50={:<9} p99={:<9} \
+                     errors={:<3} proto_errs={:<3} unreclaimed={:<7} peak_active={:<7} \
+                     peak_inflight={}",
+                    scheme.name(),
+                    cell.req_per_s,
+                    fmt_ns(cell.p50_ns),
+                    fmt_ns(cell.p99_ns),
+                    cell.errors,
+                    cell.protocol_errors,
+                    cell.unreclaimed,
+                    cell.peak_active,
+                    cell.peak_in_flight,
+                );
+                csv.push_str(&format!(
+                    "{},{conns},{g},{:.0},{:.0},{:.0},{},{},{},{},{},{},{}\n",
+                    scheme.name(),
+                    cell.req_per_s,
+                    cell.p50_ns,
+                    cell.p99_ns,
+                    cell.errors,
+                    cell.protocol_errors,
+                    cell.bytes_in,
+                    cell.bytes_out,
+                    cell.unreclaimed,
+                    cell.peak_active,
+                    cell.peak_in_flight,
+                ));
+                cells.push(cell);
+            }
         }
     }
     maybe_write_csv(&p.csv, &csv);
@@ -1361,8 +1449,17 @@ mod tests {
         let mut p = tiny();
         p.schemes = vec![SchemeId::Stamp];
         p.shards = vec![1, 2];
+        p.groups = vec![1, 2];
         p.secs = 0.05;
-        fig_shard_scaling(&p);
+        let cells = fig_shard_scaling(&p);
+        // shards {1,2} × groups {1,2} × two domain modes, minus the
+        // skipped groups=2/shards=1 combo in each mode.
+        assert_eq!(cells.len(), 6);
+        assert!(cells.iter().all(|c| c.groups <= c.shards));
+        assert!(
+            cells.iter().all(|c| c.group_batches.len() == c.groups),
+            "one batch counter per engine group"
+        );
     }
 
     #[test]

@@ -58,6 +58,10 @@ pub struct BenchParams {
     pub samples: usize,
     /// Shard counts to sweep in the `shard_scaling` figure.
     pub shards: Vec<usize>,
+    /// Engine-group counts to sweep (`--groups`) in the serving figures
+    /// (E16/E17/E18): each group runs its own batcher/engine thread, so
+    /// this is the miss-compute parallelism axis (DESIGN.md §9).
+    pub groups: Vec<usize>,
     /// Logical-client counts swept by the E17 `async_scaling` figure.
     pub mux_clients: Vec<usize>,
     /// Concurrent TCP-connection counts swept by the E18 `net_scaling`
@@ -86,6 +90,7 @@ impl Default for BenchParams {
             key_space: 30_000,
             samples: 50,
             shards: vec![1, 2, 4, 8],
+            groups: vec![1],
             mux_clients: vec![1_000, 10_000],
             net_conns: vec![100, 1_000],
             exec_threads: 8,
@@ -142,6 +147,7 @@ impl BenchParams {
         p.key_space = args.u64_or("keys", p.key_space);
         p.samples = args.usize_or("samples", p.samples);
         p.shards = args.list_or("shards", &p.shards);
+        p.groups = args.list_or("groups", &p.groups);
         p.mux_clients = args.list_or("clients", &p.mux_clients);
         p.net_conns = args.list_or("conns", &p.net_conns);
         p.exec_threads = args.usize_or("exec-threads", p.exec_threads);
@@ -189,6 +195,15 @@ mod tests {
         assert_eq!(p.schemes, vec![SchemeId::Ebr, SchemeId::Stamp]);
         assert_eq!(p.alloc, Policy::System);
         assert_eq!(p.workload_pct, 80);
+    }
+
+    #[test]
+    fn groups_axis_parses() {
+        let parse = |s: &str| {
+            BenchParams::from_args(&Args::parse_from(s.split_whitespace().map(String::from)))
+        };
+        assert_eq!(parse("").groups, vec![1], "default: the single-batcher fleet");
+        assert_eq!(parse("--groups 1,2,4").groups, vec![1, 2, 4]);
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! Since the router refactor the counters live at two levels: each
 //! [`super::Shard`] owns a [`Metrics`] for its request/hit/miss/eviction
 //! counters (snapshotted with its *own domain's* unreclaimed count via
-//! [`Metrics::snapshot_with`]), and the [`super::Router`] owns one for the
-//! fleet-wide batch counters, rolling shard snapshots up with
-//! [`MetricsSnapshot::add_counters`].
+//! [`Metrics::snapshot_with`]), and the [`super::Router`] owns one
+//! [`GroupMetrics`] per **engine group** (DESIGN.md §9) for that group's
+//! batcher — dispatches, batch occupancy, engine errors — rolled up (summed
+//! over groups) into the fleet [`MetricsSnapshot`] alongside the shard
+//! counters ([`MetricsSnapshot::add_counters`]), and exposed per group as
+//! [`GroupSnapshot`]s via `Router::group_metrics`.
 
 use crate::util::cache_pad::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -60,6 +63,73 @@ impl Drop for InFlightToken {
     }
 }
 
+/// Live counters of one **engine group**'s batcher (DESIGN.md §9): batch
+/// dispatches, batch occupancy (distinct keys per dispatch —
+/// `batched_keys / batches` is the group's mean batch size), and engine
+/// failures. One instance per group, owned by the [`super::Router`],
+/// written only by that group's batcher thread.
+#[derive(Default)]
+pub struct GroupMetrics {
+    /// Batches this group's engine dispatched.
+    pub batches: CachePadded<AtomicU64>,
+    /// Distinct keys across those dispatches (occupancy numerator).
+    pub batched_keys: CachePadded<AtomicU64>,
+    /// `engine.execute` failures: each one closes the affected requests'
+    /// completion slots (waiters error out — the net front answers
+    /// `Status::Dropped` — instead of hanging until timeout).
+    pub engine_errors: CachePadded<AtomicU64>,
+}
+
+impl GroupMetrics {
+    /// Point-in-time view, tagged with the group id and its member shards.
+    pub fn snapshot(&self, group: usize, shards: Vec<usize>) -> GroupSnapshot {
+        GroupSnapshot {
+            group,
+            shards,
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_keys: self.batched_keys.load(Ordering::Relaxed),
+            engine_errors: self.engine_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of one engine group's batcher counters.
+#[derive(Clone, Debug, Default)]
+pub struct GroupSnapshot {
+    /// Group index in the router's fleet.
+    pub group: usize,
+    /// Global indices of the shards this group owns.
+    pub shards: Vec<usize>,
+    pub batches: u64,
+    pub batched_keys: u64,
+    pub engine_errors: u64,
+}
+
+impl GroupSnapshot {
+    /// Mean executed batch size (occupancy) of this group's engine.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_keys as f64 / self.batches as f64
+        }
+    }
+}
+
+impl std::fmt::Display for GroupSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "group {} (shards {:?}): batches={} (mean size {:.1}) engine_errors={}",
+            self.group,
+            self.shards,
+            self.batches,
+            self.mean_batch(),
+            self.engine_errors,
+        )
+    }
+}
+
 /// Point-in-time view of the [`Metrics`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MetricsSnapshot {
@@ -68,6 +138,12 @@ pub struct MetricsSnapshot {
     pub misses: u64,
     pub batches: u64,
     pub batched_keys: u64,
+    /// Engine groups serving the fleet (a config echo so a rolled-up line
+    /// is self-describing; per-shard snapshots report 0).
+    pub engine_groups: u64,
+    /// `engine.execute` failures summed over every group's batcher (see
+    /// [`GroupMetrics::engine_errors`]).
+    pub engine_errors: u64,
     pub unreclaimed_nodes: u64,
     /// Gauge: requests queued, not yet picked up by a worker.
     pub queue_depth: u64,
@@ -112,6 +188,8 @@ impl Metrics {
             misses: self.misses.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_keys: self.batched_keys.load(Ordering::Relaxed),
+            engine_groups: 0,
+            engine_errors: 0,
             unreclaimed_nodes,
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             in_flight: self.in_flight.load(Ordering::Relaxed),
@@ -145,6 +223,7 @@ impl MetricsSnapshot {
         self.misses += other.misses;
         self.batches += other.batches;
         self.batched_keys += other.batched_keys;
+        self.engine_errors += other.engine_errors;
         self.queue_depth += other.queue_depth;
         self.in_flight += other.in_flight;
     }
@@ -207,7 +286,7 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "requests={} hits={} ({:.1}%) misses={} batches={} (mean size {:.1}) \
-             unreclaimed={} queued={} in_flight={} \
+             engine_errors={} unreclaimed={} queued={} in_flight={} \
              mag_hits={} mag_misses={} ({:.1}%) depot_flushes={} depot_refills={}",
             self.requests,
             self.hits,
@@ -215,6 +294,7 @@ impl std::fmt::Display for MetricsSnapshot {
             self.misses,
             self.batches,
             self.mean_batch(),
+            self.engine_errors,
             self.unreclaimed_nodes,
             self.queue_depth,
             self.in_flight,
@@ -318,6 +398,37 @@ mod tests {
         let text = s.to_string();
         assert!(text.contains("mag_hits=30"));
         assert!(text.contains("depot_flushes=2"));
+    }
+
+    #[test]
+    fn group_snapshot_math_and_display() {
+        let g = GroupMetrics::default();
+        g.batches.store(4, Ordering::Relaxed);
+        g.batched_keys.store(10, Ordering::Relaxed);
+        g.engine_errors.store(1, Ordering::Relaxed);
+        let s = g.snapshot(2, vec![2, 5]);
+        assert_eq!(s.group, 2);
+        assert_eq!(s.shards, vec![2, 5]);
+        assert!((s.mean_batch() - 2.5).abs() < 1e-9);
+        let text = s.to_string();
+        assert!(text.contains("group 2"));
+        assert!(text.contains("batches=4"));
+        assert!(text.contains("engine_errors=1"));
+        // Empty group is safe to display.
+        assert_eq!(GroupSnapshot::default().mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn engine_errors_sum_in_rollup() {
+        let mut a = MetricsSnapshot::default();
+        a.engine_errors = 2;
+        let mut agg = MetricsSnapshot::default();
+        agg.add_counters(&a);
+        agg.add_counters(&a);
+        assert_eq!(agg.engine_errors, 4);
+        a.engine_errors = 0;
+        let text = a.to_string();
+        assert!(text.contains("engine_errors=0"), "always printed: {text}");
     }
 
     #[test]

@@ -12,10 +12,14 @@
 //!   crate's own lock-free data structures, reclaimed by the scheme `R` —
 //!   the coordinator dogfoods the library.
 //! * [`Router`] — the front-end: owns N shards, routes `submit(key)` by a
-//!   deterministic key hash ([`router::shard_for_key`]), and fans **one**
-//!   shared batcher/engine thread over every shard's misses (`PjRtClient`
-//!   is not `Send`, so the engine thread stays unique). `shards = 1`
-//!   reproduces the old single-server behaviour exactly.
+//!   deterministic key hash ([`router::shard_for_key`]), and partitions the
+//!   fleet into **engine groups** ([`ServerConfig::groups`], DESIGN.md §9):
+//!   each group owns a subset of shards plus its *own* batcher/engine
+//!   thread and miss channel, so misses are served group-locally.
+//!   `PjRtClient` is not `Send`, so each group's engine is created on that
+//!   group's batcher thread — engine-per-group is how compute parallelizes.
+//!   `shards = 1, groups = 1` reproduces the old single-server (and
+//!   single-batcher) behaviour exactly.
 //!
 //! Two domain modes ([`ServerConfig::shared_domain`]): **domain-per-shard**
 //! (default) keeps shards fully isolated — two shards never share retire
@@ -71,6 +75,21 @@ pub enum Backend {
         /// compiled executable plays for [`Backend::Pjrt`]).
         max_batch: usize,
     },
+    /// Fault injection for tests: like [`Backend::Synthetic`], but every
+    /// `execute` fails — exercises the batcher's engine-error path
+    /// (`engine_errors` counter + slot close, so waiters resolve with an
+    /// error instead of timing out).
+    #[doc(hidden)]
+    SyntheticFailing,
+    /// Stall injection for tests: like [`Backend::Synthetic`], but a batch
+    /// containing `key` sleeps `delay_ms` before computing — a wedged
+    /// engine, which makes cross-group miss isolation observable (a stalled
+    /// group's batcher must not delay another group's misses).
+    #[doc(hidden)]
+    SyntheticStall {
+        key: u32,
+        delay_ms: u64,
+    },
 }
 
 impl Backend {
@@ -105,6 +124,12 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Number of shards the router fans out over (min 1).
     pub shards: usize,
+    /// Number of **engine groups** the shards are partitioned into (min 1,
+    /// effectively capped at the shard count): each group owns its own
+    /// batcher/engine thread and miss channel, so miss compute parallelizes
+    /// across groups (DESIGN.md §9). `groups = 1` is the historical
+    /// single-batcher fleet.
+    pub groups: usize,
     /// One fleet-wide reclamation domain instead of one per shard.
     pub shared_domain: bool,
     /// The batcher's compute engine.
@@ -122,6 +147,7 @@ impl Default for ServerConfig {
             capacity: 10_000,
             workers: 2,
             shards: 1,
+            groups: 1,
             shared_domain: false,
             backend: Backend::Pjrt,
             batch_wait: Duration::from_micros(200),
@@ -134,6 +160,13 @@ impl ServerConfig {
     /// Builder: set the shard count (min 1).
     pub fn with_shards(mut self, n: usize) -> Self {
         self.shards = n.max(1);
+        self
+    }
+
+    /// Builder: set the engine-group count (min 1; the router caps it at
+    /// the shard count, since a group without shards would idle).
+    pub fn with_groups(mut self, n: usize) -> Self {
+        self.groups = n.max(1);
         self
     }
 
@@ -311,6 +344,57 @@ mod tests {
             "every shard should see traffic: {:?}",
             per_shard.iter().map(|m| m.requests).collect::<Vec<_>>()
         );
+        server.shutdown();
+    }
+
+    #[test]
+    fn grouped_router_roundtrip() {
+        // shards=4, groups=2: group 0 owns shards {0, 2}, group 1 owns
+        // {1, 3} (round-robin). Both batchers must serve, and the rolled-up
+        // batch counters must equal the per-group sum.
+        let server =
+            Router::<StampIt>::start(tiny_synthetic().with_shards(4).with_groups(2)).unwrap();
+        assert_eq!(server.group_count(), 2);
+        assert_eq!(server.group_shards(0), vec![0, 2]);
+        assert_eq!(server.group_shards(1), vec![1, 3]);
+        let n = 128u32;
+        for key in 0..n {
+            let r = server.request(key).unwrap();
+            assert_eq!(r.data[..], compute_payload(key as u64)[..]);
+            assert_eq!(server.group_of(key), server.group_of_shard(server.shard_of(key)));
+        }
+        let agg = server.metrics();
+        assert_eq!(agg.requests, n as u64);
+        assert_eq!(agg.engine_groups, 2);
+        assert_eq!(agg.engine_errors, 0);
+        let per_group = server.group_metrics();
+        assert_eq!(per_group.len(), 2);
+        assert!(
+            per_group.iter().all(|g| g.batches > 0),
+            "both group batchers must have dispatched: {per_group:?}"
+        );
+        assert_eq!(per_group.iter().map(|g| g.batches).sum::<u64>(), agg.batches);
+        assert_eq!(per_group.iter().map(|g| g.batched_keys).sum::<u64>(), agg.batched_keys);
+        server.shutdown();
+    }
+
+    #[test]
+    fn groups_clamp_and_pure_assignment() {
+        use super::router::{effective_groups, group_for_shard};
+        // Config floor and router cap.
+        assert_eq!(ServerConfig::default().with_groups(0).groups, 1);
+        assert_eq!(effective_groups(2, 8), 2);
+        assert_eq!(effective_groups(8, 3), 3);
+        // Pure round-robin assignment, stable by construction.
+        assert_eq!(group_for_shard(0, 3), 0);
+        assert_eq!(group_for_shard(5, 3), 2);
+        // A fleet asking for more groups than shards runs one per shard.
+        let server =
+            Router::<Ebr>::start(tiny_synthetic().with_shards(2).with_groups(8)).unwrap();
+        assert_eq!(server.group_count(), 2);
+        let r = server.request(9).unwrap();
+        assert_eq!(r.data[..], compute_payload(9)[..]);
+        assert_eq!(server.metrics().engine_groups, 2);
         server.shutdown();
     }
 

@@ -1,14 +1,19 @@
-//! The **router**: key-hash front-end over N [`Shard`]s.
+//! The **router**: key-hash front-end over N [`Shard`]s, partitioned into
+//! **engine groups** (DESIGN.md §9).
 //!
 //! * `submit(key)` routes by [`shard_for_key`] — a pure function of the key
 //!   and the shard count, so the same key lands on the same shard across
 //!   restarts and processes.
-//! * One **shared batcher + engine thread** serves every shard's misses:
-//!   `PjRtClient` is not `Send`, so the engine stays unique regardless of
-//!   shard count; misses arrive tagged with their shard and results are
-//!   inserted back through a per-shard registered handle.
-//! * With `shards = 1` the router is exactly the old single `CacheServer`:
-//!   one domain, one worker pool, one queue, same batcher loop.
+//! * Shards are partitioned into [`ServerConfig::groups`] engine groups by
+//!   [`group_for_shard`] (pure, so key→shard→group is restart-stable too).
+//!   Each group owns its own miss channel plus a **batcher + engine
+//!   thread**: `PjRtClient` is not `Send`, so each group's engine is
+//!   created *on* that group's batcher thread — engine-per-group is the
+//!   unit of compute parallelism, and misses never cross a group boundary.
+//!   Results are inserted back through a per-shard registered handle.
+//! * With `shards = 1, groups = 1` the router is exactly the old single
+//!   `CacheServer`: one domain, one worker pool, one queue, one batcher —
+//!   the same loop the pre-group fleet ran.
 //! * Domain modes: **domain-per-shard** (default — shards never share
 //!   retire lists, epochs or hazard registries; reclamation overhead stays
 //!   per-shard-thread-count) vs **shared-domain**
@@ -17,7 +22,7 @@
 //!   `shard_scaling` bench measures the two against each other.
 
 use super::frontend::{SubmitFuture, SubmitHandle};
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::metrics::{GroupMetrics, GroupSnapshot, MetricsSnapshot};
 use super::shard::{Miss, Request, Shard, ShardShared};
 use super::{Backend, Payload, Response, ServerConfig};
 use crate::reclaim::{DomainRef, LocalHandle, Reclaimer};
@@ -43,6 +48,21 @@ pub fn shard_for_key(key: u32, shards: usize) -> usize {
     ((mix64(key as u64) >> 32) as usize) % shards
 }
 
+/// Deterministic shard→group assignment: round-robin (`shard % groups`), a
+/// pure function stable across restarts — so the whole key→shard→group path
+/// is. Round-robin (rather than contiguous ranges) keeps group populations
+/// within one shard of each other for any `(shards, groups)` pair.
+pub fn group_for_shard(shard: usize, groups: usize) -> usize {
+    debug_assert!(groups > 0);
+    shard % groups
+}
+
+/// The group count the router actually runs: at least 1, at most the shard
+/// count (a group without shards would just idle an engine thread).
+pub fn effective_groups(shards: usize, groups: usize) -> usize {
+    groups.max(1).min(shards.max(1))
+}
+
 /// The sharded compute-cache front-end (the paper's HashMap benchmark,
 /// serving shape, scaled out). See the module docs for the layering.
 pub struct Router<R: Reclaimer> {
@@ -51,17 +71,23 @@ pub struct Router<R: Reclaimer> {
     /// in domain-per-shard mode, exactly one in shared-domain mode. Used
     /// for double-count-free unreclaimed aggregation.
     domains: Vec<DomainRef<R>>,
-    /// Router-level counters (engine batch dispatches span shards).
-    metrics: Arc<Metrics>,
-    miss_tx: Mutex<Option<mpsc::Sender<Miss>>>,
-    batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Effective engine-group count (see [`effective_groups`]).
+    groups: usize,
+    /// Per-group batcher counters, index-aligned with group ids. Each is
+    /// written only by its group's batcher thread.
+    group_metrics: Vec<Arc<GroupMetrics>>,
+    /// One miss-channel sender per group; dropping them all (shutdown)
+    /// closes every group's channel so its batcher drains and exits.
+    miss_txs: Mutex<Option<Vec<mpsc::Sender<Miss>>>>,
+    batchers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl<R: Reclaimer> Router<R> {
     /// Start the fleet: `cfg.shards` shards — each with its own worker
     /// pool and (unless `cfg.shared_domain`) its own reclamation domain —
-    /// plus the single shared batcher/engine thread. Fails fast (and tears
-    /// the fleet down again) if the engine cannot load.
+    /// partitioned into `cfg.groups` engine groups, each with its own
+    /// batcher/engine thread. Fails fast (and tears the fleet down again)
+    /// if any engine cannot load.
     pub fn start(cfg: ServerConfig) -> Result<Arc<Self>> {
         let domains: Vec<DomainRef<R>> = if cfg.shared_domain {
             vec![DomainRef::new_owned()]
@@ -79,11 +105,28 @@ impl<R: Reclaimer> Router<R> {
 
     fn start_with_domains(cfg: ServerConfig, domains: Vec<DomainRef<R>>) -> Result<Arc<Self>> {
         let n = cfg.shards.max(1);
-        let (miss_tx, miss_rx) = mpsc::channel::<Miss>();
+        let groups = effective_groups(n, cfg.groups);
+
+        // One miss channel per group: a shard's workers send only to their
+        // own group's batcher, so a wedged group cannot absorb (or delay)
+        // another group's misses.
+        let mut miss_txs: Vec<mpsc::Sender<Miss>> = Vec::with_capacity(groups);
+        let mut miss_rxs: Vec<Option<mpsc::Receiver<Miss>>> = Vec::with_capacity(groups);
+        for _ in 0..groups {
+            let (tx, rx) = mpsc::channel::<Miss>();
+            miss_txs.push(tx);
+            miss_rxs.push(Some(rx));
+        }
+
         let mut shards: Vec<Shard<R>> = Vec::with_capacity(n);
         for i in 0..n {
             let domain = domains[i % domains.len()].clone();
-            match Shard::start(i, &cfg, domain, miss_tx.clone()) {
+            let g = group_for_shard(i, groups);
+            // Group-local slot: shard i is the (i / groups)-th member of
+            // group i % groups (round-robin), so the group's batcher indexes
+            // its member vector directly by the miss tag.
+            let slot = i / groups;
+            match Shard::start(i, &cfg, domain, miss_txs[g].clone(), slot) {
                 Ok(s) => shards.push(s),
                 Err(e) => {
                     for s in &shards {
@@ -94,59 +137,68 @@ impl<R: Reclaimer> Router<R> {
             }
         }
 
-        // Batcher thread owns the compute engine (PjRtClient is not Send,
-        // so it is created on this thread — the one engine thread of the
-        // whole fleet). Readiness is confirmed through a channel so
-        // start() fails fast on missing artifacts.
-        let metrics = Arc::new(Metrics::default());
+        // One batcher thread per group, each owning its compute engine
+        // (PjRtClient is not Send, so every engine is created on its own
+        // batcher thread). Readiness is confirmed through a channel so
+        // start() fails fast on missing artifacts — all groups must come
+        // up, or the whole fleet comes down.
+        let group_metrics: Vec<Arc<GroupMetrics>> =
+            (0..groups).map(|_| Arc::new(GroupMetrics::default())).collect();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let batcher = {
-            let shareds: Vec<Arc<ShardShared<R>>> =
-                shards.iter().map(|s| s.shared().clone()).collect();
-            let metrics = metrics.clone();
+        let mut batchers: Vec<std::thread::JoinHandle<()>> = Vec::with_capacity(groups);
+        for g in 0..groups {
+            // Slot-ordered member list: global shard order filtered to this
+            // group IS slot order (slot = index / groups is increasing).
+            let shareds: Vec<Arc<ShardShared<R>>> = shards
+                .iter()
+                .filter(|s| group_for_shard(s.index(), groups) == g)
+                .map(|s| s.shared().clone())
+                .collect();
+            let gm = group_metrics[g].clone();
             let backend = cfg.backend.clone();
             let dir = cfg.artifact_dir.clone();
             let wait = cfg.batch_wait;
-            let spawned = std::thread::Builder::new().name("emr-batcher".into()).spawn(move || {
-                let engine = match BatchEngine::load(&backend, &dir) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                batcher_loop(&shareds, &metrics, &engine, miss_rx, wait);
-            });
+            let ready_tx = ready_tx.clone();
+            let miss_rx = miss_rxs[g].take().expect("each group rx taken once");
+            let spawned =
+                std::thread::Builder::new().name(format!("emr-batcher-g{g}")).spawn(move || {
+                    let engine = match BatchEngine::load(&backend, &dir) {
+                        Ok(e) => {
+                            let _ = ready_tx.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    batcher_loop(g, &shareds, &gm, &engine, miss_rx, wait);
+                });
             match spawned {
-                Ok(b) => b,
+                Ok(b) => batchers.push(b),
                 Err(e) => {
-                    for s in &shards {
-                        s.shutdown();
-                    }
+                    tear_down(&shards, miss_txs, batchers);
                     return Err(e.into());
                 }
             }
-        };
-        if let Err(e) = ready_rx.recv().context("batcher thread died").and_then(|r| r) {
-            // Engine failed to load: stop the worker pools we already
-            // started before surfacing the error.
-            for s in &shards {
-                s.shutdown();
+        }
+        drop(ready_tx);
+        for _ in 0..groups {
+            if let Err(e) = ready_rx.recv().context("batcher thread died").and_then(|r| r) {
+                // An engine failed to load: stop the worker pools and the
+                // sibling batchers we already started before surfacing it.
+                tear_down(&shards, miss_txs, batchers);
+                return Err(e);
             }
-            drop(miss_tx);
-            let _ = batcher.join();
-            return Err(e);
         }
 
         Ok(Arc::new(Self {
             shards,
             domains,
-            metrics,
-            miss_tx: Mutex::new(Some(miss_tx)),
-            batcher: Mutex::new(Some(batcher)),
+            groups,
+            group_metrics,
+            miss_txs: Mutex::new(Some(miss_txs)),
+            batchers: Mutex::new(batchers),
         }))
     }
 
@@ -155,9 +207,32 @@ impl<R: Reclaimer> Router<R> {
         self.shards.len()
     }
 
+    /// Number of engine groups serving the fleet (≥ 1, ≤ shard count).
+    pub fn group_count(&self) -> usize {
+        self.groups
+    }
+
     /// The shard `key` routes to.
     pub fn shard_of(&self, key: u32) -> usize {
         shard_for_key(key, self.shards.len())
+    }
+
+    /// The engine group serving shard `shard`.
+    pub fn group_of_shard(&self, shard: usize) -> usize {
+        group_for_shard(shard, self.groups)
+    }
+
+    /// The engine group `key`'s misses are computed by (via its shard).
+    pub fn group_of(&self, key: u32) -> usize {
+        self.group_of_shard(self.shard_of(key))
+    }
+
+    /// Global indices of the shards group `group` owns, in group-local
+    /// slot order.
+    pub fn group_shards(&self, group: usize) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&i| group_for_shard(i, self.groups) == group)
+            .collect()
     }
 
     /// The shards themselves (per-shard metrics, cache sizes, domains).
@@ -167,9 +242,10 @@ impl<R: Reclaimer> Router<R> {
 
     /// Submit a request on the async path (routes by key hash): the
     /// returned [`SubmitFuture`] resolves when a shard worker (hit) or the
-    /// batcher (computed miss) fulfils its completion slot. On a stopped
-    /// router the future is already closed. Safe to drop mid-flight —
-    /// cancellation neither leaks the slot nor wedges the shard worker.
+    /// shard's group batcher (computed miss) fulfils its completion slot.
+    /// On a stopped router the future is already closed. Safe to drop
+    /// mid-flight — cancellation neither leaks the slot nor wedges the
+    /// shard worker.
     pub fn submit_async(&self, key: u32) -> SubmitFuture {
         self.shards[self.shard_of(key)].submit_async(key)
     }
@@ -188,15 +264,21 @@ impl<R: Reclaimer> Router<R> {
         self.submit(key).recv().context("server dropped request")
     }
 
-    /// Rolled-up metrics: shard counters summed, plus the fleet-wide batch
-    /// counters and the unreclaimed-node population across the *distinct*
-    /// backing domains (no double counting in shared-domain mode).
+    /// Rolled-up metrics: shard counters summed, plus the engine-group
+    /// counters (batch dispatches and engine errors summed over groups,
+    /// group count echoed) and the unreclaimed-node population across the
+    /// *distinct* backing domains (no double counting in shared-domain
+    /// mode).
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut agg = MetricsSnapshot::default();
         for s in &self.shards {
             agg.add_counters(&s.shared().metrics.snapshot_with(0));
         }
-        agg.batches = self.metrics.batches.load(Ordering::Relaxed);
+        agg.batches =
+            self.group_metrics.iter().map(|g| g.batches.load(Ordering::Relaxed)).sum();
+        agg.engine_errors =
+            self.group_metrics.iter().map(|g| g.engine_errors.load(Ordering::Relaxed)).sum();
+        agg.engine_groups = self.groups as u64;
         agg.unreclaimed_nodes = self.domains.iter().map(|d| d.domain().unreclaimed()).sum();
         // Magazine counters are process-wide (worker threads serve all
         // shards), so — like unreclaimed_nodes — they are set once here
@@ -209,10 +291,22 @@ impl<R: Reclaimer> Router<R> {
     }
 
     /// Per-shard snapshots, index-aligned with [`Self::shards`]. Each
-    /// carries its own domain's unreclaimed count; `batches` is a fleet
-    /// metric and stays 0 here (see [`Self::metrics`]).
+    /// carries its own domain's unreclaimed count; `batches` and
+    /// `engine_errors` are group metrics and stay 0 here (see
+    /// [`Self::metrics`] and [`Self::group_metrics`]).
     pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
         self.shards.iter().map(|s| s.metrics()).collect()
+    }
+
+    /// Per-group batcher snapshots, index-aligned with group ids: batch
+    /// dispatches, occupancy and engine errors of each group's engine,
+    /// tagged with the group's member shards.
+    pub fn group_metrics(&self) -> Vec<GroupSnapshot> {
+        self.group_metrics
+            .iter()
+            .enumerate()
+            .map(|(g, gm)| gm.snapshot(g, self.group_shards(g)))
+            .collect()
     }
 
     /// Entries currently cached across all shards.
@@ -221,15 +315,16 @@ impl<R: Reclaimer> Router<R> {
     }
 
     /// Stop the fleet: each shard drains and joins its workers (queued
-    /// stragglers are rejected, not leaked — see [`Shard`]), then the miss
-    /// channel closes and the batcher answers what it already holds and
-    /// exits.
+    /// stragglers are rejected, not leaked — see [`Shard`]), then every
+    /// group's miss channel closes and its batcher answers what it already
+    /// holds and exits.
     pub fn shutdown(&self) {
         for s in &self.shards {
             s.shutdown();
         }
-        *self.miss_tx.lock().unwrap() = None;
-        if let Some(b) = self.batcher.lock().unwrap().take() {
+        *self.miss_txs.lock().unwrap() = None;
+        let batchers = std::mem::take(&mut *self.batchers.lock().unwrap());
+        for b in batchers {
             let _ = b.join();
         }
     }
@@ -241,11 +336,34 @@ impl<R: Reclaimer> Drop for Router<R> {
     }
 }
 
-/// The batcher's compute engine: real PJRT artifacts or the deterministic
-/// in-process fallback (the artifact-free path benches/CI smokes use).
+/// Start-failure teardown: stop every shard's worker pool, close all miss
+/// channels, and join the batcher threads already spawned (their receivers
+/// disconnect, so they drain and exit).
+fn tear_down<R: Reclaimer>(
+    shards: &[Shard<R>],
+    miss_txs: Vec<mpsc::Sender<Miss>>,
+    batchers: Vec<std::thread::JoinHandle<()>>,
+) {
+    for s in shards {
+        s.shutdown();
+    }
+    drop(miss_txs);
+    for b in batchers {
+        let _ = b.join();
+    }
+}
+
+/// A group batcher's compute engine: real PJRT artifacts, the deterministic
+/// in-process fallback (the artifact-free path benches/CI smokes use), or a
+/// fault/stall-injecting test double.
 enum BatchEngine {
     Pjrt(Engine),
     Synthetic { max_batch: usize },
+    /// Every `execute` fails ([`Backend::SyntheticFailing`]).
+    SyntheticFailing { max_batch: usize },
+    /// A batch containing `key` sleeps `delay_ms` first
+    /// ([`Backend::SyntheticStall`]).
+    SyntheticStall { key: u32, delay_ms: u64, max_batch: usize },
 }
 
 impl BatchEngine {
@@ -255,42 +373,69 @@ impl BatchEngine {
             Backend::Synthetic { max_batch } => {
                 Ok(Self::Synthetic { max_batch: (*max_batch).max(1) })
             }
+            Backend::SyntheticFailing => {
+                Ok(Self::SyntheticFailing { max_batch: Backend::SYNTHETIC_MAX_BATCH })
+            }
+            Backend::SyntheticStall { key, delay_ms } => Ok(Self::SyntheticStall {
+                key: *key,
+                delay_ms: *delay_ms,
+                max_batch: Backend::SYNTHETIC_MAX_BATCH,
+            }),
         }
     }
 
     fn max_batch(&self) -> usize {
         match self {
             Self::Pjrt(e) => e.max_batch(),
-            Self::Synthetic { max_batch } => *max_batch,
+            Self::Synthetic { max_batch }
+            | Self::SyntheticFailing { max_batch }
+            | Self::SyntheticStall { max_batch, .. } => *max_batch,
         }
     }
 
     fn execute(&self, seeds: &[i32]) -> Result<Vec<Vec<f32>>> {
         match self {
             Self::Pjrt(e) => e.execute(seeds),
-            // Same deterministic function the bench workloads "calculate"
-            // with; keys are u32, so the i32 round-trip is lossless.
-            Self::Synthetic { .. } => Ok(seeds
-                .iter()
-                .map(|&s| crate::bench_fw::workload::compute_payload(s as u32 as u64).to_vec())
-                .collect()),
+            Self::Synthetic { .. } => Ok(synthetic_rows(seeds)),
+            Self::SyntheticFailing { .. } => {
+                Err(crate::anyhow!("injected engine failure ({} keys)", seeds.len()))
+            }
+            Self::SyntheticStall { key, delay_ms, .. } => {
+                if seeds.iter().any(|&s| s as u32 == *key) {
+                    std::thread::sleep(Duration::from_millis(*delay_ms));
+                }
+                Ok(synthetic_rows(seeds))
+            }
         }
     }
 }
 
+/// The deterministic synthetic compute: the same function the bench
+/// workloads "calculate" with; keys are u32, so the i32 round-trip is
+/// lossless.
+fn synthetic_rows(seeds: &[i32]) -> Vec<Vec<f32>> {
+    seeds
+        .iter()
+        .map(|&s| crate::bench_fw::workload::compute_payload(s as u32 as u64).to_vec())
+        .collect()
+}
+
 fn batcher_loop<R: Reclaimer>(
+    gid: usize,
     shards: &[Arc<ShardShared<R>>],
-    router_metrics: &Metrics,
+    group_metrics: &GroupMetrics,
     engine: &BatchEngine,
     miss_rx: mpsc::Receiver<Miss>,
     batch_wait: Duration,
 ) {
     let max_batch = engine.max_batch();
-    // One registered handle per *distinct* shard domain (shards share the
-    // registration in shared-domain mode — no redundant registry entries
-    // inflating every scan): every cache insert below is TLS-free, and a
-    // key's whole answer path runs through the handle of the shard that
-    // owns it (the facade's HandleSource plumbing).
+    // `shards` is this group's member list in slot order; every miss's
+    // `slot` tag indexes it directly. One registered handle per *distinct*
+    // member domain (members share the registration in shared-domain mode —
+    // no redundant registry entries inflating every scan): every cache
+    // insert below is TLS-free, and a key's whole answer path runs through
+    // the handle of the shard that owns it (the facade's HandleSource
+    // plumbing).
     let mut by_domain: Vec<(usize, LocalHandle<R>)> = Vec::new();
     let handles: Vec<LocalHandle<R>> = shards
         .iter()
@@ -306,14 +451,14 @@ fn batcher_loop<R: Reclaimer>(
             }
         })
         .collect();
-    // key → (owning shard, requests waiting for it). Key-hash routing means
+    // key → (owning slot, requests waiting for it). Key-hash routing means
     // a key belongs to exactly one shard, so the tag is a scalar.
     let mut waiting: StdHashMap<u32, (usize, Vec<Request>)> = StdHashMap::new();
     loop {
         // Block for the first miss (with a timeout to notice shutdown).
         match miss_rx.recv_timeout(Duration::from_millis(5)) {
             Ok(m) => {
-                waiting.entry(m.req.key).or_insert((m.shard, Vec::new())).1.push(m.req);
+                waiting.entry(m.req.key).or_insert((m.slot, Vec::new())).1.push(m.req);
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if waiting.is_empty() {
@@ -335,27 +480,29 @@ fn batcher_loop<R: Reclaimer>(
             }
             match miss_rx.recv_timeout(deadline - now) {
                 Ok(m) => {
-                    waiting.entry(m.req.key).or_insert((m.shard, Vec::new())).1.push(m.req);
+                    waiting.entry(m.req.key).or_insert((m.slot, Vec::new())).1.push(m.req);
                 }
                 Err(_) => break,
             }
         }
 
-        // Dispatch one batch of distinct keys (possibly spanning shards).
+        // Dispatch one batch of distinct keys (possibly spanning this
+        // group's shards).
         let keys: Vec<u32> = waiting.keys().copied().take(max_batch).collect();
         let seeds: Vec<i32> = keys.iter().map(|&k| k as i32).collect();
         match engine.execute(&seeds) {
             Ok(results) => {
-                router_metrics.batches.fetch_add(1, Ordering::Relaxed);
+                group_metrics.batches.fetch_add(1, Ordering::Relaxed);
                 for (key, row) in keys.iter().zip(results) {
-                    let Some((shard_idx, reqs)) = waiting.remove(key) else { continue };
-                    let shard = &shards[shard_idx];
+                    let Some((slot, reqs)) = waiting.remove(key) else { continue };
+                    let shard = &shards[slot];
                     shard.metrics.batched_keys.fetch_add(1, Ordering::Relaxed);
+                    group_metrics.batched_keys.fetch_add(1, Ordering::Relaxed);
                     let mut payload: Payload = [0.0; DIM];
                     payload.copy_from_slice(&row);
                     // Insert evicts FIFO-oldest beyond capacity — retiring
                     // 1 KiB nodes through the shard's reclamation domain.
-                    if !shard.cache.insert(&handles[shard_idx], *key, payload) {
+                    if !shard.cache.insert(&handles[slot], *key, payload) {
                         shard.metrics.evictions_observed.fetch_add(1, Ordering::Relaxed);
                     }
                     for req in reqs {
@@ -374,10 +521,14 @@ fn batcher_loop<R: Reclaimer>(
                 }
             }
             Err(e) => {
-                // Engine failure: drop the affected requests (their
-                // completion slots close, so waiters error out) and keep
-                // serving.
-                eprintln!("[batcher] execute failed: {e:#}");
+                // Engine failure: count it, then answer the batch by
+                // dropping its requests — each drop closes the request's
+                // completion slot, so every waiter resolves immediately
+                // with an error (the net front maps a closed slot to
+                // `Status::Dropped`) instead of hanging until its recv
+                // deadline. The batcher keeps serving.
+                group_metrics.engine_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[batcher g{gid}] execute failed: {e:#}");
                 for key in keys {
                     waiting.remove(&key);
                 }

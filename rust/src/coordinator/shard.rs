@@ -1,8 +1,10 @@
 //! One **shard** of the compute-cache fleet: today's server body — its own
 //! reclamation domain (unless the router shares one), FIFO-evicting
 //! lock-free cache, lock-free request queue and worker pool. Shards know
-//! nothing about routing: the [`super::Router`] hashes keys onto them and
-//! fans one shared batcher over their miss channels.
+//! nothing about routing: the [`super::Router`] hashes keys onto them,
+//! partitions them into engine groups (DESIGN.md §9), and gives each shard
+//! its group's miss channel — misses flow to the group's batcher, tagged
+//! with the shard's group-local slot.
 //!
 //! Since the async front-end (DESIGN.md §6) the native submission path is
 //! [`Shard::submit_async`]: every queued [`Request`] carries the fulfiller
@@ -42,14 +44,15 @@ pub(crate) struct Request {
     pub(crate) reply: CompletionSender,
 }
 
-/// A cache miss traveling from a shard's worker to the router's shared
-/// batcher, tagged with the shard it must be answered into.
+/// A cache miss traveling from a shard's worker to its **group's** batcher,
+/// tagged with the shard's group-local slot (its index in the batcher's
+/// member list) so the batcher knows which shard to answer into.
 pub(crate) struct Miss {
-    pub(crate) shard: usize,
+    pub(crate) slot: usize,
     pub(crate) req: Request,
 }
 
-/// State shared between a shard's workers, the router's batcher, and the
+/// State shared between a shard's workers, its group's batcher, and the
 /// front-end handle.
 pub(crate) struct ShardShared<R: Reclaimer> {
     /// This shard's reclamation domain (private in domain-per-shard mode,
@@ -79,13 +82,16 @@ pub struct Shard<R: Reclaimer> {
 }
 
 impl<R: Reclaimer> Shard<R> {
-    /// Spawn this shard's worker pool. Misses flow into `miss_tx` (the
-    /// router's single shared batcher).
+    /// Spawn this shard's worker pool. Misses flow into `miss_tx` — this
+    /// shard's **group** batcher — tagged with `slot`, the shard's index in
+    /// that group's member list (the router computes both; see
+    /// [`super::router::group_for_shard`]).
     pub(crate) fn start(
         index: usize,
         cfg: &ServerConfig,
         domain: DomainRef<R>,
         miss_tx: mpsc::Sender<Miss>,
+        slot: usize,
     ) -> Result<Self> {
         let shared = Arc::new(ShardShared {
             cache: FifoCache::new_in(domain.clone(), cfg.buckets, cfg.capacity),
@@ -101,7 +107,7 @@ impl<R: Reclaimer> Shard<R> {
             let miss_tx = miss_tx.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("emr-s{index}-w{w}"))
-                .spawn(move || worker_loop(index, &worker_shared, miss_tx));
+                .spawn(move || worker_loop(slot, &worker_shared, miss_tx));
             match spawned {
                 Ok(h) => workers.push(h),
                 Err(e) => {
@@ -123,7 +129,7 @@ impl<R: Reclaimer> Shard<R> {
     }
 
     /// Submit a request on the async path: the returned [`SubmitFuture`]
-    /// resolves when a worker (hit) or the router's batcher (computed miss)
+    /// resolves when a worker (hit) or the group's batcher (computed miss)
     /// fulfils the completion slot. Safe to drop mid-flight (cancellation —
     /// the shard fulfils a slot nobody reads; nothing leaks or wedges).
     ///
@@ -220,7 +226,7 @@ impl<R: Reclaimer> Shard<R> {
     }
 }
 
-fn worker_loop<R: Reclaimer>(index: usize, shared: &ShardShared<R>, miss_tx: mpsc::Sender<Miss>) {
+fn worker_loop<R: Reclaimer>(slot: usize, shared: &ShardShared<R>, miss_tx: mpsc::Sender<Miss>) {
     // One registration for the worker's lifetime: every queue/cache
     // operation below runs TLS-free through this handle — one registered
     // handle serves a request's whole cache/queue path.
@@ -252,7 +258,7 @@ fn worker_loop<R: Reclaimer>(index: usize, shared: &ShardShared<R>, miss_tx: mps
                     }
                     None => {
                         shared.metrics.misses.fetch_add(1, Ordering::Relaxed);
-                        if miss_tx.send(Miss { shard: index, req }).is_err() {
+                        if miss_tx.send(Miss { slot, req }).is_err() {
                             return; // batcher gone: shutting down
                         }
                     }

@@ -65,8 +65,9 @@
 //!   that makes the paper's HashMap workload real: a
 //!   [`coordinator::Router`] key-hashes requests onto N
 //!   [`coordinator::Shard`]s (each its own worker pool + reclaimed
-//!   hash-map + — by default — its own reclamation domain), while one
-//!   shared batcher thread dispatches misses to an AOT-compiled
+//!   hash-map + — by default — its own reclamation domain), partitioned
+//!   into **engine groups** (DESIGN.md §9): each group's batcher thread
+//!   dispatches its member shards' misses to an AOT-compiled
 //!   JAX/Pallas computation via PJRT (behind the `pjrt` cargo feature) or
 //!   to a deterministic synthetic backend (artifact-free; what benches
 //!   and CI smokes run). Requests enter through the completion-driven

@@ -67,7 +67,11 @@ fn main() {
             other => usage(&format!("ablation {:?}", other)),
         },
         Some("serve") => serve(&args),
-        Some("shard-scaling") => figures::fig_shard_scaling(&params),
+        Some("shard-scaling") => {
+            // The returned cells feed `BENCH_fig_shard_scaling.json` in the
+            // bench target; the CLI path just prints the tables.
+            figures::fig_shard_scaling(&params);
+        }
         Some("async-scaling") => figures::fig_async_scaling(&params),
         Some("net-scaling") => {
             // The returned cells feed `BENCH_fig_net_scaling.json` in the
@@ -104,6 +108,7 @@ fn serve(args: &Args) {
     let key_space = args.u64_or("keys", 30_000);
     let capacity = args.usize_or("capacity", 10_000);
     let shards = args.usize_or("shards", 1);
+    let groups = args.usize_or("groups", 1);
     let shared_domain = args.flag("shared-domain");
     let backend = Backend::parse(args.get_or("backend", "pjrt")).unwrap_or_else(|| {
         eprintln!("unknown --backend (pjrt|synthetic)");
@@ -146,6 +151,11 @@ fn serve(args: &Args) {
                 println!("  shard {i}: {sm}");
             }
         }
+        if server.group_count() > 1 {
+            for gm in server.group_metrics() {
+                println!("  {gm}");
+            }
+        }
         println!("cache entries at end: {}", server.cache_len());
         server.shutdown();
     }
@@ -166,12 +176,15 @@ fn serve(args: &Args) {
             eprintln!("server start failed: {e:#}");
             std::process::exit(1);
         });
+        let groups = server.group_count();
         match frontend {
             Frontend::Thread => {
                 println!(
-                    "serving with scheme {} ({} shard(s), thread-per-client) …",
+                    "serving with scheme {} ({} shard(s), {} engine group(s), \
+                     thread-per-client) …",
                     R::NAME,
-                    shards
+                    shards,
+                    groups
                 );
                 let t0 = emr::util::monotonic_ns();
                 let latencies: Vec<Vec<f64>> = std::thread::scope(|scope| {
@@ -199,10 +212,11 @@ fn serve(args: &Args) {
             }
             Frontend::Async => {
                 println!(
-                    "serving with scheme {} ({} shard(s), async mux: {} logical clients \
-                     on {} executor threads) …",
+                    "serving with scheme {} ({} shard(s), {} engine group(s), async mux: \
+                     {} logical clients on {} executor threads) …",
                     R::NAME,
                     shards,
+                    groups,
                     clients,
                     exec_threads
                 );
@@ -230,10 +244,11 @@ fn serve(args: &Args) {
             }
             Frontend::Net => {
                 println!(
-                    "serving with scheme {} ({} shard(s), TCP front: {} connections \
-                     bridged on {} executor threads) …",
+                    "serving with scheme {} ({} shard(s), {} engine group(s), TCP front: \
+                     {} connections bridged on {} executor threads) …",
                     R::NAME,
                     shards,
+                    groups,
                     clients,
                     exec_threads
                 );
@@ -277,6 +292,7 @@ fn serve(args: &Args) {
     }
     let cfg = ServerConfig { capacity, workers: 2, ..ServerConfig::default() }
         .with_shards(shards)
+        .with_groups(groups)
         .with_shared_domain(shared_domain)
         .with_backend(backend);
     let listen: std::net::SocketAddr =
@@ -312,7 +328,7 @@ fn usage(context: &str) -> ! {
          \x20 micro region|stamp-pool|alloc        microbenchmarks (E13/E14/E20)\n\
          \x20 ablation threshold|hp|epoch          design-choice ablations (A1-A3)\n\
          \x20 serve                                compute-cache coordinator (E15)\n\
-         \x20   [--shards N] [--shared-domain] [--backend pjrt|synthetic]\n\
+         \x20   [--shards N] [--groups N] [--shared-domain] [--backend pjrt|synthetic]\n\
          \x20   [--frontend thread|async|net] [--clients N] [--exec-threads T] [--in-flight B]\n\
          \x20   [--listen ADDR:PORT]               (net front; port 0 = ephemeral)\n\
          \x20 shard-scaling                        router shard sweep, artifact-free (E16)\n\

@@ -276,6 +276,180 @@ fn cross_shard_domains_never_share_retire_lists() {
     server.shutdown();
 }
 
+// ---- Engine-group suite (synthetic backend: runs without artifacts) ----
+
+#[test]
+fn grouped_routing_is_deterministic_across_restarts() {
+    // Same key → same shard → same group, across two independent router
+    // instances: shard_for_key and group_for_shard are both pure functions
+    // of the key and the (shards, groups) shape — nothing per-process
+    // seeds them.
+    let keys: Vec<u32> = (0..512u32).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+    let start = || {
+        Router::<emr::reclaim::stamp::StampIt>::start(
+            synthetic_cfg().with_shards(8).with_groups(4),
+        )
+        .unwrap()
+    };
+    let a = start();
+    let map_a: Vec<(usize, usize)> = keys.iter().map(|&k| (a.shard_of(k), a.group_of(k))).collect();
+    // The group partition itself: every shard in exactly one group.
+    let mut owned: Vec<usize> = (0..4).flat_map(|g| a.group_shards(g)).collect();
+    owned.sort_unstable();
+    assert_eq!(owned, (0..8).collect::<Vec<_>>(), "groups must partition the shards");
+    a.shutdown();
+    drop(a);
+    let b = start();
+    let map_b: Vec<(usize, usize)> = keys.iter().map(|&k| (b.shard_of(k), b.group_of(k))).collect();
+    assert_eq!(map_a, map_b, "key→shard→group must be deterministic across restarts");
+    // And every group owns some keys.
+    for g in 0..4 {
+        assert!(map_a.iter().any(|&(_, grp)| grp == g), "group {g} owns no keys");
+    }
+    b.shutdown();
+}
+
+#[test]
+fn stalled_group_cannot_wedge_another_group() {
+    // Cross-group miss isolation: a wedged engine in one group must not
+    // delay another group's misses. shards=2, groups=2 → shard 0 is group
+    // 0, shard 1 is group 1. The stall backend makes any batch containing
+    // `stall_key` sleep 3 s — only group 0 ever sees that key, so group
+    // 1's batcher must keep answering at normal speed while group 0 is
+    // asleep inside execute.
+    use std::time::{Duration, Instant};
+    let probe =
+        Router::<emr::reclaim::stamp::StampIt>::start(synthetic_cfg().with_shards(2)).unwrap();
+    let stall_key = (0..4096u32).find(|&k| probe.shard_of(k) == 0).unwrap();
+    let other_keys: Vec<u32> =
+        (0..4096u32).filter(|&k| probe.shard_of(k) == 1).take(32).collect();
+    probe.shutdown();
+    drop(probe);
+
+    const STALL: Duration = Duration::from_secs(3);
+    let server = Router::<emr::reclaim::stamp::StampIt>::start(
+        synthetic_cfg()
+            .with_shards(2)
+            .with_groups(2)
+            .with_backend(Backend::SyntheticStall { key: stall_key, delay_ms: 3000 }),
+    )
+    .unwrap();
+    assert_eq!(server.group_of(stall_key), 0);
+
+    // Wedge group 0: its batcher picks the miss up within batch_wait and
+    // goes to sleep inside execute for the full stall.
+    let stalled = server.submit(stall_key);
+    std::thread::sleep(Duration::from_millis(100));
+
+    // Group 1 must be unaffected: all its misses complete well inside the
+    // stall window (the single-batcher fleet would serialize them behind
+    // the sleeping execute).
+    let t0 = Instant::now();
+    for &k in &other_keys {
+        let resp = server.request(k).expect("group-1 request during group-0 stall");
+        assert_eq!(resp.data[..], compute_payload(k as u64)[..]);
+    }
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < STALL / 2,
+        "group 1 stalled behind group 0's engine: {elapsed:?} (stall {STALL:?})"
+    );
+
+    // The wedged request itself still completes once the stall ends.
+    let resp = stalled.recv().expect("stalled request eventually completes");
+    assert_eq!(resp.data[..], compute_payload(stall_key as u64)[..]);
+
+    let per_group = server.group_metrics();
+    assert!(per_group[0].batches >= 1, "group 0 dispatched: {:?}", per_group[0]);
+    assert!(per_group[1].batches >= 1, "group 1 dispatched: {:?}", per_group[1]);
+    assert_eq!(server.metrics().engine_errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn engine_failure_is_counted_and_fails_fast() {
+    // Satellite (batcher failure path): an engine.execute failure must
+    // count in `engine_errors` AND close the affected completion slots so
+    // waiters error immediately — not hang until the 30 s recv deadline.
+    use std::time::{Duration, Instant};
+    let server = Router::<emr::reclaim::ebr::Ebr>::start(
+        synthetic_cfg().with_backend(Backend::SyntheticFailing),
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let err = server.request(5);
+    let elapsed = t0.elapsed();
+    assert!(err.is_err(), "a failed batch must surface as an error");
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "waiter must resolve on slot close, not recv timeout: {elapsed:?}"
+    );
+    // The async path resolves the same way.
+    assert!(emr::runtime::exec::block_on(server.submit_async(6)).is_err());
+    // The batcher survives its engine's failures and keeps counting.
+    assert!(server.request(7).is_err());
+    let m = server.metrics();
+    assert!(m.engine_errors >= 3, "every failed dispatch counts: {m}");
+    assert_eq!(m.hits, 0);
+    assert_eq!(m.in_flight, 0, "failed requests must close their in-flight tokens");
+    server.shutdown();
+}
+
+fn group_shutdown_drains<R: Reclaimer>() {
+    // Graceful shutdown with groups: concurrent load over a 6-shard,
+    // 3-group fleet, then shutdown must drain every group's batcher (all
+    // gauges settle to zero, stragglers rejected) — for Stamp-it, HP and
+    // EBR alike.
+    let server =
+        Router::<R>::start(synthetic_cfg().with_shards(6).with_groups(3)).unwrap();
+    std::thread::scope(|s| {
+        for c in 0..4u64 {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = Xoshiro256::new(0x96D + c);
+                for _ in 0..200 {
+                    let key = rng.below(400) as u32;
+                    let resp = server.request(key).expect("request");
+                    assert_eq!(
+                        resp.data[..],
+                        compute_payload(key as u64)[..],
+                        "{}: wrong payload for key {key}",
+                        R::NAME
+                    );
+                }
+            });
+        }
+    });
+    let per_group = server.group_metrics();
+    assert_eq!(per_group.len(), 3);
+    for g in &per_group {
+        assert!(g.batches >= 1, "{}: group {} batcher never dispatched", R::NAME, g.group);
+    }
+    server.shutdown();
+    let m = server.metrics();
+    assert_eq!(m.requests, 4 * 200);
+    assert_eq!(m.queue_depth, 0, "{}: queue must drain on shutdown", R::NAME);
+    assert_eq!(m.in_flight, 0, "{}: all completion slots must settle", R::NAME);
+    assert!(server.request(1).is_err(), "{}: stragglers are rejected", R::NAME);
+    // Idempotent shutdown stays safe with multiple batchers too.
+    server.shutdown();
+}
+
+#[test]
+fn group_shutdown_drains_stamp() {
+    group_shutdown_drains::<emr::reclaim::stamp::StampIt>();
+}
+
+#[test]
+fn group_shutdown_drains_hp() {
+    group_shutdown_drains::<emr::reclaim::hp::Hp>();
+}
+
+#[test]
+fn group_shutdown_drains_ebr() {
+    group_shutdown_drains::<emr::reclaim::ebr::Ebr>();
+}
+
 #[test]
 fn shutdown_rejects_straggler_submits() {
     // Regression (satellite): a request submitted after shutdown must see
