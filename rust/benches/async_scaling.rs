@@ -2,9 +2,15 @@
 //! front-end (`coordinator::frontend`) as logical-client concurrency grows
 //! (1k/10k by default; add 100k with `--clients 1000,10000,100000` or
 //! `--paper`). `--groups N[,M]` sweeps the engine-group count of the
-//! 4-shard fleet. Measures throughput, p50/p99 latency, end-of-run
-//! unreclaimed nodes and the peak queue-depth / in-flight gauges, per
-//! scheme. Runs on the synthetic backend, so no PJRT artifacts are needed.
+//! 4-shard fleet. Measures throughput, client-observed p50/p99 latency,
+//! flight-recorder-derived p50/p99/p999 (`--trace on|off|<cap>` toggles
+//! the recorder), end-of-run unreclaimed nodes and the peak queue-depth /
+//! in-flight gauges, per scheme. Runs on the synthetic backend, so no
+//! PJRT artifacts are needed.
+//!
+//! Besides the printed tables (and `--csv PATH`), the sweep is written as
+//! a machine-readable record to `BENCH_fig_async_scaling.json` (override
+//! with `--json PATH`) for the CI artifact trail.
 //!
 //! ```bash
 //! cargo bench --bench async_scaling -- --clients 1000,10000 --exec-threads 8
@@ -13,6 +19,7 @@ use emr::bench_fw::figures::fig_async_scaling;
 use emr::bench_fw::BenchParams;
 use emr::reclaim::SchemeId;
 use emr::util::cli::Args;
+use std::fmt::Write as _;
 
 fn main() {
     let args = Args::parse();
@@ -22,5 +29,47 @@ fn main() {
         // scheme, hazard pointers.
         p.schemes = vec![SchemeId::Stamp, SchemeId::Ebr, SchemeId::Hp];
     }
-    fig_async_scaling(&p);
+    let cells = fig_async_scaling(&p);
+
+    let mut body = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            body.push_str(",\n");
+        }
+        let _ = write!(
+            body,
+            "    {{\"scheme\": \"{}\", \"mode\": \"{}\", \"clients\": {}, \
+             \"groups\": {}, \"os_threads\": {}, \"req_per_s\": {:.1}, \
+             \"p50_ns\": {:.0}, \"p99_ns\": {:.0}, \
+             \"trace_p50_ns\": {}, \"trace_p99_ns\": {}, \"trace_p999_ns\": {}, \
+             \"trace_pairs\": {}, \"errors\": {}, \"unreclaimed\": {}, \
+             \"peak_queue_depth\": {}, \"peak_in_flight\": {}}}",
+            c.scheme,
+            c.mode,
+            c.clients,
+            c.groups,
+            c.threads_used,
+            c.req_per_s,
+            c.p50_ns,
+            c.p99_ns,
+            c.trace_p50_ns,
+            c.trace_p99_ns,
+            c.trace_p999_ns,
+            c.trace_pairs,
+            c.errors,
+            c.unreclaimed,
+            c.peak_queue_depth,
+            c.peak_in_flight,
+        );
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"async_scaling\",\n  \"exec_threads\": {},\n  \
+         \"cells\": [\n{body}\n  ]\n}}\n",
+        p.exec_threads
+    );
+    let path = args.get_or("json", "BENCH_fig_async_scaling.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }

@@ -10,14 +10,23 @@
 //! cargo bench --bench micro_region -- --gate ci/micro_region_baseline.csv
 //! # (re)record the baseline on this machine:
 //! cargo bench --bench micro_region -- --record ci/micro_region_baseline.csv
+//! # flight-recorder overhead gate (exit 1 when trace-on exceeds 1.05x
+//! # trace-off on the region-cycle hot path):
+//! cargo bench --bench micro_region -- --trace-gate
 //! ```
-use emr::bench_fw::figures::{micro_region, micro_region_gate};
+use emr::bench_fw::figures::{micro_region, micro_region_gate, trace_overhead_gate};
 use emr::bench_fw::BenchParams;
 use emr::util::cli::Args;
 
 fn main() {
     let args = Args::parse();
     let params = BenchParams::from_args(&args);
+    if args.flag("trace-gate") {
+        if !trace_overhead_gate(&params) {
+            std::process::exit(1);
+        }
+        return;
+    }
     match (args.get("record"), args.get("gate")) {
         (Some(path), _) => {
             if !micro_region_gate(&params, None, Some(path)) {

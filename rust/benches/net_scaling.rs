@@ -40,7 +40,9 @@ fn main() {
             body,
             "    {{\"scheme\": \"{}\", \"conns\": {}, \"groups\": {}, \
              \"req_per_s\": {:.1}, \
-             \"p50_ns\": {:.0}, \"p99_ns\": {:.0}, \"errors\": {}, \
+             \"p50_ns\": {:.0}, \"p99_ns\": {:.0}, \
+             \"trace_p50_ns\": {}, \"trace_p99_ns\": {}, \"trace_p999_ns\": {}, \
+             \"trace_pairs\": {}, \"errors\": {}, \
              \"protocol_errors\": {}, \"bytes_in\": {}, \"bytes_out\": {}, \
              \"unreclaimed\": {}, \"peak_active\": {}, \"peak_in_flight\": {}}}",
             c.scheme,
@@ -49,6 +51,10 @@ fn main() {
             c.req_per_s,
             c.p50_ns,
             c.p99_ns,
+            c.trace_p50_ns,
+            c.trace_p99_ns,
+            c.trace_p999_ns,
+            c.trace_pairs,
             c.errors,
             c.protocol_errors,
             c.bytes_in,

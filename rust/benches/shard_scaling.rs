@@ -49,7 +49,9 @@ fn main() {
             body,
             "    {{\"scheme\": \"{}\", \"mode\": \"{}\", \"shards\": {}, \
              \"groups\": {}, \"req_per_s\": {:.1}, \"hit_rate\": {:.4}, \
-             \"batches\": {}, \"unreclaimed\": {}, \"per_group_batches\": {:?}}}",
+             \"batches\": {}, \"unreclaimed\": {}, \
+             \"trace_p50_ns\": {}, \"trace_p99_ns\": {}, \"trace_p999_ns\": {}, \
+             \"trace_pairs\": {}, \"per_group_batches\": {:?}}}",
             c.scheme,
             c.mode,
             c.shards,
@@ -58,6 +60,10 @@ fn main() {
             c.hit_rate,
             c.batches,
             c.unreclaimed,
+            c.trace_p50_ns,
+            c.trace_p99_ns,
+            c.trace_p999_ns,
+            c.trace_pairs,
             c.group_batches,
         );
     }

@@ -152,11 +152,13 @@ impl Rack {
         let m = &mut self.mags[ci];
         if let Some(p) = m.loaded.pop() {
             ALLOC_HITS.fetch_add(1, Ordering::Relaxed);
+            crate::trace::event!("mag.hit", ci);
             return Some(p);
         }
         if !m.prev.is_empty() {
             std::mem::swap(&mut m.loaded, &mut m.prev);
             ALLOC_HITS.fetch_add(1, Ordering::Relaxed);
+            crate::trace::event!("mag.hit", ci);
             return m.loaded.pop();
         }
         // Rack empty: refill one whole chain from the class depot.
@@ -179,9 +181,11 @@ impl Rack {
                 cur = next;
             }
             ALLOC_HITS.fetch_add(1, Ordering::Relaxed);
+            crate::trace::event!("mag.hit", ci);
             return m.loaded.pop();
         }
         ALLOC_MISSES.fetch_add(1, Ordering::Relaxed);
+        crate::trace::event!("mag.miss", ci);
         None
     }
 

@@ -515,6 +515,14 @@ pub struct ShardCell {
     pub groups: usize,
     pub ops_per_sec: f64,
     pub hit_rate: f64,
+    /// Trace-derived request latency percentiles: submit→complete pairs
+    /// harvested from the flight recorder by a [`crate::trace::LatencyRecorder`]
+    /// (0 under `--trace off`).
+    pub trace_p50_ns: u64,
+    pub trace_p99_ns: u64,
+    pub trace_p999_ns: u64,
+    /// Submit/complete pairs behind those percentiles.
+    pub trace_pairs: u64,
     /// Batch dispatches summed over every group's engine.
     pub batches: u64,
     pub unreclaimed: u64,
@@ -539,6 +547,7 @@ fn shard_scaling_cell<R: Reclaimer>(
     use crate::coordinator::{Backend, Router, ServerConfig};
     let shards = shards.max(1); // tolerate a 0 in --shards like with_shards does
     let clients = *p.threads.iter().max().unwrap_or(&4);
+    crate::trace::apply_knob(p.trace_cap);
     let server = Router::<R>::start(
         ServerConfig {
             // One worker per shard: the sweep varies shard count, not total
@@ -555,6 +564,10 @@ fn shard_scaling_cell<R: Reclaimer>(
         .with_backend(Backend::synthetic()),
     )
     .expect("router start (synthetic backend)");
+    // Flight-recorder harvest: pairs shard.submit/shard.complete events
+    // into the cell's p50/p99/p999 while the load runs (a no-op under
+    // `--trace off` — nothing is emitted to pair).
+    let recorder = crate::trace::LatencyRecorder::spawn(std::time::Duration::from_millis(2));
     let mut cfg = ConfigResult::default();
     for trial in 0..p.trials {
         let server = &server;
@@ -569,6 +582,7 @@ fn shard_scaling_cell<R: Reclaimer>(
             ops
         }));
     }
+    let lat = recorder.stop();
     let agg = server.metrics();
     let per_shard = server.shard_metrics();
     let cell = ShardCell {
@@ -578,6 +592,10 @@ fn shard_scaling_cell<R: Reclaimer>(
         groups: server.group_count(),
         ops_per_sec: cfg.mean_ops_per_sec(),
         hit_rate: agg.hit_rate(),
+        trace_p50_ns: lat.p50_ns,
+        trace_p99_ns: lat.p99_ns,
+        trace_p999_ns: lat.p999_ns,
+        trace_pairs: lat.pairs,
         batches: agg.batches,
         unreclaimed: agg.unreclaimed_nodes,
         shard_requests: per_shard.iter().map(|m| m.requests).collect(),
@@ -606,6 +624,7 @@ pub fn fig_shard_scaling(p: &BenchParams) -> Vec<ShardCell> {
     let sweep_groups = p.groups != vec![1];
     let mut csv = String::from(
         "scheme,mode,shards,groups,req_per_s,hit_pct,batches,unreclaimed,\
+         trace_p50_ns,trace_p99_ns,trace_p999_ns,trace_pairs,\
          per_shard_requests,per_shard_unreclaimed,per_group_batches\n",
     );
     let mut all: Vec<ShardCell> = Vec::new();
@@ -635,22 +654,31 @@ pub fn fig_shard_scaling(p: &BenchParams) -> Vec<ShardCell> {
                     let cell = dispatch_scheme!(scheme, shard_scaling_cell, p, s, g, shared);
                     println!(
                         "  {label:<22} shards={s}: {:>9.0} req/s  hit {:>5.1}%  \
+                         trace p50={} p99={} p999={} ({} pairs)  \
                          unreclaimed {:>8}  per-shard req {:?}  unreclaimed {:?}  \
                          per-group batches {:?}",
                         cell.ops_per_sec,
                         cell.hit_rate * 100.0,
+                        fmt_ns(cell.trace_p50_ns as f64),
+                        fmt_ns(cell.trace_p99_ns as f64),
+                        fmt_ns(cell.trace_p999_ns as f64),
+                        cell.trace_pairs,
                         cell.unreclaimed,
                         cell.shard_requests,
                         cell.shard_unreclaimed,
                         cell.group_batches,
                     );
                     csv.push_str(&format!(
-                        "{},{mode},{s},{g},{:.0},{:.2},{},{},{},{},{}\n",
+                        "{},{mode},{s},{g},{:.0},{:.2},{},{},{},{},{},{},{},{},{}\n",
                         scheme.name(),
                         cell.ops_per_sec,
                         cell.hit_rate * 100.0,
                         cell.batches,
                         cell.unreclaimed,
+                        cell.trace_p50_ns,
+                        cell.trace_p99_ns,
+                        cell.trace_p999_ns,
+                        cell.trace_pairs,
                         join_u64(&cell.shard_requests),
                         join_u64(&cell.shard_unreclaimed),
                         join_u64(&cell.group_batches),
@@ -701,21 +729,38 @@ fn join_u64(v: &[u64]) -> String {
     v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(";")
 }
 
-/// One async-scaling measurement cell (E17).
-struct AsyncCell {
+/// One async-scaling measurement cell (E17). Public so the `async_scaling`
+/// bench target can flatten the sweep into `BENCH_fig_async_scaling.json`.
+pub struct AsyncCell {
+    /// [`Reclaimer::NAME`] of the scheme under test.
+    pub scheme: &'static str,
+    /// Front-end mode: `"mux"` or `"thread"`.
+    pub mode: &'static str,
+    /// Logical clients this cell drove.
+    pub clients: usize,
+    /// Engine groups the fleet ran (post-clamp; the `--groups` axis).
+    pub groups: usize,
     /// OS threads actually driving clients (executor threads on the mux,
     /// client threads — possibly capped — on thread-per-request).
-    threads_used: usize,
-    req_per_s: f64,
-    p50_ns: f64,
-    p99_ns: f64,
-    errors: u64,
+    pub threads_used: usize,
+    pub req_per_s: f64,
+    /// Client-observed latency percentiles (submit → reply, ns).
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Trace-derived request latency percentiles: submit→complete pairs
+    /// harvested from the flight recorder (0 under `--trace off`).
+    pub trace_p50_ns: u64,
+    pub trace_p99_ns: u64,
+    pub trace_p999_ns: u64,
+    /// Submit/complete pairs behind those percentiles.
+    pub trace_pairs: u64,
+    pub errors: u64,
     /// End-of-run pending-retire population across the fleet's domains.
-    unreclaimed: u64,
+    pub unreclaimed: u64,
     /// Peak of the fleet-wide `queue_depth` gauge, sampled during the run.
-    peak_queue_depth: u64,
+    pub peak_queue_depth: u64,
     /// Peak of the fleet-wide `in_flight` gauge (open completion slots).
-    peak_in_flight: u64,
+    pub peak_in_flight: u64,
 }
 
 /// E17 fixes the fleet shape (the sweep varies *client* concurrency):
@@ -748,9 +793,11 @@ fn async_scaling_cell<R: Reclaimer>(
     use crate::coordinator::{Backend, Router, ServerConfig};
     use crate::runtime::exec::Executor;
     use crate::util::monotonic_ns;
+    use crate::util::stats::LogHistogram;
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::Arc;
 
+    crate::trace::apply_knob(p.trace_cap);
     let server = Router::<R>::start(
         ServerConfig {
             workers: 1,
@@ -782,6 +829,10 @@ fn async_scaling_cell<R: Reclaimer>(
         })
     };
 
+    // Flight-recorder harvest: pairs shard.submit/shard.complete events
+    // into trace-derived percentiles while the load runs (a no-op under
+    // `--trace off`).
+    let recorder = crate::trace::LatencyRecorder::spawn(std::time::Duration::from_millis(2));
     let (threads_used, issued, errors, lat, wall_ns) = if asynchronous {
         let exec = Executor::new(p.exec_threads);
         let report = mux::drive(
@@ -796,7 +847,7 @@ fn async_scaling_cell<R: Reclaimer>(
                 seed: 0xE17,
             },
         );
-        let lat = report.sorted_latencies();
+        let lat = report.latency_hist();
         (exec.threads(), report.served() + report.errors, report.errors, lat, report.wall_ns)
     } else {
         // Thread-per-request: `clients` OS threads (capped), EXACTLY the
@@ -805,19 +856,19 @@ fn async_scaling_cell<R: Reclaimer>(
         let threads = clients.clamp(1, E17_THREAD_CAP);
         let total = clients * E17_REQS_PER_CLIENT;
         let t0 = monotonic_ns();
-        let per_client: Vec<(Vec<u64>, u64)> = std::thread::scope(|scope| {
+        let per_client: Vec<(LogHistogram, u64)> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..threads)
                 .map(|c| {
                     let server = &server;
                     let quota = total / threads + usize::from(c < total % threads);
                     scope.spawn(move || {
                         let mut rng = Xoshiro256::new(0xE17 ^ crate::util::rng::mix64(c as u64));
-                        let mut lat = Vec::with_capacity(quota);
+                        let mut lat = LogHistogram::new();
                         let mut errors = 0u64;
                         for _ in 0..quota {
                             let key = rng.skewed_key(p.key_space, 80);
                             match server.request(key) {
-                                Ok(resp) => lat.push(resp.latency_ns),
+                                Ok(resp) => lat.record(resp.latency_ns),
                                 Err(_) => errors += 1,
                             }
                         }
@@ -829,22 +880,33 @@ fn async_scaling_cell<R: Reclaimer>(
         });
         let wall_ns = monotonic_ns() - t0;
         let errors: u64 = per_client.iter().map(|(_, e)| e).sum();
-        let mut lat: Vec<f64> =
-            per_client.iter().flat_map(|(l, _)| l.iter().map(|&n| n as f64)).collect();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut lat = LogHistogram::new();
+        for (h, _) in &per_client {
+            lat.merge(h);
+        }
         (threads, total as u64, errors, lat, wall_ns)
     };
+    let tlat = recorder.stop();
 
     stop.store(true, Ordering::Release);
     let (peak_queue_depth, peak_in_flight) = sampler.join().unwrap();
     let unreclaimed = server.metrics().unreclaimed_nodes;
+    let groups_ran = server.group_count();
     server.shutdown();
 
     AsyncCell {
+        scheme: R::NAME,
+        mode: if asynchronous { "mux" } else { "thread" },
+        clients,
+        groups: groups_ran,
         threads_used,
         req_per_s: (issued - errors) as f64 / (wall_ns as f64 / 1e9),
-        p50_ns: crate::util::stats::percentile_sorted(&lat, 50.0),
-        p99_ns: crate::util::stats::percentile_sorted(&lat, 99.0),
+        p50_ns: lat.percentile(50.0) as f64,
+        p99_ns: lat.percentile(99.0) as f64,
+        trace_p50_ns: tlat.p50_ns,
+        trace_p99_ns: tlat.p99_ns,
+        trace_p999_ns: tlat.p999_ns,
+        trace_pairs: tlat.pairs,
         errors,
         unreclaimed,
         peak_queue_depth,
@@ -856,8 +918,10 @@ fn async_scaling_cell<R: Reclaimer>(
 /// latency and reclamation gauges of **thread-per-request vs the async
 /// multiplexed front-end** as logical-client concurrency grows
 /// (1k/10k/100k), per scheme, on the synthetic backend — artifact-free.
-/// See EXPERIMENTS.md §E17 for the recipe and expected shapes.
-pub fn fig_async_scaling(p: &BenchParams) {
+/// Returns the cells so the `async_scaling` bench target can write
+/// `BENCH_fig_async_scaling.json`. See EXPERIMENTS.md §E17 for the recipe
+/// and expected shapes.
+pub fn fig_async_scaling(p: &BenchParams) -> Vec<AsyncCell> {
     println!(
         "\n== async scaling — {} shard(s) × 1 worker, synthetic backend, \
          {} req/client, 80% hot-set traffic ==\n\
@@ -867,9 +931,11 @@ pub fn fig_async_scaling(p: &BenchParams) {
         E17_SHARDS, E17_REQS_PER_CLIENT, p.exec_threads, E17_IN_FLIGHT_BUDGET, E17_THREAD_CAP
     );
     let mut csv = String::from(
-        "scheme,mode,clients,groups,os_threads,req_per_s,p50_ns,p99_ns,errors,\
+        "scheme,mode,clients,groups,os_threads,req_per_s,p50_ns,p99_ns,\
+         trace_p50_ns,trace_p99_ns,trace_p999_ns,trace_pairs,errors,\
          unreclaimed,peak_queue_depth,peak_in_flight\n",
     );
+    let mut cells = Vec::new();
     for &scheme in &p.schemes {
         for &g in &p.groups {
             let g = g.max(1);
@@ -888,30 +954,39 @@ pub fn fig_async_scaling(p: &BenchParams) {
                         dispatch_scheme!(scheme, async_scaling_cell, p, clients, asynchronous, g);
                     println!(
                         "  {:<10} {mode:<7} clients={clients:<7} groups={g} threads={:<4} \
-                         {:>9.0} req/s  p50={:<9} p99={:<9} errors={:<3} \
+                         {:>9.0} req/s  p50={:<9} p99={:<9} trace p50={:<9} p99={:<9} \
+                         p999={:<9} errors={:<3} \
                          unreclaimed={:<7} peak_q={:<6} peak_inflight={}",
                         scheme.name(),
                         cell.threads_used,
                         cell.req_per_s,
                         fmt_ns(cell.p50_ns),
                         fmt_ns(cell.p99_ns),
+                        fmt_ns(cell.trace_p50_ns as f64),
+                        fmt_ns(cell.trace_p99_ns as f64),
+                        fmt_ns(cell.trace_p999_ns as f64),
                         cell.errors,
                         cell.unreclaimed,
                         cell.peak_queue_depth,
                         cell.peak_in_flight,
                     );
                     csv.push_str(&format!(
-                        "{},{mode},{clients},{g},{},{:.0},{:.0},{:.0},{},{},{},{}\n",
+                        "{},{mode},{clients},{g},{},{:.0},{:.0},{:.0},{},{},{},{},{},{},{},{}\n",
                         scheme.name(),
                         cell.threads_used,
                         cell.req_per_s,
                         cell.p50_ns,
                         cell.p99_ns,
+                        cell.trace_p50_ns,
+                        cell.trace_p99_ns,
+                        cell.trace_p999_ns,
+                        cell.trace_pairs,
                         cell.errors,
                         cell.unreclaimed,
                         cell.peak_queue_depth,
                         cell.peak_in_flight,
                     ));
+                    cells.push(cell);
                 }
             }
         }
@@ -922,6 +997,7 @@ pub fn fig_async_scaling(p: &BenchParams) {
          allocations, not OS threads — while thread-per-request saturates at the \
          thread cap; peak_in_flight stays within shards × budget on the mux)"
     );
+    cells
 }
 
 /// One net-scaling measurement cell (E18). Public so the `net_scaling`
@@ -933,8 +1009,18 @@ pub struct NetCell {
     /// Engine groups the fleet ran (post-clamp; the `--groups` axis).
     pub groups: usize,
     pub req_per_s: f64,
+    /// Client-observed round-trip latency percentiles (socket to socket).
     pub p50_ns: f64,
     pub p99_ns: f64,
+    /// Trace-derived *server-side* request latency percentiles:
+    /// submit→complete pairs harvested from the flight recorder (0 under
+    /// `--trace off`). The gap to `p50_ns`/`p99_ns` is the wire + reactor
+    /// + bridge overhead.
+    pub trace_p50_ns: u64,
+    pub trace_p99_ns: u64,
+    pub trace_p999_ns: u64,
+    /// Submit/complete pairs behind those percentiles.
+    pub trace_pairs: u64,
     /// Client-observed failures: connect errors, premature closes,
     /// non-`Ok` statuses, unanswered requests at the progress deadline.
     pub errors: u64,
@@ -969,6 +1055,7 @@ fn net_scaling_cell<R: Reclaimer>(p: &BenchParams, conns: usize, groups: usize) 
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::Arc;
 
+    crate::trace::apply_knob(p.trace_cap);
     let server = Router::<R>::start(
         ServerConfig {
             workers: 1,
@@ -1005,6 +1092,9 @@ fn net_scaling_cell<R: Reclaimer>(p: &BenchParams, conns: usize, groups: usize) 
         })
     };
 
+    // Flight-recorder harvest: pairs shard.submit/shard.complete events
+    // into trace-derived (server-side) percentiles while the storm runs.
+    let recorder = crate::trace::LatencyRecorder::spawn(std::time::Duration::from_millis(2));
     let report = storm(
         net.local_addr(),
         &StormConfig {
@@ -1016,6 +1106,7 @@ fn net_scaling_cell<R: Reclaimer>(p: &BenchParams, conns: usize, groups: usize) 
             ..StormConfig::default()
         },
     );
+    let tlat = recorder.stop();
 
     stop.store(true, Ordering::Release);
     let (peak_active, peak_in_flight) = sampler.join().unwrap();
@@ -1026,14 +1117,18 @@ fn net_scaling_cell<R: Reclaimer>(p: &BenchParams, conns: usize, groups: usize) 
     let unreclaimed = server.metrics().unreclaimed_nodes;
     server.shutdown();
 
-    let lat = report.sorted_latencies();
+    let lat = report.latency_hist();
     NetCell {
         scheme: R::NAME,
         conns,
         groups: server.group_count(),
         req_per_s: report.reqs_per_sec(),
-        p50_ns: crate::util::stats::percentile_sorted(&lat, 50.0),
-        p99_ns: crate::util::stats::percentile_sorted(&lat, 99.0),
+        p50_ns: lat.percentile(50.0) as f64,
+        p99_ns: lat.percentile(99.0) as f64,
+        trace_p50_ns: tlat.p50_ns,
+        trace_p99_ns: tlat.p99_ns,
+        trace_p999_ns: tlat.p999_ns,
+        trace_pairs: tlat.pairs,
         errors: report.errors,
         protocol_errors: listener.protocol_errors,
         bytes_in: listener.bytes_in,
@@ -1059,7 +1154,9 @@ pub fn fig_net_scaling(p: &BenchParams) -> Vec<NetCell> {
         E18_SHARDS, E18_REQS_PER_CONN, p.exec_threads
     );
     let mut csv = String::from(
-        "scheme,conns,groups,req_per_s,p50_ns,p99_ns,errors,protocol_errors,\
+        "scheme,conns,groups,req_per_s,p50_ns,p99_ns,\
+         trace_p50_ns,trace_p99_ns,trace_p999_ns,trace_pairs,\
+         errors,protocol_errors,\
          bytes_in,bytes_out,unreclaimed,peak_active,peak_in_flight\n",
     );
     let mut cells = Vec::new();
@@ -1078,12 +1175,16 @@ pub fn fig_net_scaling(p: &BenchParams) -> Vec<NetCell> {
                 let cell = dispatch_scheme!(scheme, net_scaling_cell, p, conns, g);
                 println!(
                     "  {:<10} conns={conns:<7} groups={g} {:>9.0} req/s  p50={:<9} p99={:<9} \
+                     trace p50={:<9} p99={:<9} p999={:<9} \
                      errors={:<3} proto_errs={:<3} unreclaimed={:<7} peak_active={:<7} \
                      peak_inflight={}",
                     scheme.name(),
                     cell.req_per_s,
                     fmt_ns(cell.p50_ns),
                     fmt_ns(cell.p99_ns),
+                    fmt_ns(cell.trace_p50_ns as f64),
+                    fmt_ns(cell.trace_p99_ns as f64),
+                    fmt_ns(cell.trace_p999_ns as f64),
                     cell.errors,
                     cell.protocol_errors,
                     cell.unreclaimed,
@@ -1091,11 +1192,15 @@ pub fn fig_net_scaling(p: &BenchParams) -> Vec<NetCell> {
                     cell.peak_in_flight,
                 );
                 csv.push_str(&format!(
-                    "{},{conns},{g},{:.0},{:.0},{:.0},{},{},{},{},{},{},{}\n",
+                    "{},{conns},{g},{:.0},{:.0},{:.0},{},{},{},{},{},{},{},{},{},{},{}\n",
                     scheme.name(),
                     cell.req_per_s,
                     cell.p50_ns,
                     cell.p99_ns,
+                    cell.trace_p50_ns,
+                    cell.trace_p99_ns,
+                    cell.trace_p999_ns,
+                    cell.trace_pairs,
                     cell.errors,
                     cell.protocol_errors,
                     cell.bytes_in,
@@ -1302,6 +1407,64 @@ pub fn micro_region_gate(p: &BenchParams, baseline: Option<&str>, record: Option
             }
         }
     }
+    ok
+}
+
+/// ns per region cycle with one flight-recorder event per
+/// `region_ops`-cycle burst — the event density the serving seams emit at
+/// (roughly one submit/complete pair per request, each request spanning
+/// many region cycles inside the cache).
+fn traced_region_burst_ns<R: Reclaimer>(secs: f64, region_ops: usize) -> f64 {
+    let domain = DomainRef::<R>::new_owned();
+    let h = domain.register();
+    let burst = region_ops.max(1);
+    let per_burst = time_ns_per_op(secs, || {
+        for _ in 0..burst {
+            let region = crate::reclaim::Region::enter(&h);
+            std::hint::black_box(&region);
+        }
+        crate::trace::event!("bench.region_burst");
+    });
+    per_burst / burst as f64
+}
+
+/// Allowed trace-on / trace-off ratio on the region-cycle hot path
+/// (ISSUE 9 acceptance: the always-on recorder costs ≤5%).
+const TRACE_GATE_RATIO: f64 = 1.05;
+
+/// CI gate for the flight recorder's hot-path cost: region-cycle bursts
+/// with one `trace::event!` per burst, measured trace-off then trace-on,
+/// per scheme. Fails when trace-on exceeds [`TRACE_GATE_RATIO`]× trace-off
+/// (plus 0.5 ns absolute slack so near-zero-cost cycles aren't
+/// noise-flaky). Leaves tracing enabled — the recorder is always-on by
+/// default and the gate must not change that.
+pub fn trace_overhead_gate(p: &BenchParams) -> bool {
+    let secs = p.secs.clamp(0.02, 0.5);
+    let mut ok = true;
+    println!(
+        "== trace overhead gate (1 event per {} region cycles; \
+         on ≤ {TRACE_GATE_RATIO}× off) ==",
+        p.region_ops.max(1)
+    );
+    println!("{:<10}{:>14}{:>14}{:>9}", "scheme", "off ns/cyc", "on ns/cyc", "ratio");
+    for &scheme in &p.schemes {
+        crate::trace::set_enabled(false);
+        let off = dispatch_scheme!(scheme, traced_region_burst_ns, secs, p.region_ops);
+        crate::trace::set_enabled(true);
+        let on = dispatch_scheme!(scheme, traced_region_burst_ns, secs, p.region_ops);
+        let ratio = on / off.max(1e-9);
+        println!("{:<10}{off:>14.2}{on:>14.2}{ratio:>9.3}", scheme.name());
+        if on > off * TRACE_GATE_RATIO + 0.5 {
+            eprintln!(
+                "GATE FAIL: tracing adds >{:.0}% to the region cycle for {} \
+                 ({on:.2} ns vs {off:.2} ns)",
+                (TRACE_GATE_RATIO - 1.0) * 100.0,
+                scheme.name()
+            );
+            ok = false;
+        }
+    }
+    crate::trace::set_enabled(true);
     ok
 }
 

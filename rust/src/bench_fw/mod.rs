@@ -42,6 +42,12 @@ pub struct BenchParams {
     /// on|off|<cap>`): 0 disables the layer, the default is
     /// [`crate::alloc::DEFAULT_MAGAZINE_CAP`]. E20 ablation axis.
     pub magazine_cap: usize,
+    /// Per-thread flight-recorder ring capacity (`--trace on|off|<cap>`):
+    /// 0 disables recording (trace-off is one relaxed-atomic branch per
+    /// instrumentation site), the default is
+    /// [`crate::trace::DEFAULT_RING_CAP`]. The trace-overhead ablation
+    /// axis; applied per cell via [`crate::trace::apply_knob`].
+    pub trace_cap: usize,
     /// Operations spanned by one region_guard (paper: 100).
     pub region_ops: usize,
     /// List benchmark: initial size (paper: 10; key range = 2×size).
@@ -82,6 +88,7 @@ impl Default for BenchParams {
             schemes: SchemeId::PAPER_SET.to_vec(),
             alloc: Policy::Pool,
             magazine_cap: crate::alloc::DEFAULT_MAGAZINE_CAP,
+            trace_cap: crate::trace::DEFAULT_RING_CAP,
             region_ops: 100,
             list_size: 10,
             workload_pct: 20,
@@ -138,6 +145,12 @@ impl BenchParams {
                     std::process::exit(2);
                 }),
             };
+        }
+        if let Some(t) = args.get("trace") {
+            p.trace_cap = crate::trace::parse_knob(t).unwrap_or_else(|| {
+                eprintln!("invalid --trace {t} (on|off|<cap>)");
+                std::process::exit(2);
+            });
         }
         p.region_ops = args.usize_or("region-ops", p.region_ops);
         p.list_size = args.u64_or("list-size", p.list_size);
@@ -215,5 +228,16 @@ mod tests {
         assert_eq!(parse("--magazines on").magazine_cap, crate::alloc::DEFAULT_MAGAZINE_CAP);
         assert_eq!(parse("--magazines off").magazine_cap, 0);
         assert_eq!(parse("--magazines 16").magazine_cap, 16);
+    }
+
+    #[test]
+    fn trace_axis_parses() {
+        let parse = |s: &str| {
+            BenchParams::from_args(&Args::parse_from(s.split_whitespace().map(String::from)))
+        };
+        assert_eq!(parse("").trace_cap, crate::trace::DEFAULT_RING_CAP);
+        assert_eq!(parse("--trace on").trace_cap, crate::trace::DEFAULT_RING_CAP);
+        assert_eq!(parse("--trace off").trace_cap, 0);
+        assert_eq!(parse("--trace 4096").trace_cap, 4096);
     }
 }

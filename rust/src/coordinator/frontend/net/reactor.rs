@@ -268,6 +268,7 @@ impl Reactor {
                     let id = self.next_id;
                     self.next_id += 1;
                     self.conns.insert(id, Conn::new(stream, Instant::now()));
+                    crate::trace::event!("net.accept", id);
                     self.shared.metrics.accepted.fetch_add(1, Relaxed);
                     self.shared.metrics.active.fetch_add(1, Relaxed);
                 }
@@ -307,6 +308,7 @@ impl Reactor {
                 // their slots — route_completed drops the orphan frames.
                 Ok(0) => return false,
                 Ok(n) => {
+                    crate::trace::event!("net.read", n);
                     self.shared.metrics.bytes_in.fetch_add(n as u64, Relaxed);
                     c.last_activity = Instant::now();
                     c.fb.extend(&self.scratch[..n]);
@@ -368,6 +370,7 @@ impl Reactor {
             match c.stream.write(chunk) {
                 Ok(0) => return false,
                 Ok(n) => {
+                    crate::trace::event!("net.write", n);
                     c.outbox.drain(..n);
                     self.shared.metrics.bytes_out.fetch_add(n as u64, Relaxed);
                     c.last_activity = Instant::now();
@@ -431,6 +434,7 @@ impl Reactor {
         self.shared.metrics.active.fetch_sub(1, Relaxed);
         self.shared.metrics.closed.fetch_add(1, Relaxed);
         if evicted {
+            crate::trace::event!("net.evict");
             self.shared.metrics.idle_evicted.fetch_add(1, Relaxed);
         }
         drop(c);

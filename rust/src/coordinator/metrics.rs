@@ -170,6 +170,12 @@ pub struct MetricsSnapshot {
     pub net_protocol_errors: u64,
     pub net_bytes_in: u64,
     pub net_bytes_out: u64,
+    /// Flight-recorder counters (process-wide — set once by
+    /// `Router::metrics` from [`crate::trace::stats`], never summed):
+    /// per-thread trace rings created, and events recorded across them
+    /// (monotonic, includes overwritten events).
+    pub trace_rings: u64,
+    pub trace_recorded: u64,
 }
 
 impl Metrics {
@@ -203,6 +209,8 @@ impl Metrics {
             net_protocol_errors: 0,
             net_bytes_in: 0,
             net_bytes_out: 0,
+            trace_rings: 0,
+            trace_recorded: 0,
         }
     }
 }
@@ -279,6 +287,15 @@ impl MetricsSnapshot {
         self.net_bytes_in = s.bytes_in;
         self.net_bytes_out = s.bytes_out;
     }
+
+    /// Copy the flight-recorder counters out of a [`crate::trace::stats`]
+    /// aggregate (`Router::metrics` calls this once, post roll-up — the
+    /// same single-set discipline as `unreclaimed_nodes`, `mag_*` and
+    /// `net_*`).
+    pub fn set_trace_stats(&mut self, s: &crate::trace::TraceStats) {
+        self.trace_rings = s.rings;
+        self.trace_recorded = s.recorded;
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -318,6 +335,11 @@ impl std::fmt::Display for MetricsSnapshot {
                 self.net_bytes_in,
                 self.net_bytes_out,
             )?;
+        }
+        // Likewise the recorder block: only when tracing has recorded
+        // something (trace-off snapshots keep the historical line).
+        if self.trace_recorded > 0 {
+            write!(f, " trace_rings={} trace_events={}", self.trace_rings, self.trace_recorded)?;
         }
         Ok(())
     }
@@ -457,5 +479,24 @@ mod tests {
         // A socketless snapshot keeps the historical line shape.
         let plain = MetricsSnapshot::default().to_string();
         assert!(!plain.contains("net_accepted"));
+    }
+
+    #[test]
+    fn trace_counters_set_once_not_summed() {
+        let stats = crate::trace::TraceStats { rings: 4, recorded: 123 };
+        let mut s = MetricsSnapshot::default();
+        s.set_trace_stats(&stats);
+        assert_eq!(s.trace_rings, 4);
+        assert_eq!(s.trace_recorded, 123);
+        // Roll-up must not double the process-wide recorder counters.
+        let mut agg = MetricsSnapshot::default();
+        agg.add_counters(&s);
+        agg.add_counters(&s);
+        assert_eq!(agg.trace_recorded, 0, "router sets trace_* once, post roll-up");
+        let text = s.to_string();
+        assert!(text.contains("trace_events=123"));
+        // An untraced snapshot keeps the historical line shape.
+        let plain = MetricsSnapshot::default().to_string();
+        assert!(!plain.contains("trace_events"));
     }
 }

@@ -58,6 +58,25 @@ use std::time::Duration;
 /// `CacheServer` *is* a router (of one shard, unless configured larger).
 pub type CacheServer<R> = Router<R>;
 
+/// The poison key of the trace crash-test path (`serve --crash-test`):
+/// when [`enable_crash_test`] has been called, a shard worker that
+/// dequeues a request for this key panics, exercising the flight
+/// recorder's panic-hook snapshot end to end. Inert unless armed — a
+/// production client sending `u32::MAX` hits the normal cache path.
+pub const CRASH_TEST_KEY: u32 = u32::MAX;
+
+static CRASH_TEST: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Arm the [`CRASH_TEST_KEY`] worker-panic injection (process-wide;
+/// test/CI tooling only).
+pub fn enable_crash_test() {
+    CRASH_TEST.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+pub(crate) fn crash_test_enabled() -> bool {
+    CRASH_TEST.load(std::sync::atomic::Ordering::Relaxed)
+}
+
 /// A computed partial result: 256 f32 = 1024 bytes, the paper's payload.
 pub type Payload = [f32; DIM];
 

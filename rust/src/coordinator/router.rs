@@ -287,6 +287,9 @@ impl<R: Reclaimer> Router<R> {
         // Listener counters likewise: one aggregate over every live
         // `frontend::net` listener in the process, set once post roll-up.
         agg.set_net_stats(&super::frontend::net::net_stats());
+        // And the flight recorder's: ring count and events recorded are
+        // process-wide, set once.
+        agg.set_trace_stats(&crate::trace::stats());
         agg
     }
 
@@ -490,8 +493,10 @@ fn batcher_loop<R: Reclaimer>(
         // group's shards).
         let keys: Vec<u32> = waiting.keys().copied().take(max_batch).collect();
         let seeds: Vec<i32> = keys.iter().map(|&k| k as i32).collect();
+        crate::trace::event!("batch.dispatch", seeds.len());
         match engine.execute(&seeds) {
             Ok(results) => {
+                crate::trace::event!("batch.return", keys.len());
                 group_metrics.batches.fetch_add(1, Ordering::Relaxed);
                 for (key, row) in keys.iter().zip(results) {
                     let Some((slot, reqs)) = waiting.remove(key) else { continue };
@@ -506,12 +511,15 @@ fn batcher_loop<R: Reclaimer>(
                         shard.metrics.evictions_observed.fetch_add(1, Ordering::Relaxed);
                     }
                     for req in reqs {
-                        let Request { t0, reply, _in_flight: token, .. } = req;
+                        let Request { t0, trace_id, reply, _in_flight: token, .. } = req;
                         // Gauge closes before the send wakes the waiter —
                         // same ordering as the shard worker's hit path (the
                         // waiter's freed budget permit may admit the next
                         // request immediately).
                         drop(token);
+                        if trace_id != 0 {
+                            crate::trace::event!("shard.complete", trace_id);
+                        }
                         reply.send(Response {
                             data: Box::new(payload),
                             hit: false,
@@ -528,6 +536,7 @@ fn batcher_loop<R: Reclaimer>(
                 // `Status::Dropped`) instead of hanging until its recv
                 // deadline. The batcher keeps serving.
                 group_metrics.engine_errors.fetch_add(1, Ordering::Relaxed);
+                crate::trace::event!("batch.error", keys.len());
                 eprintln!("[batcher g{gid}] execute failed: {e:#}");
                 for key in keys {
                     waiting.remove(&key);

@@ -31,6 +31,10 @@ use std::time::Duration;
 pub(crate) struct Request {
     pub(crate) key: u32,
     pub(crate) t0: u64,
+    /// Flight-recorder correlation id pairing this request's
+    /// `shard.submit` event with its eventual `shard.complete` (0 when
+    /// tracing was off at submit time — no complete event is emitted).
+    pub(crate) trace_id: u32,
     /// RAII leg of the shard's `in_flight` gauge: rides with the request
     /// through every path (hit, batcher, drain) and drops exactly once.
     /// Declared BEFORE `reply` deliberately: struct fields drop in
@@ -150,6 +154,12 @@ impl<R: Reclaimer> Shard<R> {
         }
         let (tx, fut) = completion_pair();
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        // Flight recorder: correlation id + submit event. Trace-off cost
+        // is the one `enabled()` branch (ids are only minted under it).
+        let trace_id = if crate::trace::enabled() { crate::trace::next_request_id() } else { 0 };
+        if trace_id != 0 {
+            crate::trace::event!("shard.submit", trace_id);
+        }
         // Incremented BEFORE the enqueue: a dequeuing worker's decrement is
         // then always preceded by its matching increment, so the u64 gauge
         // can never transiently underflow in a snapshot.
@@ -159,6 +169,7 @@ impl<R: Reclaimer> Shard<R> {
             Request {
                 key,
                 t0: monotonic_ns(),
+                trace_id,
                 reply: tx,
                 _in_flight: self.shared.metrics.in_flight_token(),
             },
@@ -237,19 +248,30 @@ fn worker_loop<R: Reclaimer>(slot: usize, shared: &ShardShared<R>, miss_tx: mpsc
             Some(req) => {
                 idle_spins = 0;
                 shared.metrics.queue_depth.fetch_sub(1, Ordering::Release);
+                // Crash-test injection (`serve --crash-test`): a worker
+                // that dequeues the poison key panics right here, so the
+                // trace panic hook's dump demonstrably survives a dying
+                // worker. Unwinding drops the request, which closes its
+                // completion slot — the submitter errors promptly.
+                if req.key == super::CRASH_TEST_KEY && super::crash_test_enabled() {
+                    panic!("crash-test: injected worker panic (slot {slot})");
+                }
                 // Guarded cache read: the payload is copied out under the
                 // guard (the "reuse" path of the paper's simulation).
                 let hit = shared.cache.get(&handle, &req.key, |v| Box::new(*v));
                 match hit {
                     Some(data) => {
                         shared.metrics.hits.fetch_add(1, Ordering::Relaxed);
-                        let Request { t0, reply, _in_flight: token, .. } = req;
+                        let Request { t0, trace_id, reply, _in_flight: token, .. } = req;
                         // Close the in-flight gauge BEFORE the send wakes
                         // the waiter: the waiter may release a budget permit
                         // that admits the next request, and the gauge must
                         // never read above shards × budget (the bound the
                         // back-pressure test asserts).
                         drop(token);
+                        if trace_id != 0 {
+                            crate::trace::event!("shard.complete", trace_id);
+                        }
                         reply.send(Response {
                             data,
                             hit: true,

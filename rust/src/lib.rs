@@ -81,6 +81,16 @@
 //!   reactor (std-only `poll(2)` shim) frames a length-prefixed wire
 //!   protocol and fulfils the same completion slots over thousands of
 //!   concurrent loopback connections (E18).
+//! * [`trace`] — an always-on, lock-free **flight recorder** (DESIGN.md
+//!   §10): every seam above — shard submit/complete, batcher
+//!   dispatch/return, retire→reclaim, magazine hit/miss, the net reactor,
+//!   the executor — drops 16-byte events into per-thread ring buffers via
+//!   [`trace::event!`](trace_event). Trace-off is a single relaxed-atomic
+//!   branch (`--trace on|off|<cap>`); a chained panic hook snapshots the
+//!   last 30 s of all rings to a self-describing dump (`repro trace view`
+//!   decodes it), and [`trace::LatencyRecorder`] pairs submit/complete
+//!   events into the real p50/p99/p999 cells the E16/E17/E18 figures
+//!   report.
 //! * [`util`] — std-only stand-ins for `rand`/`clap`/`criterion`/
 //!   `proptest`/`anyhow`/`crossbeam_utils::CachePadded`.
 //!
@@ -137,4 +147,5 @@ pub mod coordinator;
 pub mod ds;
 pub mod reclaim;
 pub mod runtime;
+pub mod trace;
 pub mod util;

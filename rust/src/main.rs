@@ -15,10 +15,12 @@
 //! repro shard-scaling [opts]                  # E16 (artifact-free)
 //! repro async-scaling [opts]                  # E17 (artifact-free)
 //! repro net-scaling [opts]                    # E18 (loopback TCP storm)
+//! repro trace view PATH [--json]              # decode a flight-recorder dump
 //!
 //! common options:
 //!   --threads 1,2,4   --trials N   --secs S   --schemes all|ebr,stamp,...
-//!   --alloc pool|system   --magazines on|off|CAP   --workload PCT   --csv out.csv   --paper
+//!   --alloc pool|system   --magazines on|off|CAP   --trace on|off|CAP
+//!   --workload PCT   --csv out.csv   --paper
 //! ```
 
 use emr::bench_fw::figures::{self, Workload};
@@ -33,7 +35,7 @@ use emr::reclaim::{Reclaimer, SchemeId};
 use emr::runtime::exec::Executor;
 use emr::util::cli::Args;
 use emr::util::rng::Xoshiro256;
-use emr::util::stats::{percentile_sorted, Summary};
+use emr::util::stats::LogHistogram;
 
 fn main() {
     let args = Args::parse();
@@ -67,6 +69,10 @@ fn main() {
             other => usage(&format!("ablation {:?}", other)),
         },
         Some("serve") => serve(&args),
+        Some("trace") => match positional.next() {
+            Some("view") => trace_view(positional.next(), &args),
+            other => usage(&format!("trace {:?}", other)),
+        },
         Some("shard-scaling") => {
             // The returned cells feed `BENCH_fig_shard_scaling.json` in the
             // bench target; the CLI path just prints the tables.
@@ -79,6 +85,35 @@ fn main() {
             figures::fig_net_scaling(&params);
         }
         _ => usage(""),
+    }
+}
+
+/// `repro trace view PATH [--json]`: decode a flight-recorder dump (a
+/// crash snapshot or any [`emr::trace::write_snapshot`] output) to text
+/// or JSON on stdout.
+fn trace_view(path: Option<&str>, args: &Args) {
+    let Some(path) = path else {
+        eprintln!("usage: repro trace view PATH [--json]");
+        std::process::exit(2);
+    };
+    match emr::trace::read_dump(std::path::Path::new(path)) {
+        Ok(dump) => {
+            if args.flag("json") {
+                print!("{}", dump.to_json());
+            } else {
+                println!(
+                    "# {} events, {} labels ({})",
+                    dump.events.len(),
+                    dump.labels.len(),
+                    path
+                );
+                print!("{}", dump.to_text());
+            }
+        }
+        Err(e) => {
+            eprintln!("cannot read trace dump {path}: {e}");
+            std::process::exit(1);
+        }
     }
 }
 
@@ -114,6 +149,19 @@ fn serve(args: &Args) {
         eprintln!("unknown --backend (pjrt|synthetic)");
         std::process::exit(2);
     });
+    // Flight recorder: `--trace on|off|<cap>` (default: on), and the crash
+    // hook is installed up front so any panic — injected or real — leaves
+    // a dump under --trace-dir.
+    if let Some(t) = args.get("trace") {
+        let cap = emr::trace::parse_knob(t).unwrap_or_else(|| {
+            eprintln!("invalid --trace {t} (on|off|<cap>)");
+            std::process::exit(2);
+        });
+        emr::trace::apply_knob(cap);
+    }
+    let trace_dir = args.get_or("trace-dir", ".").to_string();
+    emr::trace::install_panic_hook(&trace_dir);
+    let crash_test = args.flag("crash-test");
 
     struct ServeOpts {
         frontend: Frontend,
@@ -124,6 +172,10 @@ fn serve(args: &Args) {
         key_space: u64,
         listen: std::net::SocketAddr,
         cfg: ServerConfig,
+        /// `--crash-test`: after the load, arm the worker-panic injection
+        /// and submit the poison key — the dying worker must leave a trace
+        /// dump and the request must error (not hang).
+        crash_test: bool,
     }
 
     fn finish<R: Reclaimer>(
@@ -132,18 +184,18 @@ fn serve(args: &Args) {
         requests: usize,
         served: usize,
         wall_s: f64,
-        all: &[f64],
+        hist: &LogHistogram,
+        crash_test: bool,
     ) {
-        let s = Summary::of(all);
         println!("\n== compute-cache serve ({}) ==", R::NAME);
         println!("clients={clients} requests/client={requests} wall={wall_s:.2}s");
         println!(
             "throughput: {:.0} req/s   latency p50={} p95={} p99={} max={}",
             served as f64 / wall_s,
-            emr::util::stats::fmt_ns(percentile_sorted(all, 50.0)),
-            emr::util::stats::fmt_ns(percentile_sorted(all, 95.0)),
-            emr::util::stats::fmt_ns(percentile_sorted(all, 99.0)),
-            emr::util::stats::fmt_ns(s.max),
+            emr::util::stats::fmt_ns(hist.percentile(50.0) as f64),
+            emr::util::stats::fmt_ns(hist.percentile(95.0) as f64),
+            emr::util::stats::fmt_ns(hist.percentile(99.0) as f64),
+            emr::util::stats::fmt_ns(hist.max() as f64),
         );
         println!("{}", server.metrics());
         if server.shard_count() > 1 {
@@ -157,6 +209,20 @@ fn serve(args: &Args) {
             }
         }
         println!("cache entries at end: {}", server.cache_len());
+        if crash_test {
+            // Arm the injection only now, with the rings full of a real
+            // run's events, so the panic hook's dump is a meaningful one.
+            emr::coordinator::enable_crash_test();
+            match server.request(emr::coordinator::CRASH_TEST_KEY) {
+                Err(_) => println!(
+                    "crash-test: worker panicked as injected; request errored promptly"
+                ),
+                Ok(_) => {
+                    eprintln!("crash-test: poison request unexpectedly succeeded");
+                    std::process::exit(1);
+                }
+            }
+        }
         server.shutdown();
     }
 
@@ -170,6 +236,7 @@ fn serve(args: &Args) {
             key_space,
             listen,
             cfg,
+            crash_test,
         } = o;
         let shards = cfg.shards;
         let server = CacheServer::<R>::start(cfg).unwrap_or_else(|e| {
@@ -187,17 +254,17 @@ fn serve(args: &Args) {
                     groups
                 );
                 let t0 = emr::util::monotonic_ns();
-                let latencies: Vec<Vec<f64>> = std::thread::scope(|scope| {
+                let latencies: Vec<LogHistogram> = std::thread::scope(|scope| {
                     let handles: Vec<_> = (0..clients)
                         .map(|c| {
                             let server = &server;
                             scope.spawn(move || {
                                 let mut rng = Xoshiro256::new(0xE2E ^ c as u64);
-                                let mut lat = Vec::with_capacity(requests);
+                                let mut lat = LogHistogram::new();
                                 for _ in 0..requests {
                                     let key = rng.below(key_space) as u32;
                                     let resp = server.request(key).expect("request failed");
-                                    lat.push(resp.latency_ns as f64);
+                                    lat.record(resp.latency_ns);
                                 }
                                 lat
                             })
@@ -206,9 +273,11 @@ fn serve(args: &Args) {
                     handles.into_iter().map(|h| h.join().unwrap()).collect()
                 });
                 let wall_s = (emr::util::monotonic_ns() - t0) as f64 / 1e9;
-                let mut all: Vec<f64> = latencies.into_iter().flatten().collect();
-                all.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                finish(&server, clients, requests, clients * requests, wall_s, &all);
+                let mut all = LogHistogram::new();
+                for h in &latencies {
+                    all.merge(h);
+                }
+                finish(&server, clients, requests, clients * requests, wall_s, &all, crash_test);
             }
             Frontend::Async => {
                 println!(
@@ -239,8 +308,8 @@ fn serve(args: &Args) {
                 if report.errors > 0 {
                     eprintln!("warning: {} request(s) errored", report.errors);
                 }
-                let all = report.sorted_latencies();
-                finish(&server, clients, requests, report.served() as usize, wall_s, &all);
+                let all = report.latency_hist();
+                finish(&server, clients, requests, report.served() as usize, wall_s, &all, crash_test);
             }
             Frontend::Net => {
                 println!(
@@ -279,8 +348,8 @@ fn serve(args: &Args) {
                 // for the `server.metrics()` line inside `finish`.
                 net.shutdown();
                 let wall_s = report.wall_ns as f64 / 1e9;
-                let all = report.sorted_latencies();
-                finish(&server, clients, requests, report.received as usize, wall_s, &all);
+                let all = report.latency_hist();
+                finish(&server, clients, requests, report.received as usize, wall_s, &all, crash_test);
                 // The CI smoke contract: every request answered, zero
                 // protocol errors.
                 if report.errors > 0 {
@@ -309,6 +378,7 @@ fn serve(args: &Args) {
         key_space,
         listen,
         cfg,
+        crash_test,
     };
     dispatch_scheme!(scheme, run, opts);
 }
@@ -331,12 +401,14 @@ fn usage(context: &str) -> ! {
          \x20   [--shards N] [--groups N] [--shared-domain] [--backend pjrt|synthetic]\n\
          \x20   [--frontend thread|async|net] [--clients N] [--exec-threads T] [--in-flight B]\n\
          \x20   [--listen ADDR:PORT]               (net front; port 0 = ephemeral)\n\
+         \x20   [--trace-dir DIR] [--crash-test]   (flight recorder: crash dumps, panic injection)\n\
          \x20 shard-scaling                        router shard sweep, artifact-free (E16)\n\
          \x20 async-scaling                        async-mux vs thread-per-request, artifact-free (E17)\n\
          \x20 net-scaling                          TCP connection storm over loopback (E18)\n\
+         \x20 trace view PATH [--json]             decode a flight-recorder dump\n\
          \n\
          common options: --threads 1,2,4 --trials N --secs S --schemes all\n\
-         \x20               --alloc pool|system --magazines on|off|CAP\n\
+         \x20               --alloc pool|system --magazines on|off|CAP --trace on|off|CAP\n\
          \x20               --workload PCT --csv FILE --paper"
     );
     std::process::exit(2)

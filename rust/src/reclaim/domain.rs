@@ -156,6 +156,7 @@ impl<R: Reclaimer> Domain<R> {
     /// the wrapper retire sites ([`LocalHandle::retire`], `GuardPtr::reclaim`)
     /// right before the scheme's `retire` runs.
     pub(crate) fn track_retire(&self, hdr: &super::retire::RetireHeader) {
+        crate::trace::event!("smr.retire");
         hdr.set_pending_counter(&self.pending_retires);
         self.pending_retires.fetch_add(1, Ordering::Relaxed);
     }

@@ -164,6 +164,7 @@ pub unsafe fn prepare_retire<T: Send + Sync + 'static, R: Reclaimer>(
 /// The node must be safe to reclaim (no live references) and reclaimed
 /// exactly once.
 pub unsafe fn reclaim_one(r: Retired) {
+    crate::trace::event!("smr.reclaim");
     let hdr = &*r;
     let node = hdr.node.load(Ordering::Relaxed) as *mut ();
     let drop_fn: unsafe fn(*mut ()) =

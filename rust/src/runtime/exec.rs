@@ -57,6 +57,7 @@ struct Task {
 impl Wake for Task {
     fn wake(self: Arc<Self>) {
         if !self.queued.swap(true, Ordering::AcqRel) {
+            crate::trace::event!("exec.wake");
             let exec = self.exec.clone();
             exec.push(self);
         }
@@ -307,6 +308,7 @@ fn executor_thread(shared: &ExecShared) {
         };
         // Clear the queued marker before polling (see `Task::queued`).
         task.queued.swap(false, Ordering::AcqRel);
+        crate::trace::event!("exec.poll");
         let waker = Waker::from(task.clone());
         let mut cx = Context::from_waker(&waker);
         let mut slot = task.future.lock().unwrap();

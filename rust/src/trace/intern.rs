@@ -1,0 +1,88 @@
+//! Label interning: event slots carry a `u16` id, not a string.
+//!
+//! The table only ever grows and only holds `&'static str`s — labels are
+//! call-site literals (see the [`crate::trace_event!`] macro), so the
+//! mutex here is touched once per *call site*, never per event:
+//! [`LazyLabel`] caches the resolved id in a per-site atomic.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+fn table() -> &'static Mutex<Vec<&'static str>> {
+    static TABLE: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Intern `name`, returning its stable `u16` id. Idempotent. Panics if
+/// a process somehow defines more than 65 535 distinct labels.
+pub fn intern(name: &'static str) -> u16 {
+    let mut t = table().lock().unwrap();
+    if let Some(i) = t.iter().position(|&n| n == name) {
+        return i as u16;
+    }
+    assert!(t.len() < u16::MAX as usize, "trace label table full");
+    t.push(name);
+    (t.len() - 1) as u16
+}
+
+/// The label string for an id (diagnostics; dumps embed their own table).
+pub fn label_name(id: u16) -> Option<&'static str> {
+    table().lock().unwrap().get(id as usize).copied()
+}
+
+/// Snapshot of the whole table, index = id (what dumps serialize).
+pub fn label_table() -> Vec<&'static str> {
+    table().lock().unwrap().clone()
+}
+
+/// A lazily interned label for one `event!` call site: resolves through
+/// the intern table once, then serves the id from a relaxed atomic.
+pub struct LazyLabel {
+    name: &'static str,
+    /// 0 = unresolved; otherwise `id + 1`.
+    cached: AtomicU32,
+}
+
+impl LazyLabel {
+    pub const fn new(name: &'static str) -> Self {
+        Self { name, cached: AtomicU32::new(0) }
+    }
+
+    #[inline]
+    pub fn id(&self) -> u16 {
+        match self.cached.load(Ordering::Relaxed) {
+            0 => self.resolve(),
+            c => (c - 1) as u16,
+        }
+    }
+
+    #[cold]
+    fn resolve(&self) -> u16 {
+        let id = intern(self.name);
+        self.cached.store(id as u32 + 1, Ordering::Relaxed);
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent() {
+        let a = intern("test.intern.alpha");
+        let b = intern("test.intern.beta");
+        assert_ne!(a, b);
+        assert_eq!(intern("test.intern.alpha"), a);
+        assert_eq!(label_name(a), Some("test.intern.alpha"));
+        assert!(label_table().len() as u32 > a.max(b) as u32);
+    }
+
+    #[test]
+    fn lazy_label_caches() {
+        static L: LazyLabel = LazyLabel::new("test.intern.lazy");
+        let first = L.id();
+        assert_eq!(L.id(), first);
+        assert_eq!(label_name(first), Some("test.intern.lazy"));
+    }
+}

@@ -1,0 +1,189 @@
+//! Always-on, lock-free flight recorder (DESIGN.md §10).
+//!
+//! Every layer of the serving stack — shard submit/complete, batcher
+//! dispatch/return, the retire→reclaim funnel, magazine hit/miss, the
+//! net reactor, the executor — drops compact binary events into
+//! per-thread ring buffers via [`event!`](crate::trace::event):
+//!
+//! ```text
+//! event = { ts: u64 monotonic ns, label: u16 interned, tid: u16, arg: u32 }
+//! ```
+//!
+//! The design goals, in priority order:
+//!
+//! 1. **Trace-off is a branch.** [`enabled`] is one relaxed atomic load;
+//!    when it is false the [`event!`] macro does nothing else. The
+//!    recorder can therefore stay compiled into every hot path
+//!    (retire/reclaim fire per node) and still be an honest ablation
+//!    axis (`--trace on|off|<cap>`; the E13 trace-overhead CI gate pins
+//!    on ≤ 1.05× off).
+//! 2. **Writers never coordinate.** Each thread owns one fixed-size,
+//!    power-of-two ring ([`ring`]) and is its only producer: a push is
+//!    two relaxed seqlock stores around three relaxed field stores —
+//!    no CAS, no sharing, overwrite-oldest when full.
+//! 3. **Drain-on-demand, not stream.** Nothing reads the rings in
+//!    steady state. A [`ring::Drainer`] (cursor per ring) harvests new
+//!    events when *asked* — by the bench framework's
+//!    [`recorder::LatencyRecorder`] every few milliseconds, or by the
+//!    crash hook exactly once. Torn slots (overwritten mid-read) are
+//!    detected by the per-slot sequence and counted, never surfaced.
+//! 4. **Survive the crash.** [`snapshot::install_panic_hook`] chains to
+//!    the previously installed hook and writes the last
+//!    [`snapshot::DEFAULT_CRASH_WINDOW_NS`] of all rings — merged and
+//!    timestamp-sorted — to a self-describing binary dump that
+//!    `repro trace view` decodes offline.
+//!
+//! Labels are interned once per call site ([`LazyLabel`] inside the
+//! macro expansion), so steady-state emission never touches the intern
+//! table.
+
+pub mod intern;
+pub mod recorder;
+pub mod ring;
+pub mod snapshot;
+
+pub use intern::{intern, label_name, LazyLabel};
+pub use recorder::{LatencyRecorder, LatencySummary, RecorderThread};
+pub use ring::{Drained, Drainer, RawEvent, DEFAULT_RING_CAP};
+pub use snapshot::{install_panic_hook, read_dump, write_snapshot, Dump, SnapshotInfo};
+
+/// Re-export of the [`trace_event!`](crate::trace_event) macro as
+/// `trace::event!` — the spelling instrumentation sites use.
+pub use crate::trace_event as event;
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+
+/// The always-on default: recording is enabled unless `--trace off`.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Is the recorder on? One relaxed load — this is the *entire* trace-off
+/// cost at every instrumentation site (the `event!` macro checks it
+/// before touching anything else).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on or off (the `--trace` knob; also the E13 overhead
+/// gate's toggle). Existing ring contents are kept.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Apply a `--trace on|off|<cap>` knob value parsed to a capacity:
+/// `0` disables recording; anything else enables it and sets the
+/// per-thread ring capacity (rounded up to a power of two) used by
+/// rings created *after* this call.
+pub fn apply_knob(cap: usize) {
+    if cap == 0 {
+        set_enabled(false);
+    } else {
+        ring::set_capacity(cap);
+        set_enabled(true);
+    }
+}
+
+/// Parse a `--trace on|off|<cap>` CLI value into the capacity encoding
+/// `apply_knob` takes (`0` = off).
+pub fn parse_knob(s: &str) -> Option<usize> {
+    match s {
+        "on" | "true" => Some(DEFAULT_RING_CAP),
+        "off" | "false" => Some(0),
+        n => match n.parse::<usize>() {
+            Ok(0) | Err(_) => None,
+            Ok(c) => Some(c),
+        },
+    }
+}
+
+/// Emit one event into the calling thread's ring. Callers go through
+/// [`event!`] (which performs the [`enabled`] check and label interning);
+/// this function unconditionally records.
+#[inline]
+pub fn emit(label: u16, arg: u32) {
+    ring::push(crate::util::monotonic_ns(), label, arg);
+}
+
+/// Correlation ids pairing `shard.submit` with `shard.complete` events
+/// (the [`recorder::LatencyRecorder`] join key). Wrapping is fine: by the
+/// time an id recurs, its predecessor has long been drained or
+/// overwritten.
+static NEXT_REQUEST_ID: AtomicU32 = AtomicU32::new(1);
+
+/// A fresh request correlation id. Call only under [`enabled`] — the
+/// fetch-add is the one shared-write this module ever does on a hot
+/// path, and trace-off must stay a pure branch.
+#[inline]
+pub fn next_request_id() -> u32 {
+    NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Aggregate recorder counters (surfaced once per fleet via
+/// `MetricsSnapshot::set_trace_stats`, like the magazine/net stats).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct TraceStats {
+    /// Per-thread rings ever created (threads that emitted ≥ 1 event).
+    pub rings: u64,
+    /// Events ever recorded, summed over rings (monotonic; includes
+    /// events since overwritten).
+    pub recorded: u64,
+}
+
+/// Process-wide recorder counters.
+pub fn stats() -> TraceStats {
+    ring::stats()
+}
+
+/// Record one event at an instrumentation seam:
+/// `trace::event!("shard.submit", id)` (or argless, arg = 0).
+///
+/// Expansion order is the whole contract: first the [`enabled()`] branch
+/// (one relaxed load — all of trace-off), then the per-call-site
+/// [`LazyLabel`] resolves its interned id (one relaxed load after the
+/// first hit), then [`emit`] timestamps and pushes. The label must be a
+/// string literal — interning is keyed on call sites, not dynamic data.
+#[macro_export]
+macro_rules! trace_event {
+    ($name:literal, $arg:expr) => {{
+        if $crate::trace::enabled() {
+            static __TRACE_LBL: $crate::trace::LazyLabel = $crate::trace::LazyLabel::new($name);
+            $crate::trace::emit(__TRACE_LBL.id(), $arg as u32);
+        }
+    }};
+    ($name:literal) => {
+        $crate::trace_event!($name, 0u32)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_parses() {
+        assert_eq!(parse_knob("on"), Some(DEFAULT_RING_CAP));
+        assert_eq!(parse_knob("off"), Some(0));
+        assert_eq!(parse_knob("4096"), Some(4096));
+        assert_eq!(parse_knob("0"), None);
+        assert_eq!(parse_knob("bogus"), None);
+    }
+
+    #[test]
+    fn request_ids_advance() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn macro_emits_under_enabled() {
+        // The default is enabled; other tests in this binary only ever
+        // turn it back on, so this cannot race to a false failure.
+        set_enabled(true);
+        let before = stats().recorded;
+        crate::trace::event!("test.macro_emits", 7);
+        crate::trace::event!("test.macro_emits");
+        let after = stats().recorded;
+        assert!(after >= before + 2);
+    }
+}

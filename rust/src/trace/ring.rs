@@ -1,0 +1,283 @@
+//! Per-thread event rings: single-producer seqlock slots, overwrite-oldest,
+//! drained on demand by any thread through a cursor ([`Drainer`]).
+//!
+//! Each thread that emits gets one fixed-size, power-of-two [`Ring`],
+//! registered process-wide so drains and crash snapshots can walk every
+//! ring without the owners' cooperation. A push is wait-free and touches
+//! only the owner's cache lines:
+//!
+//! ```text
+//! seq[slot] = 2·pos+1      (relaxed)   "writing"
+//! release fence                         readers that see the data see the odd seq
+//! ts/payload stores         (relaxed)
+//! seq[slot] = 2·pos+2      (release)   "published at position pos"
+//! head      = pos+1        (release)
+//! ```
+//!
+//! Readers run the classic C++11 seqlock validation (Boehm): load `seq`
+//! (acquire) — relaxed data loads — acquire fence — reload `seq`; accept
+//! only if both reads equal `2·pos+2`. Every field is an atomic, so a
+//! lost race is a *discarded* slot, never a torn or UB read. Because the
+//! sequence encodes the absolute position (not just a generation bit), a
+//! reader can never confuse lap `k`'s slot with lap `k+1`'s.
+//!
+//! Rings are never unregistered: a dead thread's final events stay
+//! drainable (exactly what a flight recorder wants), and the registry's
+//! `Arc`s bound ring memory by the historical thread count.
+
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default per-thread ring capacity in events (must be a power of two).
+/// 16 Ki events × 24 B/slot = 384 KiB per emitting thread.
+pub const DEFAULT_RING_CAP: usize = 1 << 14;
+
+/// Per-thread ring capacity used for rings created from now on.
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAP);
+
+/// Set the capacity (in events) for subsequently created rings; rounded
+/// up to a power of two, floor 8 (the `--trace <cap>` knob).
+pub fn set_capacity(cap: usize) {
+    CAPACITY.store(cap.max(8).next_power_of_two(), Ordering::Relaxed);
+}
+
+struct Slot {
+    /// 0 = never written; `2·pos+1` = being written at `pos`;
+    /// `2·pos+2` = holds the event pushed at position `pos`.
+    seq: AtomicU64,
+    ts: AtomicU64,
+    /// `label << 48 | arg` (16 label bits spare for future schema use).
+    payload: AtomicU64,
+}
+
+/// One thread's event ring. Produced into only by its owning thread;
+/// drained by anyone.
+pub struct Ring {
+    id: u32,
+    mask: u64,
+    /// Next write position (monotonic; slot index is `head & mask`).
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl Ring {
+    fn new(id: u32, cap: usize) -> Self {
+        let cap = cap.max(8).next_power_of_two();
+        let slots = (0..cap)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                ts: AtomicU64::new(0),
+                payload: AtomicU64::new(0),
+            })
+            .collect();
+        Self { id, mask: (cap - 1) as u64, head: AtomicU64::new(0), slots }
+    }
+
+    fn capacity(&self) -> u64 {
+        self.mask + 1
+    }
+
+    /// Owner-only push (single producer; enforced by TLS access).
+    #[inline]
+    fn push(&self, ts: u64, label: u16, arg: u32) {
+        let pos = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(pos & self.mask) as usize];
+        slot.seq.store(pos.wrapping_mul(2).wrapping_add(1), Ordering::Relaxed);
+        // Readers that observe the data stores below must also observe
+        // the odd ("writing") sequence above.
+        fence(Ordering::Release);
+        slot.ts.store(ts, Ordering::Relaxed);
+        slot.payload.store((label as u64) << 48 | arg as u64, Ordering::Relaxed);
+        slot.seq.store(pos.wrapping_mul(2).wrapping_add(2), Ordering::Release);
+        self.head.store(pos.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Seqlock read of the slot written at absolute position `pos`.
+    /// `None` when the slot has been overwritten (or is mid-write).
+    fn read(&self, pos: u64) -> Option<RawEvent> {
+        let want = pos.wrapping_mul(2).wrapping_add(2);
+        let slot = &self.slots[(pos & self.mask) as usize];
+        let s1 = slot.seq.load(Ordering::Acquire);
+        if s1 != want {
+            return None;
+        }
+        let ts = slot.ts.load(Ordering::Relaxed);
+        let payload = slot.payload.load(Ordering::Relaxed);
+        // Order the data loads above before the validating reload below.
+        fence(Ordering::Acquire);
+        if slot.seq.load(Ordering::Relaxed) != want {
+            return None;
+        }
+        Some(RawEvent {
+            ts,
+            label: (payload >> 48) as u16,
+            tid: self.id as u16,
+            arg: payload as u32,
+        })
+    }
+}
+
+/// One decoded event as stored in a ring (label still an interned id).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct RawEvent {
+    pub ts: u64,
+    pub label: u16,
+    /// Ring (≈ thread) id, truncated to 16 bits for the dump format.
+    pub tid: u16,
+    pub arg: u32,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+#[cold]
+fn new_ring() -> Arc<Ring> {
+    let mut reg = registry().lock().unwrap();
+    let ring = Arc::new(Ring::new(reg.len() as u32, CAPACITY.load(Ordering::Relaxed)));
+    reg.push(ring.clone());
+    ring
+}
+
+thread_local! {
+    static RING: std::cell::OnceCell<Arc<Ring>> = const { std::cell::OnceCell::new() };
+}
+
+/// Push one event into the calling thread's ring (creating and
+/// registering it on first use). Events emitted during TLS teardown are
+/// silently dropped — a flight recorder must never abort a dying thread.
+#[inline]
+pub(crate) fn push(ts: u64, label: u16, arg: u32) {
+    let _ = RING.try_with(|cell| cell.get_or_init(new_ring).push(ts, label, arg));
+}
+
+/// Aggregate ring counters (see [`crate::trace::stats`]).
+pub(crate) fn stats() -> crate::trace::TraceStats {
+    let reg = registry().lock().unwrap();
+    crate::trace::TraceStats {
+        rings: reg.len() as u64,
+        recorded: reg.iter().map(|r| r.head.load(Ordering::Relaxed)).sum(),
+    }
+}
+
+/// Result of one [`Drainer::drain`] pass.
+#[derive(Debug, Default)]
+pub struct Drained {
+    /// Events new since the previous pass, grouped by ring, ascending
+    /// position within each ring — **not** globally timestamp-sorted.
+    pub events: Vec<RawEvent>,
+    /// Events that were overwritten (ring lapped the cursor) or torn by
+    /// a concurrent overwrite before this pass could read them.
+    pub lost: u64,
+}
+
+/// An incremental consumer over all rings: remembers, per ring, the next
+/// position to read, so periodic drains see every event exactly once
+/// (minus overwrites, which are counted in [`Drained::lost`]).
+#[derive(Default)]
+pub struct Drainer {
+    /// `cursors[ring.id]` = next unread position in that ring.
+    cursors: Vec<u64>,
+}
+
+impl Drainer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A drainer whose cursors start at the **current** head of every
+    /// existing ring: subsequent drains see only events emitted after
+    /// this call (per-trial isolation for the bench recorder).
+    pub fn from_now() -> Self {
+        let mut d = Self::default();
+        let rings: Vec<Arc<Ring>> = registry().lock().unwrap().clone();
+        for ring in &rings {
+            let id = ring.id as usize;
+            if d.cursors.len() <= id {
+                d.cursors.resize(id + 1, 0);
+            }
+            d.cursors[id] = ring.head.load(Ordering::Acquire);
+        }
+        d
+    }
+
+    /// Harvest everything new since the last pass.
+    pub fn drain(&mut self) -> Drained {
+        // Snapshot the registry under the lock, read rings outside it:
+        // draining must never block emitters (they don't take the lock)
+        // or other drainers for longer than the Vec clone.
+        let rings: Vec<Arc<Ring>> = registry().lock().unwrap().clone();
+        let mut out = Drained::default();
+        for ring in &rings {
+            let id = ring.id as usize;
+            if self.cursors.len() <= id {
+                self.cursors.resize(id + 1, 0);
+            }
+            let head = ring.head.load(Ordering::Acquire);
+            let cursor = self.cursors[id];
+            // Oldest position that can still be resident. Anything
+            // between the cursor and it was overwritten unread.
+            let lo = head.saturating_sub(ring.capacity()).max(cursor);
+            out.lost += lo - cursor;
+            for pos in lo..head {
+                match ring.read(pos) {
+                    Some(ev) => out.events.push(ev),
+                    None => out.lost += 1,
+                }
+            }
+            self.cursors[id] = head;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_and_reads_back() {
+        let ring = Ring::new(9999, 8);
+        for i in 0..20u64 {
+            ring.push(i, 1, i as u32);
+        }
+        // Positions 0..12 are overwritten; 12..20 resident.
+        assert!(ring.read(0).is_none());
+        assert!(ring.read(11).is_none());
+        for pos in 12..20 {
+            let ev = ring.read(pos).expect("resident slot");
+            assert_eq!(ev.ts, pos);
+            assert_eq!(ev.arg, pos as u32);
+            assert_eq!(ev.label, 1);
+        }
+        assert!(ring.read(20).is_none(), "unwritten position");
+    }
+
+    #[test]
+    fn payload_packs_label_and_arg() {
+        let ring = Ring::new(4242, 8);
+        ring.push(7, 0xABCD, 0xDEAD_BEEF);
+        let ev = ring.read(0).unwrap();
+        assert_eq!(ev.label, 0xABCD);
+        assert_eq!(ev.arg, 0xDEAD_BEEF);
+        assert_eq!(ev.tid, 4242 & 0xFFFF);
+    }
+
+    #[test]
+    fn drainer_sees_each_event_once() {
+        // Emit through the real TLS path so the global registry is used.
+        crate::trace::set_enabled(true);
+        let mut d = Drainer::from_now();
+        let label = crate::trace::intern("test.drain_once");
+        for i in 0..100u32 {
+            crate::trace::emit(label, i);
+        }
+        let first = d.drain();
+        let mine: Vec<u32> =
+            first.events.iter().filter(|e| e.label == label).map(|e| e.arg).collect();
+        assert_eq!(mine, (0..100).collect::<Vec<_>>());
+        let second = d.drain();
+        assert!(second.events.iter().all(|e| e.label != label), "no event seen twice");
+    }
+}

@@ -1,0 +1,235 @@
+//! Crash snapshots: serialize every ring — merged, timestamp-sorted —
+//! to a self-describing binary dump, and decode such dumps back
+//! (`repro trace view`).
+//!
+//! ## Dump format (version 1, little-endian)
+//!
+//! ```text
+//! magic    8  b"EMRTRC1\n"
+//! labels   u32 count, then per label: u32 byte-length + UTF-8 bytes
+//! events   u64 count, then per event (16 B):
+//!          u64 ts_ns | u16 label | u16 tid | u32 arg
+//! ```
+//!
+//! The label table is embedded so a dump is readable by any build — ids
+//! are file-local, not process-local.
+//!
+//! ## The panic hook
+//!
+//! [`install_panic_hook`] snapshots the last
+//! [`DEFAULT_CRASH_WINDOW_NS`] of trace into
+//! `<dir>/trace-crash-<pid>.bin` whenever any thread panics. It
+//! **chains**: the previously installed hook (default backtrace printer
+//! or a user's) runs first, then the snapshot is written — and a second
+//! install is a no-op, so layered init paths can all call it safely.
+
+use std::io::{self, Read as _, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::ring::{Drainer, RawEvent};
+
+const MAGIC: &[u8; 8] = b"EMRTRC1\n";
+
+/// How much history the panic hook keeps: the last 30 s of events.
+pub const DEFAULT_CRASH_WINDOW_NS: u64 = 30_000_000_000;
+
+/// What a snapshot wrote (event count after windowing, and how many
+/// resident events were lost to concurrent overwrites mid-read).
+#[derive(Debug)]
+pub struct SnapshotInfo {
+    pub events: u64,
+    pub lost: u64,
+}
+
+/// Drain all rings and write a dump to `path`. `window_ns` keeps only
+/// events within that distance of the newest event's timestamp
+/// (`None` = everything still resident).
+pub fn write_snapshot(path: &Path, window_ns: Option<u64>) -> io::Result<SnapshotInfo> {
+    let drained = Drainer::new().drain();
+    let mut events = drained.events;
+    events.sort_by_key(|e| e.ts);
+    if let (Some(w), Some(last)) = (window_ns, events.last().map(|e| e.ts)) {
+        let cut = last.saturating_sub(w);
+        events.retain(|e| e.ts >= cut);
+    }
+
+    let labels = super::intern::label_table();
+    let mut buf: Vec<u8> = Vec::with_capacity(64 + labels.len() * 24 + events.len() * 16);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+    for l in &labels {
+        buf.extend_from_slice(&(l.len() as u32).to_le_bytes());
+        buf.extend_from_slice(l.as_bytes());
+    }
+    buf.extend_from_slice(&(events.len() as u64).to_le_bytes());
+    for e in &events {
+        buf.extend_from_slice(&e.ts.to_le_bytes());
+        buf.extend_from_slice(&e.label.to_le_bytes());
+        buf.extend_from_slice(&e.tid.to_le_bytes());
+        buf.extend_from_slice(&e.arg.to_le_bytes());
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&buf)?;
+    f.sync_all()?;
+    Ok(SnapshotInfo { events: events.len() as u64, lost: drained.lost })
+}
+
+/// A decoded dump: the embedded label table plus timestamp-sorted events.
+#[derive(Debug)]
+pub struct Dump {
+    pub labels: Vec<String>,
+    pub events: Vec<RawEvent>,
+}
+
+impl Dump {
+    /// The label string for an event (falls back to the numeric id for
+    /// dumps written by a different build).
+    pub fn label(&self, e: &RawEvent) -> String {
+        self.labels
+            .get(e.label as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("label#{}", e.label))
+    }
+
+    /// One line per event: `ts_ns  label  tid  arg`.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&format!("{:>16} {:<24} tid={:<5} arg={}\n", e.ts, self.label(e), e.tid, e.arg));
+        }
+        out
+    }
+
+    /// The dump as a JSON object (labels resolved inline).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"events\": [\n");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "    {{\"ts_ns\": {}, \"label\": \"{}\", \"tid\": {}, \"arg\": {}}}",
+                e.ts,
+                self.label(e).escape_default(),
+                e.tid,
+                e.arg
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("trace dump: {msg}"))
+}
+
+/// Read and validate a dump written by [`write_snapshot`].
+pub fn read_dump(path: &Path) -> io::Result<Dump> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    let mut at = 0usize;
+    let mut take = |n: usize| -> io::Result<&[u8]> {
+        let s = bytes.get(at..at + n).ok_or_else(|| bad("truncated"))?;
+        at += n;
+        Ok(s)
+    };
+    if take(8)? != MAGIC {
+        return Err(bad("bad magic (not an EMRTRC1 dump)"));
+    }
+    let label_count = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+    let mut labels = Vec::with_capacity(label_count.min(u16::MAX as usize));
+    for _ in 0..label_count {
+        let len = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let s = std::str::from_utf8(take(len)?).map_err(|_| bad("label not UTF-8"))?;
+        labels.push(s.to_string());
+    }
+    let event_count = u64::from_le_bytes(take(8)?.try_into().unwrap());
+    let mut events = Vec::with_capacity(event_count.min(1 << 24) as usize);
+    for _ in 0..event_count {
+        let rec = take(16)?;
+        events.push(RawEvent {
+            ts: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+            label: u16::from_le_bytes(rec[8..10].try_into().unwrap()),
+            tid: u16::from_le_bytes(rec[10..12].try_into().unwrap()),
+            arg: u32::from_le_bytes(rec[12..16].try_into().unwrap()),
+        });
+    }
+    if at != bytes.len() {
+        return Err(bad("trailing bytes after event section"));
+    }
+    Ok(Dump { labels, events })
+}
+
+static HOOK_INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// The path the panic hook writes for this process under `dir`.
+pub fn crash_dump_path(dir: &Path) -> PathBuf {
+    dir.join(format!("trace-crash-{}.bin", std::process::id()))
+}
+
+/// Install the crash-snapshot panic hook, writing dumps into `dir`.
+/// Returns `false` (and does nothing) if already installed — double
+/// installation must not stack snapshot-writers or drop the chained
+/// hook. The previously installed hook always runs first.
+pub fn install_panic_hook(dir: impl Into<PathBuf>) -> bool {
+    if HOOK_INSTALLED.swap(true, Ordering::SeqCst) {
+        return false;
+    }
+    let dir: PathBuf = dir.into();
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        prev(info);
+        let path = crash_dump_path(&dir);
+        match write_snapshot(&path, Some(DEFAULT_CRASH_WINDOW_NS)) {
+            Ok(i) => eprintln!(
+                "trace: crash snapshot ({} events{}) written to {}",
+                i.events,
+                if i.lost > 0 { ", some lost to overwrite" } else { "" },
+                path.display()
+            ),
+            Err(e) => eprintln!("trace: crash snapshot failed: {e}"),
+        }
+    }));
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dump_round_trips() {
+        crate::trace::set_enabled(true);
+        let label = crate::trace::intern("test.snapshot.rt");
+        for i in 0..50u32 {
+            crate::trace::emit(label, i);
+        }
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("emr-trace-rt-{}.bin", std::process::id()));
+        let info = write_snapshot(&path, None).unwrap();
+        assert!(info.events >= 50);
+        let dump = read_dump(&path).unwrap();
+        assert!(dump.events.windows(2).all(|w| w[0].ts <= w[1].ts), "timestamp-sorted");
+        let mine: Vec<u32> = dump
+            .events
+            .iter()
+            .filter(|e| dump.label(e) == "test.snapshot.rt")
+            .map(|e| e.arg)
+            .collect();
+        assert_eq!(mine, (0..50).collect::<Vec<_>>());
+        assert!(!dump.to_text().is_empty());
+        assert!(dump.to_json().contains("\"events\""));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("emr-trace-garbage-{}.bin", std::process::id()));
+        std::fs::write(&path, b"not a dump at all").unwrap();
+        assert!(read_dump(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

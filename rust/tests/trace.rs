@@ -1,0 +1,297 @@
+//! Integration tests of the flight recorder (DESIGN.md §10): concurrent
+//! ring stress, snapshot round-trips through the on-disk dump format, the
+//! chained/idempotent panic hook, and the end-to-end crash path — a
+//! `repro serve --crash-test` run whose injected worker panic must leave
+//! a parseable crash dump behind.
+//!
+//! Tracing state (the enabled flag, ring capacity, the panic hook) is
+//! process-global, so every test that touches it serializes on [`LOCK`].
+
+use emr::trace;
+use std::sync::Mutex;
+
+/// Serializes tests that flip process-global trace state.
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold the lock even if a previous holder panicked.
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn concurrent_writers_drain_without_torn_events() {
+    let _g = lock();
+    trace::set_enabled(true);
+    const WRITERS: usize = 4;
+    const PER_WRITER: u32 = 20_000;
+
+    let mut drainer = trace::Drainer::from_now();
+    const WRITER_LABELS: [&str; WRITERS] =
+        ["test.stress.w0", "test.stress.w1", "test.stress.w2", "test.stress.w3"];
+    let labels: Vec<u16> = WRITER_LABELS.iter().map(|&n| trace::intern(n)).collect();
+
+    // Writers hammer their own rings while this thread drains
+    // concurrently — the seqlock must hand the drainer only fully
+    // published events (arg always echoes a value the writer stored
+    // under that label, never a mix of two slots).
+    let mut harvested: Vec<Vec<u32>> = vec![Vec::new(); WRITERS];
+    let mut lost = 0u64;
+    std::thread::scope(|scope| {
+        for (w, &label) in labels.iter().enumerate() {
+            scope.spawn(move || {
+                for i in 0..PER_WRITER {
+                    trace::event!("test.stress.pad"); // unrelated traffic
+                    trace::emit(label, (w as u32) << 24 | i);
+                }
+            });
+        }
+        loop {
+            let d = drainer.drain();
+            lost += d.lost;
+            let mut saw_any = false;
+            for e in &d.events {
+                if let Some(w) = labels.iter().position(|&l| l == e.label) {
+                    assert_eq!(
+                        e.arg >> 24,
+                        w as u32,
+                        "event under writer {w}'s label carries another writer's arg — torn read"
+                    );
+                    harvested[w].push(e.arg & 0x00FF_FFFF);
+                    saw_any = true;
+                }
+            }
+            let done: usize = harvested.iter().map(Vec::len).sum();
+            if !saw_any && done as u64 + lost >= (WRITERS as u64) * PER_WRITER as u64 {
+                break;
+            }
+            std::thread::yield_now();
+        }
+    });
+
+    // Overwrite-oldest accounting: every emitted event was either
+    // harvested exactly once or counted as lost — none invented, none
+    // double-drained. Per-writer sequences must stay strictly ascending
+    // (a ring is FIFO per producer; drains preserve position order).
+    for (w, seen) in harvested.iter().enumerate() {
+        assert!(
+            seen.windows(2).all(|p| p[0] < p[1]),
+            "writer {w}'s drained args not strictly ascending: duplicate or reordered event"
+        );
+    }
+    let drained: u64 = harvested.iter().map(|v| v.len() as u64).sum();
+    assert!(
+        drained <= (WRITERS as u64) * PER_WRITER as u64,
+        "drained more distinct events than were emitted"
+    );
+    assert!(drained > 0, "stress run drained nothing");
+}
+
+#[test]
+fn tiny_ring_overwrites_oldest_but_keeps_newest() {
+    let _g = lock();
+    trace::apply_knob(64); // rings created after this are 64 slots
+    let label = trace::intern("test.tiny_ring");
+    let (harvested, lost) = std::thread::spawn(move || {
+        // Fresh thread → fresh ring at the tiny capacity.
+        let mut d = trace::Drainer::from_now();
+        for i in 0..1000u32 {
+            trace::emit(label, i);
+        }
+        let d = d.drain();
+        let mine: Vec<u32> =
+            d.events.iter().filter(|e| e.label == label).map(|e| e.arg).collect();
+        (mine, d.lost)
+    })
+    .join()
+    .unwrap();
+    // The newest events survive; everything older was overwritten and
+    // shows up in the lost count rather than vanishing silently.
+    assert!(harvested.len() <= 64);
+    assert_eq!(harvested.last(), Some(&999));
+    assert!(lost >= 1000 - 64, "overwrites must be accounted as lost");
+    assert!(
+        harvested.windows(2).all(|p| p[0] < p[1]),
+        "resident tail must be in emission order"
+    );
+    trace::apply_knob(trace::DEFAULT_RING_CAP); // restore for other tests
+}
+
+#[test]
+fn snapshot_round_trips_through_dump_file() {
+    let _g = lock();
+    trace::set_enabled(true);
+    let label = trace::intern("test.snapshot.integration");
+    for i in 0..200u32 {
+        trace::emit(label, i);
+    }
+    let path = std::env::temp_dir().join(format!("emr-trace-it-{}.bin", std::process::id()));
+    let info = trace::write_snapshot(&path, None).unwrap();
+    assert!(info.events >= 200);
+
+    let dump = trace::read_dump(&path).unwrap();
+    assert!(dump.events.windows(2).all(|w| w[0].ts <= w[1].ts), "dump must be ts-sorted");
+    let mine: Vec<u32> = dump
+        .events
+        .iter()
+        .filter(|e| dump.label(e) == "test.snapshot.integration")
+        .map(|e| e.arg)
+        .collect();
+    assert_eq!(mine, (0..200).collect::<Vec<_>>());
+
+    // Both render paths of `repro trace view` resolve the embedded
+    // label table, not the process-local interner.
+    assert!(dump.to_text().contains("test.snapshot.integration"));
+    assert!(dump.to_json().contains("\"label\": \"test.snapshot.integration\""));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn panic_hook_chains_and_is_idempotent() {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    let _g = lock();
+    trace::set_enabled(true);
+    static PREV_RAN: AtomicU32 = AtomicU32::new(0);
+
+    let dir = std::env::temp_dir().join(format!("emr-trace-hook-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // A "user" hook installed first: install_panic_hook must chain to it,
+    // not replace it.
+    let inherited = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        PREV_RAN.fetch_add(1, Ordering::SeqCst);
+        inherited(info);
+    }));
+
+    assert!(trace::install_panic_hook(&dir), "first install");
+    // Regression: a second install must refuse instead of stacking
+    // another snapshot writer (which would write the dump twice and
+    // re-chain the hook to itself).
+    assert!(!trace::install_panic_hook(&dir), "second install must be a no-op");
+
+    trace::event!("test.hook.before_panic", 41);
+    let _ = std::panic::catch_unwind(|| panic!("trace test: intentional panic"));
+
+    assert_eq!(PREV_RAN.load(Ordering::SeqCst), 1, "chained previous hook must run exactly once");
+    let dump_path = trace::snapshot::crash_dump_path(&dir);
+    let dump = trace::read_dump(&dump_path).expect("panic hook must leave a parseable dump");
+    assert!(
+        dump.events.iter().any(|e| dump.label(e) == "test.hook.before_panic" && e.arg == 41),
+        "dump must contain events from before the panic"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end crash path: a full `repro serve` run with the injected
+/// worker panic (`--crash-test`) must exit cleanly (the poisoned
+/// request errors instead of hanging) and leave a parseable crash dump
+/// with real serving events in it.
+#[test]
+fn serve_crash_test_leaves_parseable_dump() {
+    let dir = std::env::temp_dir().join(format!("emr-trace-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "serve",
+            "--backend",
+            "synthetic",
+            "--scheme",
+            "stamp",
+            "--shards",
+            "2",
+            "--frontend",
+            "thread",
+            "--clients",
+            "2",
+            "--requests",
+            "50",
+            "--trace",
+            "on",
+            "--crash-test",
+        ])
+        .arg("--trace-dir")
+        .arg(&dir)
+        .output()
+        .expect("spawn repro serve");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "serve --crash-test must exit 0 (panic is confined to the worker)\n\
+         stdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("crash-test: worker panicked as injected"),
+        "poison request must error promptly; stdout:\n{stdout}"
+    );
+
+    // The child's pid is unknown; there is exactly one dump in our dir.
+    let dumps: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("trace-crash-") && n.ends_with(".bin"))
+        })
+        .collect();
+    assert_eq!(dumps.len(), 1, "expected exactly one crash dump, found {dumps:?}");
+    let dump = trace::read_dump(&dumps[0]).expect("crash dump must parse");
+    assert!(!dump.events.is_empty(), "crash dump must not be empty");
+    assert!(
+        dump.events.iter().any(|e| dump.label(e) == "shard.submit"),
+        "dump must contain the serving run's submit events"
+    );
+
+    // `repro trace view` decodes the same dump (text and JSON).
+    let view = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["trace", "view"])
+        .arg(&dumps[0])
+        .output()
+        .expect("spawn repro trace view");
+    assert!(view.status.success(), "trace view must decode the dump");
+    assert!(String::from_utf8_lossy(&view.stdout).contains("shard.submit"));
+    let json = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["trace", "view"])
+        .arg(&dumps[0])
+        .arg("--json")
+        .output()
+        .expect("spawn repro trace view --json");
+    assert!(json.status.success());
+    assert!(String::from_utf8_lossy(&json.stdout).contains("\"events\""));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The recorder pairs submit/complete events into real percentiles on a
+/// live fleet (the E16/E17/E18 measurement path).
+#[test]
+fn latency_recorder_pairs_on_live_router() {
+    use emr::coordinator::{Backend, Router, ServerConfig};
+    use emr::reclaim::stamp::StampIt;
+    let _g = lock();
+    trace::set_enabled(true);
+
+    let server = Router::<StampIt>::start(
+        ServerConfig { workers: 1, capacity: 128, buckets: 32, ..ServerConfig::default() }
+            .with_shards(2)
+            .with_backend(Backend::synthetic()),
+    )
+    .unwrap();
+    let rec = trace::LatencyRecorder::spawn(std::time::Duration::from_millis(1));
+    for key in 0..300u32 {
+        let _ = server.request(key % 64).unwrap();
+    }
+    let summary = rec.stop();
+    server.shutdown();
+
+    assert!(summary.pairs >= 250, "most submits must pair with completes: {summary:?}");
+    assert!(summary.p50_ns > 0, "p50 must be a real latency: {summary:?}");
+    assert!(
+        summary.p50_ns <= summary.p99_ns && summary.p99_ns <= summary.p999_ns,
+        "percentiles must be ordered: {summary:?}"
+    );
+    assert!(summary.max_ns >= summary.p999_ns, "{summary:?}");
+}
