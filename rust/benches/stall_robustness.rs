@@ -1,0 +1,78 @@
+//! E19: stall robustness — `Domain::unreclaimed()` growth per scheme while
+//! an injected executor task holds a guard across a never-woken future
+//! (ROADMAP item 3's async adversary). Each scheme runs a baseline cell
+//! (no adversary) and a stalled cell; the guard-across-await lint must
+//! fire in every stalled cell. Expected shapes: epoch schemes strand
+//! ~everything retired, Stamp-it everything younger than the stalled
+//! stamp, HP a bounded hazard set, Hyaline only batches born before the
+//! stalled announce.
+//!
+//! Besides the printed table (and `--csv PATH`), the sweep is written to
+//! `BENCH_fig_stall_robustness.json` (override with `--json PATH`).
+//! `--gate-hyaline-peak N` exits non-zero unless Hyaline's stalled-mode
+//! peak stays under `N` and the lint fired — the CI `stall-robustness`
+//! gate.
+//!
+//! ```bash
+//! cargo bench --bench stall_robustness -- --secs 0.5
+//! cargo bench --bench stall_robustness -- --secs 0.2 --gate-hyaline-peak 10000
+//! ```
+use emr::bench_fw::figures::{fig_stall_robustness, stall_gate};
+use emr::bench_fw::BenchParams;
+use emr::reclaim::SchemeId;
+use emr::util::cli::Args;
+use std::fmt::Write as _;
+
+fn main() {
+    let args = Args::parse();
+    let mut p = BenchParams::from_args(&args);
+    if args.get("schemes").is_none() {
+        // The robustness comparison set: the new robust scheme against the
+        // paper's scheme, one epoch representative and hazard pointers.
+        p.schemes = vec![SchemeId::Hyaline, SchemeId::Stamp, SchemeId::Ebr, SchemeId::Hp];
+    }
+    let cells = fig_stall_robustness(&p);
+
+    let mut body = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            body.push_str(",\n");
+        }
+        let series =
+            c.samples.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ");
+        let _ = write!(
+            body,
+            "    {{\"scheme\": \"{}\", \"mode\": \"{}\", \"churn_threads\": {}, \
+             \"retired\": {}, \"peak_unreclaimed\": {}, \"end_unreclaimed\": {}, \
+             \"lint_violations\": {}, \"series\": [{series}]}}",
+            c.scheme,
+            c.mode,
+            c.churn_threads,
+            c.retired,
+            c.peak_unreclaimed,
+            c.end_unreclaimed,
+            c.lint_violations,
+        );
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"stall_robustness\",\n  \"secs\": {:.3},\n  \
+         \"cells\": [\n{body}\n  ]\n}}\n",
+        p.secs
+    );
+    let path = args.get_or("json", "BENCH_fig_stall_robustness.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    if let Some(bound) = args.get("gate-hyaline-peak") {
+        let bound: u64 = bound.parse().unwrap_or_else(|_| {
+            eprintln!("--gate-hyaline-peak expects an integer, got {bound:?}");
+            std::process::exit(2);
+        });
+        if !stall_gate(&cells, bound) {
+            std::process::exit(1);
+        }
+        println!("stall-robustness gate passed (Hyaline peak ≤ {bound}, lint fired)");
+    }
+}

@@ -1468,6 +1468,271 @@ pub fn trace_overhead_gate(p: &BenchParams) -> bool {
     ok
 }
 
+// ---------------------------------------------------------------------------
+// E19: stall robustness — the async adversary
+// ---------------------------------------------------------------------------
+
+/// One E19 stall-robustness measurement cell. Public so the
+/// `stall_robustness` bench target can flatten the sweep into
+/// `BENCH_fig_stall_robustness.json`.
+pub struct StallCell {
+    /// [`Reclaimer::NAME`] of the scheme under test.
+    pub scheme: &'static str,
+    /// `baseline` (no adversary) or `stalled` (leaked-guard task injected).
+    pub mode: &'static str,
+    pub churn_threads: usize,
+    /// Nodes retired by the churn threads during the cell.
+    pub retired: u64,
+    /// Peak of `Domain::unreclaimed()` sampled during the run — the
+    /// robustness metric: bounded for Hyaline/HP, ~`retired` for epochs.
+    pub peak_unreclaimed: u64,
+    /// `Domain::unreclaimed()` after churn ended and flushing went quiet,
+    /// with the stall still live — what the scheme permanently strands.
+    pub end_unreclaimed: u64,
+    /// Downsampled `unreclaimed` time series (the E19 growth curves).
+    pub samples: Vec<u64>,
+    /// Guard-across-await lint violations recorded during the cell
+    /// (expected ≥ 1 in `stalled` mode — the lint's positive test).
+    pub lint_violations: u64,
+}
+
+/// Nodes each churn thread retires at most, bounding the memory an
+/// epoch scheme strands during the cell (the growth is linear until this
+/// cap — the curve shape is visible long before it).
+const E19_MAX_RETIRES_PER_THREAD: u64 = 200_000;
+/// Churn OS threads retiring into the measured domain.
+const E19_CHURN_THREADS: usize = 4;
+/// `unreclaimed` gauge sample cadence.
+const E19_SAMPLE_US: u64 = 1_000;
+/// Series points carried into the CSV/JSON rows.
+const E19_SERIES_POINTS: usize = 48;
+
+/// Run one (scheme, mode) cell of the E19 figure: churn threads retire
+/// into an owned domain while (in `stalled` mode) an executor task —
+/// polled once, never woken again — has registered with that domain,
+/// protected a node and leaked its guard. That is the async failure mode
+/// ROADMAP item 3 describes: the parked task's protection outlives every
+/// await point, so epoch-based schemes stop reclaiming domain-wide, while
+/// HP pins a bounded set and Hyaline strands only the batches the stalled
+/// reader could actually hold (its birth-era gate skips everything born
+/// after the leaked announce).
+fn stall_cell<R: Reclaimer>(p: &BenchParams, stalled: bool) -> StallCell {
+    use crate::reclaim::facade::lint;
+    use crate::reclaim::{Atomic, Owned};
+    use crate::runtime::exec::Executor;
+    use crate::util::monotonic_ns;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    crate::trace::apply_knob(p.trace_cap);
+    let domain = DomainRef::<R>::new_owned();
+    let violations_before = lint::violations();
+
+    // The adversary. The guard is leaked from inside a poll (guards are
+    // `!Send`, so one cannot literally live in a `Send` future across an
+    // await — leaking protection onto the executor thread is how the
+    // failure reaches production). The leaked registration deliberately
+    // outlives the executor: the stall is permanent, as a never-woken
+    // future's would be. This is also the lint's positive test — the task
+    // returns `Pending` with one more live guard than it was polled with.
+    let exec = if stalled { Some(Executor::new(1)) } else { None };
+    let _adversary = exec.as_ref().map(|exec| {
+        let armed = Arc::new(AtomicBool::new(false));
+        let join = {
+            let domain = domain.clone();
+            let armed = armed.clone();
+            let mut first = true;
+            exec.spawn(std::future::poll_fn(move |_cx| {
+                if first {
+                    first = false;
+                    let cell = Box::leak(Box::new(Atomic::<u64, R>::new(Owned::new(0xE19))));
+                    let h = Box::leak(Box::new(domain.register()));
+                    let mut g = h.guard();
+                    let _ = g.protect(cell);
+                    armed.store(true, Ordering::Release);
+                    std::mem::forget(g);
+                }
+                std::task::Poll::<()>::Pending
+            }))
+        };
+        // Churn must start only after the stall is in place (in debug
+        // builds the lint's assertion downs the task right after arming;
+        // the leaked protection persists either way).
+        while !armed.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        join
+    });
+
+    // Gauge sampler: the growth curve E19 plots.
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let domain = domain.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let (mut peak, mut series) = (0u64, Vec::new());
+            while !stop.load(Ordering::Acquire) {
+                let u = domain.domain().unreclaimed();
+                peak = peak.max(u);
+                series.push(u);
+                std::thread::sleep(std::time::Duration::from_micros(E19_SAMPLE_US));
+            }
+            (peak, series)
+        })
+    };
+
+    let deadline = monotonic_ns() + (p.secs.max(0.05) * 1e9) as u64;
+    let retired: u64 = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..E19_CHURN_THREADS)
+            .map(|t| {
+                let domain = &domain;
+                scope.spawn(move || {
+                    let h = domain.register();
+                    let mut n = 0u64;
+                    while monotonic_ns() < deadline && n < E19_MAX_RETIRES_PER_THREAD {
+                        for _ in 0..64 {
+                            h.retire_owned(Owned::<u64, R>::new(((t as u64) << 32) | n));
+                            n += 1;
+                        }
+                        h.flush();
+                    }
+                    n
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+
+    // Post-churn: flush until the backlog stops shrinking. With the stall
+    // still live this is what the scheme can permanently reclaim — near
+    // zero for robust schemes, near the peak for epoch-based ones.
+    let h = domain.register();
+    let mut last = domain.domain().unreclaimed();
+    let mut quiet = 0;
+    while quiet < 10 {
+        h.flush();
+        std::thread::sleep(std::time::Duration::from_micros(500));
+        let now = domain.domain().unreclaimed();
+        if now >= last {
+            quiet += 1;
+        } else {
+            quiet = 0;
+        }
+        last = now;
+    }
+    drop(h);
+
+    stop.store(true, Ordering::Release);
+    let (mut peak, series) = sampler.join().unwrap();
+    let end_unreclaimed = domain.domain().unreclaimed();
+    peak = peak.max(end_unreclaimed);
+
+    let samples = if series.len() <= E19_SERIES_POINTS {
+        series
+    } else {
+        let stride = series.len().div_ceil(E19_SERIES_POINTS);
+        series.iter().step_by(stride).copied().collect()
+    };
+
+    StallCell {
+        scheme: R::NAME,
+        mode: if stalled { "stalled" } else { "baseline" },
+        churn_threads: E19_CHURN_THREADS,
+        retired,
+        peak_unreclaimed: peak,
+        end_unreclaimed,
+        samples,
+        lint_violations: lint::violations() - violations_before,
+    }
+}
+
+/// E19: stall-robustness figure (ROADMAP item 3): `Domain::unreclaimed()`
+/// growth per scheme while an injected task holds a guard across a
+/// never-woken future. Expected shapes: epoch schemes (ER/NER/QSR/DEBRA)
+/// grow to ~everything retired; Stamp-it pins everything younger than the
+/// stalled stamp; HP pins a bounded hazard set; Hyaline strands only
+/// batches born before the stalled announce. Returns the cells so the
+/// `stall_robustness` bench target can write
+/// `BENCH_fig_stall_robustness.json`. See EXPERIMENTS.md §E19.
+pub fn fig_stall_robustness(p: &BenchParams) -> Vec<StallCell> {
+    println!(
+        "\n== stall robustness (E19) — {} churn thread(s) retiring into an owned \
+         domain, ≤{} retires each, ~{:.2}s; stalled mode leaks a guard from a \
+         never-woken executor task ==",
+        E19_CHURN_THREADS,
+        E19_MAX_RETIRES_PER_THREAD,
+        p.secs.max(0.05)
+    );
+    let mut csv = String::from(
+        "scheme,mode,churn_threads,retired,peak_unreclaimed,end_unreclaimed,\
+         lint_violations,series\n",
+    );
+    let mut cells = Vec::new();
+    for &scheme in &p.schemes {
+        for stalled in [false, true] {
+            let cell = dispatch_scheme!(scheme, stall_cell, p, stalled);
+            println!(
+                "  {:<10} {:<9} retired={:<8} peak_unreclaimed={:<8} \
+                 end_unreclaimed={:<8} lint_violations={}",
+                scheme.name(),
+                cell.mode,
+                cell.retired,
+                cell.peak_unreclaimed,
+                cell.end_unreclaimed,
+                cell.lint_violations,
+            );
+            let series =
+                cell.samples.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(" ");
+            csv.push_str(&format!(
+                "{},{},{},{},{},{},{},{series}\n",
+                cell.scheme,
+                cell.mode,
+                cell.churn_threads,
+                cell.retired,
+                cell.peak_unreclaimed,
+                cell.end_unreclaimed,
+                cell.lint_violations,
+            ));
+            cells.push(cell);
+        }
+    }
+    maybe_write_csv(&p.csv, &csv);
+    println!(
+        "(expected: baseline peaks stay small for every scheme; under the stall, \
+         epoch schemes' end_unreclaimed ≈ retired while Hyaline and HP stay \
+         bounded; lint_violations ≥ 1 in every stalled cell)"
+    );
+    cells
+}
+
+/// E19 CI gate: with an injected stalled guard live, Hyaline must stay
+/// bounded — peak `unreclaimed` under `bound` — and the guard-across-await
+/// lint must have fired (its positive test). Returns false on violation.
+pub fn stall_gate(cells: &[StallCell], bound: u64) -> bool {
+    let mut ok = true;
+    let mut seen = false;
+    for c in cells.iter().filter(|c| c.scheme == "Hyaline" && c.mode == "stalled") {
+        seen = true;
+        if c.peak_unreclaimed > bound {
+            eprintln!(
+                "GATE FAIL: Hyaline peak unreclaimed {} exceeds bound {bound} \
+                 under a stalled guard",
+                c.peak_unreclaimed
+            );
+            ok = false;
+        }
+        if c.lint_violations == 0 {
+            eprintln!("GATE FAIL: guard-across-await lint did not fire in the E19 adversary");
+            ok = false;
+        }
+    }
+    if !seen {
+        eprintln!("GATE FAIL: no Hyaline stalled cell in the E19 sweep");
+        ok = false;
+    }
+    ok
+}
+
 /// A1: Stamp-it global-retire threshold ablation (paper picks 20). Each
 /// threshold runs in its own domain with the knob set per-domain.
 pub fn abl_threshold(p: &BenchParams) {

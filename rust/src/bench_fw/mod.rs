@@ -9,8 +9,10 @@
 //!   the §4.4 reclamation-efficiency measurement.
 //! * [`report`] — aligned tables, CSV output, and the Table-1-style
 //!   environment dump.
-//! * [`figures`] — one entry point per paper figure; shared by the `repro`
-//!   CLI and the `cargo bench` targets.
+//! * [`figures`] — one entry point per paper figure, plus the post-paper
+//!   serving/robustness figures (E16 shard scaling, E17 async mux, E18
+//!   net front, E19 stalled-guard adversary, E20 allocator ablation);
+//!   shared by the `repro` CLI and the `cargo bench` targets.
 
 pub mod figures;
 pub mod report;

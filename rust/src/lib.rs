@@ -45,11 +45,16 @@
 //!
 //! ## Crate layout
 //!
-//! * [`reclaim`] — seven safe-memory-reclamation (SMR) schemes behind the
+//! * [`reclaim`] — eight safe-memory-reclamation (SMR) schemes behind the
 //!   [`reclaim::Reclaimer`] interface (the Rust rendering of the Robison
 //!   N3712 proposal the paper builds on): Stamp-it (the paper's
 //!   contribution), LFRC, hazard pointers, quiescent-state, epoch,
-//!   new-epoch and DEBRA, plus a leaky baseline.
+//!   new-epoch, DEBRA and Hyaline (the post-paper *robust* scheme —
+//!   per-batch refcounts with a birth-era gate, so a stalled reader
+//!   strands only the batches it could actually hold; DESIGN.md §11),
+//!   plus a leaky baseline. The facade's guard-across-await lint
+//!   ([`reclaim::facade::lint`]) catches guards leaked across executor
+//!   `Pending` polls, the failure mode Hyaline is robust against.
 //! * [`ds`] — the paper's benchmark data structures, generic over the
 //!   reclaimer and bound to a domain: Michael–Scott queue, Harris–Michael
 //!   list-based set, and a Michael-style hash-map with bounded FIFO

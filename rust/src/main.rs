@@ -78,11 +78,20 @@ fn main() {
             // bench target; the CLI path just prints the tables.
             figures::fig_shard_scaling(&params);
         }
-        Some("async-scaling") => figures::fig_async_scaling(&params),
+        Some("async-scaling") => {
+            // The returned cells feed `BENCH_fig_async_scaling.json` in the
+            // bench target; the CLI path just prints the tables.
+            figures::fig_async_scaling(&params);
+        }
         Some("net-scaling") => {
             // The returned cells feed `BENCH_fig_net_scaling.json` in the
             // bench target; the CLI path just prints the tables.
             figures::fig_net_scaling(&params);
+        }
+        Some("stall-robustness") => {
+            // The returned cells feed `BENCH_fig_stall_robustness.json` in
+            // the bench target; the CLI path just prints the tables.
+            figures::fig_stall_robustness(&params);
         }
         _ => usage(""),
     }
@@ -405,6 +414,7 @@ fn usage(context: &str) -> ! {
          \x20 shard-scaling                        router shard sweep, artifact-free (E16)\n\
          \x20 async-scaling                        async-mux vs thread-per-request, artifact-free (E17)\n\
          \x20 net-scaling                          TCP connection storm over loopback (E18)\n\
+         \x20 stall-robustness                     stalled-guard adversary per scheme (E19)\n\
          \x20 trace view PATH [--json]             decode a flight-recorder dump\n\
          \n\
          common options: --threads 1,2,4 --trials N --secs S --schemes all\n\

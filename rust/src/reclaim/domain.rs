@@ -116,6 +116,21 @@ pub struct Domain<R: Reclaimer> {
     /// [`super::retire::reclaim_one`] through the counter pointer stamped
     /// into each retired node's header.
     pending_retires: crate::util::cache_pad::CachePadded<std::sync::atomic::AtomicU64>,
+    /// Stall high-water mark: when `pending_retires` crosses this value
+    /// upward, an `smr.stall` flight-recorder event fires — the signature
+    /// of a stalled reader stranding the retire stream (E19). `0` disables.
+    stall_hwm: std::sync::atomic::AtomicU64,
+}
+
+/// Default stall high-water mark for fresh domains (see
+/// [`Domain::set_stall_watermark`]); `0` disables the event.
+static DEFAULT_STALL_HWM: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(100_000);
+
+/// Set the process-wide default stall high-water mark applied to domains
+/// created afterwards. `0` disables the `smr.stall` event by default.
+pub fn set_default_stall_watermark(hwm: u64) {
+    DEFAULT_STALL_HWM.store(hwm, Ordering::Relaxed);
 }
 
 impl<R: Reclaimer> Domain<R> {
@@ -127,6 +142,7 @@ impl<R: Reclaimer> Domain<R> {
             pending_retires: crate::util::cache_pad::CachePadded::new(
                 std::sync::atomic::AtomicU64::new(0),
             ),
+            stall_hwm: std::sync::atomic::AtomicU64::new(DEFAULT_STALL_HWM.load(Ordering::Relaxed)),
         }
     }
 
@@ -158,7 +174,20 @@ impl<R: Reclaimer> Domain<R> {
     pub(crate) fn track_retire(&self, hdr: &super::retire::RetireHeader) {
         crate::trace::event!("smr.retire");
         hdr.set_pending_counter(&self.pending_retires);
-        self.pending_retires.fetch_add(1, Ordering::Relaxed);
+        let now = self.pending_retires.fetch_add(1, Ordering::Relaxed) + 1;
+        // Fires once per upward crossing (re-arms when the backlog drains
+        // below the mark and climbs back over it).
+        let hwm = self.stall_hwm.load(Ordering::Relaxed);
+        if hwm != 0 && now == hwm {
+            crate::trace::event!("smr.stall", now.min(u32::MAX as u64) as u32);
+        }
+    }
+
+    /// Set this domain's stall high-water mark: crossing it upward emits an
+    /// `smr.stall` trace event. `0` disables. Fresh domains inherit the
+    /// process default ([`set_default_stall_watermark`]).
+    pub fn set_stall_watermark(&self, hwm: u64) {
+        self.stall_hwm.store(hwm, Ordering::Relaxed);
     }
 }
 

@@ -442,6 +442,121 @@ impl<R: Reclaimer> HandleSource<R> for &LocalHandle<R> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Guard-across-await lint
+// ---------------------------------------------------------------------------
+
+/// Detects a [`Guard`] (or raw `GuardPtr`) held across an executor park.
+///
+/// A parked task that keeps a guard alive is the stall adversary E19
+/// measures: for epoch schemes it blocks reclamation *domain-wide*, for
+/// HP/Stamp-it it pins a bounded set, and even for Hyaline it strands the
+/// batches that guard holds. Guards are `!Send`, so a guard cannot
+/// literally live inside a `Send` future across an `.await` — but a future
+/// polled on an executor thread can still leak protection onto that thread
+/// (e.g. by forgetting a guard or stashing a registered region in TLS),
+/// and a blocking future driven in place can hold one across `park()`.
+///
+/// The mechanism is a thread-local count of live guards, bumped at guard
+/// creation and dropped at guard drop. The executor snapshots it around
+/// each `poll` ([`check_after_poll`]); a task that returns `Pending` with
+/// more guards live than it started with gets flagged: a
+/// `lint.guard_await` trace event, a global violation counter, and a
+/// `debug_assert!` (caught by the executor's per-task `catch_unwind`, so a
+/// debug build kills the offending task, not the worker thread).
+///
+/// Opt out with [`set_enabled`]`(false)` (knob string: `off`).
+pub mod lint {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    static ENABLED: AtomicBool = AtomicBool::new(true);
+    static VIOLATIONS: AtomicU64 = AtomicU64::new(0);
+
+    thread_local! {
+        static LIVE_GUARDS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Hook: a guard came to life on this thread.
+    #[inline]
+    pub(crate) fn guard_created() {
+        let _ = LIVE_GUARDS.try_with(|c| c.set(c.get() + 1));
+    }
+
+    /// Hook: a guard died on this thread.
+    #[inline]
+    pub(crate) fn guard_dropped() {
+        let _ = LIVE_GUARDS.try_with(|c| c.set(c.get().saturating_sub(1)));
+    }
+
+    /// Live guards on the calling thread (0 during TLS teardown).
+    pub fn live_guards() -> u64 {
+        LIVE_GUARDS.try_with(|c| c.get()).unwrap_or(0)
+    }
+
+    /// Globally enable/disable the lint (default: enabled).
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    /// Is the lint currently enabled?
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    /// Parse an ablation-knob string (`on` / `off`), mirroring the trace
+    /// and magazine knobs.
+    pub fn apply_knob(v: &str) -> bool {
+        match v {
+            "on" | "1" | "true" => set_enabled(true),
+            "off" | "0" | "false" => set_enabled(false),
+            _ => return false,
+        }
+        true
+    }
+
+    /// Total violations recorded process-wide.
+    pub fn violations() -> u64 {
+        VIOLATIONS.load(Ordering::Relaxed)
+    }
+
+    /// Executor hook: `before` is [`live_guards`] sampled before polling a
+    /// task that has now returned `Pending`. Returns whether a violation
+    /// was recorded. Call *inside* the per-task `catch_unwind` so the
+    /// debug assertion downs the task, not the worker.
+    pub fn check_after_poll(before: u64) -> bool {
+        if !enabled() {
+            return false;
+        }
+        let after = live_guards();
+        if after <= before {
+            return false;
+        }
+        VIOLATIONS.fetch_add(1, Ordering::Relaxed);
+        crate::trace::event!("lint.guard_await", (after - before) as u32);
+        debug_assert!(
+            false,
+            "task parked while holding {} SMR guard(s) acquired during this poll \
+             (guards must not be held across an await point; \
+             opt out with reclaim::facade::lint::set_enabled(false))",
+            after - before
+        );
+        true
+    }
+
+    #[cfg(test)]
+    mod tests {
+        #[test]
+        fn knob_parses() {
+            assert!(super::apply_knob("off"));
+            assert!(!super::enabled());
+            assert!(super::apply_knob("on"));
+            assert!(super::enabled());
+            assert!(!super::apply_knob("sideways"));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

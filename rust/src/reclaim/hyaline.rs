@@ -1,0 +1,880 @@
+//! Hyaline — robust, snapshot-free reclamation with per-batch reference
+//! counts (Nikolaev & Ravindran, arXiv 1905.07903), the ninth scheme of the
+//! matrix and the first from the *robust* family: a stalled reader strands
+//! only the batches it could actually hold, never the global retire stream.
+//!
+//! ## Protocol
+//!
+//! Retired nodes accumulate in a thread-local **batch** (a plain chain
+//! through the retire header). Once the batch is large enough it is
+//! **sealed**: a [`BatchCtl`] with a reference counter is allocated, every
+//! node is pointed at it, and one node of the batch is CAS-pushed onto the
+//! **slot list** of every active reader (`HySlot::head`). Readers *enlist*
+//! by activating their slot at outermost region entry; at outermost exit
+//! they detach their slot list and decrement each listed batch's counter —
+//! whoever moves a counter to zero reclaims the whole batch. Reclamation
+//! work is therefore proportional to the number of retired nodes (amortized
+//! constant per retire), and no scheme-wide snapshot or epoch exists to get
+//! stuck.
+//!
+//! ## Robustness (the Hyaline-1R era gate)
+//!
+//! Every node records a **birth era** from a global monotone clock
+//! ([`ERA`], advanced every [`ERA_FREQ`] allocations by [`on_alloc`]).
+//! Readers announce the era they entered at (`HySlot::era`), and `protect`
+//! re-validates it: a pointer snapshot only succeeds if the global era did
+//! not move past the announced value (otherwise the announce is refreshed
+//! and the load retried). This yields the invariant *birth(n) ≤ announced
+//! era of any slot that can hold n*: the node is published before it can be
+//! loaded, and era reads are coherence-ordered along that chain. A sealing
+//! retirer may therefore **skip** any active slot whose era is older than
+//! the batch's minimum birth era — the stalled reader entered before any
+//! node of the batch existed, so it cannot hold one. That is the bounded-
+//! growth property E19 measures: a parked task holding a guard pins only
+//! batches born before its announce, while fresh churn keeps reclaiming.
+//!
+//! ## Memory ordering
+//!
+//! * Enlist vs seal is the classic Dekker pairing: readers store
+//!   `era`/`head` (Release) then `fence(SeqCst)` before loading shared
+//!   pointers; a sealer fences SeqCst (after all batch nodes were unlinked)
+//!   before scanning slots. If the scan misses a reader, the reader's
+//!   subsequent loads see the unlinks and — with the ds-level validation
+//!   every scheme here already requires for HP — cannot acquire a batch
+//!   node.
+//! * Slot push/pop: push is a CAS loop (pure push — no ABA), detach is an
+//!   unconditional `swap` to [`INACTIVE`]; the AcqRel swap acquires every
+//!   push's Release so the traversal sees each node's `slot_link`/`batch`.
+//! * The batch counter starts at 0 and is published with
+//!   `fetch_add(inserts, AcqRel)` *after* the pushes; leaving readers
+//!   `fetch_sub(1, AcqRel)`. The sum of all updates is 0 and each landing
+//!   is unique, so exactly one operation observes the counter reaching 0
+//!   and frees the batch (the Arc-style AcqRel makes all prior departures
+//!   visible to the freer).
+//!
+//! ## Deviations from the paper's presentation
+//!
+//! * The era clock is **process-global** (`on_alloc` has no domain access);
+//!   it is a pure monotone clock, so sharing it cannot couple two domains'
+//!   reclamation decisions — batches are only ever inserted into slots of
+//!   the domain they were retired into.
+//! * Batches under `max(HY_BATCH_MIN, active readers)` nodes are withheld
+//!   (there are not enough nodes to link into every slot); `flush` and
+//!   handle drop hand them over (seal attempt / orphan list), so nothing is
+//!   stranded.
+
+use std::sync::atomic::{fence, AtomicIsize, AtomicU64, AtomicUsize, Ordering};
+
+use super::domain::LocalCell;
+use super::registry::{ThreadEntry, ThreadList};
+use super::retire::{prepare_retire, reclaim_one, GlobalRetireList, Retired};
+use super::{Node, Reclaimer};
+
+/// Hyaline (robust variant, per-batch refcounts + birth-era gate).
+pub struct Hyaline;
+
+/// Slot-list sentinel: the owning thread is outside any critical region.
+/// Distinct from every real pointer (nodes are ≥ 8-byte aligned) and from
+/// null (= active with an empty list).
+const INACTIVE: usize = 1;
+
+/// Minimum batch size before a seal is attempted on the retire path.
+const HY_BATCH_MIN: usize = 8;
+
+/// `protect_if_equal` era-revalidation attempts before giving up (the
+/// interface requires bounded loops here; returning `false` is always safe
+/// — the caller restarts its snapshot).
+const PROTECT_RETRIES: usize = 16;
+
+/// Process-global birth-era clock (see module docs: monotone, shared across
+/// domains by necessity, never couples their reclamation decisions).
+static ERA: AtomicU64 = AtomicU64::new(1);
+/// Allocation tick; every [`ERA_FREQ`]-th allocation advances [`ERA`].
+static ALLOC_TICK: AtomicU64 = AtomicU64::new(0);
+/// Era advance frequency (power of two; amortizes the clock's contention).
+const ERA_FREQ: u64 = 64;
+
+/// Node header: retire metadata + batch links.
+#[derive(Default)]
+#[repr(C)]
+pub struct HyHeader {
+    retire: super::retire::RetireHeader,
+    /// Global era at allocation time (the robustness gate's input).
+    birth: AtomicU64,
+    /// `*const BatchCtl` once the node's batch is sealed.
+    batch: AtomicUsize,
+    /// Next node in a reader slot's enlist list (`Retired`).
+    slot_link: AtomicUsize,
+}
+
+impl super::retire::AsRetireHeader for HyHeader {
+    fn retire_header(&self) -> &super::retire::RetireHeader {
+        &self.retire
+    }
+}
+
+/// Recover the full Hyaline header from a retire-header pointer.
+///
+/// # Safety
+/// `r` must point at the `retire` field of a live [`HyHeader`] (all nodes
+/// retired through this scheme do — `HyHeader` is `repr(C)` with the retire
+/// header first).
+#[inline]
+unsafe fn hy<'a>(r: Retired) -> &'a HyHeader {
+    &*(r as *const HyHeader)
+}
+
+/// Sealed-batch control block: the reference counter and the whole-batch
+/// chain (linked through the retire header's `next`).
+struct BatchCtl {
+    /// Insertions minus departures; see the module's counter argument.
+    nrefs: AtomicIsize,
+    /// Head of the batch's node chain.
+    first: Retired,
+}
+
+/// Per-guard state: whether this guard's first protect entered the region.
+#[derive(Default)]
+pub struct HyGuardToken {
+    entered: bool,
+}
+
+/// Per-reader shared slot (one registry entry per registered thread).
+pub struct HySlot {
+    /// [`INACTIVE`], null (active, empty) or the newest enlisted node.
+    head: AtomicUsize,
+    /// The era this reader announced at entry / last protect validation.
+    era: AtomicU64,
+}
+
+impl Default for HySlot {
+    fn default() -> Self {
+        Self { head: AtomicUsize::new(INACTIVE), era: AtomicU64::new(0) }
+    }
+}
+
+/// Shared per-domain state.
+pub struct HyDomain {
+    slots: ThreadList<HySlot>,
+    /// Unsealed batches of exited threads (chains via `next`, sublists via
+    /// `next_list`); absorbed into the next seal attempt.
+    orphans: GlobalRetireList,
+}
+
+impl HyDomain {
+    pub const fn new() -> Self {
+        Self { slots: ThreadList::new(), orphans: GlobalRetireList::new() }
+    }
+
+    /// Readers currently inside a critical region (diagnostics/tests).
+    pub fn active_slots(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|e| e.is_active() && e.data().head.load(Ordering::Acquire) != INACTIVE)
+            .count()
+    }
+
+    /// Nodes parked on the orphan list (diagnostics).
+    pub fn orphan_count(&self) -> usize {
+        self.orphans.count()
+    }
+}
+
+impl Default for HyDomain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-thread state (cached by a [`crate::reclaim::LocalHandle`]).
+pub struct HyLocal {
+    entry: super::registry::EntryRef<HySlot>,
+    /// Critical-region nesting depth.
+    nesting: u32,
+    /// The era value currently announced in our slot (valid while nested).
+    era_cache: u64,
+    /// Current unsealed batch: manual chain via the retire header's `next`.
+    batch_head: Retired,
+    batch_tail: Retired,
+    batch_count: usize,
+    batch_min_birth: u64,
+    /// Active-reader estimate from the last registry scan: seals are only
+    /// attempted once the batch can cover that many slots, keeping the
+    /// retire path O(1) between scans.
+    active_est: usize,
+    /// Re-entrancy latch: user drops inside a seal's reclamation may retire
+    /// again; nested seal attempts are skipped (bounded recursion).
+    sealing: bool,
+}
+
+impl HyLocal {
+    fn take_batch(&mut self) -> (Retired, usize, u64) {
+        let out = (self.batch_head, self.batch_count, self.batch_min_birth);
+        self.batch_head = std::ptr::null_mut();
+        self.batch_tail = std::ptr::null_mut();
+        self.batch_count = 0;
+        self.batch_min_birth = u64::MAX;
+        out
+    }
+
+    /// Append one retired node to the unsealed batch.
+    fn push_node(&mut self, r: Retired, birth: u64) {
+        // SAFETY: `r` is a detached retired node owned by this thread.
+        unsafe {
+            (*r).set_next_in_chain(std::ptr::null_mut());
+            if self.batch_tail.is_null() {
+                self.batch_head = r;
+            } else {
+                (*self.batch_tail).set_next_in_chain(r);
+            }
+        }
+        self.batch_tail = r;
+        self.batch_count += 1;
+        self.batch_min_birth = self.batch_min_birth.min(birth);
+    }
+
+    /// Merge a detached chain back (seal abort; no user code ran since the
+    /// take, but be defensive about nested appends anyway).
+    fn put_back(&mut self, head: Retired, count: usize, min_birth: u64) {
+        if head.is_null() {
+            return;
+        }
+        let mut cur = head;
+        let mut n = 0usize;
+        loop {
+            n += 1;
+            // SAFETY: we own the detached chain.
+            let next = unsafe { (*cur).next_in_chain() };
+            if next.is_null() {
+                break;
+            }
+            cur = next;
+        }
+        debug_assert_eq!(n, count);
+        if self.batch_tail.is_null() {
+            self.batch_head = head;
+        } else {
+            // SAFETY: both chains are exclusively ours.
+            unsafe { (*self.batch_tail).set_next_in_chain(head) };
+        }
+        self.batch_tail = cur;
+        self.batch_count += count;
+        self.batch_min_birth = self.batch_min_birth.min(min_birth);
+    }
+}
+
+/// Register the calling thread: acquire/recycle a reader slot.
+pub fn register(domain: &HyDomain) -> HyLocal {
+    let entry = domain.slots.acquire(HySlot::default, |s| {
+        s.head.store(INACTIVE, Ordering::Relaxed);
+        s.era.store(0, Ordering::Relaxed);
+    });
+    HyLocal {
+        entry,
+        nesting: 0,
+        era_cache: 0,
+        batch_head: std::ptr::null_mut(),
+        batch_tail: std::ptr::null_mut(),
+        batch_count: 0,
+        batch_min_birth: u64::MAX,
+        active_est: 0,
+        sealing: false,
+    }
+}
+
+/// Enter a critical region (enlist on outermost entry).
+pub fn enter(_domain: &HyDomain, local: &LocalCell<HyLocal>) {
+    local.with(|l| {
+        l.nesting += 1;
+        if l.nesting > 1 {
+            return;
+        }
+        let e = ERA.load(Ordering::Acquire);
+        l.era_cache = e;
+        let slot = l.entry.data();
+        // Era first, then activation: a sealer that acquires the head store
+        // is guaranteed to read this era or a newer one.
+        slot.era.store(e, Ordering::Relaxed);
+        slot.head.store(0, Ordering::Release);
+    });
+    // Dekker: order the enlist stores before every subsequent shared-data
+    // load; pairs with the sealer's pre-scan fence.
+    fence(Ordering::SeqCst);
+}
+
+/// Leave a critical region; on outermost exit detach the slot list and
+/// depart from every listed batch (may reclaim — runs user drops, so the
+/// traversal happens after the borrow is released).
+pub fn exit(_domain: &HyDomain, local: &LocalCell<HyLocal>) {
+    let detached = local.with(|l| {
+        debug_assert!(l.nesting > 0, "unbalanced region exit");
+        l.nesting -= 1;
+        if l.nesting > 0 {
+            return 0;
+        }
+        // AcqRel: acquire every push's Release (the traversal below reads
+        // slot_link/batch written before those pushes).
+        l.entry.data().head.swap(INACTIVE, Ordering::AcqRel)
+    });
+    if detached != 0 && detached != INACTIVE {
+        // SAFETY: the swap detached the chain exclusively to us; nodes stay
+        // alive until their batch counter reaches zero (we hold one ref per
+        // listed node by construction).
+        unsafe { depart(detached as Retired) };
+    }
+}
+
+/// Walk a detached slot list, decrementing each batch; free batches whose
+/// counter reaches zero. Runs user drops — never call under a borrow.
+unsafe fn depart(mut cur: Retired) {
+    while !cur.is_null() {
+        let h = hy(cur);
+        // Read the link before the decrement: the decrement may free the
+        // whole batch, including this node.
+        let next = h.slot_link.load(Ordering::Relaxed) as Retired;
+        let ctl = h.batch.load(Ordering::Acquire) as *mut BatchCtl;
+        debug_assert!(!ctl.is_null(), "enlisted node without a sealed batch");
+        if (*ctl).nrefs.fetch_sub(1, Ordering::AcqRel) == 1 {
+            free_batch(ctl);
+        }
+        cur = next;
+    }
+}
+
+/// Reclaim every node of a sealed batch and its control block.
+///
+/// # Safety
+/// The batch counter reached zero: every inserted reference departed, so no
+/// reader can hold any node of the batch.
+unsafe fn free_batch(ctl: *mut BatchCtl) {
+    let mut cur = (*ctl).first;
+    drop(Box::from_raw(ctl));
+    while !cur.is_null() {
+        let next = (*cur).next_in_chain();
+        reclaim_one(cur);
+        cur = next;
+    }
+}
+
+/// Retire a node into the local batch; attempt a seal once the batch is
+/// plausibly large enough to cover every active reader.
+///
+/// # Safety
+/// See [`Reclaimer::retire`].
+pub unsafe fn retire<T: Send + Sync + 'static>(
+    domain: &HyDomain,
+    local: &LocalCell<HyLocal>,
+    node: *mut Node<T, Hyaline>,
+) {
+    let birth = (*node).header().birth.load(Ordering::Relaxed);
+    let r = prepare_retire::<T, Hyaline>(node, birth);
+    let try_now = local.with(|l| {
+        l.push_node(r, birth);
+        l.batch_count >= HY_BATCH_MIN.max(l.active_est)
+    });
+    if try_now {
+        try_seal(domain, local);
+    }
+}
+
+/// Seal the local batch (absorbing orphans first): insert one node into
+/// every active, era-eligible reader slot and publish the insert count.
+/// Aborts (keeps accumulating) while the batch has fewer nodes than there
+/// are slots to cover.
+fn try_seal(domain: &HyDomain, local: &LocalCell<HyLocal>) {
+    if local.with(|l| std::mem::replace(&mut l.sealing, true)) {
+        return; // re-entered from a reclamation drop; the outer call covers it
+    }
+    absorb_orphans(domain, local);
+    let (head, count, min_birth) = local.with(|l| l.take_batch());
+    if head.is_null() {
+        local.with(|l| l.sealing = false);
+        return;
+    }
+    // Order the scan after the unlink/retire of every batch node; pairs
+    // with the readers' enlist fences (module docs).
+    fence(Ordering::SeqCst);
+    let mut eligible: Vec<&ThreadEntry<HySlot>> = Vec::new();
+    let mut active = 0usize;
+    for e in domain.slots.iter() {
+        if !e.is_active() || e.data().head.load(Ordering::Acquire) == INACTIVE {
+            continue;
+        }
+        active += 1;
+        // Robustness gate: a reader announced before any node of this batch
+        // was born cannot hold one (birth ≤ announce invariant) — skip it,
+        // so a stalled reader strands only pre-stall batches. The era load
+        // is ordered after the head load (Acquire) and eras only grow, so a
+        // stale-low reading is impossible for an active slot.
+        if e.data().era.load(Ordering::Acquire) < min_birth {
+            continue;
+        }
+        eligible.push(e);
+    }
+    local.with(|l| l.active_est = active);
+    if count < eligible.len() {
+        // Not enough nodes to link one into every slot yet.
+        local.with(|l| {
+            l.put_back(head, count, min_birth);
+            l.sealing = false;
+        });
+        return;
+    }
+    let ctl = Box::into_raw(Box::new(BatchCtl { nrefs: AtomicIsize::new(0), first: head }));
+    // Point every node at its control block before any of them becomes
+    // visible; the publishing CAS below carries the Release.
+    // SAFETY: the chain is still exclusively ours.
+    unsafe {
+        let mut cur = head;
+        while !cur.is_null() {
+            hy(cur).batch.store(ctl as usize, Ordering::Relaxed);
+            cur = (*cur).next_in_chain();
+        }
+    }
+    let mut inserts: isize = 0;
+    let mut node = head;
+    for e in &eligible {
+        let slot = e.data();
+        let mut cur_head = slot.head.load(Ordering::Acquire);
+        loop {
+            if cur_head == INACTIVE {
+                break; // reader left between the scan and the push: skip
+            }
+            // SAFETY: `node` is non-null — inserts never exceed
+            // `eligible.len() ≤ count` (checked above).
+            unsafe { hy(node).slot_link.store(cur_head, Ordering::Relaxed) };
+            match slot.head.compare_exchange_weak(
+                cur_head,
+                node as usize,
+                Ordering::Release,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    inserts += 1;
+                    // SAFETY: as above.
+                    node = unsafe { (*node).next_in_chain() };
+                    break;
+                }
+                Err(h) => cur_head = h,
+            }
+        }
+    }
+    local.with(|l| l.sealing = false);
+    // Publish the insert count. If every inserted reference already
+    // departed (or nobody was eligible), this observer frees the batch.
+    // SAFETY: ctl is live until the counter reaches zero.
+    unsafe {
+        if (*ctl).nrefs.fetch_add(inserts, Ordering::AcqRel) == -inserts {
+            free_batch(ctl);
+        }
+    }
+}
+
+/// Move orphaned (unsealed, from exited threads) nodes into our batch.
+fn absorb_orphans(domain: &HyDomain, local: &LocalCell<HyLocal>) {
+    let mut sublist = domain.orphans.steal_all();
+    if sublist.is_null() {
+        return;
+    }
+    local.with(|l| {
+        while !sublist.is_null() {
+            // SAFETY: steal_all handed us the chains exclusively.
+            unsafe {
+                let next_list = (*sublist).next_list();
+                let mut cur = sublist;
+                while !cur.is_null() {
+                    let next = (*cur).next_in_chain();
+                    l.push_node(cur, (*cur).stamp());
+                    cur = next;
+                }
+                sublist = next_list;
+            }
+        }
+    });
+}
+
+/// Bench/test hook: force a seal attempt so everything reclaimable (e.g.
+/// with no active readers: the whole batch) is reclaimed now.
+pub fn flush(domain: &HyDomain, local: &LocalCell<HyLocal>) {
+    try_seal(domain, local);
+}
+
+/// Handle drop: orphan the unsealed batch and release the reader slot. The
+/// slot is already [`INACTIVE`] (no live guards/regions on this handle).
+pub fn unregister(domain: &HyDomain, local: &mut HyLocal) {
+    debug_assert_eq!(local.nesting, 0, "handle dropped inside a critical region");
+    debug_assert_eq!(
+        local.entry.data().head.load(Ordering::Acquire),
+        INACTIVE,
+        "live slot list at unregister"
+    );
+    let (head, _count, _min) = local.take_batch();
+    domain.orphans.push_sublist(head);
+    domain.slots.release(&local.entry);
+}
+
+/// Domain teardown: only unsealed orphan chains can remain (sealed batches
+/// free when their last reader departs, and no handles exist anymore).
+pub fn drain(domain: &mut HyDomain) {
+    // SAFETY: exclusive access — no handles, guards or regions exist.
+    unsafe {
+        domain.orphans.reclaim_where(|_| true);
+    }
+}
+
+/// Era-validated pointer snapshot: succeeds only if the global era did not
+/// move past our announce between the announce and the load, which is what
+/// makes the birth ≤ announce invariant (module docs) hold.
+fn protect_load<T: Send + Sync + 'static>(
+    local: &LocalCell<HyLocal>,
+    src: &super::ConcurrentPtr<T, Hyaline>,
+) -> super::MarkedPtr<T, Hyaline> {
+    let mut announced = local.with(|l| l.era_cache);
+    loop {
+        let p = src.load(Ordering::Acquire);
+        let e = ERA.load(Ordering::Acquire);
+        if e == announced {
+            return p;
+        }
+        announce(local, e);
+        announced = e;
+    }
+}
+
+/// Refresh our slot's era announce and fence it before the retry load.
+fn announce(local: &LocalCell<HyLocal>, e: u64) {
+    local.with(|l| {
+        l.era_cache = e;
+        l.entry.data().era.store(e, Ordering::Release);
+    });
+    fence(Ordering::SeqCst);
+}
+
+// SAFETY: a node is reclaimed only when its batch counter reaches zero,
+// i.e. after every reader slot the sealer inserted into has departed; the
+// Dekker pairing plus the era-validated protect (module docs) guarantee the
+// insertion set covers every reader that could hold a reference. Domains
+// share nothing but the monotone era clock.
+unsafe impl Reclaimer for Hyaline {
+    const NAME: &'static str = "Hyaline";
+    type Header = HyHeader;
+    type GuardState = HyGuardToken;
+    type DomainState = HyDomain;
+    type LocalState = HyLocal;
+
+    fn new_domain_state() -> Self::DomainState {
+        HyDomain::new()
+    }
+
+    crate::reclaim::domain::impl_domain_statics!(Hyaline);
+
+    fn register(domain: &Self::DomainState) -> Self::LocalState {
+        register(domain)
+    }
+
+    fn unregister(domain: &Self::DomainState, local: &mut Self::LocalState) {
+        unregister(domain, local)
+    }
+
+    fn enter_region(domain: &Self::DomainState, local: &LocalCell<Self::LocalState>) {
+        enter(domain, local)
+    }
+
+    fn exit_region(domain: &Self::DomainState, local: &LocalCell<Self::LocalState>) {
+        exit(domain, local)
+    }
+
+    #[inline]
+    fn protect<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        state: &mut Self::GuardState,
+        src: &super::ConcurrentPtr<T, Self>,
+    ) -> super::MarkedPtr<T, Self> {
+        if !state.entered {
+            state.entered = true;
+            enter(domain, local);
+        }
+        protect_load(local, src)
+    }
+
+    #[inline]
+    fn protect_if_equal<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        state: &mut Self::GuardState,
+        src: &super::ConcurrentPtr<T, Self>,
+        expected: super::MarkedPtr<T, Self>,
+    ) -> bool {
+        if !state.entered {
+            state.entered = true;
+            enter(domain, local);
+        }
+        let mut announced = local.with(|l| l.era_cache);
+        for _ in 0..PROTECT_RETRIES {
+            if src.load(Ordering::Acquire) != expected {
+                return false;
+            }
+            let e = ERA.load(Ordering::Acquire);
+            if e == announced {
+                return true;
+            }
+            announce(local, e);
+            announced = e;
+        }
+        false // era kept moving; safe to report a failed snapshot
+    }
+
+    #[inline]
+    fn release<T: Send + Sync + 'static>(
+        _domain: &Self::DomainState,
+        _local: &LocalCell<Self::LocalState>,
+        _state: &mut Self::GuardState,
+        _ptr: super::MarkedPtr<T, Self>,
+    ) {
+        // Protection is region-scoped; the region is left on guard drop.
+    }
+
+    fn drop_guard_state(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        state: &mut Self::GuardState,
+    ) {
+        if state.entered {
+            state.entered = false;
+            exit(domain, local);
+        }
+    }
+
+    unsafe fn on_alloc<T: Send + Sync + 'static>(node: *mut Node<T, Self>) {
+        let tick = ALLOC_TICK.fetch_add(1, Ordering::Relaxed);
+        if tick & (ERA_FREQ - 1) == 0 {
+            ERA.fetch_add(1, Ordering::AcqRel);
+        }
+        // Relaxed suffices: the node's publication (Release CAS at the ds
+        // layer) orders this store before any reader's access, and era
+        // coherence along that chain gives birth ≤ any later validated
+        // announce (module docs).
+        (*node).header().birth.store(ERA.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    unsafe fn retire<T: Send + Sync + 'static>(
+        domain: &Self::DomainState,
+        local: &LocalCell<Self::LocalState>,
+        node: *mut Node<T, Self>,
+    ) {
+        retire::<T>(domain, local, node)
+    }
+
+    fn flush(domain: &Self::DomainState, local: &LocalCell<Self::LocalState>) {
+        flush(domain, local)
+    }
+
+    fn drain_domain(domain: &mut Self::DomainState) {
+        drain(domain)
+    }
+}
+
+/// The global domain's Hyaline state (diagnostics; per-instance state lives
+/// in each [`crate::reclaim::Domain`]).
+pub fn domain() -> &'static HyDomain {
+    super::Domain::<Hyaline>::global().state()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reclaim::tests_common::*;
+    use crate::reclaim::{Atomic, DomainRef, MarkedPtr, Owned};
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn nodes_reclaimed_in_batches() {
+        exercise_basic_reclamation::<Hyaline>();
+    }
+
+    #[test]
+    fn guard_blocks_reclamation() {
+        exercise_guard_blocks_reclamation::<Hyaline>();
+    }
+
+    #[test]
+    fn region_guard_blocks() {
+        exercise_region_guard::<Hyaline>();
+    }
+
+    #[test]
+    fn facade_roundtrip() {
+        exercise_facade::<Hyaline>();
+    }
+
+    #[test]
+    fn domain_isolation() {
+        exercise_domain_isolation::<Hyaline>();
+    }
+
+    #[test]
+    fn concurrent_smoke() {
+        exercise_concurrent_smoke::<Hyaline>(4, 500);
+    }
+
+    /// Batch-refcount round trip on one slot: a guard-holding thread seals
+    /// a batch into its *own* slot (counter 1); nothing reclaims until the
+    /// guard drops, and the region exit alone (no flush) frees the batch.
+    #[test]
+    fn batch_refcount_round_trip() {
+        let domain = DomainRef::<Hyaline>::new_owned();
+        let h = domain.register();
+        let drops = Arc::new(AtomicUsize::new(0));
+
+        // Allocate everything *before* protecting: births are then ≤ the
+        // guard's announced era no matter how far concurrent tests advance
+        // the process-global clock, so the era gate must include our slot.
+        let victims: Vec<_> = (0..(2 * HY_BATCH_MIN) as u64)
+            .map(|i| Owned::<Payload, Hyaline>::new(Payload::new(i, &drops)))
+            .collect();
+
+        let cell: Atomic<Payload, Hyaline> = Atomic::new(Owned::new(Payload::new(0, &drops)));
+        let mut g = h.guard();
+        assert!(g.protect(&cell).is_some());
+        assert_eq!(domain.domain().state().active_slots(), 1);
+
+        // Enough retires to force a seal while our slot is the only active
+        // reader: every batch lands in our own slot list.
+        for v in victims {
+            h.retire_owned(v);
+        }
+        h.flush();
+        assert_eq!(drops.load(Ordering::Relaxed), 0, "guarded slot must hold every batch");
+
+        // The departure at region exit is the only reclamation trigger.
+        drop(g);
+        assert_eq!(
+            drops.load(Ordering::Relaxed),
+            2 * HY_BATCH_MIN,
+            "slot departure must free the batches it held"
+        );
+
+        // Cleanup: the protected node itself.
+        let node = cell.load(Ordering::Acquire);
+        assert!(!node.is_null());
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        // SAFETY: unlinked above; retired exactly once.
+        unsafe { h.retire(node.get()) };
+        assert!(flush_until(&h, || drops.load(Ordering::Relaxed) == 2 * HY_BATCH_MIN + 1));
+    }
+
+    /// The robustness property: a reader stalled since before a batch's
+    /// nodes were even *allocated* is skipped by the era gate, so fresh
+    /// churn keeps reclaiming while the reader stays parked.
+    #[test]
+    fn stalled_reader_strands_only_its_batches() {
+        let domain = DomainRef::<Hyaline>::new_owned();
+        let drops = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let ready = Arc::new(std::sync::Barrier::new(2));
+
+        // A node the stalled reader protects (born before its announce).
+        let cell = Arc::new(Atomic::<Payload, Hyaline>::new(Owned::new(Payload::new(
+            7, &drops,
+        ))));
+
+        let staller = {
+            let domain = domain.clone();
+            let cell = cell.clone();
+            let stop = stop.clone();
+            let ready = ready.clone();
+            std::thread::spawn(move || {
+                let h = domain.register();
+                let mut g = h.guard();
+                let p = g.protect(&cell).expect("protect the pre-stall node");
+                ready.wait();
+                while !stop.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+                assert_eq!(p.read(), 7, "protected node must stay alive across the stall");
+            })
+        };
+        ready.wait();
+
+        // Advance the era clock well past the staller's announce (dropping
+        // an unpublished Owned frees it directly — no retires, no orphans
+        // to drag the churn batches' min_birth down), then churn: every
+        // batch below has min_birth > the stalled announce.
+        for _ in 0..(2 * ERA_FREQ) {
+            drop(Owned::<u64, Hyaline>::new(0));
+        }
+        let h = domain.register();
+        let churn = 4 * HY_BATCH_MIN as u64;
+        let churn_drops = Arc::new(AtomicUsize::new(0));
+        for i in 0..churn {
+            h.retire_owned(Owned::<Payload, Hyaline>::new(Payload::new(i, &churn_drops)));
+        }
+        let ok = flush_until(&h, || churn_drops.load(Ordering::Relaxed) == churn as usize);
+        assert!(
+            ok,
+            "era gate failed: stalled reader stranded fresh batches ({} of {churn} freed)",
+            churn_drops.load(Ordering::Relaxed)
+        );
+
+        stop.store(true, Ordering::Release);
+        staller.join().unwrap();
+        // Cleanup: unlink + retire the protected node, now unguarded.
+        let node = cell.load(Ordering::Acquire);
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        // SAFETY: unlinked above; retired exactly once.
+        unsafe { h.retire(node.get()) };
+        assert!(flush_until(&h, || drops.load(Ordering::Relaxed) == 1));
+    }
+
+    /// Enlist/seal race stress: readers cycling short regions while
+    /// retirers push batches into their slots concurrently.
+    #[test]
+    fn slot_enlist_retire_race_stress() {
+        let domain = DomainRef::<Hyaline>::new_owned();
+        let drops = Arc::new(AtomicUsize::new(0));
+        let cell = Arc::new(Atomic::<u64, Hyaline>::new(Owned::new(1)));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let domain = domain.clone();
+            let drops = drops.clone();
+            let cell = cell.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                let h = domain.register();
+                for i in 0..800u64 {
+                    // Short-lived guard: constant enlist/depart churn racing
+                    // the CAS pushes of other threads' seals.
+                    let mut g = h.guard();
+                    let _ = g.protect(&cell);
+                    if i % 3 == t % 3 {
+                        h.retire_owned(Owned::<Payload, Hyaline>::new(Payload::new(
+                            i, &drops,
+                        )));
+                        total.fetch_add(1, Ordering::Relaxed);
+                    }
+                    drop(g);
+                }
+            }));
+        }
+        for th in handles {
+            th.join().unwrap();
+        }
+        let h = domain.register();
+        let ok = flush_until(&h, || drops.load(Ordering::Relaxed) == total.load(Ordering::Relaxed));
+        assert!(
+            ok,
+            "race stress leaked: {} of {} dropped",
+            drops.load(Ordering::Relaxed),
+            total.load(Ordering::Relaxed)
+        );
+        // Cleanup the shared cell (all writers joined; sole owner now).
+        let last = cell.load(Ordering::Acquire);
+        cell.store(MarkedPtr::null(), Ordering::Release);
+        // SAFETY: unlinked above; retired exactly once.
+        unsafe { h.retire(last.get()) };
+        h.flush();
+    }
+}

@@ -23,7 +23,7 @@
 //!   stays one-liner simple, while `new_in` gives every shard/test/trial
 //!   its own isolated reclamation universe.
 //!
-//! Seven schemes implement [`Reclaimer`]:
+//! Eight schemes implement [`Reclaimer`]:
 //!
 //! | scheme | module | origin |
 //! |--------|--------|--------|
@@ -34,7 +34,12 @@
 //! | New epoch-based (NER) | [`nebr`] | Hart et al. 2007 |
 //! | Quiescent-state-based (QSR) | [`qsr`] | McKenney & Slingwine 1998 |
 //! | DEBRA | [`debra`] | Brown 2015 |
+//! | Hyaline (robust, batch-refcounted) | [`hyaline`] | Nikolaev & Ravindran 2019 |
 //! | Leaky baseline (never reclaims) | [`leaky`] | — |
+//!
+//! The first seven form the paper's comparison set ([`SchemeId::PAPER_SET`]);
+//! Hyaline extends it with a stall-robust scheme (E19) and is opt-in via
+//! `--schemes hyaline`.
 //!
 //! The memory-model discipline follows the paper: Rust shares the C++11
 //! memory model, and each atomic operation below carries the weakest
@@ -47,6 +52,7 @@ pub mod ebr;
 pub mod epoch_core;
 pub mod facade;
 pub mod hp;
+pub mod hyaline;
 pub mod leaky;
 pub mod lfrc;
 pub mod marked_ptr;
@@ -59,7 +65,7 @@ pub mod stamp;
 pub mod tests_common;
 
 pub use concurrent_ptr::ConcurrentPtr;
-pub use domain::{Domain, DomainRef, LocalCell, LocalHandle, Region};
+pub use domain::{set_default_stall_watermark, Domain, DomainRef, LocalCell, LocalHandle, Region};
 pub use facade::{Atomic, Cached, Guard, HandleSource, Owned, Shared, Stale};
 pub use marked_ptr::MarkedPtr;
 pub use retire::AsRetireHeader;
@@ -302,6 +308,7 @@ pub(crate) struct GuardPtr<T: Send + Sync + 'static, R: Reclaimer> {
 impl<T: Send + Sync + 'static, R: Reclaimer> GuardPtr<T, R> {
     /// An empty guard attached to `handle` (see [`LocalHandle::guard`]).
     pub(crate) fn new_in(handle: &LocalHandle<R>) -> Self {
+        facade::lint::guard_created();
         Self { ptr: MarkedPtr::null(), state: R::GuardState::default(), handle: handle.clone() }
     }
 
@@ -378,6 +385,7 @@ impl<T: Send + Sync + 'static, R: Reclaimer> Drop for GuardPtr<T, R> {
     fn drop(&mut self) {
         self.reset();
         R::drop_guard_state(self.handle.domain_state(), self.handle.local(), &mut self.state);
+        facade::lint::guard_dropped();
     }
 }
 
@@ -392,6 +400,7 @@ pub enum SchemeId {
     Qsr,
     Debra,
     Stamp,
+    Hyaline,
 }
 
 impl SchemeId {
@@ -416,6 +425,7 @@ impl SchemeId {
             "qsr" | "qsbr" => SchemeId::Qsr,
             "debra" => SchemeId::Debra,
             "stamp" | "stampit" | "stamp-it" => SchemeId::Stamp,
+            "hyaline" => SchemeId::Hyaline,
             _ => return None,
         })
     }
@@ -430,6 +440,7 @@ impl SchemeId {
             SchemeId::Qsr => "QSR",
             SchemeId::Debra => "DEBRA",
             SchemeId::Stamp => "Stamp-it",
+            SchemeId::Hyaline => "Hyaline",
         }
     }
 
@@ -459,6 +470,7 @@ macro_rules! dispatch_scheme {
             __S::Qsr => $f::<$crate::reclaim::qsr::Qsr>($($args),*),
             __S::Debra => $f::<$crate::reclaim::debra::Debra>($($args),*),
             __S::Stamp => $f::<$crate::reclaim::stamp::StampIt>($($args),*),
+            __S::Hyaline => $f::<$crate::reclaim::hyaline::Hyaline>($($args),*),
         }
     }};
 }
@@ -471,8 +483,12 @@ mod tests {
     fn scheme_id_parsing() {
         assert_eq!(SchemeId::parse("stamp-it"), Some(SchemeId::Stamp));
         assert_eq!(SchemeId::parse("HP"), Some(SchemeId::Hp));
+        assert_eq!(SchemeId::parse("hyaline"), Some(SchemeId::Hyaline));
         assert_eq!(SchemeId::parse("bogus"), None);
+        // `all` stays the paper's seven-scheme comparison set; Hyaline is
+        // the opt-in robust extension.
         assert_eq!(SchemeId::parse_list("all").unwrap().len(), 7);
+        assert!(!SchemeId::PAPER_SET.contains(&SchemeId::Hyaline));
         assert_eq!(
             SchemeId::parse_list("ebr, stamp").unwrap(),
             vec![SchemeId::Ebr, SchemeId::Stamp]
@@ -485,5 +501,6 @@ mod tests {
         assert_eq!(SchemeId::Stamp.name(), "Stamp-it");
         assert_eq!(SchemeId::Hp.name(), "HPR");
         assert_eq!(SchemeId::Ebr.name(), "ER");
+        assert_eq!(SchemeId::Hyaline.name(), "Hyaline");
     }
 }

@@ -97,6 +97,15 @@ impl RetireHeader {
         self.next()
     }
 
+    /// Link `n` after this node in a detached chain (crate-internal).
+    /// Hyaline chains batches manually — its birth-era stamps are not
+    /// monotone in retire order, so [`RetireList::push_back`]'s sortedness
+    /// invariant does not apply to them.
+    #[inline]
+    pub(crate) fn set_next_in_chain(&self, n: Retired) {
+        self.set_next(n);
+    }
+
     /// Address of the retired node (what hazard slots publish).
     #[inline]
     pub(crate) fn node_addr(&self) -> usize {

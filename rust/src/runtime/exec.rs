@@ -316,8 +316,15 @@ fn executor_thread(shared: &ExecShared) {
             // A panicking task must not take the executor thread (and every
             // task scheduled after it) down with it. Its `Settle` guard
             // reports `Gone` when the future is dropped below.
+            // The guard-across-await lint runs inside the same unwind
+            // boundary: its debug assertion downs the offending task only.
             let poll = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                fut.as_mut().poll(&mut cx)
+                let guards_before = crate::reclaim::facade::lint::live_guards();
+                let poll = fut.as_mut().poll(&mut cx);
+                if matches!(poll, Poll::Pending) {
+                    crate::reclaim::facade::lint::check_after_poll(guards_before);
+                }
+                poll
             }));
             match poll {
                 Ok(Poll::Pending) => {}

@@ -1,9 +1,13 @@
 //! Always-on, lock-free flight recorder (DESIGN.md §10).
 //!
 //! Every layer of the serving stack — shard submit/complete, batcher
-//! dispatch/return, the retire→reclaim funnel, magazine hit/miss, the
-//! net reactor, the executor — drops compact binary events into
-//! per-thread ring buffers via [`event!`](crate::trace::event):
+//! dispatch/return, the retire→reclaim funnel (including the `smr.stall`
+//! high-water-mark event a domain emits when its pending-retire count
+//! crosses the configurable stall watermark; DESIGN.md §11), magazine
+//! hit/miss, the net reactor, the executor (including the facade's
+//! `lint.guard_await` guard-across-await violations) — drops compact
+//! binary events into per-thread ring buffers via
+//! [`event!`](crate::trace::event):
 //!
 //! ```text
 //! event = { ts: u64 monotonic ns, label: u16 interned, tid: u16, arg: u32 }

@@ -105,6 +105,14 @@ fn hp_serves_consistently() {
 }
 
 #[test]
+fn hyaline_serves_consistently() {
+    if !have_artifacts() {
+        return;
+    }
+    concurrent_consistency::<emr::reclaim::hyaline::Hyaline>();
+}
+
+#[test]
 fn server_results_match_direct_engine() {
     if !have_artifacts() {
         return;
@@ -215,6 +223,16 @@ fn sharded_router_serves_consistently_shared_domain() {
 #[test]
 fn sharded_router_serves_consistently_hp() {
     sharded_consistency::<emr::reclaim::hp::Hp>(2, false);
+}
+
+#[test]
+fn sharded_router_serves_consistently_hyaline() {
+    sharded_consistency::<emr::reclaim::hyaline::Hyaline>(4, false);
+}
+
+#[test]
+fn sharded_router_serves_consistently_hyaline_shared_domain() {
+    sharded_consistency::<emr::reclaim::hyaline::Hyaline>(2, true);
 }
 
 #[test]
@@ -398,8 +416,8 @@ fn engine_failure_is_counted_and_fails_fast() {
 fn group_shutdown_drains<R: Reclaimer>() {
     // Graceful shutdown with groups: concurrent load over a 6-shard,
     // 3-group fleet, then shutdown must drain every group's batcher (all
-    // gauges settle to zero, stragglers rejected) — for Stamp-it, HP and
-    // EBR alike.
+    // gauges settle to zero, stragglers rejected) — for Stamp-it, HP, EBR
+    // and Hyaline alike.
     let server =
         Router::<R>::start(synthetic_cfg().with_shards(6).with_groups(3)).unwrap();
     std::thread::scope(|s| {
@@ -448,6 +466,11 @@ fn group_shutdown_drains_hp() {
 #[test]
 fn group_shutdown_drains_ebr() {
     group_shutdown_drains::<emr::reclaim::ebr::Ebr>();
+}
+
+#[test]
+fn group_shutdown_drains_hyaline() {
+    group_shutdown_drains::<emr::reclaim::hyaline::Hyaline>();
 }
 
 #[test]

@@ -269,3 +269,4 @@ domain_tests!(nebr, emr::reclaim::nebr::Nebr);
 domain_tests!(qsr, emr::reclaim::qsr::Qsr);
 domain_tests!(debra, emr::reclaim::debra::Debra);
 domain_tests!(stamp, emr::reclaim::stamp::StampIt);
+domain_tests!(hyaline, emr::reclaim::hyaline::Hyaline);

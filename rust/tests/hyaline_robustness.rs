@@ -1,0 +1,211 @@
+//! Hyaline robustness end-to-end (the E19 mechanism at test scale): a
+//! stalled executor task that leaked a guard across a never-woken future
+//! must (a) trip the guard-across-await lint and (b) strand only batches
+//! born before its announce — fresh churn keeps reclaiming to zero while
+//! the task stays parked. Plus the lint's public knob surface and the
+//! `smr.stall` watermark event.
+//!
+//! Lint and trace state are process-global, so every test here serializes
+//! on [`LOCK`] (same pattern as `tests/trace.rs`).
+
+use emr::reclaim::facade::lint;
+use emr::reclaim::hyaline::Hyaline;
+use emr::reclaim::tests_common::{flush_until, Payload};
+use emr::reclaim::{Atomic, DomainRef, Owned};
+use emr::runtime::exec::Executor;
+use emr::trace;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Serializes tests that flip process-global lint/trace state.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The E19 adversary through the public API only: a task polled once on a
+/// real executor protects a node and leaks the guard before returning
+/// `Pending` forever. The lint must record the violation at that poll, the
+/// `smr.stall` watermark must fire once churn crosses it, and — Hyaline's
+/// whole point — churn retired *after* the stall began must still reclaim
+/// completely, leaving `unreclaimed()` at zero with the task still parked.
+#[test]
+fn stalled_task_is_linted_and_strands_nothing_fresh() {
+    let _g = lock();
+    trace::set_enabled(true);
+    lint::set_enabled(true);
+    let mut drainer = trace::Drainer::from_now();
+
+    let domain = DomainRef::<Hyaline>::new_owned();
+    // Low watermark: the first churn burst crosses it deterministically
+    // (Hyaline holds at least HY_BATCH_MIN retires before its first seal).
+    domain.domain().set_stall_watermark(4);
+
+    let violations_before = lint::violations();
+    let armed = Arc::new(AtomicBool::new(false));
+    let exec = Executor::new(1);
+    {
+        let domain = domain.clone();
+        let armed = armed.clone();
+        let mut first = true;
+        exec.spawn(std::future::poll_fn(move |_cx| {
+            if first {
+                first = false;
+                // Leak cell, handle and guard: protection outlives the poll
+                // (and even the task, if the lint's debug assertion downs
+                // it) — exactly the bug the lint exists to catch.
+                let cell = Box::leak(Box::new(Atomic::<u64, Hyaline>::new(Owned::new(0xE19))));
+                let h = Box::leak(Box::new(domain.register()));
+                let mut g = h.guard();
+                assert!(g.protect(cell).is_some());
+                std::mem::forget(g);
+                armed.store(true, Ordering::Release);
+            }
+            std::task::Poll::<()>::Pending
+        }));
+    }
+    while !armed.load(Ordering::Acquire) {
+        std::thread::yield_now();
+    }
+    // `armed` flips inside the poll; the lint check runs after the poll
+    // returns Pending on the worker thread — give it a moment.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while lint::violations() == violations_before && std::time::Instant::now() < deadline {
+        std::thread::yield_now();
+    }
+    assert!(
+        lint::violations() > violations_before,
+        "leaking a guard across a Pending poll must record a lint violation"
+    );
+
+    // Advance the birth-era clock well past the stalled announce (dropping
+    // unpublished Owneds frees directly — nothing is retired, so no orphan
+    // can drag a later batch's min_birth below the stalled era).
+    for _ in 0..256 {
+        drop(Owned::<u64, Hyaline>::new(0));
+    }
+
+    // Churn on the stalled domain: every batch is born after the stall, so
+    // the era gate must skip the parked task's slot and reclaim everything.
+    let drops = Arc::new(AtomicUsize::new(0));
+    let h = domain.register();
+    const CHURN: usize = 64;
+    for i in 0..CHURN as u64 {
+        h.retire_owned(Owned::<Payload, Hyaline>::new(Payload::new(i, &drops)));
+    }
+    let ok = flush_until(&h, || drops.load(Ordering::Relaxed) == CHURN);
+    assert!(
+        ok,
+        "stalled task stranded fresh batches: {} of {CHURN} reclaimed",
+        drops.load(Ordering::Relaxed)
+    );
+    assert_eq!(
+        domain.domain().unreclaimed(),
+        0,
+        "every post-stall retire must reclaim with the task still parked"
+    );
+
+    // The watermark crossing left its mark in the flight recorder.
+    let d = drainer.drain();
+    assert!(
+        d.events.iter().any(|e| trace::label_name(e.label) == Some("smr.stall")),
+        "crossing the stall watermark must emit smr.stall"
+    );
+    drop(exec); // cancels the parked task (its protection was leaked anyway)
+}
+
+/// The opt-out knob and the counting surface: guards count per thread,
+/// `check_after_poll` records violations only while enabled.
+#[test]
+fn lint_knob_and_counters_roundtrip() {
+    let _g = lock();
+    lint::set_enabled(true);
+
+    // Knob strings mirror the trace/magazine knobs.
+    assert!(lint::apply_knob("off"));
+    assert!(!lint::enabled());
+    assert!(lint::apply_knob("on"));
+    assert!(lint::enabled());
+    assert!(!lint::apply_knob("sideways"));
+
+    let domain = DomainRef::<Hyaline>::new_owned();
+    let h = domain.register();
+    let cell: Atomic<u64, Hyaline> = Atomic::new(Owned::new(7));
+
+    let base = lint::live_guards();
+    let mut g = h.guard();
+    assert!(g.protect(&cell).is_some());
+    assert_eq!(lint::live_guards(), base + 1, "guard creation must count");
+
+    // A guard born during a poll and still live at Pending: violation —
+    // wrapped in catch_unwind because debug builds also assert.
+    let before_v = lint::violations();
+    let caught = std::panic::catch_unwind(|| lint::check_after_poll(base));
+    assert_eq!(lint::violations(), before_v + 1);
+    if let Ok(flagged) = caught {
+        assert!(flagged, "check_after_poll must report the violation");
+    }
+
+    // Disabled: the same situation records nothing.
+    lint::set_enabled(false);
+    assert!(!lint::check_after_poll(base));
+    assert_eq!(lint::violations(), before_v + 1);
+    lint::set_enabled(true);
+
+    drop(g);
+    assert_eq!(lint::live_guards(), base, "guard drop must uncount");
+    // Balanced tasks never trip the check.
+    assert!(!lint::check_after_poll(base));
+
+    // Cleanup the published node.
+    let node = cell.load(Ordering::Acquire);
+    cell.store(emr::reclaim::MarkedPtr::null(), Ordering::Release);
+    // SAFETY: unlinked above; retired exactly once.
+    unsafe { h.retire(node.get()) };
+    h.flush();
+}
+
+/// A task that drops its guard before parking is clean: polling it to
+/// `Pending` on a real executor must not move the violation counter.
+#[test]
+fn balanced_task_does_not_trip_lint() {
+    let _g = lock();
+    lint::set_enabled(true);
+
+    let domain = DomainRef::<Hyaline>::new_owned();
+    let cell = Arc::new(Atomic::<u64, Hyaline>::new(Owned::new(41)));
+    let before = lint::violations();
+    let polled = Arc::new(AtomicBool::new(false));
+    let exec = Executor::new(1);
+    let task = {
+        let domain = domain.clone();
+        let cell = cell.clone();
+        let polled = polled.clone();
+        let mut parked_once = false;
+        exec.spawn(std::future::poll_fn(move |cx| {
+            if !parked_once {
+                parked_once = true;
+                let h = domain.register();
+                let mut g = h.guard();
+                assert_eq!(g.protect(&cell).expect("non-null").read(), 41);
+                drop(g); // balanced: nothing live across the await point
+                polled.store(true, Ordering::Release);
+                cx.waker().wake_by_ref();
+                return std::task::Poll::Pending;
+            }
+            std::task::Poll::Ready(())
+        }))
+    };
+    assert_eq!(task.join(), Some(()));
+    assert!(polled.load(Ordering::Acquire));
+    assert_eq!(lint::violations(), before, "a balanced task must not be flagged");
+
+    // Cleanup.
+    let h = domain.register();
+    let node = cell.load(Ordering::Acquire);
+    cell.store(emr::reclaim::MarkedPtr::null(), Ordering::Release);
+    // SAFETY: unlinked above; retired exactly once.
+    unsafe { h.retire(node.get()) };
+    h.flush();
+}

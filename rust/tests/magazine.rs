@@ -219,4 +219,5 @@ churn_tests!(
     qsr => emr::reclaim::qsr::Qsr,
     debra => emr::reclaim::debra::Debra,
     stamp => emr::reclaim::stamp::StampIt,
+    hyaline => emr::reclaim::hyaline::Hyaline,
 );

@@ -8,7 +8,7 @@
 //! domain (the quickstart TLS path) and once with an explicit handle in
 //! an **owned** domain (the isolated, TLS-free fast path) — and the
 //! `facade_roundtrip` exercise drives `Owned` disposal, CAS publication,
-//! branded `Shared` reads and both retire paths for all 8 schemes.
+//! branded `Shared` reads and both retire paths for all 9 schemes.
 
 use emr::ds::hashmap::FifoCache;
 use emr::ds::list::List;
@@ -214,3 +214,4 @@ matrix!(nebr, emr::reclaim::nebr::Nebr);
 matrix!(qsr, emr::reclaim::qsr::Qsr);
 matrix!(debra, emr::reclaim::debra::Debra);
 matrix!(stamp, emr::reclaim::stamp::StampIt);
+matrix!(hyaline, emr::reclaim::hyaline::Hyaline);

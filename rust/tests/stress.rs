@@ -205,3 +205,4 @@ stress!(nebr, emr::reclaim::nebr::Nebr);
 stress!(qsr, emr::reclaim::qsr::Qsr);
 stress!(debra, emr::reclaim::debra::Debra);
 stress!(stamp, emr::reclaim::stamp::StampIt);
+stress!(hyaline, emr::reclaim::hyaline::Hyaline);

@@ -118,6 +118,7 @@ churn!(nebr, emr::reclaim::nebr::Nebr);
 churn!(qsr, emr::reclaim::qsr::Qsr);
 churn!(debra, emr::reclaim::debra::Debra);
 churn!(stamp, emr::reclaim::stamp::StampIt);
+churn!(hyaline, emr::reclaim::hyaline::Hyaline);
 
 /// The Stamp Pool must recycle control blocks across handle generations:
 /// vastly more sequential registrations than the pool's capacity (4096)
